@@ -1,0 +1,133 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): decentralized learning by
+//! random-walk SGD where the walk token carries the model, executed
+//! through all three layers — Pallas kernels (L1) inside the JAX train
+//! step (L2), AOT-compiled to HLO and driven from the rust walk engine
+//! (L3) via PJRT. A burst failure kills model-carrying walks mid-run;
+//! DECAFORK forks survivors (copying their models) and training
+//! continues. A control arm with no failure-control shows the
+//! catastrophic alternative.
+//!
+//!     make artifacts && cargo run --release --example resilient_training
+
+use decafork::control::{Decafork, NoControl};
+use decafork::failures::Burst;
+use decafork::graph::generators;
+use decafork::learning::{ShardedCorpus, TrainingRun};
+use decafork::report::ascii_plot;
+use decafork::rng::Rng;
+use decafork::runtime::{artifacts_present, default_artifacts_dir, Runtime, TrainStep};
+use decafork::sim::engine::{Engine, SimParams};
+use std::sync::Arc;
+
+const N: usize = 32; // nodes
+const D: usize = 6; // degree
+const Z0: u32 = 4; // model-carrying walks
+const HORIZON: u64 = 450; // steps (each visit = 1 SGD step on that walk)
+const BURST_T: u64 = 250; // after the auto warm-up (~170 for n=32)
+const BURST_KILL: usize = 3;
+
+fn run_arm(
+    label: &str,
+    control: Box<dyn decafork::control::ControlAlgorithm>,
+    train: &TrainStep,
+    corpus: Arc<ShardedCorpus>,
+) -> anyhow::Result<decafork::learning::TrainingSummary> {
+    let graph = Arc::new(generators::random_regular(N, D, &mut Rng::new(11))?);
+    let mut engine = Engine::new(
+        graph,
+        SimParams { z0: Z0, max_walks: 8, ..Default::default() },
+        control,
+        Box::new(Burst::new(vec![(BURST_T, BURST_KILL)])),
+        Rng::new(23),
+    );
+    let t0 = std::time::Instant::now();
+    let summary = TrainingRun::execute(&mut engine, train, corpus, HORIZON, 99)?;
+    println!(
+        "[{label}] {} SGD steps in {:.1?}; survivors {}; loss {:.3} -> {:.3}",
+        summary.steps,
+        t0.elapsed(),
+        summary.survivors,
+        summary.first_loss,
+        summary.last_loss_mean
+    );
+    println!("[{label}] lineage: {}", summary.lineage);
+    Ok(summary)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    anyhow::ensure!(
+        artifacts_present(&dir),
+        "no artifacts at {} — run `make artifacts` first",
+        dir.display()
+    );
+    let rt = Runtime::cpu()?;
+    let train = TrainStep::load(&rt, &dir)?;
+    println!(
+        "model '{}': {} params | batch {} x seq {} | lr {} | vocab {}",
+        train.manifest.get("model")?,
+        train.param_count()?,
+        train.manifest.get_usize("batch")?,
+        train.manifest.get_usize("seq")?,
+        train.manifest.get_f64("lr")?,
+        train.manifest.get_usize("vocab")?,
+    );
+    let corpus = Arc::new(ShardedCorpus::markov(
+        N,
+        4096,
+        train.manifest.get_usize("vocab")?,
+        0xC0FFEE,
+    ));
+    println!(
+        "corpus: {} shards x 4096 tokens, bigram entropy {:.2} nats (uniform would be {:.2})\n",
+        N,
+        corpus.bigram_entropy(0),
+        (train.manifest.get_usize("vocab")? as f64).ln()
+    );
+
+    // Resilient arm: DECAFORK replaces the killed walks; the forked
+    // copies carry the surviving models' progress. The threshold comes
+    // from the Irwin–Hall design rule (Sec. III-B) for Z0 = 4.
+    let eps = decafork::stats::irwin_hall::design_epsilon(Z0, 0.02);
+    println!("designed DECAFORK threshold for Z0={Z0}: eps = {eps:.2}\n");
+    let resilient = run_arm("decafork", Box::new(Decafork::new(eps)), &train, corpus.clone())?;
+
+    // Fragile arm: same failure, no control. (With 3 of 4 walks killed,
+    // one walk limps on — kill all Z0 and the task is simply gone.)
+    let fragile = run_arm("no-control", Box::new(NoControl), &train, corpus)?;
+
+    // Report: loss curves (visit order) and population traces.
+    let curve = |s: &decafork::learning::TrainingSummary| -> Vec<f64> {
+        s.losses
+            .chunks(8)
+            .map(|c| c.iter().map(|&(_, _, l)| l as f64).sum::<f64>() / c.len() as f64)
+            .collect()
+    };
+    let c1 = curve(&resilient);
+    let c2 = curve(&fragile);
+    println!(
+        "{}",
+        ascii_plot(
+            "training loss (8-visit means)",
+            &[("decafork", &c1), ("no-control", &c2)],
+            90,
+            14
+        )
+    );
+    let z1: Vec<f64> = resilient.trace.z.iter().map(|&v| v as f64).collect();
+    let z2: Vec<f64> = fragile.trace.z.iter().map(|&v| v as f64).collect();
+    println!(
+        "{}",
+        ascii_plot("walk population", &[("decafork", &z1), ("no-control", &z2)], 90, 8)
+    );
+
+    // The claims EXPERIMENTS.md records:
+    anyhow::ensure!(resilient.last_loss_mean < resilient.first_loss, "no learning progress");
+    anyhow::ensure!(resilient.survivors as u32 >= Z0 - 1, "DECAFORK failed to restore redundancy");
+    anyhow::ensure!(
+        (fragile.survivors as u32) < Z0,
+        "control arm should have lost walks permanently"
+    );
+    println!("resilient_training: OK");
+    Ok(())
+}

@@ -1,0 +1,31 @@
+fn main() -> anyhow::Result<()> {
+    let rt = decafork::runtime::Runtime::cpu()?;
+    let dir = std::path::Path::new("artifacts");
+    let ts = decafork::runtime::TrainStep::load(&rt, dir)?;
+    let pc = ts.param_count()?;
+    println!("params {pc}");
+    let params: Vec<f32> = {
+        let bytes = std::fs::read(dir.join("init_params.f32"))?;
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0],c[1],c[2],c[3]])).collect()
+    };
+    assert_eq!(params.len(), pc);
+    let (b, t1) = ts.token_shape()?;
+    let tokens: Vec<i32> = (0..b*t1).map(|i| (i % 31) as i32).collect();
+    let t0 = std::time::Instant::now();
+    let (mut p, l0) = ts.step(&params, &tokens)?;
+    let mut l = l0;
+    for _ in 0..9 { let (np, nl) = ts.step(&p, &tokens)?; p = np; l = nl; }
+    println!("loss {l0} -> {l} ({:?}/step)", t0.elapsed()/10);
+    assert!(l < l0);
+    let th = decafork::runtime::ThetaKernel::load(&rt, dir)?;
+    let n = th.nodes; let k = th.walks;
+    let elapsed = vec![10.0f32; n*k];
+    let q = vec![0.02f32; n];
+    let mask = vec![1.0f32; n*k];
+    let theta = th.theta(&elapsed, &q, &mask)?;
+    let expect = 0.5 + k as f32 * (1.0f32-0.02).powi(10);
+    println!("theta[0] = {} expect {}", theta[0], expect);
+    assert!((theta[0]-expect).abs() < 0.01);
+    println!("runtime smoke OK");
+    Ok(())
+}

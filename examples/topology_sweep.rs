@@ -1,0 +1,75 @@
+//! Topology sweep (paper Fig. 6 extended): DECAFORK across graph
+//! families, reporting per-family recovery statistics and the return-time
+//! scale that drives them. Shows the algorithm needs no per-topology
+//! retuning because each node estimates its own return-time distribution.
+//!
+//!     cargo run --release --example topology_sweep
+
+use decafork::graph::properties;
+use decafork::report::Table;
+use decafork::rng::Rng;
+use decafork::sim::engine::SimParams;
+use decafork::sim::{run_many, AggregateTrace, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
+
+fn main() -> anyhow::Result<()> {
+    let families: Vec<(&str, GraphSpec, f64)> = vec![
+        ("8-regular", GraphSpec::RandomRegular { n: 100, d: 8 }, 2.0),
+        ("complete", GraphSpec::Complete { n: 100 }, 2.0),
+        ("erdos-renyi p=.08", GraphSpec::ErdosRenyi { n: 100, p: 0.08 }, 1.9),
+        ("power-law m=4", GraphSpec::PowerLaw { n: 100, m: 4 }, 2.1),
+        ("torus 10x10", GraphSpec::Torus { w: 10, h: 10 }, 2.0),
+        ("ring", GraphSpec::Ring { n: 100 }, 2.0),
+    ];
+
+    let mut table = Table::new(&[
+        "family",
+        "diam",
+        "Kac E[R]",
+        "extinct",
+        "mean Z",
+        "reaction b1",
+        "reaction b2",
+        "forks/run",
+    ]);
+
+    for (label, graph, eps) in families {
+        let mut grng = Rng::new(1);
+        let g = graph.build(&mut grng)?;
+        let diam = properties::diameter(&g);
+        let kac = g.mean_return_time(0);
+
+        let cfg = ExperimentConfig {
+            graph: graph.clone(),
+            params: SimParams::default(),
+            control: ControlSpec::Decafork { epsilon: eps },
+            failures: FailureSpec::paper_bursts(),
+            horizon: 10_000,
+            runs: 10,
+            seed: 0x70B0,
+        };
+        let (traces, agg) = run_many(&cfg, 0)?;
+        let (r1, u1) = AggregateTrace::mean_recovery(&traces, 2000, 10);
+        let (r2, u2) = AggregateTrace::mean_recovery(&traces, 6000, 10);
+        let fmt_r = |r: Option<f64>, u: usize| match r {
+            Some(v) if u == 0 => format!("{v:.0}"),
+            Some(v) => format!("{v:.0} ({u}!)"),
+            None => "never".into(),
+        };
+        let mean_z: f64 =
+            traces.iter().map(|t| t.mean_z(1000, 10_000)).sum::<f64>() / traces.len() as f64;
+        table.row(vec![
+            label.to_string(),
+            diam.to_string(),
+            format!("{kac:.0}"),
+            format!("{}/{}", agg.extinctions, agg.runs),
+            format!("{mean_z:.1}"),
+            fmt_r(r1, u1),
+            fmt_r(r2, u2),
+            format!("{:.1}", agg.forks_per_run.iter().sum::<usize>() as f64 / agg.runs as f64),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("note: the ring's huge return times (E[R] = n) slow both estimation and recovery —");
+    println!("the paper's families are all low-diameter, where DECAFORK reacts within a few hundred steps.");
+    Ok(())
+}

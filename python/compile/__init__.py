@@ -1,0 +1,3 @@
+# Build-time-only package: JAX model (L2) + Pallas kernels (L1) + AOT
+# lowering to HLO text. Never imported by the runtime (rust loads the
+# artifacts directly).

@@ -1,0 +1,7 @@
+"""Layer-1 Pallas kernels (interpret=True on CPU; see DESIGN.md
+§Hardware-Adaptation for the TPU mapping) and their pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .mlp_block import mlp_block  # noqa: F401
+from .attention import attention  # noqa: F401
+from .survival import survival_theta  # noqa: F401

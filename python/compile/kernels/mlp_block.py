@@ -1,0 +1,156 @@
+"""Fused transformer MLP block as a Pallas kernel with a custom VJP.
+
+Forward:  y = gelu(x @ w1) @ w2, row-tiled so each grid step streams one
+row-block of activations through VMEM while both weight matrices stay
+resident (the dominant VMEM tenant; see the footprint estimate in
+``vmem_bytes``). Backward: a second Pallas kernel recomputes the hidden
+pre-activation for its row block (rematerialization — cheaper than saving
+`h` to HBM, the standard TPU trade) and accumulates dw1/dw2 across grid
+steps with the revisited-output-block pattern.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU the same BlockSpecs drive the HBM↔VMEM
+schedule (DESIGN.md §Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# Row-block size: multiples of 8 (f32 sublane) — 128 rows x d<=512 keeps
+# x-tile + h-tile + weights well under a 16 MiB VMEM budget.
+BLOCK_ROWS = 128
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def _gelu_grad(x):
+    th = jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3))
+    inner = 0.7978845608028654 * (1.0 + 3 * 0.044715 * x**2)
+    return 0.5 * (1.0 + th) + 0.5 * x * (1.0 - th**2) * inner
+
+
+def _fwd_kernel(x_ref, w1_ref, w2_ref, y_ref):
+    x = x_ref[...]
+    h = x @ w1_ref[...]
+    y_ref[...] = _gelu(h) @ w2_ref[...]
+
+
+def _bwd_kernel(x_ref, w1_ref, w2_ref, dy_ref, dx_ref, dw1_ref, dw2_ref):
+    # Recompute the hidden pre-activation for this row block.
+    i = pl.program_id(0)
+    x = x_ref[...]
+    dy = dy_ref[...]
+    h = x @ w1_ref[...]
+    a = _gelu(h)
+    da = dy @ w2_ref[...].T
+    dh = da * _gelu_grad(h)
+    dx_ref[...] = dh @ w1_ref[...].T
+
+    # dw accumulation: the full dw1/dw2 output blocks are revisited by
+    # every grid step; initialize on the first and accumulate after.
+    @pl.when(i == 0)
+    def _init():
+        dw1_ref[...] = jnp.zeros_like(dw1_ref)
+        dw2_ref[...] = jnp.zeros_like(dw2_ref)
+
+    dw1_ref[...] += x.T @ dh
+    dw2_ref[...] += a.T @ dy
+
+
+def _row_block(rows):
+    """Row-block size: tile at BLOCK_ROWS only when rows divide evenly —
+    a ragged final block would read out-of-bounds padding into the dw
+    accumulation (observed as wrong dw1 for rows=200; values in the OOB
+    region are unspecified by Pallas)."""
+    if rows > BLOCK_ROWS and rows % BLOCK_ROWS == 0:
+        return BLOCK_ROWS
+    return rows
+
+
+def _grid(rows):
+    return (rows // _row_block(rows),)
+
+
+def _row_spec(rows, cols):
+    rb = _row_block(rows)
+    if rb == rows:
+        return pl.BlockSpec((rows, cols), lambda i: (0, 0))
+    return pl.BlockSpec((rb, cols), lambda i: (i, 0))
+
+
+def _full_spec(r, c):
+    return pl.BlockSpec((r, c), lambda i: (0, 0))
+
+
+def _mlp_fwd_impl(x, w1, w2):
+    rows, d_in = x.shape
+    d_h = w1.shape[1]
+    d_out = w2.shape[1]
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=_grid(rows),
+        in_specs=[
+            _row_spec(rows, d_in),
+            _full_spec(d_in, d_h),
+            _full_spec(d_h, d_out),
+        ],
+        out_specs=_row_spec(rows, d_out),
+        out_shape=jax.ShapeDtypeStruct((rows, d_out), x.dtype),
+        interpret=INTERPRET,
+    )(x, w1, w2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def mlp_block(x, w1, w2):
+    """Fused ``gelu(x @ w1) @ w2`` with Pallas forward/backward kernels."""
+    return _mlp_fwd_impl(x, w1, w2)
+
+
+def _fwd_rule(x, w1, w2):
+    return _mlp_fwd_impl(x, w1, w2), (x, w1, w2)
+
+
+def _bwd_rule(res, dy):
+    x, w1, w2 = res
+    rows, d_in = x.shape
+    d_h = w1.shape[1]
+    d_out = w2.shape[1]
+    dx, dw1, dw2 = pl.pallas_call(
+        _bwd_kernel,
+        grid=_grid(rows),
+        in_specs=[
+            _row_spec(rows, d_in),
+            _full_spec(d_in, d_h),
+            _full_spec(d_h, d_out),
+            _row_spec(rows, d_out),
+        ],
+        out_specs=[
+            _row_spec(rows, d_in),
+            _full_spec(d_in, d_h),
+            _full_spec(d_h, d_out),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d_in), x.dtype),
+            jax.ShapeDtypeStruct((d_in, d_h), w1.dtype),
+            jax.ShapeDtypeStruct((d_h, d_out), w2.dtype),
+        ],
+        interpret=INTERPRET,
+    )(x, w1, w2, dy)
+    return dx, dw1, dw2
+
+
+mlp_block.defvjp(_fwd_rule, _bwd_rule)
+
+
+def vmem_bytes(rows, d_in, d_h, d_out, itemsize=4):
+    """Static VMEM footprint estimate for one fwd grid step (DESIGN §Perf):
+    x-tile + w1 + w2 + h-tile + y-tile."""
+    rb = min(rows, BLOCK_ROWS)
+    return itemsize * (rb * d_in + d_in * d_h + d_h * d_out + rb * d_h + rb * d_out)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest +
+hypothesis assert allclose between kernel and oracle across shapes/dtypes
+(see python/tests/test_kernels.py). These are also the functions whose
+gradients validate the custom-VJP backward kernels.
+"""
+
+import jax.numpy as jnp
+from jax import nn
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches the kernel's closed form)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def mlp_block(x, w1, w2):
+    """Fused MLP block: ``gelu(x @ w1) @ w2``.
+
+    x: (rows, d_in), w1: (d_in, d_hidden), w2: (d_hidden, d_out).
+    """
+    return gelu(x @ w1) @ w2
+
+
+def attention(q, k, v):
+    """Causal single-head attention for one (batch*head) slice.
+
+    q, k, v: (T, d_head). Returns (T, d_head).
+    """
+    t = q.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], dtype=q.dtype))
+    scores = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.array(-1e30, dtype=q.dtype))
+    p = nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def survival_theta(elapsed, q, mask):
+    """Batched DECAFORK estimator under the analytic geometric survival.
+
+    theta[i] = 0.5 + sum_k mask[i,k] * (1-q[i])^elapsed[i,k]   (Eq. 1)
+
+    elapsed: (N, K) steps since walk k was seen at node i,
+    q:       (N,)   per-node geometric parameter (≈ stationary prob),
+    mask:    (N, K) 1.0 where walk k is known to node i (and not the
+             visiting walk), else 0.0.
+    """
+    log1mq = jnp.log1p(-q)[:, None]
+    surv = jnp.exp(elapsed * log1mq)
+    return 0.5 + jnp.sum(surv * mask, axis=-1)

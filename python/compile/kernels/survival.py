@@ -1,0 +1,51 @@
+"""Batched DECAFORK estimator sweep as a Pallas kernel.
+
+Computes theta[i] = 0.5 + sum_k mask[i,k] * (1-q[i])^elapsed[i,k] for all
+nodes at once — Eq. (1) under the analytic geometric survival (paper
+footnote 5). The rust coordinator evaluates theta node-by-node on its hot
+path; this kernel exists to show the control plane itself batch-offloads:
+one call refreshes every node's estimate (e.g. for monitoring dashboards
+or the threshold-design sweeps), and on a TPU it is a pure VPU
+elementwise + row-reduction kernel.
+
+Grid: row (node) blocks; each step holds an (N_block, K) elapsed/mask tile
+and the matching q slice in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+BLOCK_NODES = 128
+
+
+def _kernel(elapsed_ref, q_ref, mask_ref, theta_ref):
+    elapsed = elapsed_ref[...]
+    q = q_ref[...]
+    mask = mask_ref[...]
+    log1mq = jnp.log1p(-q)[:, None]
+    surv = jnp.exp(elapsed * log1mq)
+    theta_ref[...] = 0.5 + jnp.sum(surv * mask, axis=-1)
+
+
+def survival_theta(elapsed, q, mask):
+    """theta over all nodes. elapsed/mask: (N, K) f32, q: (N,) f32."""
+    n, k = elapsed.shape
+    if n <= BLOCK_NODES:
+        grid = (1,)
+        mat = pl.BlockSpec((n, k), lambda i: (0, 0))
+        vec = pl.BlockSpec((n,), lambda i: (0,))
+    else:
+        assert n % BLOCK_NODES == 0, "N must be a multiple of BLOCK_NODES"
+        grid = (n // BLOCK_NODES,)
+        mat = pl.BlockSpec((BLOCK_NODES, k), lambda i: (i, 0))
+        vec = pl.BlockSpec((BLOCK_NODES,), lambda i: (i,))
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[mat, vec, mat],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((n,), elapsed.dtype),
+        interpret=INTERPRET,
+    )(elapsed, q, mask)

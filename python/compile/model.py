@@ -1,0 +1,124 @@
+"""Layer-2: the char-level transformer LM trained by random-walk SGD.
+
+The walk token carries a *flattened* f32 parameter vector (one PJRT buffer
+on the rust side); `train_step` unflattens, runs fwd/bwd (through the
+Pallas kernels in `kernels/`) and one SGD update, and reflattens. The
+whole function is jitted and AOT-lowered by `aot.py`.
+
+Model: untied embedding, learned positional embedding, `n_layers` blocks
+of (pre-LN causal multi-head attention → pre-LN fused MLP), final LN,
+output projection; cross-entropy next-token loss.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.attention import attention
+from .kernels.mlp_block import mlp_block
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 32
+    seq: int = 32
+    d_model: int = 64
+    n_heads: int = 2
+    n_layers: int = 2
+    batch: int = 8
+    lr: float = 0.3
+    init_scale: float = 0.02
+
+    @property
+    def d_head(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(key, cfg: ModelConfig):
+    """Initialize the parameter pytree."""
+    ks = jax.random.split(key, 4 + 4 * cfg.n_layers)
+    s = cfg.init_scale
+    params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model)) * s,
+        "pos": jax.random.normal(ks[1], (cfg.seq, cfg.d_model)) * s,
+        "out_w": jax.random.normal(ks[2], (cfg.d_model, cfg.vocab)) * s,
+        "ln_f": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+        "blocks": [],
+    }
+    for i in range(cfg.n_layers):
+        k0, k1, k2, k3 = ks[4 + 4 * i : 8 + 4 * i]
+        params["blocks"].append(
+            {
+                "ln1": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+                "wqkv": jax.random.normal(k0, (cfg.d_model, 3 * cfg.d_model)) * s,
+                "wo": jax.random.normal(k1, (cfg.d_model, cfg.d_model)) * s,
+                "ln2": {"g": jnp.ones(cfg.d_model), "b": jnp.zeros(cfg.d_model)},
+                "w1": jax.random.normal(k2, (cfg.d_model, 4 * cfg.d_model)) * s,
+                "w2": jax.random.normal(k3, (4 * cfg.d_model, cfg.d_model)) * s,
+            }
+        )
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Logits for input tokens (B, T) → (B, T, vocab)."""
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :t, :]
+    for blk in params["blocks"]:
+        # Attention sublayer (pre-LN).
+        h = _layer_norm(x, blk["ln1"]["g"], blk["ln1"]["b"])
+        qkv = h.reshape(b * t, cfg.d_model) @ blk["wqkv"]
+        qkv = qkv.reshape(b, t, 3, cfg.n_heads, cfg.d_head)
+        # (B, T, 3, H, dh) → 3 x (B*H, T, dh)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, t, cfg.d_head)
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, t, cfg.d_head)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * cfg.n_heads, t, cfg.d_head)
+        o = attention(q, k, v)  # Pallas kernel (L1)
+        o = o.reshape(b, cfg.n_heads, t, cfg.d_head).transpose(0, 2, 1, 3)
+        o = o.reshape(b * t, cfg.d_model) @ blk["wo"]
+        x = x + o.reshape(b, t, cfg.d_model)
+        # MLP sublayer (pre-LN, fused Pallas kernel).
+        h = _layer_norm(x, blk["ln2"]["g"], blk["ln2"]["b"])
+        m = mlp_block(h.reshape(b * t, cfg.d_model), blk["w1"], blk["w2"])
+        x = x + m.reshape(b, t, cfg.d_model)
+    x = _layer_norm(x, params["ln_f"]["g"], params["ln_f"]["b"])
+    return x @ params["out_w"]
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Mean next-token cross-entropy. tokens: (B, T+1) int32."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_flat_fns(cfg: ModelConfig, key=None):
+    """Build (flat_init, train_step, eval_loss) over flattened params."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    params0 = init_params(key, cfg)
+    flat0, unravel = ravel_pytree(params0)
+
+    def train_step(flat_params, tokens):
+        params = unravel(flat_params)
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg))(params)
+        new_params = jax.tree_util.tree_map(lambda p, g: p - cfg.lr * g, params, grads)
+        new_flat, _ = ravel_pytree(new_params)
+        return new_flat, loss
+
+    def eval_loss(flat_params, tokens):
+        return (loss_fn(unravel(flat_params), tokens, cfg),)
+
+    return flat0, train_step, eval_loss

@@ -1,0 +1,136 @@
+"""L1/L2 performance analysis (§Perf in DESIGN.md / EXPERIMENTS.md).
+
+interpret=True wallclock is NOT a TPU proxy, so the Pallas kernels are
+assessed *structurally*: VMEM footprint per grid step, FLOPs, bytes moved
+HBM<->VMEM, arithmetic intensity, and the implied compute- vs
+memory-bound regime on a reference TPU core (v4-ish numbers: 137 bf16
+TFLOP/s MXU, 1.2 TB/s HBM, 16 MiB VMEM). The L2 graph is profiled via
+XLA's cost analysis on the lowered module (flops / bytes accessed),
+which is meaningful on any backend.
+
+Usage (from python/): python -m compile.perf --model small
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mlp_block import BLOCK_ROWS, vmem_bytes
+from .model import make_flat_fns
+
+# Reference TPU core characteristics (order-of-magnitude roofline only).
+MXU_FLOPS = 137e12
+HBM_BW = 1.2e12
+VMEM = 16 * 2**20
+
+
+def mlp_report(rows, d_in, d_h, d_out):
+    vm = vmem_bytes(rows, d_in, d_h, d_out)
+    rb = min(rows, BLOCK_ROWS)
+    flops = 2 * rows * d_in * d_h + 2 * rows * d_h * d_out
+    # Weights stream once per grid sweep; activations once per row.
+    bytes_moved = 4 * (rows * d_in + rows * d_out + d_in * d_h + d_h * d_out)
+    ai = flops / bytes_moved
+    t_compute = flops / MXU_FLOPS
+    t_memory = bytes_moved / HBM_BW
+    return {
+        "kernel": f"mlp {rows}x{d_in}->{d_h}->{d_out}",
+        "vmem_block": vm,
+        "vmem_frac": vm / VMEM,
+        "rows_per_block": rb,
+        "flops": flops,
+        "bytes": bytes_moved,
+        "ai": ai,
+        "bound": "compute" if t_compute > t_memory else "memory",
+        "mxu_busy_frac": min(1.0, t_compute / max(t_compute, t_memory)),
+    }
+
+
+def attn_report(bh, t, d):
+    # Per (batch*head) grid step: q,k,v,o tiles + t x t score tile.
+    vm = 4 * (4 * t * d + t * t)
+    flops = bh * (2 * t * t * d * 2 + 5 * t * t)  # qk^T, pv + softmax ops
+    bytes_moved = 4 * bh * 4 * t * d
+    ai = flops / bytes_moved
+    return {
+        "kernel": f"attention {bh}x{t}x{d}",
+        "vmem_block": vm,
+        "vmem_frac": vm / VMEM,
+        "rows_per_block": t,
+        "flops": flops,
+        "bytes": bytes_moved,
+        "ai": ai,
+        "bound": "compute" if flops / MXU_FLOPS > bytes_moved / HBM_BW else "memory",
+        "mxu_busy_frac": min(
+            1.0, (flops / MXU_FLOPS) / max(flops / MXU_FLOPS, bytes_moved / HBM_BW)
+        ),
+    }
+
+
+def theta_report(n, k):
+    vm = 4 * (2 * n * k + 2 * n)
+    flops = 4 * n * k  # log1p, mul, exp, fma — all VPU
+    bytes_moved = 4 * (2 * n * k + 2 * n)
+    return {
+        "kernel": f"survival_theta {n}x{k}",
+        "vmem_block": vm,
+        "vmem_frac": vm / VMEM,
+        "rows_per_block": min(n, 128),
+        "flops": flops,
+        "bytes": bytes_moved,
+        "ai": flops / bytes_moved,
+        "bound": "memory (VPU elementwise)",
+        "mxu_busy_frac": 0.0,
+    }
+
+
+def l2_cost_analysis(model):
+    from .aot import CONFIGS
+
+    cfg = CONFIGS[model]
+    flat0, train_step, _ = make_flat_fns(cfg)
+    p_spec = jax.ShapeDtypeStruct(flat0.shape, jnp.float32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)
+    lowered = jax.jit(train_step).lower(p_spec, tok_spec)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return cfg, flat0.shape[0], ca
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="small")
+    args = ap.parse_args()
+
+    print("== L1 structural roofline (reference TPU core) ==")
+    header = f"{'kernel':34} {'VMEM/blk':>10} {'%VMEM':>7} {'FLOPs':>12} {'AI':>7} bound"
+    print(header)
+    cfg, n_params, ca = l2_cost_analysis(args.model)
+    rows = cfg.batch * cfg.seq
+    for r in [
+        mlp_report(rows, cfg.d_model, 4 * cfg.d_model, cfg.d_model),
+        attn_report(cfg.batch * cfg.n_heads, cfg.seq, cfg.d_model // cfg.n_heads),
+        theta_report(256, 64),
+    ]:
+        print(
+            f"{r['kernel']:34} {r['vmem_block']:>10} {r['vmem_frac']:>6.1%} "
+            f"{r['flops']:>12.3e} {r['ai']:>7.1f} {r['bound']}"
+        )
+    print("\n== L2 XLA cost analysis of the jitted train step ==")
+    print(f"model={args.model} params={n_params}")
+    for key in sorted(ca):
+        if key in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+            print(f"  {key}: {ca[key]:.4g}")
+    flops = ca.get("flops", 0.0)
+    bytes_acc = ca.get("bytes accessed", 1.0)
+    print(f"  arithmetic intensity: {flops / bytes_acc:.2f} flops/byte")
+    print(
+        f"  roofline on ref core: {'compute' if flops / MXU_FLOPS > bytes_acc / HBM_BW else 'memory'}-bound"
+    )
+
+
+if __name__ == "__main__":
+    main()

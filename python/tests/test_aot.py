@@ -1,0 +1,103 @@
+"""AOT pipeline tests: artifact emission, manifest consistency, and the
+HLO-text interchange invariants the rust loader depends on."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ, DECAFORK_MODEL="tiny")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--model", "tiny"],
+        cwd=ROOT,
+        env=env,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def _manifest(artifacts):
+    text = (artifacts / "manifest.txt").read_text()
+    out = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        k, v = line.split("=", 1)
+        out[k] = v
+    return out
+
+
+def test_all_artifacts_emitted(artifacts):
+    for name in [
+        "train_step.hlo.txt",
+        "eval_loss.hlo.txt",
+        "survival_theta.hlo.txt",
+        "init_params.f32",
+        "manifest.txt",
+    ]:
+        assert (artifacts / name).exists(), name
+
+
+def test_manifest_keys_and_consistency(artifacts):
+    m = _manifest(artifacts)
+    for key in [
+        "model",
+        "vocab",
+        "seq",
+        "batch",
+        "lr",
+        "param_count",
+        "train_step",
+        "theta_kernel",
+        "theta_nodes",
+        "theta_walks",
+        "init_params",
+    ]:
+        assert key in m, key
+    # init_params length must equal 4 * param_count bytes.
+    raw = (artifacts / m["init_params"]).stat().st_size
+    assert raw == 4 * int(m["param_count"])
+
+
+def test_hlo_is_text_with_entry(artifacts):
+    text = (artifacts / "train_step.hlo.txt").read_text()
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+    # The tuple-return convention the rust side unwraps.
+    assert "tuple" in text.lower()
+
+
+def test_hlo_has_no_custom_calls(artifacts):
+    # interpret=True must lower the Pallas kernels to plain HLO; a Mosaic
+    # custom-call would be unloadable by the CPU PJRT client.
+    for name in ["train_step.hlo.txt", "survival_theta.hlo.txt"]:
+        text = (artifacts / name).read_text()
+        assert "mosaic" not in text.lower(), name
+        assert "tpu_custom_call" not in text.lower(), name
+
+
+def test_hlo_parameter_shapes_match_manifest(artifacts):
+    m = _manifest(artifacts)
+    text = (artifacts / "train_step.hlo.txt").read_text()
+    pc = m["param_count"]
+    b = m["batch"]
+    t1 = int(m["seq"]) + 1
+    assert f"f32[{pc}]" in text, "flat param vector shape missing"
+    assert f"s32[{b},{t1}]" in text, "token batch shape missing"
+
+
+def test_theta_kernel_shapes(artifacts):
+    m = _manifest(artifacts)
+    text = (artifacts / "survival_theta.hlo.txt").read_text()
+    n, k = m["theta_nodes"], m["theta_walks"]
+    assert f"f32[{n},{k}]" in text
+    assert f"f32[{n}]" in text

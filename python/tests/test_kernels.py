@@ -1,0 +1,197 @@
+"""Pallas kernels vs pure-jnp oracles: forward values and custom-VJP
+gradients, swept over shapes (and a dtype spot-check) with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, mlp_block, ref, survival_theta
+from compile.kernels.mlp_block import BLOCK_ROWS, vmem_bytes
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- mlp_block
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([1, 7, 32, 128, 131, 256]),
+    d_in=st.sampled_from([8, 16, 64]),
+    d_h=st.sampled_from([16, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_forward_matches_ref(rows, d_in, d_h, seed):
+    x = _rand(seed, (rows, d_in))
+    w1 = _rand(seed + 1, (d_in, d_h), 0.2)
+    w2 = _rand(seed + 2, (d_h, d_in), 0.2)
+    got = mlp_block(x, w1, w2)
+    want = ref.mlp_block(x, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([4, 63, 128, 200]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_gradients_match_ref(rows, seed):
+    d_in, d_h = 16, 48
+    x = _rand(seed, (rows, d_in))
+    w1 = _rand(seed + 1, (d_in, d_h), 0.2)
+    w2 = _rand(seed + 2, (d_h, d_in), 0.2)
+
+    def loss_kernel(x, w1, w2):
+        return jnp.sum(mlp_block(x, w1, w2) ** 2)
+
+    def loss_ref(x, w1, w2):
+        return jnp.sum(ref.mlp_block(x, w1, w2) ** 2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w1, w2)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w1, w2)
+    for a, b, name in zip(gk, gr, ["dx", "dw1", "dw2"]):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4, err_msg=name)
+
+
+def test_mlp_multi_block_accumulation():
+    # rows > BLOCK_ROWS exercises the revisited-output dw accumulation.
+    rows = BLOCK_ROWS * 3
+    x = _rand(0, (rows, 8))
+    w1 = _rand(1, (8, 24), 0.2)
+    w2 = _rand(2, (24, 8), 0.2)
+    gk = jax.grad(lambda w: jnp.sum(mlp_block(x, w, w2)))(w1)
+    gr = jax.grad(lambda w: jnp.sum(ref.mlp_block(x, w, w2)))(w1)
+    np.testing.assert_allclose(gk, gr, rtol=2e-4, atol=2e-4)
+
+
+def test_mlp_under_jit_and_vmem_estimate():
+    x = _rand(3, (64, 16))
+    w1 = _rand(4, (16, 64), 0.2)
+    w2 = _rand(5, (64, 16), 0.2)
+    got = jax.jit(mlp_block)(x, w1, w2)
+    np.testing.assert_allclose(got, ref.mlp_block(x, w1, w2), rtol=3e-5, atol=3e-5)
+    # VMEM estimate: static formula, sanity range (< 16 MiB for our sizes).
+    assert vmem_bytes(64, 16, 64, 16) < 16 * 2**20
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(**SETTINGS)
+@given(
+    bh=st.sampled_from([1, 3, 8]),
+    t=st.sampled_from([1, 4, 16, 33]),
+    d=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_forward_matches_ref(bh, t, d, seed):
+    q = _rand(seed, (bh, t, d))
+    k = _rand(seed + 1, (bh, t, d))
+    v = _rand(seed + 2, (bh, t, d))
+    got = attention(q, k, v)
+    want = jnp.stack([ref.attention(q[i], k[i], v[i]) for i in range(bh)])
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(t=st.sampled_from([2, 8, 17]), seed=st.integers(0, 2**31 - 1))
+def test_attention_gradients_match_ref(t, seed):
+    bh, d = 4, 8
+    q = _rand(seed, (bh, t, d))
+    k = _rand(seed + 1, (bh, t, d))
+    v = _rand(seed + 2, (bh, t, d))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        o = jnp.stack([ref.attention(q[i], k[i], v[i]) for i in range(bh)])
+        return jnp.sum(o**2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gk, gr, ["dq", "dk", "dv"]):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4, err_msg=name)
+
+
+def test_attention_is_causal():
+    # Changing a future kv pair must not change earlier outputs.
+    q = _rand(0, (1, 8, 4))
+    k = _rand(1, (1, 8, 4))
+    v = _rand(2, (1, 8, 4))
+    base = attention(q, k, v)
+    k2 = k.at[0, 7].add(100.0)
+    v2 = v.at[0, 7].add(-50.0)
+    pert = attention(q, k2, v2)
+    np.testing.assert_allclose(base[0, :7], pert[0, :7], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(base[0, 7], pert[0, 7])
+
+
+def test_attention_rows_are_convex_combinations():
+    # Softmax weights sum to 1 ⇒ output rows lie in the convex hull of v
+    # rows; with constant v the output equals v.
+    q = _rand(0, (2, 6, 4))
+    k = _rand(1, (2, 6, 4))
+    v = jnp.ones((2, 6, 4)) * 3.0
+    out = attention(q, k, v)
+    np.testing.assert_allclose(out, v, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- survival
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([1, 7, 128, 256]),
+    k=st.sampled_from([1, 16, 64]),
+    q=st.floats(1e-4, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_theta_matches_ref(n, k, q, seed):
+    key = jax.random.PRNGKey(seed)
+    elapsed = jnp.abs(jax.random.normal(key, (n, k))) * 100
+    qv = jnp.full((n,), q, dtype=jnp.float32)
+    mask = (jax.random.uniform(jax.random.PRNGKey(seed + 1), (n, k)) > 0.3).astype(jnp.float32)
+    got = survival_theta(elapsed, qv, mask)
+    want = ref.survival_theta(elapsed, qv, mask)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_theta_bounds_and_base():
+    # No known walks → theta = 0.5 everywhere; full mask at elapsed 0 →
+    # theta = 0.5 + K.
+    n, k = 8, 16
+    elapsed = jnp.zeros((n, k))
+    q = jnp.full((n,), 0.1)
+    got0 = survival_theta(elapsed, q, jnp.zeros((n, k)))
+    np.testing.assert_allclose(got0, 0.5, rtol=1e-6)
+    got1 = survival_theta(elapsed, q, jnp.ones((n, k)))
+    np.testing.assert_allclose(got1, 0.5 + k, rtol=1e-6)
+
+
+def test_theta_monotone_in_elapsed():
+    n, k = 4, 8
+    q = jnp.full((n,), 0.05)
+    mask = jnp.ones((n, k))
+    t1 = survival_theta(jnp.full((n, k), 10.0), q, mask)
+    t2 = survival_theta(jnp.full((n, k), 50.0), q, mask)
+    assert (t1 > t2).all()
+
+
+@pytest.mark.parametrize("pad", [0, 3])
+def test_theta_mask_excludes_walks(pad):
+    n, k = 4, 8
+    q = jnp.full((n,), 0.05)
+    elapsed = jnp.full((n, k), 5.0)
+    mask = jnp.ones((n, k)).at[:, :pad].set(0.0)
+    got = survival_theta(elapsed, q, mask)
+    want = 0.5 + (k - pad) * (1 - 0.05) ** 5
+    np.testing.assert_allclose(got, want, rtol=1e-5)

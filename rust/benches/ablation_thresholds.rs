@@ -1,0 +1,69 @@
+//! Ablation: DECAFORK+ threshold pair (ε, ε₂) including the paper's
+//! stated (3.25, 5.75) and design-rule-consistent choices from the
+//! Irwin–Hall quantiles (`1 − F_{Σ_{Z0−1}}(ε₂ − ½) ≈ 0`). Quantifies the
+//! churn (forks+terminations per run) each pair buys for its reaction
+//! time — the inconsistency EXPERIMENTS.md documents.
+
+use decafork::report::Table;
+use decafork::sim::engine::SimParams;
+use decafork::sim::{run_many, AggregateTrace, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
+use decafork::stats::irwin_hall::{design_epsilon, design_epsilon2};
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::var("DECAFORK_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let designed_eps = design_epsilon(10, 1e-3);
+    let designed_eps2 = design_epsilon2(10, 1e-3);
+    println!(
+        "design rule at delta=1e-3 for Z0=10: eps={designed_eps:.2} eps2={designed_eps2:.2} (paper uses 3.25/5.75)\n"
+    );
+    let mut table = Table::new(&[
+        "(eps, eps2)",
+        "mean Z (t>1k)",
+        "std Z (t>1k)",
+        "reaction b1",
+        "forks/run",
+        "terms/run",
+        "extinct",
+    ]);
+    let mut arms = vec![
+        ("paper (3.25, 5.75)".to_string(), 3.25, 5.75),
+        (format!("designed ({designed_eps:.2}, {designed_eps2:.2})"), designed_eps, designed_eps2),
+        ("tight terminate (3.25, 7.0)".to_string(), 3.25, 7.0),
+        ("loose fork (2.0, 5.75)".to_string(), 2.0, 5.75),
+    ];
+    for (label, eps, eps2) in arms.drain(..) {
+        let cfg = ExperimentConfig {
+            graph: GraphSpec::RandomRegular { n: 100, d: 8 },
+            params: SimParams::default(),
+            control: ControlSpec::DecaforkPlus { epsilon: eps, epsilon2: eps2 },
+            failures: FailureSpec::paper_bursts(),
+            horizon: 10_000,
+            runs,
+            seed: 0xEB52,
+        };
+        let (traces, agg) = run_many(&cfg, 0)?;
+        let mean_z: f64 =
+            traces.iter().map(|t| t.mean_z(1000, 10_000)).sum::<f64>() / traces.len() as f64;
+        let std_z: f64 = agg.std[1000..].iter().sum::<f64>() / (agg.std.len() - 1000) as f64;
+        let (r1, u1) = AggregateTrace::mean_recovery(&traces, 2000, 10);
+        table.row(vec![
+            label,
+            format!("{mean_z:.2}"),
+            format!("{std_z:.2}"),
+            match (r1, u1) {
+                (Some(v), 0) => format!("{v:.0}"),
+                (Some(v), u) => format!("{v:.0} ({u}!)"),
+                (None, _) => "never".into(),
+            },
+            format!("{:.0}", agg.forks_per_run.iter().sum::<usize>() as f64 / agg.runs as f64),
+            format!("{:.0}", agg.terms_per_run.iter().sum::<usize>() as f64 / agg.runs as f64),
+            format!("{}/{}", agg.extinctions, agg.runs),
+        ]);
+    }
+    println!("ablation_thresholds — DECAFORK+ on Fig.1 failures, {runs} runs\n");
+    println!("{}", table.render());
+    Ok(())
+}

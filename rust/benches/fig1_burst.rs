@@ -1,0 +1,28 @@
+//! Bench/regenerator for paper Fig. 1: MISSINGPERSON vs DECAFORK vs
+//! DECAFORK+ under burst failures. Prints the same series the paper
+//! plots (mean Z_t ± std) plus the derived reaction/overshoot rows.
+//!
+//! `cargo bench --bench fig1_burst` (env DECAFORK_BENCH_RUNS=50 for the
+//! paper's replication count).
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::var("DECAFORK_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let t0 = std::time::Instant::now();
+    let fig = decafork::figures::fig1(runs, 0)?;
+    let dt = t0.elapsed();
+    println!("{}", fig.plot(100, 18));
+    println!("{}", fig.summary());
+    let path = fig.write_csv("results")?;
+    println!(
+        "fig1: {} curves x {} runs x 10k steps in {:.2?} ({:.1} ms/run-curve); csv {}",
+        fig.curves.len(),
+        runs,
+        dt,
+        dt.as_secs_f64() * 1000.0 / (fig.curves.len() * runs) as f64,
+        path.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench/regenerator for paper Fig. 2: bursts + per-step probabilistic
+//! failures, DECAFORK vs DECAFORK+ at p_f ∈ {0.0002, 0.001}.
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::var("DECAFORK_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let t0 = std::time::Instant::now();
+    let fig = decafork::figures::fig2(runs, 0)?;
+    println!("{}", fig.plot(100, 18));
+    println!("{}", fig.summary());
+    let path = fig.write_csv("results")?;
+    println!("fig2 done in {:.2?}; csv {}", t0.elapsed(), path.display());
+    Ok(())
+}

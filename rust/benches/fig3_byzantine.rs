@@ -1,0 +1,16 @@
+//! Bench/regenerator for paper Fig. 3: bursts + Byzantine node with a
+//! Byz → No-Byz flip at t = 5000. Only DECAFORK+ handles both phases.
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::var("DECAFORK_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let t0 = std::time::Instant::now();
+    let fig = decafork::figures::fig3(runs, 0)?;
+    println!("{}", fig.plot(100, 18));
+    println!("{}", fig.summary());
+    let path = fig.write_csv("results")?;
+    println!("fig3 done in {:.2?}; csv {}", t0.elapsed(), path.display());
+    Ok(())
+}

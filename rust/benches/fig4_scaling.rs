@@ -1,0 +1,16 @@
+//! Bench/regenerator for paper Fig. 4: DECAFORK across n ∈ {50,100,200}
+//! (8-regular), per-n tuned ε, bursts at 2000/6000.
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::var("DECAFORK_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let t0 = std::time::Instant::now();
+    let fig = decafork::figures::fig4(runs, 0)?;
+    println!("{}", fig.plot(100, 18));
+    println!("{}", fig.summary());
+    let path = fig.write_csv("results")?;
+    println!("fig4 done in {:.2?}; csv {}", t0.elapsed(), path.display());
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench/regenerator for paper Fig. 5: the ε trade-off — larger ε reacts
+//! faster but forks more beyond Z0 (objectives (i) vs (ii)).
+
+fn main() -> anyhow::Result<()> {
+    let runs: usize = std::env::var("DECAFORK_BENCH_RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10);
+    let t0 = std::time::Instant::now();
+    let fig = decafork::figures::fig5(runs, 0)?;
+    println!("{}", fig.plot(100, 18));
+    println!("{}", fig.summary());
+    let path = fig.write_csv("results")?;
+    println!("fig5 done in {:.2?}; csv {}", t0.elapsed(), path.display());
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! L3 hot-path throughput: walk-hops/second of the simulation engine on
+//! the Fig. 1 workload, plus a scaling sweep. §Perf target:
+//! ≥ 10⁷ hops/s single-thread (n=100, Z≈10, empirical survival).
+
+use decafork::control::Decafork;
+use decafork::failures::NoFailures;
+use decafork::graph::generators;
+use decafork::rng::Rng;
+use decafork::sim::engine::{Engine, SimParams};
+use std::sync::Arc;
+
+fn bench_case(n: usize, d: usize, z0: u32, steps: u64) -> (f64, u64) {
+    let g = Arc::new(generators::random_regular(n, d, &mut Rng::new(1)).unwrap());
+    let mut e = Engine::new(
+        g,
+        SimParams { z0, ..Default::default() },
+        Box::new(Decafork::new(2.0)),
+        Box::new(NoFailures),
+        Rng::new(2),
+    );
+    // Warm: populate node tables.
+    e.run_to(steps / 5);
+    let hops0 = e.trace().z.iter().map(|&z| z as u64).sum::<u64>();
+    let t0 = std::time::Instant::now();
+    e.run_to(steps);
+    let dt = t0.elapsed();
+    let hops = e.trace().z.iter().map(|&z| z as u64).sum::<u64>() - hops0;
+    (hops as f64 / dt.as_secs_f64(), hops)
+}
+
+fn main() {
+    println!("perf_engine: simulation hot-path throughput (single thread)\n");
+    println!(
+        "{:<28} {:>14} {:>12}",
+        "case", "hops/s", "hops"
+    );
+    for (n, d, z0, steps) in [
+        (100usize, 8usize, 10u32, 200_000u64), // Fig.1 workload
+        (50, 8, 10, 200_000),
+        (200, 8, 10, 200_000),
+        (100, 8, 40, 100_000),                 // 4x walk density
+        (1000, 8, 10, 100_000),                // big graph
+    ] {
+        let (rate, hops) = bench_case(n, d, z0, steps);
+        println!(
+            "{:<28} {:>14.3e} {:>12}",
+            format!("n={n} d={d} Z0={z0}"),
+            rate,
+            hops
+        );
+    }
+}

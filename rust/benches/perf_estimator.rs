@@ -1,0 +1,40 @@
+//! Estimator micro-bench: θ̂ evaluations/second for each survival model
+//! and walk-table size — the innermost loop of every control decision.
+
+use decafork::rng::Rng;
+use decafork::walks::{NodeState, SurvivalModel, WalkId};
+
+fn bench(model: SurvivalModel, known: usize, iters: u64) -> f64 {
+    let mut s = NodeState::new(16, model);
+    let mut rng = Rng::new(3);
+    for w in 0..known as u64 {
+        s.observe(rng.below(1000) as u64, WalkId(w), (w % 16) as u16);
+    }
+    // Populate the return-time distribution (empirical model reads it).
+    for _ in 0..2000 {
+        s.return_cdf.add(rng.geometric(0.01) as u32);
+    }
+    let mut acc = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        acc += s.theta(2000 + i % 64, WalkId(i % known as u64));
+    }
+    let dt = t0.elapsed();
+    std::hint::black_box(acc);
+    iters as f64 / dt.as_secs_f64()
+}
+
+fn main() {
+    println!("perf_estimator: theta() evaluations/second\n");
+    println!("{:<28} {:>10} {:>16}", "model", "known", "theta/s");
+    for known in [10usize, 40, 200] {
+        for (name, model) in [
+            ("empirical", SurvivalModel::Empirical),
+            ("geometric", SurvivalModel::Geometric { q: 0.01 }),
+            ("exponential", SurvivalModel::Exponential { lambda: 0.01 }),
+        ] {
+            let rate = bench(model, known, 2_000_000);
+            println!("{:<28} {:>10} {:>16.3e}", name, known, rate);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! PJRT runtime latency: train-step and θ-kernel wall time through the
+//! compiled artifacts — the L2/L1 contribution to a visit's cost.
+//! Skips (exit 0, loud message) when artifacts are missing.
+
+use decafork::runtime::{artifacts_present, default_artifacts_dir, Runtime, ThetaKernel, TrainStep};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !artifacts_present(&dir) {
+        eprintln!("SKIP perf_runtime: no artifacts at {} (make artifacts)", dir.display());
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let ts = TrainStep::load(&rt, &dir)?;
+    let pc = ts.param_count()?;
+    let (b, t1) = ts.token_shape()?;
+    let vocab = ts.manifest.get_usize("vocab")? as i32;
+    println!(
+        "perf_runtime: model={} params={} batch={}x{}",
+        ts.manifest.get("model")?,
+        pc,
+        b,
+        t1
+    );
+    let mut params = vec![0.01f32; pc];
+    let tokens: Vec<i32> = (0..b * t1).map(|i| (i as i32 * 13 + 1) % vocab).collect();
+
+    // Warm-up (compilation already done at load; first exec warms caches).
+    for _ in 0..3 {
+        let (p, _) = ts.step(&params, &tokens)?;
+        params = p;
+    }
+    let iters = 30;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let (p, l) = ts.step(&params, &tokens)?;
+        params = p;
+        std::hint::black_box(l);
+    }
+    let per = t0.elapsed() / iters;
+    let tok_per_s = (b * (t1 - 1)) as f64 / per.as_secs_f64();
+    println!("train_step: {per:?}/step  ({tok_per_s:.0} tokens/s)");
+
+    let th = ThetaKernel::load(&rt, &dir)?;
+    let (n, k) = (th.nodes, th.walks);
+    let elapsed = vec![25.0f32; n * k];
+    let q = vec![0.01f32; n];
+    let mask = vec![1.0f32; n * k];
+    for _ in 0..3 {
+        th.theta(&elapsed, &q, &mask)?;
+    }
+    let iters = 200;
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(th.theta(&elapsed, &q, &mask)?);
+    }
+    let per = t0.elapsed() / iters;
+    println!(
+        "theta_kernel: {per:?}/call for {n}x{k} ({:.3e} survival evals/s)",
+        (n * k) as f64 / per.as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! Minimal command-line argument parser (the vendored crate set has no
+//! `clap`): `program SUBCOMMAND [--flag value] [--switch]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                anyhow::ensure!(!name.is_empty(), "empty flag name");
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                anyhow::bail!("unexpected positional argument '{a}'");
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> anyhow::Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("flag --{name}={v}: {e}")),
+        }
+    }
+
+    /// Required typed flag.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let v = self
+            .flags
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))?;
+        v.parse().map_err(|e| anyhow::anyhow!("flag --{name}={v}: {e}"))
+    }
+
+    /// String flag with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Boolean switch.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = parse("simulate --n 100 --eps 2.0 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.get::<usize>("n", 0).unwrap(), 100);
+        assert!((a.get::<f64>("eps", 0.0).unwrap() - 2.0).abs() < 1e-12);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_requires() {
+        let a = parse("x --set 5");
+        assert_eq!(a.get::<u64>("missing", 7).unwrap(), 7);
+        assert_eq!(a.require::<u64>("set").unwrap(), 5);
+        assert!(a.require::<u64>("missing").is_err());
+        assert!(a.get::<u64>("set", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("x --n abc");
+        assert!(a.get::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_extra_positionals() {
+        assert!(Args::parse(vec!["a".into(), "b".into()]).is_err());
+    }
+
+    #[test]
+    fn consecutive_switches() {
+        let a = parse("run --fast --loud --n 3");
+        assert!(a.has("fast") && a.has("loud"));
+        assert_eq!(a.get::<usize>("n", 0).unwrap(), 3);
+    }
+}

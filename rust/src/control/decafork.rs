@@ -1,0 +1,239 @@
+//! DECAFORK and DECAFORK+ (Sec. III-B / III-C).
+//!
+//! DECAFORK: when walk `k` visits node `i` at time `t`, the node computes
+//! the estimator `θ̂_i(t)` (Eq. 1). If `θ̂_i(t) < ε` the node forks the
+//! visiting walk with probability `p = 1/Z0` under a new unique id.
+//!
+//! DECAFORK+: additionally, if `θ̂_i(t) > ε₂`, the node terminates the
+//! visiting walk with probability `p`, bounding the redundancy from above
+//! and allowing a more aggressive ε.
+
+use super::{ControlAlgorithm, Decision, VisitCtx};
+use crate::stats::irwin_hall::{design_epsilon, design_epsilon2};
+
+/// DECAFORK configuration + behaviour.
+#[derive(Debug, Clone)]
+pub struct Decafork {
+    /// Forking threshold ε on the estimator.
+    pub epsilon: f64,
+    /// Forking probability `p` (paper: `1/Z0`; `None` selects `1/Z0` at
+    /// visit time so one struct serves any `Z0`).
+    pub p: Option<f64>,
+}
+
+impl Decafork {
+    /// Paper parameterization: explicit ε, `p = 1/Z0`.
+    pub fn new(epsilon: f64) -> Self {
+        Decafork { epsilon, p: None }
+    }
+
+    /// Threshold designed from the Irwin–Hall quantile so the probability
+    /// of a (spurious) fork with `Z0` healthy walks is `delta`
+    /// (Sec. III-B, "Choosing the threshold").
+    pub fn designed(z0: u32, delta: f64) -> Self {
+        Decafork { epsilon: design_epsilon(z0, delta), p: None }
+    }
+
+    #[inline]
+    pub(crate) fn fork_prob(&self, z0: u32) -> f64 {
+        self.p.unwrap_or(1.0 / z0 as f64)
+    }
+}
+
+impl ControlAlgorithm for Decafork {
+    fn name(&self) -> &'static str {
+        "decafork"
+    }
+
+    fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision {
+        let theta = ctx.state.theta(ctx.t, ctx.walk);
+        let mut d = Decision { theta: Some(theta), ..Decision::none() };
+        if theta < self.epsilon && ctx.rng.bernoulli(self.fork_prob(ctx.z0)) {
+            d.forks.push(ctx.slot);
+        }
+        d
+    }
+
+    fn clone_box(&self) -> Box<dyn ControlAlgorithm> {
+        Box::new(self.clone())
+    }
+}
+
+/// DECAFORK+ — forking plus deliberate termination.
+#[derive(Debug, Clone)]
+pub struct DecaforkPlus {
+    /// Inner forking rule (threshold ε, probability p).
+    pub fork: Decafork,
+    /// Termination threshold ε₂ (> ε).
+    pub epsilon2: f64,
+}
+
+impl DecaforkPlus {
+    /// Paper parameterization (Fig. 1: ε = 3.25, ε₂ = 5.75 for Z0 = 10).
+    pub fn new(epsilon: f64, epsilon2: f64) -> Self {
+        assert!(epsilon2 > epsilon, "need ε₂ > ε");
+        DecaforkPlus { fork: Decafork::new(epsilon), epsilon2 }
+    }
+
+    /// Both thresholds designed from Irwin–Hall quantiles (Sec. III-C).
+    pub fn designed(z0: u32, delta_fork: f64, delta_term: f64) -> Self {
+        let epsilon = design_epsilon(z0, delta_fork);
+        let epsilon2 = design_epsilon2(z0, delta_term);
+        assert!(epsilon2 > epsilon, "inconsistent deltas: ε={epsilon} ε₂={epsilon2}");
+        DecaforkPlus { fork: Decafork { epsilon, p: None }, epsilon2 }
+    }
+}
+
+impl ControlAlgorithm for DecaforkPlus {
+    fn name(&self) -> &'static str {
+        "decafork+"
+    }
+
+    fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision {
+        // DECAFORK+ runs DECAFORK first (which computes θ̂), then checks
+        // the termination threshold on the same estimate.
+        let mut d = self.fork.on_visit(ctx);
+        let theta = d.theta.expect("decafork always sets theta");
+        if theta > self.epsilon2 && ctx.rng.bernoulli(self.fork.fork_prob(ctx.z0)) {
+            d.terminate = true;
+        }
+        d
+    }
+
+    fn clone_box(&self) -> Box<dyn ControlAlgorithm> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::walks::{NodeState, SurvivalModel, WalkId};
+
+    fn state_with_walks(n_walks: u64, last_seen_at: u64, q: f64) -> NodeState {
+        let mut s = NodeState::new(10, SurvivalModel::Geometric { q });
+        for w in 0..n_walks {
+            s.observe(last_seen_at, WalkId(w), (w % 10) as u16);
+        }
+        s
+    }
+
+    #[test]
+    fn forks_when_estimate_collapses() {
+        // All other walks last seen ages ago → θ̂ ≈ ½ < ε ⇒ fork happens
+        // with probability 1/Z0; force p = 1 to make it deterministic.
+        let mut alg = Decafork { epsilon: 2.0, p: Some(1.0) };
+        let mut s = state_with_walks(10, 0, 0.05);
+        let mut rng = Rng::new(1);
+        let mut ctx = VisitCtx {
+            t: 2000,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 10,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        let d = alg.on_visit(&mut ctx);
+        assert_eq!(d.forks.len(), 1);
+        assert!(d.theta.unwrap() < 0.51);
+    }
+
+    #[test]
+    fn no_fork_when_population_healthy() {
+        // All walks just seen → θ̂ ≈ ½ + 9 ≫ ε ⇒ no fork regardless of p.
+        let mut alg = Decafork { epsilon: 2.0, p: Some(1.0) };
+        let mut s = state_with_walks(10, 999, 0.05);
+        let mut rng = Rng::new(2);
+        let mut ctx = VisitCtx {
+            t: 1000,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 10,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        let d = alg.on_visit(&mut ctx);
+        assert!(d.forks.is_empty());
+        assert!(d.theta.unwrap() > 8.0);
+    }
+
+    #[test]
+    fn fork_probability_defaults_to_inv_z0() {
+        let mut alg = Decafork::new(2.0);
+        assert!((alg.fork_prob(10) - 0.1).abs() < 1e-12);
+        let mut s = state_with_walks(10, 0, 0.05);
+        let mut rng = Rng::new(3);
+        let mut forks = 0;
+        let trials = 20_000;
+        for _ in 0..trials {
+            let mut ctx = VisitCtx {
+                t: 5000,
+                node: 0,
+                walk: WalkId(0),
+                slot: 0,
+                z0: 10,
+                state: &mut s,
+                rng: &mut rng,
+            };
+            forks += alg.on_visit(&mut ctx).forks.len();
+        }
+        let rate = forks as f64 / trials as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn plus_terminates_on_overshoot() {
+        let mut alg = DecaforkPlus {
+            fork: Decafork { epsilon: 2.0, p: Some(1.0) },
+            epsilon2: 5.75,
+        };
+        // 15 fresh walks → θ̂ ≈ 14.5 > ε₂ ⇒ terminate (p = 1).
+        let mut s = state_with_walks(15, 999, 0.05);
+        let mut rng = Rng::new(4);
+        let mut ctx = VisitCtx {
+            t: 1000,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 10,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        let d = alg.on_visit(&mut ctx);
+        assert!(d.terminate);
+        assert!(d.forks.is_empty());
+    }
+
+    #[test]
+    fn plus_never_both_forks_and_terminates() {
+        // ε < θ̂ < ε₂ band: neither action.
+        let mut alg = DecaforkPlus {
+            fork: Decafork { epsilon: 2.0, p: Some(1.0) },
+            epsilon2: 8.0,
+        };
+        let mut s = state_with_walks(6, 999, 0.05);
+        let mut rng = Rng::new(5);
+        let mut ctx = VisitCtx {
+            t: 1000,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 10,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        let d = alg.on_visit(&mut ctx);
+        assert!(d.is_noop(), "{d:?}");
+    }
+
+    #[test]
+    fn designed_thresholds_sane() {
+        let alg = Decafork::designed(10, 1e-4);
+        assert!(alg.epsilon > 0.5 && alg.epsilon < 4.0);
+        let plus = DecaforkPlus::designed(10, 1e-3, 1e-3);
+        assert!(plus.epsilon2 > plus.fork.epsilon);
+    }
+}

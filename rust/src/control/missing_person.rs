@@ -1,0 +1,138 @@
+//! MISSINGPERSON baseline (Sec. III-A).
+//!
+//! Each node tracks, for each of the `Z0` original walk identities
+//! `ℓ ∈ [Z0]`, the last time any walk carrying identity `ℓ` visited
+//! (`L_{i,ℓ}`, initialized to 0). On a visit by walk `k`, for every other
+//! identity `ℓ` not seen for more than `ε_mp` steps, the node forks a
+//! replacement (with identity `ℓ`) with probability `1/Z0`.
+//!
+//! The difficulty the paper points out: a good `ε_mp` depends on the graph
+//! and the node's position in it, and nothing stops several nodes from
+//! replacing the same missing identity — the over-forking visible in Fig. 1.
+
+use super::{ControlAlgorithm, Decision, VisitCtx};
+
+/// MISSINGPERSON with threshold `ε_mp` on per-identity staleness.
+#[derive(Debug, Clone)]
+pub struct MissingPerson {
+    /// Staleness threshold ε_mp (time steps).
+    pub eps_mp: u64,
+    /// Replacement probability (paper: 1/Z0; `None` = 1/Z0).
+    pub p: Option<f64>,
+}
+
+impl MissingPerson {
+    pub fn new(eps_mp: u64) -> Self {
+        MissingPerson { eps_mp, p: None }
+    }
+
+    /// Rule-of-thumb threshold: a multiple of the analytic mean return
+    /// time `2|E|/deg` (Kac), the natural scale of inter-visit gaps.
+    pub fn from_mean_return(mean_return: f64, multiplier: f64) -> Self {
+        MissingPerson { eps_mp: (mean_return * multiplier).ceil() as u64, p: None }
+    }
+}
+
+impl ControlAlgorithm for MissingPerson {
+    fn name(&self) -> &'static str {
+        "missingperson"
+    }
+
+    fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision {
+        let p = self.p.unwrap_or(1.0 / ctx.z0 as f64);
+        let mut d = Decision::none();
+        for ell in 0..ctx.state.slot_last_seen.len() as u16 {
+            if ell == ctx.slot {
+                continue;
+            }
+            let last = ctx.state.slot_last_seen[ell as usize];
+            if ctx.t.saturating_sub(last) > self.eps_mp && ctx.rng.bernoulli(p) {
+                // Fork the visiting walk as a replacement carrying ℓ.
+                d.forks.push(ell);
+            }
+        }
+        d
+    }
+
+    fn clone_box(&self) -> Box<dyn ControlAlgorithm> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::walks::{NodeState, SurvivalModel, WalkId};
+
+    #[test]
+    fn replaces_stale_identities() {
+        let mut alg = MissingPerson { eps_mp: 100, p: Some(1.0) };
+        let mut s = NodeState::new(3, SurvivalModel::Empirical);
+        // Identity 0 visits now; identities 1, 2 never seen (L = 0).
+        s.observe(500, WalkId(0), 0);
+        let mut rng = Rng::new(1);
+        let mut ctx = VisitCtx {
+            t: 500,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 3,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        let d = alg.on_visit(&mut ctx);
+        assert_eq!(d.forks, vec![1, 2]);
+        assert!(!d.terminate);
+    }
+
+    #[test]
+    fn fresh_identities_not_replaced() {
+        let mut alg = MissingPerson { eps_mp: 100, p: Some(1.0) };
+        let mut s = NodeState::new(3, SurvivalModel::Empirical);
+        s.observe(490, WalkId(1), 1);
+        s.observe(495, WalkId(2), 2);
+        s.observe(500, WalkId(0), 0);
+        let mut rng = Rng::new(2);
+        let mut ctx = VisitCtx {
+            t: 500,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 3,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        assert!(alg.on_visit(&mut ctx).is_noop());
+    }
+
+    #[test]
+    fn replacement_probability_is_inv_z0() {
+        let mut alg = MissingPerson::new(10); // p = 1/Z0 = 0.1
+        let mut rng = Rng::new(3);
+        let trials = 20_000;
+        let mut forks = 0usize;
+        for _ in 0..trials {
+            let mut s = NodeState::new(2, SurvivalModel::Empirical);
+            s.observe(500, WalkId(0), 0);
+            let mut ctx = VisitCtx {
+                t: 500,
+                node: 0,
+                walk: WalkId(0),
+                slot: 0,
+                z0: 10,
+                state: &mut s,
+                rng: &mut rng,
+            };
+            forks += alg.on_visit(&mut ctx).forks.len();
+        }
+        let rate = forks as f64 / trials as f64;
+        assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn from_mean_return_scales() {
+        let alg = MissingPerson::from_mean_return(100.0, 6.0);
+        assert_eq!(alg.eps_mp, 600);
+    }
+}

@@ -1,0 +1,172 @@
+//! Decentralized control algorithms: the paper's DECAFORK and DECAFORK+,
+//! the MISSINGPERSON baseline (Sec. III-A), the naive periodic-fork
+//! strawman from the introduction, and a no-op control.
+//!
+//! All algorithms obey the paper's Rules 1–3: decisions use only state
+//! local to the visited node (`NodeState`) plus the visiting token. The
+//! engine enforces footnote 6 (a node takes at most one control decision
+//! per time step even if several walks visit it).
+
+pub mod decafork;
+pub mod missing_person;
+
+pub use decafork::{Decafork, DecaforkPlus};
+pub use missing_person::MissingPerson;
+
+use crate::rng::Rng;
+use crate::walks::{NodeState, WalkId};
+
+/// Everything a node-local control decision may read/mutate.
+pub struct VisitCtx<'a> {
+    /// Current time step.
+    pub t: u64,
+    /// Visited node.
+    pub node: u32,
+    /// Visiting walk (the only walk the node may fork or terminate).
+    pub walk: WalkId,
+    /// MISSINGPERSON slot label of the visiting walk.
+    pub slot: u16,
+    /// Target number of walks `Z0`.
+    pub z0: u32,
+    /// The visited node's local state (last-seen tables, return ECDF).
+    pub state: &'a mut NodeState,
+    /// Node-local randomness.
+    pub rng: &'a mut Rng,
+}
+
+/// Outcome of one control decision.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Decision {
+    /// Slots of walks to fork (duplicates of the *visiting* walk; the slot
+    /// labels matter only to MISSINGPERSON's replacement semantics).
+    pub forks: Vec<u16>,
+    /// Terminate the visiting walk (DECAFORK+ only).
+    pub terminate: bool,
+    /// The estimator value, when the algorithm computes one (telemetry).
+    pub theta: Option<f64>,
+}
+
+impl Decision {
+    /// The do-nothing decision.
+    pub fn none() -> Self {
+        Decision::default()
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.forks.is_empty() && !self.terminate
+    }
+}
+
+/// A decentralized control algorithm executed at the visited node.
+pub trait ControlAlgorithm: Send {
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Called when a walk visits a node **after** the node has recorded
+    /// the visit in its `NodeState`.
+    fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision;
+
+    /// Clone into a boxed trait object (multi-run fan-out).
+    fn clone_box(&self) -> Box<dyn ControlAlgorithm>;
+}
+
+impl Clone for Box<dyn ControlAlgorithm> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// No control: walks die, nothing replaces them. The catastrophic
+/// baseline that motivates the paper.
+#[derive(Debug, Clone, Default)]
+pub struct NoControl;
+
+impl ControlAlgorithm for NoControl {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn on_visit(&mut self, _ctx: &mut VisitCtx<'_>) -> Decision {
+        Decision::none()
+    }
+
+    fn clone_box(&self) -> Box<dyn ControlAlgorithm> {
+        Box::new(self.clone())
+    }
+}
+
+/// The introduction's strawman: every node independently forks the
+/// visiting walk every `period` steps, regardless of system state. For
+/// small periods it floods the network; for large ones it goes extinct —
+/// exactly the failure mode DECAFORK is designed to avoid.
+#[derive(Debug, Clone)]
+pub struct PeriodicFork {
+    pub period: u64,
+    last_fork: Vec<u64>,
+}
+
+impl PeriodicFork {
+    pub fn new(n_nodes: usize, period: u64) -> Self {
+        PeriodicFork { period, last_fork: vec![0; n_nodes] }
+    }
+}
+
+impl ControlAlgorithm for PeriodicFork {
+    fn name(&self) -> &'static str {
+        "periodic"
+    }
+
+    fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision {
+        let last = &mut self.last_fork[ctx.node as usize];
+        if ctx.t.saturating_sub(*last) >= self.period {
+            *last = ctx.t;
+            Decision { forks: vec![ctx.slot], terminate: false, theta: None }
+        } else {
+            Decision::none()
+        }
+    }
+
+    fn clone_box(&self) -> Box<dyn ControlAlgorithm> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::walks::SurvivalModel;
+
+    fn ctx_at<'a>(
+        t: u64,
+        state: &'a mut NodeState,
+        rng: &'a mut Rng,
+    ) -> VisitCtx<'a> {
+        VisitCtx { t, node: 0, walk: WalkId(1), slot: 0, z0: 10, state, rng }
+    }
+
+    #[test]
+    fn no_control_never_acts() {
+        let mut state = NodeState::new(10, SurvivalModel::Empirical);
+        let mut rng = Rng::new(1);
+        let mut alg = NoControl;
+        for t in 0..100 {
+            let mut c = ctx_at(t, &mut state, &mut rng);
+            assert!(alg.on_visit(&mut c).is_noop());
+        }
+    }
+
+    #[test]
+    fn periodic_forks_on_schedule() {
+        let mut state = NodeState::new(10, SurvivalModel::Empirical);
+        let mut rng = Rng::new(1);
+        let mut alg = PeriodicFork::new(4, 10);
+        let mut forks = 0;
+        for t in 1..=50 {
+            let mut c = ctx_at(t, &mut state, &mut rng);
+            if !alg.on_visit(&mut c).forks.is_empty() {
+                forks += 1;
+            }
+        }
+        assert_eq!(forks, 5); // t = 10, 20, 30, 40, 50
+    }
+}

@@ -1,0 +1,17 @@
+//! Decentralized thread-per-node runtime.
+//!
+//! The synchronous engine in [`crate::sim`] reproduces the paper's
+//! simulations; this module demonstrates that the algorithms really are
+//! decentralized: every node is an OS thread owning only its local
+//! [`NodeState`] and a clone of the control algorithm, edges are mpsc
+//! channels, and tokens are messages carrying Lamport-style logical
+//! clocks. There is no global scheduler on the token path — the only
+//! shared state is telemetry (atomic counters) and the stop flag.
+//!
+//! Rules 1–3 hold by construction: a node can only talk to its channel
+//! neighbors, walks never talk to each other, and fork/terminate happen
+//! at the currently visited node.
+
+pub mod actor;
+
+pub use actor::{ActorRun, ActorRuntime, ActorStats};

@@ -1,0 +1,317 @@
+//! Failure/threat models (Sec. II): burst failures, per-step probabilistic
+//! failures, and a Byzantine node driven by a two-state Markov chain that
+//! terminates every incoming walk while in its `Byz` state. The control
+//! algorithms make **no assumption** about which of these is active — the
+//! models exist to stress them, mirroring Figs. 1–3.
+
+use crate::rng::Rng;
+use crate::walks::WalkId;
+
+/// A failure model injected into the simulation engine.
+///
+/// Hooks mirror where failures physically occur:
+/// * `pre_step` — external events at the start of step `t` (bursts; also
+///   advances internal Markov state for Byzantine nodes),
+/// * `on_hop` — token lost in transit (node/link down, buffer overflow),
+/// * `on_arrival` — the receiving node destroys the token (Byzantine).
+pub trait FailureModel: Send {
+    fn name(&self) -> &'static str;
+
+    /// Walks to kill at the start of step `t`. `alive` lists current ids.
+    fn pre_step(&mut self, _t: u64, _alive: &[WalkId], _rng: &mut Rng) -> Vec<WalkId> {
+        Vec::new()
+    }
+
+    /// Whether the walk dies while hopping `from → to` at step `t`.
+    fn on_hop(&mut self, _t: u64, _walk: WalkId, _from: u32, _to: u32, _rng: &mut Rng) -> bool {
+        false
+    }
+
+    /// Whether the walk dies upon arriving at `node` at step `t`.
+    fn on_arrival(&mut self, _t: u64, _walk: WalkId, _node: u32, _rng: &mut Rng) -> bool {
+        false
+    }
+
+    fn clone_box(&self) -> Box<dyn FailureModel>;
+}
+
+impl Clone for Box<dyn FailureModel> {
+    fn clone(&self) -> Self {
+        self.clone_box()
+    }
+}
+
+/// No failures.
+#[derive(Debug, Clone, Default)]
+pub struct NoFailures;
+
+impl FailureModel for NoFailures {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn clone_box(&self) -> Box<dyn FailureModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Deterministic burst events: at time `t`, kill `count` randomly chosen
+/// walks simultaneously (Fig. 1: −5 at t=2000, −6 at t=6000).
+#[derive(Debug, Clone)]
+pub struct Burst {
+    /// (time, number of walks to kill) — sorted by time at construction.
+    events: Vec<(u64, usize)>,
+}
+
+impl Burst {
+    pub fn new(mut events: Vec<(u64, usize)>) -> Self {
+        events.sort_unstable();
+        Burst { events }
+    }
+
+    /// The paper's Fig. 1 schedule.
+    pub fn paper_default() -> Self {
+        Burst::new(vec![(2000, 5), (6000, 6)])
+    }
+
+    pub fn events(&self) -> &[(u64, usize)] {
+        &self.events
+    }
+}
+
+impl FailureModel for Burst {
+    fn name(&self) -> &'static str {
+        "burst"
+    }
+
+    fn pre_step(&mut self, t: u64, alive: &[WalkId], rng: &mut Rng) -> Vec<WalkId> {
+        let mut killed = Vec::new();
+        for &(et, count) in &self.events {
+            if et == t {
+                let k = count.min(alive.len());
+                if k > 0 {
+                    let idx = rng.sample_indices(alive.len(), k);
+                    killed.extend(idx.into_iter().map(|i| alive[i]));
+                }
+            }
+        }
+        killed
+    }
+
+    fn clone_box(&self) -> Box<dyn FailureModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Probabilistic failures: each walk independently dies with probability
+/// `p_f` at every step (modelled as loss in transit). Fig. 2 uses
+/// `p_f ∈ {0.001, 0.0002}` on top of bursts.
+#[derive(Debug, Clone)]
+pub struct Probabilistic {
+    pub p_f: f64,
+}
+
+impl Probabilistic {
+    pub fn new(p_f: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p_f));
+        Probabilistic { p_f }
+    }
+}
+
+impl FailureModel for Probabilistic {
+    fn name(&self) -> &'static str {
+        "probabilistic"
+    }
+
+    fn on_hop(&mut self, _t: u64, _walk: WalkId, _from: u32, _to: u32, rng: &mut Rng) -> bool {
+        rng.bernoulli(self.p_f)
+    }
+
+    fn clone_box(&self) -> Box<dyn FailureModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Byzantine node (Fig. 3): a dedicated node whose behaviour follows a
+/// two-state Markov chain with flip probability `p_b` per step. In state
+/// `Byz` it deterministically terminates every incoming walk; in state
+/// `NoByz` it follows the protocol.
+#[derive(Debug, Clone)]
+pub struct Byzantine {
+    pub node: u32,
+    pub p_b: f64,
+    pub byz: bool,
+    /// Optional schedule override: forced (time, state) transitions, used
+    /// to reproduce Fig. 3's marked Byz / No-Byz phases deterministically.
+    pub schedule: Vec<(u64, bool)>,
+}
+
+impl Byzantine {
+    /// Markov-chain variant.
+    pub fn markov(node: u32, p_b: f64, start_byz: bool) -> Self {
+        Byzantine { node, p_b, byz: start_byz, schedule: Vec::new() }
+    }
+
+    /// Deterministic phase schedule (e.g. Byz during [t0,t1), honest after).
+    pub fn scheduled(node: u32, schedule: Vec<(u64, bool)>) -> Self {
+        Byzantine { node, p_b: 0.0, byz: false, schedule }
+    }
+
+    pub fn is_byz(&self) -> bool {
+        self.byz
+    }
+}
+
+impl FailureModel for Byzantine {
+    fn name(&self) -> &'static str {
+        "byzantine"
+    }
+
+    fn pre_step(&mut self, t: u64, _alive: &[WalkId], rng: &mut Rng) -> Vec<WalkId> {
+        for &(st, state) in &self.schedule {
+            if st == t {
+                self.byz = state;
+            }
+        }
+        if self.p_b > 0.0 && rng.bernoulli(self.p_b) {
+            self.byz = !self.byz;
+        }
+        Vec::new()
+    }
+
+    fn on_arrival(&mut self, _t: u64, _walk: WalkId, node: u32, _rng: &mut Rng) -> bool {
+        self.byz && node == self.node
+    }
+
+    fn clone_box(&self) -> Box<dyn FailureModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Combine several failure models; a walk dies if any component kills it.
+#[derive(Default)]
+pub struct Composite {
+    pub parts: Vec<Box<dyn FailureModel>>,
+}
+
+impl Composite {
+    pub fn new(parts: Vec<Box<dyn FailureModel>>) -> Self {
+        Composite { parts }
+    }
+}
+
+impl Clone for Composite {
+    fn clone(&self) -> Self {
+        Composite { parts: self.parts.clone() }
+    }
+}
+
+impl FailureModel for Composite {
+    fn name(&self) -> &'static str {
+        "composite"
+    }
+
+    fn pre_step(&mut self, t: u64, alive: &[WalkId], rng: &mut Rng) -> Vec<WalkId> {
+        let mut killed = Vec::new();
+        for p in &mut self.parts {
+            killed.extend(p.pre_step(t, alive, rng));
+        }
+        killed.sort_unstable();
+        killed.dedup();
+        killed
+    }
+
+    fn on_hop(&mut self, t: u64, walk: WalkId, from: u32, to: u32, rng: &mut Rng) -> bool {
+        self.parts.iter_mut().any(|p| p.on_hop(t, walk, from, to, rng))
+    }
+
+    fn on_arrival(&mut self, t: u64, walk: WalkId, node: u32, rng: &mut Rng) -> bool {
+        self.parts.iter_mut().any(|p| p.on_arrival(t, walk, node, rng))
+    }
+
+    fn clone_box(&self) -> Box<dyn FailureModel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: u64) -> Vec<WalkId> {
+        (0..n).map(WalkId).collect()
+    }
+
+    #[test]
+    fn burst_kills_exactly_count_at_time() {
+        let mut b = Burst::new(vec![(100, 3)]);
+        let mut rng = Rng::new(1);
+        let alive = ids(10);
+        assert!(b.pre_step(99, &alive, &mut rng).is_empty());
+        let killed = b.pre_step(100, &alive, &mut rng);
+        assert_eq!(killed.len(), 3);
+        let set: std::collections::HashSet<_> = killed.iter().collect();
+        assert_eq!(set.len(), 3);
+        assert!(b.pre_step(101, &alive, &mut rng).is_empty());
+    }
+
+    #[test]
+    fn burst_caps_at_population() {
+        let mut b = Burst::new(vec![(5, 100)]);
+        let mut rng = Rng::new(2);
+        let alive = ids(4);
+        assert_eq!(b.pre_step(5, &alive, &mut rng).len(), 4);
+    }
+
+    #[test]
+    fn probabilistic_rate() {
+        let mut p = Probabilistic::new(0.01);
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let deaths = (0..n)
+            .filter(|_| p.on_hop(0, WalkId(0), 0, 1, &mut rng))
+            .count();
+        assert!((deaths as f64 / n as f64 - 0.01).abs() < 0.002);
+    }
+
+    #[test]
+    fn byzantine_schedule_phases() {
+        let mut byz = Byzantine::scheduled(7, vec![(10, true), (20, false)]);
+        let mut rng = Rng::new(4);
+        byz.pre_step(5, &[], &mut rng);
+        assert!(!byz.on_arrival(5, WalkId(0), 7, &mut rng));
+        byz.pre_step(10, &[], &mut rng);
+        assert!(byz.on_arrival(10, WalkId(0), 7, &mut rng));
+        assert!(!byz.on_arrival(10, WalkId(0), 8, &mut rng)); // other nodes fine
+        byz.pre_step(20, &[], &mut rng);
+        assert!(!byz.on_arrival(20, WalkId(0), 7, &mut rng));
+    }
+
+    #[test]
+    fn byzantine_markov_flips() {
+        let mut byz = Byzantine::markov(0, 0.5, false);
+        let mut rng = Rng::new(5);
+        let mut flips = 0;
+        let mut prev = byz.is_byz();
+        for t in 0..1000 {
+            byz.pre_step(t, &[], &mut rng);
+            if byz.is_byz() != prev {
+                flips += 1;
+                prev = byz.is_byz();
+            }
+        }
+        assert!(flips > 300, "flips {flips}");
+    }
+
+    #[test]
+    fn composite_unions_kills() {
+        let mut c = Composite::new(vec![
+            Box::new(Burst::new(vec![(1, 2)])),
+            Box::new(Probabilistic::new(1.0)),
+        ]);
+        let mut rng = Rng::new(6);
+        let alive = ids(5);
+        assert_eq!(c.pre_step(1, &alive, &mut rng).len(), 2);
+        assert!(c.on_hop(1, WalkId(0), 0, 1, &mut rng));
+    }
+}

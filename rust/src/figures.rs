@@ -1,0 +1,338 @@
+//! Paper-figure regeneration harness (Figs. 1–6).
+//!
+//! Each `figN` function runs the corresponding experiment and returns a
+//! [`FigureResult`] with one aggregated `Z_t` series per curve plus the
+//! derived summary rows (reaction times, overshoot, fork counts). Used by
+//! both the `decafork figure` CLI subcommand and the `cargo bench`
+//! targets, which print the same series the paper plots.
+//!
+//! Scaling: the paper uses 50 runs over a 10 000-step horizon. `runs` is a
+//! parameter so benches can run a faster replication count while the CLI
+//! default reproduces the paper (`--runs 50`).
+
+use crate::report::{self, Table};
+use crate::sim::{
+    run_many, AggregateTrace, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec,
+};
+use crate::sim::engine::SimParams;
+use crate::sim::metrics::Trace;
+
+/// One curve: label + aggregate across runs (+ raw traces for derived
+/// statistics).
+pub struct Curve {
+    pub label: String,
+    pub agg: AggregateTrace,
+    pub traces: Vec<Trace>,
+}
+
+/// A reproduced figure.
+pub struct FigureResult {
+    pub name: &'static str,
+    pub title: String,
+    pub curves: Vec<Curve>,
+    /// Burst times (for reaction-time summaries).
+    pub bursts: Vec<u64>,
+    pub z0: u32,
+}
+
+impl FigureResult {
+    /// Render the mean `Z_t` series as an ASCII plot.
+    pub fn plot(&self, width: usize, height: usize) -> String {
+        let series: Vec<(&str, &[f64])> = self
+            .curves
+            .iter()
+            .map(|c| (c.label.as_str(), c.agg.mean.as_slice()))
+            .collect();
+        report::ascii_plot(&self.title, &series, width, height)
+    }
+
+    /// Summary table: per curve, the paper's qualitative metrics.
+    pub fn summary(&self) -> String {
+        let mut t = Table::new(&[
+            "curve",
+            "mean Z (t>500)",
+            "min Z",
+            "max Z",
+            "reaction(b1)",
+            "reaction(b2)",
+            "forks/run",
+            "terms/run",
+            "extinct",
+        ]);
+        for c in &self.curves {
+            let horizon = c.traces[0].horizon();
+            let reaction = |b: Option<&u64>| -> String {
+                match b {
+                    None => "-".into(),
+                    Some(&bt) => {
+                        let (m, unrec) = AggregateTrace::mean_recovery(&c.traces, bt, self.z0);
+                        match m {
+                            Some(v) if unrec == 0 => format!("{v:.0}"),
+                            Some(v) => format!("{v:.0} ({unrec} fail)"),
+                            None => "never".into(),
+                        }
+                    }
+                }
+            };
+            let mean_z: f64 = c
+                .traces
+                .iter()
+                .map(|tr| tr.mean_z(500, horizon))
+                .sum::<f64>()
+                / c.traces.len() as f64;
+            let forks = c.agg.forks_per_run.iter().sum::<usize>() as f64 / c.agg.runs as f64;
+            let terms = c.agg.terms_per_run.iter().sum::<usize>() as f64 / c.agg.runs as f64;
+            t.row(vec![
+                c.label.clone(),
+                format!("{mean_z:.2}"),
+                format!("{}", c.agg.min.iter().min().unwrap()),
+                format!("{}", c.agg.max.iter().max().unwrap()),
+                reaction(self.bursts.first()),
+                reaction(self.bursts.get(1)),
+                format!("{forks:.1}"),
+                format!("{terms:.1}"),
+                format!("{}/{}", c.agg.extinctions, c.agg.runs),
+            ]);
+        }
+        t.render()
+    }
+
+    /// Write `results/<name>.csv`: `t, <label>_mean, <label>_std, ...`.
+    pub fn write_csv(&self, dir: &str) -> anyhow::Result<std::path::PathBuf> {
+        let mut headers: Vec<String> = vec!["t".into()];
+        for c in &self.curves {
+            headers.push(format!("{}_mean", c.label));
+            headers.push(format!("{}_std", c.label));
+        }
+        let len = self.curves.iter().map(|c| c.agg.mean.len()).min().unwrap();
+        let mut rows = Vec::with_capacity(len);
+        for t in 0..len {
+            let mut row = vec![t as f64];
+            for c in &self.curves {
+                row.push(c.agg.mean[t]);
+                row.push(c.agg.std[t]);
+            }
+            rows.push(row);
+        }
+        let path = std::path::Path::new(dir).join(format!("{}.csv", self.name));
+        let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        report::write_csv(&path, &hdr, &rows)?;
+        Ok(path)
+    }
+}
+
+fn run_curve(label: &str, cfg: &ExperimentConfig, threads: usize) -> anyhow::Result<Curve> {
+    let (traces, agg) = run_many(cfg, threads)?;
+    Ok(Curve { label: label.to_string(), agg, traces })
+}
+
+fn base_cfg(runs: usize) -> ExperimentConfig {
+    ExperimentConfig {
+        graph: GraphSpec::RandomRegular { n: 100, d: 8 },
+        params: SimParams::default(),
+        control: ControlSpec::Decafork { epsilon: 2.0 },
+        failures: FailureSpec::paper_bursts(),
+        horizon: 10_000,
+        runs,
+        seed: 0xDECAF,
+    }
+}
+
+/// MISSINGPERSON ε_mp: the paper says "properly tuned"; the natural scale
+/// is the mean return time `2|E|/deg = n` (= 100 here). Staleness of a
+/// healthy slot is ~Exp(1/100), so false-alarm rate per step ≈
+/// `Z0·(Z0−1)·p·e^{−ε_mp/100}`; ε_mp = 800 keeps pre-failure forking
+/// near zero over a 10k-step horizon while still (slowly) detecting true
+/// losses — the paper's Fig. 1 trade-off.
+const MP_EPS: u64 = 800;
+
+/// Fig. 1: MISSINGPERSON vs DECAFORK (ε=2) vs DECAFORK+ (3.25/5.75),
+/// bursts −5 @ 2000 and −6 @ 6000.
+pub fn fig1(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs);
+    let mut curves = Vec::new();
+    for (label, control) in [
+        ("missingperson", ControlSpec::MissingPerson { eps_mp: MP_EPS }),
+        ("decafork(e=2)", ControlSpec::Decafork { epsilon: 2.0 }),
+        ("decafork+(3.25/5.75)", ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 }),
+    ] {
+        let cfg = ExperimentConfig { control, ..base.clone() };
+        curves.push(run_curve(label, &cfg, threads)?);
+    }
+    Ok(FigureResult {
+        name: "fig1",
+        title: "Fig.1 — burst failures (8-regular n=100, Z0=10)".into(),
+        curves,
+        bursts: vec![2000, 6000],
+        z0: 10,
+    })
+}
+
+/// Fig. 2: bursts + per-step probabilistic failure p_f.
+pub fn fig2(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs);
+    let mut curves = Vec::new();
+    for p_f in [0.0002, 0.001] {
+        let failures = FailureSpec::Composite(vec![
+            FailureSpec::paper_bursts(),
+            FailureSpec::Probabilistic { p_f },
+        ]);
+        for (label, control) in [
+            (
+                format!("decafork(e=2) pf={p_f}"),
+                ControlSpec::Decafork { epsilon: 2.0 },
+            ),
+            (
+                format!("decafork+ pf={p_f}"),
+                ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 },
+            ),
+        ] {
+            let cfg = ExperimentConfig { control, failures: failures.clone(), ..base.clone() };
+            curves.push(run_curve(&label, &cfg, threads)?);
+        }
+    }
+    Ok(FigureResult {
+        name: "fig2",
+        title: "Fig.2 — bursts + probabilistic failures".into(),
+        curves,
+        bursts: vec![2000, 6000],
+        z0: 10,
+    })
+}
+
+/// Fig. 3: bursts + a Byzantine node. The Byzantine node terminates every
+/// arriving walk during its `Byz` phase `[1000, 5000)` (after the paper's
+/// required failure-free initialization), then abruptly turns honest
+/// (`No Byz`) — the hard switch DECAFORK overshoots on.
+pub fn fig3(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs);
+    let failures = FailureSpec::Composite(vec![
+        FailureSpec::paper_bursts(),
+        FailureSpec::ByzantineScheduled { node: 1, schedule: vec![(1000, true), (5000, false)] },
+    ]);
+    let mut curves = Vec::new();
+    for (label, control) in [
+        ("decafork(e=2)", ControlSpec::Decafork { epsilon: 2.0 }),
+        ("decafork(e=3.25)", ControlSpec::Decafork { epsilon: 3.25 }),
+        ("decafork+(3.25/5.75)", ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 }),
+    ] {
+        let cfg = ExperimentConfig { control, failures: failures.clone(), ..base.clone() };
+        curves.push(run_curve(label, &cfg, threads)?);
+    }
+    Ok(FigureResult {
+        name: "fig3",
+        title: "Fig.3 — bursts + Byzantine node (Byz until t=5000, honest after)".into(),
+        curves,
+        bursts: vec![2000, 6000],
+        z0: 10,
+    })
+}
+
+/// Fig. 4: scaling in n ∈ {50, 100, 200} with per-n tuned ε. The paper
+/// lists ε ∈ {1.85, 2, 2.1} "well-tuned for the respective n" without the
+/// assignment; empirically the *inverse* pairing (larger ε for smaller n)
+/// reproduces its claim that smaller graphs react faster — smaller graphs
+/// have tighter return-time support, so they tolerate a more aggressive
+/// threshold without overshoot.
+pub fn fig4(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs);
+    let mut curves = Vec::new();
+    for (n, eps) in [(50usize, 2.1), (100, 2.0), (200, 1.85)] {
+        let cfg = ExperimentConfig {
+            graph: GraphSpec::RandomRegular { n, d: 8 },
+            control: ControlSpec::Decafork { epsilon: eps },
+            ..base.clone()
+        };
+        curves.push(run_curve(&format!("n={n} (e={eps})"), &cfg, threads)?);
+    }
+    Ok(FigureResult {
+        name: "fig4",
+        title: "Fig.4 — DECAFORK across graph sizes".into(),
+        curves,
+        bursts: vec![2000, 6000],
+        z0: 10,
+    })
+}
+
+/// Fig. 5: the ε trade-off (reaction time vs overshoot), n = 100.
+pub fn fig5(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs);
+    let mut curves = Vec::new();
+    for eps in [1.5, 2.0, 2.5, 3.0, 3.5] {
+        let cfg = ExperimentConfig {
+            control: ControlSpec::Decafork { epsilon: eps },
+            ..base.clone()
+        };
+        curves.push(run_curve(&format!("e={eps}"), &cfg, threads)?);
+    }
+    Ok(FigureResult {
+        name: "fig5",
+        title: "Fig.5 — reaction-time vs overshoot trade-off in ε".into(),
+        curves,
+        bursts: vec![2000, 6000],
+        z0: 10,
+    })
+}
+
+/// Fig. 6: four graph families at n = 100.
+pub fn fig6(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs);
+    let mut curves = Vec::new();
+    for (label, graph, eps) in [
+        ("8-regular", GraphSpec::RandomRegular { n: 100, d: 8 }, 2.0),
+        ("complete", GraphSpec::Complete { n: 100 }, 2.0),
+        ("erdos-renyi", GraphSpec::ErdosRenyi { n: 100, p: 0.08 }, 1.9),
+        ("power-law", GraphSpec::PowerLaw { n: 100, m: 4 }, 2.1),
+    ] {
+        let cfg = ExperimentConfig {
+            graph,
+            control: ControlSpec::Decafork { epsilon: eps },
+            ..base.clone()
+        };
+        curves.push(run_curve(label, &cfg, threads)?);
+    }
+    Ok(FigureResult {
+        name: "fig6",
+        title: "Fig.6 — DECAFORK across graph families (n=100)".into(),
+        curves,
+        bursts: vec![2000, 6000],
+        z0: 10,
+    })
+}
+
+/// Run a figure by id.
+pub fn by_id(id: u32, runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+    match id {
+        1 => fig1(runs, threads),
+        2 => fig2(runs, threads),
+        3 => fig3(runs, threads),
+        4 => fig4(runs, threads),
+        5 => fig5(runs, threads),
+        6 => fig6(runs, threads),
+        other => anyhow::bail!("unknown figure id {other} (have 1..=6)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Figure harnesses are exercised end-to-end in the bench targets and
+    // integration tests; here only the cheap plumbing.
+    use super::*;
+
+    #[test]
+    fn by_id_rejects_unknown() {
+        assert!(by_id(7, 1, 1).is_err());
+    }
+
+    #[test]
+    fn fig1_smoke_tiny() {
+        // 2 runs, tiny horizon via direct config manipulation is not
+        // exposed; run the real fig1 at 1 run only in release-mode CI
+        // (cargo test still completes in seconds at n=100, horizon 10k).
+        let f = fig1(1, 1).unwrap();
+        assert_eq!(f.curves.len(), 3);
+        assert!(f.write_csv(&std::env::temp_dir().join("decafork_figtest").to_string_lossy()).is_ok());
+        assert!(!f.summary().is_empty());
+        assert!(f.plot(60, 12).contains("Fig.1"));
+    }
+}

@@ -1,0 +1,251 @@
+//! Graph generators for the families evaluated in the paper (Fig. 1–6):
+//! random d-regular (the main testbed), Erdős–Rényi, complete and
+//! power-law (Barabási–Albert), plus deterministic ring/torus used in
+//! tests. All randomized generators retry until the sample is connected —
+//! the paper assumes connectivity (Sec. II) and applies the algorithms per
+//! component otherwise.
+
+use super::Graph;
+use crate::rng::Rng;
+
+/// Complete graph `K_n`.
+pub fn complete(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for a in 0..n as u32 {
+        for b in (a + 1)..n as u32 {
+            edges.push((a, b));
+        }
+    }
+    Graph::from_edges(n, &edges).expect("complete graph is simple")
+}
+
+/// Cycle graph `C_n` (n >= 3).
+pub fn ring(n: usize) -> Graph {
+    assert!(n >= 3);
+    let edges: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect();
+    Graph::from_edges(n, &edges).expect("ring is simple")
+}
+
+/// 2-D torus grid `w x h` (4-regular when w,h >= 3).
+pub fn grid_torus(w: usize, h: usize) -> Graph {
+    assert!(w >= 3 && h >= 3);
+    let idx = |x: usize, y: usize| (y * w + x) as u32;
+    let mut edges = Vec::new();
+    for y in 0..h {
+        for x in 0..w {
+            edges.push((idx(x, y), idx((x + 1) % w, y)));
+            edges.push((idx(x, y), idx(x, (y + 1) % h)));
+        }
+    }
+    Graph::from_edges(w * h, &edges).expect("torus is simple")
+}
+
+/// Erdős–Rényi `G(n, p)`, resampled until connected (up to `max_tries`).
+/// For the paper's regimes (`n = 100`, `p` well above `ln n / n`) a
+/// connected sample is found almost immediately.
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> anyhow::Result<Graph> {
+    anyhow::ensure!((0.0..=1.0).contains(&p), "p out of range");
+    let max_tries = 1000;
+    for _ in 0..max_tries {
+        let mut edges = Vec::new();
+        for a in 0..n as u32 {
+            for b in (a + 1)..n as u32 {
+                if rng.bernoulli(p) {
+                    edges.push((a, b));
+                }
+            }
+        }
+        let g = Graph::from_edges(n, &edges)?;
+        if g.is_connected() {
+            return Ok(g);
+        }
+    }
+    anyhow::bail!("no connected G({n},{p}) sample in {max_tries} tries — p too small?")
+}
+
+/// Random d-regular graph via the progressive pairing model: shuffle the
+/// stub multiset, pair consecutively, recycle clashing stubs (self-loops /
+/// multi-edges) into the next round; restart the attempt when a round
+/// makes no progress. (Whole-sample rejection is infeasible for d=8 — the
+/// probability of a simple pairing is `≈ e^{-(d²-1)/4} ~ 1e-7`.) Resampled
+/// until connected. This is the paper's main testbed (8-regular,
+/// n ∈ {50, 100, 200}).
+pub fn random_regular(n: usize, d: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
+    anyhow::ensure!(n * d % 2 == 0, "n*d must be even");
+    anyhow::ensure!(d < n, "degree must be < n");
+    anyhow::ensure!(d >= 1, "degree must be >= 1");
+    let max_tries = 500;
+    for _ in 0..max_tries {
+        if let Some(edges) = try_pairing(n, d, rng) {
+            let g = Graph::from_edges(n, &edges)?;
+            if g.is_connected() {
+                return Ok(g);
+            }
+        }
+    }
+    anyhow::bail!("no simple connected {d}-regular graph on {n} nodes in {max_tries} tries")
+}
+
+/// One progressive-pairing attempt; `None` when stuck.
+fn try_pairing(n: usize, d: usize, rng: &mut Rng) -> Option<Vec<(u32, u32)>> {
+    let mut stubs: Vec<u32> = (0..n as u32).flat_map(|i| std::iter::repeat(i).take(d)).collect();
+    let mut seen = std::collections::HashSet::with_capacity(n * d / 2);
+    let mut edges = Vec::with_capacity(n * d / 2);
+    while !stubs.is_empty() {
+        rng.shuffle(&mut stubs);
+        let mut leftover = Vec::new();
+        let before = stubs.len();
+        for pair in stubs.chunks(2) {
+            let (a, b) = (pair[0], pair[1]);
+            let key = if a < b { (a, b) } else { (b, a) };
+            if a == b || !seen.insert(key) {
+                leftover.push(a);
+                leftover.push(b);
+            } else {
+                edges.push((a, b));
+            }
+        }
+        if leftover.len() == before {
+            return None; // stuck: e.g. two stubs of the same node remain
+        }
+        stubs = leftover;
+    }
+    Some(edges)
+}
+
+/// Barabási–Albert preferential-attachment graph: start from a clique of
+/// `m0 = m + 1` nodes, each new node attaches to `m` distinct existing
+/// nodes with probability proportional to degree. Produces the power-law
+/// degree distribution the paper's Fig. 6 uses.
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
+    anyhow::ensure!(m >= 1 && m + 1 <= n, "need 1 <= m < n");
+    let m0 = m + 1;
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    // Seed clique.
+    for a in 0..m0 as u32 {
+        for b in (a + 1)..m0 as u32 {
+            edges.push((a, b));
+        }
+    }
+    // Repeated-nodes list: each endpoint appearance = one unit of degree.
+    let mut targets: Vec<u32> = edges.iter().flat_map(|&(a, b)| [a, b]).collect();
+    for v in m0..n {
+        let mut chosen = std::collections::HashSet::new();
+        while chosen.len() < m {
+            let t = *rng.choose(&targets);
+            chosen.insert(t);
+        }
+        for &t in &chosen {
+            edges.push((v as u32, t));
+            targets.push(v as u32);
+            targets.push(t);
+        }
+    }
+    let g = Graph::from_edges(n, &edges)?;
+    debug_assert!(g.is_connected(), "BA graphs are connected by construction");
+    Ok(g)
+}
+
+/// The four topology families from Fig. 6, by name. `seed` controls the
+/// randomized families.
+pub fn by_name(name: &str, n: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
+    match name {
+        "regular" => random_regular(n, 8, rng),
+        "complete" => Ok(complete(n)),
+        "erdos-renyi" | "er" => erdos_renyi(n, (8.0 / n as f64).min(1.0).max(1.5 * (n as f64).ln() / n as f64), rng),
+        "power-law" | "ba" => barabasi_albert(n, 4, rng),
+        "ring" => Ok(ring(n)),
+        "torus" => {
+            let w = (n as f64).sqrt().round() as usize;
+            anyhow::ensure!(w * w == n, "torus needs square n");
+            Ok(grid_torus(w, w))
+        }
+        other => anyhow::bail!("unknown graph family '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_props() {
+        let g = complete(10);
+        assert_eq!(g.m(), 45);
+        assert!((0..10).all(|i| g.degree(i) == 9));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn ring_props() {
+        let g = ring(10);
+        assert!((0..10).all(|i| g.degree(i) == 2));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn torus_is_4_regular() {
+        let g = grid_torus(5, 5);
+        assert_eq!(g.n(), 25);
+        assert!((0..25).all(|i| g.degree(i) == 4));
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn random_regular_is_regular_and_connected() {
+        let mut rng = Rng::new(1);
+        for &(n, d) in &[(20, 3), (50, 8), (100, 8)] {
+            let g = random_regular(n, d, &mut rng).unwrap();
+            assert_eq!(g.n(), n);
+            assert!((0..n).all(|i| g.degree(i) == d), "not {d}-regular");
+            assert!(g.is_connected());
+        }
+    }
+
+    #[test]
+    fn random_regular_rejects_odd() {
+        let mut rng = Rng::new(2);
+        assert!(random_regular(5, 3, &mut rng).is_err());
+        assert!(random_regular(10, 10, &mut rng).is_err());
+    }
+
+    #[test]
+    fn erdos_renyi_connected() {
+        let mut rng = Rng::new(3);
+        let g = erdos_renyi(60, 0.15, &mut rng).unwrap();
+        assert!(g.is_connected());
+        assert_eq!(g.n(), 60);
+    }
+
+    #[test]
+    fn barabasi_albert_degree_tail() {
+        let mut rng = Rng::new(4);
+        let g = barabasi_albert(300, 4, &mut rng).unwrap();
+        assert!(g.is_connected());
+        // New nodes attach with m=4 edges, so min degree is 4.
+        assert!((0..300).all(|i| g.degree(i) >= 4));
+        // Power-law: the max degree should far exceed the median.
+        let mut degs: Vec<usize> = (0..300).map(|i| g.degree(i)).collect();
+        degs.sort_unstable();
+        assert!(degs[299] as f64 > 3.0 * degs[150] as f64, "hub missing: {:?}", &degs[290..]);
+    }
+
+    #[test]
+    fn by_name_families() {
+        let mut rng = Rng::new(5);
+        for name in ["regular", "complete", "er", "ba"] {
+            let g = by_name(name, 64, &mut rng).unwrap();
+            assert!(g.is_connected(), "{name} not connected");
+        }
+        assert!(by_name("nope", 10, &mut rng).is_err());
+    }
+
+    #[test]
+    fn generators_deterministic_under_seed() {
+        let g1 = random_regular(40, 4, &mut Rng::new(9)).unwrap();
+        let g2 = random_regular(40, 4, &mut Rng::new(9)).unwrap();
+        for i in 0..40 {
+            assert_eq!(g1.neighbors(i), g2.neighbors(i));
+        }
+    }
+}

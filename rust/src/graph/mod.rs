@@ -1,0 +1,231 @@
+//! Graph substrate: compressed-sparse-row undirected graphs, the generator
+//! families used in the paper's experiments (random d-regular,
+//! Erdős–Rényi, complete, power-law) plus ring/torus for tests, and
+//! structural properties (connectivity, degrees, stationary distribution,
+//! analytic mean return times).
+
+pub mod generators;
+pub mod properties;
+
+pub use generators::{barabasi_albert, complete, erdos_renyi, grid_torus, random_regular, ring};
+
+use crate::rng::Rng;
+
+/// Undirected graph in CSR form. Nodes are `0..n`; `neighbors(i)` is the
+/// adjacency list of `i`. The representation is immutable after
+/// construction — the simulator never rewires the topology mid-run.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    offsets: Vec<usize>,
+    adj: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an undirected edge list. Self-loops and duplicate edges
+    /// are rejected: the paper's walks are simple random walks on simple
+    /// graphs.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> anyhow::Result<Self> {
+        let mut seen = std::collections::HashSet::with_capacity(edges.len());
+        for &(a, b) in edges {
+            anyhow::ensure!((a as usize) < n && (b as usize) < n, "edge ({a},{b}) out of range");
+            anyhow::ensure!(a != b, "self-loop at {a}");
+            let key = if a < b { (a, b) } else { (b, a) };
+            anyhow::ensure!(seen.insert(key), "duplicate edge ({a},{b})");
+        }
+        let mut deg = vec![0usize; n];
+        for &(a, b) in edges {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        for d in &deg {
+            offsets.push(offsets.last().unwrap() + d);
+        }
+        let mut cursor = offsets[..n].to_vec();
+        let mut adj = vec![0u32; 2 * edges.len()];
+        for &(a, b) in edges {
+            adj[cursor[a as usize]] = b;
+            cursor[a as usize] += 1;
+            adj[cursor[b as usize]] = a;
+            cursor[b as usize] += 1;
+        }
+        // Sort each adjacency list for deterministic iteration order.
+        let g = {
+            let mut g = Graph { offsets, adj };
+            for i in 0..n {
+                let (lo, hi) = (g.offsets[i], g.offsets[i + 1]);
+                g.adj[lo..hi].sort_unstable();
+            }
+            g
+        };
+        Ok(g)
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Degree of node `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.offsets[i + 1] - self.offsets[i]
+    }
+
+    /// Adjacency list of node `i`.
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.adj[self.offsets[i]..self.offsets[i + 1]]
+    }
+
+    /// One step of a simple random walk from `i`: uniform neighbor.
+    #[inline]
+    pub fn step(&self, i: usize, rng: &mut Rng) -> usize {
+        let nbrs = self.neighbors(i);
+        debug_assert!(!nbrs.is_empty(), "walk stranded at isolated node {i}");
+        nbrs[rng.below(nbrs.len())] as usize
+    }
+
+    /// Whether the graph is connected (BFS from node 0). Empty graphs are
+    /// considered connected.
+    pub fn is_connected(&self) -> bool {
+        let n = self.n();
+        if n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::new();
+        seen[0] = true;
+        queue.push_back(0usize);
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in self.neighbors(u) {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    count += 1;
+                    queue.push_back(v as usize);
+                }
+            }
+        }
+        count == n
+    }
+
+    /// BFS distances from `src` (`usize::MAX` for unreachable).
+    pub fn bfs_distances(&self, src: usize) -> Vec<usize> {
+        let n = self.n();
+        let mut dist = vec![usize::MAX; n];
+        let mut queue = std::collections::VecDeque::new();
+        dist[src] = 0;
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            for &v in self.neighbors(u) {
+                let v = v as usize;
+                if dist[v] == usize::MAX {
+                    dist[v] = dist[u] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        dist
+    }
+
+    /// Stationary probability of the simple random walk at node `i`:
+    /// `deg(i) / 2|E|`.
+    #[inline]
+    pub fn stationary(&self, i: usize) -> f64 {
+        self.degree(i) as f64 / (2.0 * self.m() as f64)
+    }
+
+    /// Analytic mean return time to node `i` for the simple random walk on
+    /// a connected graph: `E[R_i] = 1/π_i = 2|E| / deg(i)` (Kac's formula).
+    /// Used both to seed analytic survival functions and as a
+    /// property-test oracle for the empirical estimator.
+    #[inline]
+    pub fn mean_return_time(&self, i: usize) -> f64 {
+        2.0 * self.m() as f64 / self.degree(i) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_edges_basic() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]).unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(0), &[1, 3]);
+        assert!(g.is_connected());
+    }
+
+    #[test]
+    fn rejects_self_loops_and_duplicates() {
+        assert!(Graph::from_edges(3, &[(0, 0)]).is_err());
+        assert!(Graph::from_edges(3, &[(0, 1), (1, 0)]).is_err());
+        assert!(Graph::from_edges(2, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]).unwrap();
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn bfs_distances_line() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert_eq!(g.bfs_distances(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn stationary_sums_to_one() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]).unwrap();
+        let total: f64 = (0..g.n()).map(|i| g.stationary(i)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kac_formula_matches_simulation_on_small_graph() {
+        // Empirical mean return time on a cycle of 4 ≈ 2|E|/deg = 4.
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]).unwrap();
+        let mut rng = Rng::new(5);
+        let mut pos = 0usize;
+        let mut last_at_zero: Option<u64> = Some(0);
+        let mut samples = Vec::new();
+        for t in 1..400_000u64 {
+            pos = g.step(pos, &mut rng);
+            if pos == 0 {
+                if let Some(l) = last_at_zero {
+                    samples.push((t - l) as f64);
+                }
+                last_at_zero = Some(t);
+            }
+        }
+        let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!((mean - g.mean_return_time(0)).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn walk_step_uniform_over_neighbors() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]).unwrap();
+        let mut rng = Rng::new(77);
+        let mut counts = [0usize; 4];
+        for _ in 0..30_000 {
+            counts[g.step(0, &mut rng)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        for &c in &counts[1..] {
+            assert!((c as f64 - 10_000.0).abs() < 500.0);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Structural graph properties used for threshold design, analytic
+//! survival functions and experiment reporting.
+
+use super::Graph;
+use crate::rng::Rng;
+
+/// Summary statistics of the degree sequence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Compute degree statistics.
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let n = g.n();
+    let degs: Vec<usize> = (0..n).map(|i| g.degree(i)).collect();
+    let mean = degs.iter().sum::<usize>() as f64 / n as f64;
+    let var = degs.iter().map(|&d| (d as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+    DegreeStats {
+        min: *degs.iter().min().unwrap(),
+        max: *degs.iter().max().unwrap(),
+        mean,
+        std: var.sqrt(),
+    }
+}
+
+/// Exact diameter via BFS from every node. O(n·m) — fine at the paper's
+/// scales (n ≤ a few hundred).
+pub fn diameter(g: &Graph) -> usize {
+    (0..g.n())
+        .map(|s| {
+            g.bfs_distances(s)
+                .into_iter()
+                .filter(|&d| d != usize::MAX)
+                .max()
+                .unwrap_or(0)
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Estimate the geometric tail parameter `q` of the return-time
+/// distribution at node `i` by simulating `samples` returns. For random
+/// regular graphs, Tishby–Biham–Katzav (2021) show the return time is
+/// approximately geometric in its tail; `q ≈ 1 / E[R_i] = π_i`.
+pub fn fit_return_q(g: &Graph, i: usize, samples: usize, rng: &mut Rng) -> f64 {
+    let mut pos = i;
+    let mut collected = 0usize;
+    let mut total = 0u64;
+    let mut t = 0u64;
+    let mut last = 0u64;
+    while collected < samples {
+        pos = g.step(pos, rng);
+        t += 1;
+        if pos == i {
+            total += t - last;
+            last = t;
+            collected += 1;
+        }
+        // Safety valve: abort pathological runs (disconnected misuse).
+        if t > (samples as u64 + 1) * 1_000_000 {
+            break;
+        }
+    }
+    if collected == 0 {
+        return g.stationary(i);
+    }
+    collected as f64 / total as f64
+}
+
+/// Expected cover time heuristic `n ln n / λ` proxy: an upper-bound style
+/// estimate of how long the initialization phase should last so that every
+/// walk has visited every node at least once (paper Sec. II requires this
+/// before the first failure). We use the Matthews-style bound
+/// `t_cov ≤ max_i E[H_i] · H_n` with `E[H_i] ≤ 2|E| · diam` replaced by the
+/// cheaper empirical proxy below: simulate one walk until full coverage.
+pub fn empirical_cover_time(g: &Graph, start: usize, rng: &mut Rng) -> u64 {
+    let n = g.n();
+    let mut seen = vec![false; n];
+    let mut remaining = n - 1;
+    seen[start] = true;
+    let mut pos = start;
+    let mut t = 0u64;
+    while remaining > 0 {
+        pos = g.step(pos, rng);
+        t += 1;
+        if !seen[pos] {
+            seen[pos] = true;
+            remaining -= 1;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn degree_stats_regular() {
+        let mut rng = Rng::new(1);
+        let g = generators::random_regular(50, 8, &mut rng).unwrap();
+        let s = degree_stats(&g);
+        assert_eq!(s.min, 8);
+        assert_eq!(s.max, 8);
+        assert!((s.mean - 8.0).abs() < 1e-12);
+        assert!(s.std < 1e-12);
+    }
+
+    #[test]
+    fn diameter_ring() {
+        let g = generators::ring(10);
+        assert_eq!(diameter(&g), 5);
+    }
+
+    #[test]
+    fn fit_return_q_matches_stationary() {
+        let mut rng = Rng::new(2);
+        let g = generators::random_regular(50, 8, &mut rng).unwrap();
+        let q = fit_return_q(&g, 0, 4000, &mut rng);
+        // q should be ~ π_0 = 1/50 = 0.02 for a regular graph.
+        assert!((q - 0.02).abs() < 0.004, "q = {q}");
+    }
+
+    #[test]
+    fn cover_time_reasonable() {
+        let mut rng = Rng::new(3);
+        let g = generators::random_regular(50, 8, &mut rng).unwrap();
+        let t = empirical_cover_time(&g, 0, &mut rng);
+        // Coupon-collector scale: n ln n ≈ 196. Allow wide slack.
+        assert!(t > 50 && t < 20_000, "cover time {t}");
+    }
+}

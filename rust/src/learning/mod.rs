@@ -1,0 +1,12 @@
+//! The paper's motivating application: decentralized learning where the
+//! walk token *is* the model. Every node holds a shard of the corpus; a
+//! visiting walk runs one SGD step on the visited node's data through the
+//! AOT-compiled JAX/Pallas train-step executable ([`crate::runtime`]),
+//! then moves on. Forks duplicate the model, so a surviving lineage keeps
+//! the training progress — resilience in the learning sense.
+
+pub mod corpus;
+pub mod rwsgd;
+
+pub use corpus::ShardedCorpus;
+pub use rwsgd::{TrainerHook, TrainingRun, TrainingSummary};

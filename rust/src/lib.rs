@@ -1,0 +1,40 @@
+//! # decafork — self-regulating random walks for resilient decentralized learning
+//!
+//! Reproduction of Egger, Bitar, Ayache, Wachter-Zeh, El Rouayheb,
+//! *"Self-Regulating Random Walks for Resilient Decentralized Learning on
+//! Graphs"* (2024). The crate implements the full stack the paper
+//! describes:
+//!
+//! * graph substrates (random regular, Erdős–Rényi, complete, power-law, …),
+//! * multi-random-walk simulation with arbitrary failure models,
+//! * the decentralized control algorithms MISSINGPERSON (baseline),
+//!   DECAFORK and DECAFORK+,
+//! * the paper's full theoretical toolbox (Irwin–Hall threshold design,
+//!   Lemma 1 estimator CDF, reaction-time and overshoot bounds),
+//! * the motivating application: decentralized learning where the walk
+//!   token carries a model that is updated at every visited node via an
+//!   AOT-compiled JAX/Pallas computation executed through PJRT, and
+//! * a thread-per-node decentralized runtime (no central coordinator)
+//!   that runs the same control algorithms over real message channels.
+//!
+//! Layer map (see `DESIGN.md`): L3 = this crate; L2 = `python/compile/model.py`
+//! (JAX transformer fwd/bwd); L1 = `python/compile/kernels/*.py` (Pallas).
+//! Python only ever runs at build time (`make artifacts`).
+
+pub mod rng;
+pub mod graph;
+pub mod stats;
+pub mod walks;
+pub mod control;
+pub mod failures;
+pub mod sim;
+pub mod theory;
+pub mod runtime;
+pub mod learning;
+pub mod coordinator;
+pub mod cli;
+pub mod figures;
+pub mod report;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

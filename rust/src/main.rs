@@ -1,0 +1,377 @@
+//! `decafork` — CLI for the self-regulating random-walk system.
+//!
+//! Subcommands:
+//! * `simulate` — one experiment (graph × control × failures), CSV/plot out
+//! * `figure`   — regenerate a paper figure (1–6)
+//! * `train`    — decentralized RW-SGD with failures + DECAFORK+ (needs
+//!   `make artifacts`)
+//! * `actors`   — the thread-per-node decentralized runtime
+//! * `theory`   — evaluate the paper's bounds for a given setting
+//! * `design`   — threshold design from Irwin–Hall quantiles
+//! * `info`     — graph family properties
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use decafork::cli::Args;
+use decafork::control::{Decafork, DecaforkPlus, MissingPerson, NoControl};
+use decafork::coordinator::ActorRuntime;
+use decafork::graph::generators;
+use decafork::learning::{ShardedCorpus, TrainingRun};
+use decafork::report::{ascii_plot, Table};
+use decafork::rng::Rng;
+use decafork::runtime::{default_artifacts_dir, Runtime, TrainStep};
+use decafork::sim::engine::SimParams;
+use decafork::sim::{run_many, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
+use decafork::stats::irwin_hall::{design_epsilon, design_epsilon2};
+use decafork::theory::{growth_bound, overshoot_recursion, reaction_time_bound, Rates};
+use decafork::walks::SurvivalModel;
+use decafork::{figures, theory};
+
+const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> [flags]
+
+  simulate --graph regular|er|complete|ba --n 100 --d 8 --z0 10
+           --control decafork|decafork+|missingperson|periodic|none
+           --eps 2.0 --eps2 5.75 --eps-mp 600 --period 100
+           --pf 0.0 --bursts 2000:5,6000:6 --byz-node -1
+           --horizon 10000 --runs 10 --seed 57005 --csv results/sim.csv
+  figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
+  train    --n 64 --d 8 --z0 4 --horizon 400 --burst 200:2 --eps 2.0
+           --artifacts artifacts
+  actors   --n 32 --d 4 --z0 6 --pf 0.002 --hops 200000 --eps 2.0
+  theory   --z0 10 --d 5 --eps 2.0 --n 100
+  design   --z0 10 --delta 1e-4
+  info     --graph regular --n 100 --d 8
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("simulate") => cmd_simulate(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("train") => cmd_train(&args),
+        Some("actors") => cmd_actors(&args),
+        Some("theory") => cmd_theory(&args),
+        Some("design") => cmd_design(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn parse_graph(args: &Args) -> anyhow::Result<GraphSpec> {
+    let n = args.get("n", 100usize)?;
+    Ok(match args.get_str("graph", "regular").as_str() {
+        "regular" => GraphSpec::RandomRegular { n, d: args.get("d", 8usize)? },
+        "er" | "erdos-renyi" => GraphSpec::ErdosRenyi { n, p: args.get("p", 0.08f64)? },
+        "complete" => GraphSpec::Complete { n },
+        "ba" | "power-law" => GraphSpec::PowerLaw { n, m: args.get("m", 4usize)? },
+        "ring" => GraphSpec::Ring { n },
+        other => anyhow::bail!("unknown graph '{other}'"),
+    })
+}
+
+fn parse_bursts(s: &str) -> anyhow::Result<Vec<(u64, usize)>> {
+    if s.is_empty() || s == "none" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|pair| {
+            let (t, c) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("burst '{pair}' must be t:count"))?;
+            Ok((t.trim().parse()?, c.trim().parse()?))
+        })
+        .collect()
+}
+
+fn parse_control(args: &Args) -> anyhow::Result<ControlSpec> {
+    Ok(match args.get_str("control", "decafork").as_str() {
+        "decafork" => ControlSpec::Decafork { epsilon: args.get("eps", 2.0)? },
+        "decafork+" | "decaforkplus" => ControlSpec::DecaforkPlus {
+            epsilon: args.get("eps", 3.25)?,
+            epsilon2: args.get("eps2", 5.75)?,
+        },
+        "missingperson" | "mp" => ControlSpec::MissingPerson { eps_mp: args.get("eps-mp", 600u64)? },
+        "periodic" => ControlSpec::Periodic { period: args.get("period", 100u64)? },
+        "none" => ControlSpec::None,
+        other => anyhow::bail!("unknown control '{other}'"),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let mut failures = vec![];
+    let bursts = parse_bursts(&args.get_str("bursts", "2000:5,6000:6"))?;
+    if !bursts.is_empty() {
+        failures.push(FailureSpec::Burst { events: bursts });
+    }
+    let pf = args.get("pf", 0.0f64)?;
+    if pf > 0.0 {
+        failures.push(FailureSpec::Probabilistic { p_f: pf });
+    }
+    let byz: i64 = args.get("byz-node", -1i64)?;
+    if byz >= 0 {
+        failures.push(FailureSpec::ByzantineScheduled {
+            node: byz as u32,
+            schedule: vec![
+                (args.get("byz-from", 1000u64)?, true),
+                (args.get("byz-until", 5000u64)?, false),
+            ],
+        });
+    }
+    let failures = match failures.len() {
+        0 => FailureSpec::None,
+        1 => failures.pop().unwrap(),
+        _ => FailureSpec::Composite(failures),
+    };
+    let survival = match args.get_str("survival", "empirical").as_str() {
+        "empirical" => decafork::sim::engine::SurvivalSpec::Empirical,
+        "geometric" => decafork::sim::engine::SurvivalSpec::AnalyticGeometric,
+        "exponential" => decafork::sim::engine::SurvivalSpec::AnalyticExponential,
+        other => anyhow::bail!("unknown survival model '{other}'"),
+    };
+    let cfg = ExperimentConfig {
+        graph: parse_graph(args)?,
+        params: SimParams {
+            z0: args.get("z0", 10u32)?,
+            record_theta: args.has("record-theta"),
+            survival,
+            control_start: args.flags.get("warmup").map(|w| w.parse()).transpose()?,
+            ..Default::default()
+        },
+        control: parse_control(args)?,
+        failures,
+        horizon: args.get("horizon", 10_000u64)?,
+        runs: args.get("runs", 10usize)?,
+        seed: args.get("seed", 0xDECAFu64)?,
+    };
+    let t0 = std::time::Instant::now();
+    let (_traces, agg) = run_many(&cfg, args.get("threads", 0usize)?)?;
+    let dt = t0.elapsed();
+    println!(
+        "{} on {} | {} runs x {} steps in {:.2?}",
+        cfg.control.label(),
+        cfg.graph.label(),
+        cfg.runs,
+        cfg.horizon,
+        dt
+    );
+    println!(
+        "extinctions: {}/{}  capped: {}  mean forks/run: {:.1}",
+        agg.extinctions,
+        agg.runs,
+        agg.capped_runs,
+        agg.forks_per_run.iter().sum::<usize>() as f64 / agg.runs as f64
+    );
+    println!("{}", ascii_plot("Z_t (mean over runs)", &[("Z", &agg.mean)], 90, 16));
+    if let Some(csv) = args.flags.get("csv") {
+        let rows: Vec<Vec<f64>> = (0..agg.mean.len())
+            .map(|t| vec![t as f64, agg.mean[t], agg.std[t]])
+            .collect();
+        decafork::report::write_csv(csv, &["t", "z_mean", "z_std"], &rows)?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> anyhow::Result<()> {
+    let id: u32 = args.get("id", 1)?;
+    let runs = args.get("runs", 10usize)?;
+    let out = args.get_str("out", "results");
+    let t0 = std::time::Instant::now();
+    let fig = figures::by_id(id, runs, args.get("threads", 0usize)?)?;
+    println!("{}", fig.plot(100, 18));
+    println!("{}", fig.summary());
+    let path = fig.write_csv(&out)?;
+    println!("({} runs in {:.2?}; csv: {})", runs, t0.elapsed(), path.display());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        args.get_str("artifacts", &default_artifacts_dir().to_string_lossy()),
+    );
+    anyhow::ensure!(
+        decafork::runtime::artifacts_present(&artifacts),
+        "no artifacts at {} — run `make artifacts` first",
+        artifacts.display()
+    );
+    let n = args.get("n", 64usize)?;
+    let d = args.get("d", 8usize)?;
+    let z0 = args.get("z0", 4u32)?;
+    let horizon = args.get("horizon", 400u64)?;
+    let seed = args.get("seed", 7u64)?;
+    let eps = args.get("eps", 2.0f64)?;
+    let bursts = parse_bursts(&args.get_str("burst", "200:2"))?;
+
+    let rt = Runtime::cpu()?;
+    let train = TrainStep::load(&rt, &artifacts)?;
+    println!(
+        "model: {} params, batch {}x{} tokens, lr {}",
+        train.param_count()?,
+        train.manifest.get_usize("batch")?,
+        train.manifest.get_usize("seq")? + 1,
+        train.manifest.get_f64("lr")?
+    );
+    let corpus = Arc::new(ShardedCorpus::markov(
+        n,
+        4096,
+        train.manifest.get_usize("vocab")?,
+        seed ^ 0xC0FFEE,
+    ));
+    let graph = Arc::new(generators::random_regular(n, d, &mut Rng::new(seed))?);
+    let mut engine = decafork::sim::engine::Engine::new(
+        graph,
+        SimParams { z0, ..Default::default() },
+        Box::new(Decafork::new(eps)),
+        Box::new(decafork::failures::Burst::new(bursts)),
+        Rng::new(seed),
+    );
+    let t0 = std::time::Instant::now();
+    let summary = TrainingRun::execute_opts(
+        &mut engine,
+        &train,
+        corpus,
+        horizon,
+        seed,
+        args.has("merge"),
+    )?;
+    println!(
+        "ran {} SGD steps across walks in {:.2?}; survivors: {}; merges: {}",
+        summary.steps,
+        t0.elapsed(),
+        summary.survivors,
+        summary.merges
+    );
+    println!("lineage: {}", summary.lineage);
+    println!("loss: first {:.4} -> last-20-mean {:.4}", summary.first_loss, summary.last_loss_mean);
+    let curve: Vec<f64> = summary
+        .losses
+        .chunks(8.max(summary.losses.len() / 64))
+        .map(|c| c.iter().map(|&(_, _, l)| l as f64).sum::<f64>() / c.len() as f64)
+        .collect();
+    println!("{}", ascii_plot("training loss (visit order)", &[("loss", &curve)], 80, 12));
+    let z: Vec<f64> = summary.trace.z.iter().map(|&v| v as f64).collect();
+    println!("{}", ascii_plot("Z_t during training", &[("Z", &z)], 80, 8));
+    Ok(())
+}
+
+fn cmd_actors(args: &Args) -> anyhow::Result<()> {
+    let n = args.get("n", 32usize)?;
+    let d = args.get("d", 4usize)?;
+    let seed = args.get("seed", 7u64)?;
+    let graph = Arc::new(generators::random_regular(n, d, &mut Rng::new(seed))?);
+    let rtm = ActorRuntime {
+        graph,
+        z0: args.get("z0", 6u32)?,
+        p_f: args.get("pf", 0.002f64)?,
+        survival: SurvivalModel::Empirical,
+        hop_budget: args.get("hops", 200_000u64)?,
+        max_wall: Duration::from_secs(args.get("wall", 60u64)?),
+        seed,
+    };
+    let control = args.get_str("control", "decafork");
+    let t0 = std::time::Instant::now();
+    let run = match control.as_str() {
+        "decafork" => rtm.run(&Decafork::new(args.get("eps", 2.0)?))?,
+        "decafork+" => rtm.run(&DecaforkPlus::new(args.get("eps", 3.25)?, args.get("eps2", 5.75)?))?,
+        "missingperson" => rtm.run(&MissingPerson::new(args.get("eps-mp", 600u64)?))?,
+        "none" => rtm.run(&NoControl)?,
+        other => anyhow::bail!("unknown control '{other}'"),
+    };
+    let dt = t0.elapsed();
+    println!(
+        "decentralized run: {} hops in {:.2?} ({:.0} hops/s across {} node threads)",
+        run.hops,
+        dt,
+        run.hops as f64 / dt.as_secs_f64(),
+        n
+    );
+    println!(
+        "forks: {}  control-terminations: {}  failures: {}  final population: {}",
+        run.forks, run.control_terminations, run.failures, run.final_alive
+    );
+    let z: Vec<f64> = run.z_samples.iter().map(|&v| v as f64).collect();
+    println!("{}", ascii_plot("population (wall-clock samples)", &[("Z", &z)], 80, 10));
+    Ok(())
+}
+
+fn cmd_theory(args: &Args) -> anyhow::Result<()> {
+    let z0: u32 = args.get("z0", 10)?;
+    let d: u32 = args.get("d", 5)?;
+    let eps: f64 = args.get("eps", 2.0)?;
+    let n: usize = args.get("n", 100)?;
+    let rates = Rates::new(1.0 / n as f64, 1.0 / n as f64);
+    let p = 1.0 / z0 as f64;
+
+    println!("Assumption-1 rates: lambda_r = lambda_a = 1/n = {:.4}\n", rates.lambda_r);
+
+    let header = format!("Thm2: steps to 1st fork (D={d} failed)");
+    let mut t = Table::new(&["delta", &header]);
+    for delta in [0.5, 0.1, 0.01] {
+        let bound = reaction_time_bound(d, 0, z0 - d, eps, p, rates, delta, 2_000_000)
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| ">2e6".into());
+        t.row(vec![format!("{delta}"), bound]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(&["z", "Thm3 delta(T=10000)", "Cor2 T(delta=0.1)"]);
+    for z in [z0 + 2, z0 + 5, 2 * z0] {
+        let g = growth_bound(z0, z, eps, p, n, rates, 10_000.0);
+        let tt = theory::time_until_growth(z0, z, eps, p, n, rates, 0.1);
+        t.row(vec![z.to_string(), format!("{:.4}", g.delta), format!("{tt:.0}")]);
+    }
+    println!("{}", t.render());
+
+    let traj = overshoot_recursion(z0 - d, 2000.0, 600, eps, p, rates, d);
+    println!(
+        "Cor3 overshoot recursion from Z={} after D={} failures: E[Z] after 200/400/600 steps = {:.1}/{:.1}/{:.1}",
+        z0 - d,
+        d,
+        traj[200],
+        traj[400],
+        traj[600]
+    );
+    Ok(())
+}
+
+fn cmd_design(args: &Args) -> anyhow::Result<()> {
+    let z0: u32 = args.get("z0", 10)?;
+    let delta: f64 = args.get("delta", 1e-4)?;
+    let eps = design_epsilon(z0, delta);
+    let eps2 = design_epsilon2(z0, delta);
+    println!("Z0 = {z0}, spurious-action probability delta = {delta}");
+    println!("  DECAFORK  : eps  = {eps:.3}   (fork prob with Z0 healthy walks ~ p*delta)");
+    println!("  DECAFORK+ : eps2 = {eps2:.3}  (termination prob likewise)");
+    println!("(paper Fig. 1 uses eps=2, eps2=5.75 for Z0=10)");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let spec = parse_graph(args)?;
+    let mut rng = Rng::new(args.get("seed", 1u64)?);
+    let g = spec.build(&mut rng)?;
+    let stats = decafork::graph::properties::degree_stats(&g);
+    println!("{}: n={} m={} connected={}", spec.label(), g.n(), g.m(), g.is_connected());
+    println!(
+        "degrees: min {} max {} mean {:.2} std {:.2}",
+        stats.min, stats.max, stats.mean, stats.std
+    );
+    println!("diameter: {}", decafork::graph::properties::diameter(&g));
+    println!("mean return time at node 0 (Kac): {:.1}", g.mean_return_time(0));
+    println!(
+        "empirical cover time from node 0: {}",
+        decafork::graph::properties::empirical_cover_time(&g, 0, &mut rng)
+    );
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Reporting utilities for the figure harnesses: CSV output, ASCII line
+//! plots (so every paper figure renders directly in the terminal / bench
+//! log) and aligned tables.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV file: `headers` then one row per record.
+pub fn write_csv<P: AsRef<Path>>(path: P, headers: &[&str], rows: &[Vec<f64>]) -> anyhow::Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        let line: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        writeln!(f, "{}", line.join(","))?;
+    }
+    Ok(())
+}
+
+/// Downsample a series to at most `n` points (mean pooling) so plots of
+/// 10k-step traces stay readable.
+pub fn downsample(xs: &[f64], n: usize) -> Vec<f64> {
+    if xs.len() <= n || n == 0 {
+        return xs.to_vec();
+    }
+    let chunk = (xs.len() + n - 1) / n;
+    xs.chunks(chunk)
+        .map(|c| c.iter().sum::<f64>() / c.len() as f64)
+        .collect()
+}
+
+/// Render one or more series as an ASCII line plot with a y-axis.
+/// Each series gets a distinct glyph; series share the x domain
+/// `[0, len)` and are downsampled to the plot width.
+pub fn ascii_plot(title: &str, series: &[(&str, &[f64])], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, ys) in series {
+        for &y in *ys {
+            if y.is_finite() {
+                lo = lo.min(y);
+                hi = hi.max(y);
+            }
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return format!("{title}\n(empty)\n");
+    }
+    if (hi - lo).abs() < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let ds = downsample(ys, width);
+        let g = GLYPHS[si % GLYPHS.len()];
+        for (x, &y) in ds.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let row = ((y - lo) / (hi - lo) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            let col = x * width / ds.len().max(1);
+            if col < width {
+                grid[row][col] = g;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (r, row) in grid.iter().enumerate() {
+        let yval = hi - (hi - lo) * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yval:8.2} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:8} +{}\n", "", "-".repeat(width)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", GLYPHS[i % GLYPHS.len()], name))
+        .collect();
+    out.push_str(&format!("{:10}{}\n", "", legend.join("   ")));
+    out
+}
+
+/// Simple aligned table rendering.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downsample_preserves_short() {
+        let xs = vec![1.0, 2.0, 3.0];
+        assert_eq!(downsample(&xs, 10), xs);
+    }
+
+    #[test]
+    fn downsample_pools_means() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let d = downsample(&xs, 10);
+        assert_eq!(d.len(), 10);
+        assert!((d[0] - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn plot_contains_series_glyphs() {
+        let ys1: Vec<f64> = (0..50).map(|i| (i as f64 / 5.0).sin()).collect();
+        let ys2: Vec<f64> = (0..50).map(|i| (i as f64 / 5.0).cos()).collect();
+        let p = ascii_plot("test", &[("sin", &ys1), ("cos", &ys2)], 40, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains('o'));
+        assert!(p.contains("sin"));
+        assert!(p.contains("cos"));
+    }
+
+    #[test]
+    fn plot_handles_flat_series() {
+        let ys = vec![5.0; 10];
+        let p = ascii_plot("flat", &[("c", &ys)], 20, 5);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["longer".into(), "2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("longer"));
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("decafork_test_csv");
+        let path = dir.join("x.csv");
+        write_csv(&path, &["t", "z"], &[vec![0.0, 10.0], vec![1.0, 9.5]]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("t,z\n0,10\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

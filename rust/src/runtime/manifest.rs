@@ -1,0 +1,88 @@
+//! The artifacts manifest: a flat `key=value` text file written by
+//! `python/compile/aot.py` describing every artifact (shapes, hyperparams,
+//! file names). Deliberately not JSON — the vendored crate set has no
+//! JSON parser and the schema is flat.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    map: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    /// Parse from `key=value` lines; `#` starts a comment; blank lines
+    /// ignored.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("manifest line {} has no '=': {line}", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(Manifest { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.map
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("manifest missing key '{key}'"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("manifest key '{key}' is not an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?
+            .parse()
+            .with_context(|| format!("manifest key '{key}' is not a number"))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basics() {
+        let m = Manifest::parse("# comment\n\nmodel=tiny\nparam_count=128\nlr=0.05\n").unwrap();
+        assert_eq!(m.get("model").unwrap(), "tiny");
+        assert_eq!(m.get_usize("param_count").unwrap(), 128);
+        assert!((m.get_f64("lr").unwrap() - 0.05).abs() < 1e-12);
+        assert!(m.get("missing").is_err());
+        assert_eq!(m.keys().count(), 3);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Manifest::parse("oops no equals").is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let m = Manifest::parse("  a = hello world \n").unwrap();
+        assert_eq!(m.get("a").unwrap(), "hello world");
+    }
+}

@@ -1,0 +1,152 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (HLO **text** — see DESIGN.md for why text, not serialized protos) and
+//! executes them on the CPU PJRT client. Python never runs here; the rust
+//! binary is self-contained once `artifacts/` exists.
+
+pub mod manifest;
+
+pub use manifest::Manifest;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled executable plus its source path (for diagnostics).
+pub struct LoadedExec {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+/// The PJRT runtime: one CPU client, many compiled artifacts.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<LoadedExec> {
+        let path = path.as_ref().to_path_buf();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text at {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedExec { exe, path })
+    }
+}
+
+/// The training-step executable: `(params f32[P], tokens i32[B,T]) ->
+/// (new_params f32[P], loss f32)` lowered from `python/compile/model.py`.
+pub struct TrainStep {
+    exec: LoadedExec,
+    pub manifest: Manifest,
+}
+
+impl TrainStep {
+    /// Load from an artifacts directory (reads `manifest.txt`).
+    pub fn load(rt: &Runtime, artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.txt"))?;
+        let hlo = artifacts_dir.join(manifest.get("train_step")?);
+        let exec = rt.load_hlo_text(hlo)?;
+        Ok(TrainStep { exec, manifest })
+    }
+
+    /// Parameter vector length.
+    pub fn param_count(&self) -> Result<usize> {
+        self.manifest.get_usize("param_count")
+    }
+
+    /// Tokens-per-batch shape (batch, seq+1).
+    pub fn token_shape(&self) -> Result<(usize, usize)> {
+        Ok((self.manifest.get_usize("batch")?, self.manifest.get_usize("seq")? + 1))
+    }
+
+    /// Run one SGD step: returns updated params and the scalar loss.
+    pub fn step(&self, params: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, f32)> {
+        let (b, t1) = self.token_shape()?;
+        anyhow::ensure!(
+            tokens.len() == b * t1,
+            "token batch must be {b}x{t1}, got {}",
+            tokens.len()
+        );
+        anyhow::ensure!(
+            params.len() == self.param_count()?,
+            "param vector must be {}, got {}",
+            self.param_count()?,
+            params.len()
+        );
+        let p = xla::Literal::vec1(params);
+        let tok = xla::Literal::vec1(tokens).reshape(&[b as i64, t1 as i64])?;
+        let result = self.exec.exe.execute::<xla::Literal>(&[p, tok])?[0][0].to_literal_sync()?;
+        let (new_params, loss) = result.to_tuple2()?;
+        let new_params = new_params.to_vec::<f32>()?;
+        let loss = loss.to_vec::<f32>()?[0];
+        Ok((new_params, loss))
+    }
+
+    /// Source path (diagnostics).
+    pub fn path(&self) -> &Path {
+        &self.exec.path
+    }
+}
+
+/// The batched estimator kernel: `(elapsed f32[N,K], q f32[N],
+/// mask f32[N,K]) -> theta f32[N]` — evaluates `θ̂` for every node in one
+/// call (the Pallas `survival` kernel from L1).
+pub struct ThetaKernel {
+    exec: LoadedExec,
+    pub nodes: usize,
+    pub walks: usize,
+}
+
+impl ThetaKernel {
+    pub fn load(rt: &Runtime, artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.txt"))?;
+        let hlo = artifacts_dir.join(manifest.get("theta_kernel")?);
+        let exec = rt.load_hlo_text(hlo)?;
+        Ok(ThetaKernel {
+            exec,
+            nodes: manifest.get_usize("theta_nodes")?,
+            walks: manifest.get_usize("theta_walks")?,
+        })
+    }
+
+    /// Evaluate θ̂ for all nodes at once.
+    pub fn theta(&self, elapsed: &[f32], q: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        let (n, k) = (self.nodes, self.walks);
+        anyhow::ensure!(elapsed.len() == n * k, "elapsed must be {n}x{k}");
+        anyhow::ensure!(q.len() == n, "q must be length {n}");
+        anyhow::ensure!(mask.len() == n * k, "mask must be {n}x{k}");
+        let e = xla::Literal::vec1(elapsed).reshape(&[n as i64, k as i64])?;
+        let qv = xla::Literal::vec1(q);
+        let m = xla::Literal::vec1(mask).reshape(&[n as i64, k as i64])?;
+        let result = self.exec.exe.execute::<xla::Literal>(&[e, qv, m])?[0][0].to_literal_sync()?;
+        let theta = result.to_tuple1()?;
+        Ok(theta.to_vec::<f32>()?)
+    }
+}
+
+/// Resolve the default artifacts directory: `$DECAFORK_ARTIFACTS` or
+/// `./artifacts` relative to the current directory / crate root.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("DECAFORK_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True if the artifacts needed by the learning runtime exist.
+pub fn artifacts_present(dir: &Path) -> bool {
+    dir.join("manifest.txt").exists()
+}

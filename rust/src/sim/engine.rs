@@ -1,0 +1,573 @@
+//! The synchronous multi-walk simulation engine.
+//!
+//! One call to [`Engine::step`] advances global time by one unit:
+//! failures strike, every active walk hops to a uniformly random
+//! neighbor, arrival nodes record visits and run the plugged-in control
+//! algorithm (at most one decision per node per step, paper footnote 6).
+//! Fork and termination actions take effect immediately — a forked walk
+//! counts toward `Z_t` at once and starts hopping from the forking node on
+//! the next step (footnote 7).
+
+use std::sync::Arc;
+
+use crate::control::{ControlAlgorithm, VisitCtx};
+use crate::failures::FailureModel;
+use crate::graph::Graph;
+use crate::rng::Rng;
+use crate::sim::metrics::{Event, EventKind, Trace};
+use crate::walks::{Lineage, NodeState, SurvivalModel, Walk, WalkId, WalkIdGen};
+
+/// Where the initial `Z0` walks start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartPlacement {
+    /// All walks created by one node (the paper's footnote 4).
+    AtNode(u32),
+    /// Each walk starts at an independent uniformly random node.
+    Random,
+}
+
+/// Application hook invoked on walk lifecycle events — the learning layer
+/// implements this to run an SGD step per visit and to duplicate model
+/// payloads on forks. Default impls make hooks opt-in.
+pub trait VisitHook {
+    /// Walk `walk` arrived at `node` at time `t` (after the node recorded
+    /// the visit, before control runs).
+    fn on_visit(&mut self, _t: u64, _node: u32, _walk: &mut Walk) {}
+
+    /// `child` was just forked from `parent`; duplicate any payload.
+    fn on_fork(&mut self, _t: u64, _parent: &Walk, _child: &mut Walk) {}
+
+    /// Walk died (failure or deliberate termination).
+    fn on_death(&mut self, _t: u64, _walk: &Walk) {}
+}
+
+/// No-op hook.
+pub struct NoHook;
+impl VisitHook for NoHook {}
+
+/// How each node's survival function is instantiated (paper footnote 5:
+/// the empirical distribution can be replaced by an analytic survival
+/// function to speed up initialization and improve precision).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SurvivalSpec {
+    /// Empirical return-time CDF per node (the algorithm's default).
+    Empirical,
+    /// Analytic geometric tail with the node's exact stationary rate:
+    /// `q_i = π_i = deg(i)/2|E|` (Kac). Known closed form for random
+    /// regular graphs (Tishby et al. 2021).
+    AnalyticGeometric,
+    /// Analytic exponential tail `λ_i = π_i` — the continuous relaxation
+    /// used in the paper's theory (Assumption 1).
+    AnalyticExponential,
+    /// One fixed model for every node (tests / tools).
+    Fixed(SurvivalModel),
+}
+
+impl SurvivalSpec {
+    /// Resolve the model for node `i` of `g`.
+    pub fn resolve(&self, g: &Graph, i: usize) -> SurvivalModel {
+        match *self {
+            SurvivalSpec::Empirical => SurvivalModel::Empirical,
+            SurvivalSpec::AnalyticGeometric => SurvivalModel::Geometric { q: g.stationary(i) },
+            SurvivalSpec::AnalyticExponential => {
+                SurvivalModel::Exponential { lambda: g.stationary(i) }
+            }
+            SurvivalSpec::Fixed(m) => m,
+        }
+    }
+}
+
+/// Engine tuning parameters.
+#[derive(Debug, Clone)]
+pub struct SimParams {
+    /// Target / initial number of walks `Z0`.
+    pub z0: u32,
+    /// Survival model family for the nodes' estimators.
+    pub survival: SurvivalSpec,
+    pub start: StartPlacement,
+    /// Record (t, θ̂) telemetry (costs memory; off for big sweeps).
+    pub record_theta: bool,
+    /// Control warm-up: no control decisions before this step. The paper
+    /// (Sec. II) requires all `Z0` walks to have visited every node at
+    /// least once before the first failure so return-time estimates are
+    /// warm; starting cold makes every algorithm over-fork (unknown walks
+    /// don't appear in `L_i`, so θ̂ starts at ½). `None` = auto:
+    /// `⌈1.5 · n · ln n⌉`, a cover-time-scale bound.
+    pub control_start: Option<u64>,
+    /// Prune dead-weight last-seen entries every this many steps
+    /// (0 = never). Pure optimization; see `NodeState::prune`.
+    pub prune_every: u64,
+    /// Hard cap on simultaneously active walks: beyond it forks are
+    /// ignored and the trace is flagged `capped` (guards flooding
+    /// strawmen like PeriodicFork with tiny periods).
+    pub max_walks: usize,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            z0: 10,
+            survival: SurvivalSpec::Empirical,
+            start: StartPlacement::AtNode(0),
+            record_theta: false,
+            control_start: None,
+            prune_every: 256,
+            max_walks: 4096,
+        }
+    }
+}
+
+/// The simulation engine. Generic over nothing; control and failures are
+/// boxed strategies so experiment configs stay data.
+pub struct Engine {
+    pub graph: Arc<Graph>,
+    pub params: SimParams,
+    walks: Vec<Walk>,
+    states: Vec<NodeState>,
+    control: Box<dyn ControlAlgorithm>,
+    failures: Box<dyn FailureModel>,
+    rng: Rng,
+    idgen: WalkIdGen,
+    t: u64,
+    trace: Trace,
+    alive_count: u32,
+    /// Resolved control warm-up boundary.
+    control_start: u64,
+    /// Scratch buffer reused every step (avoids per-step allocation).
+    alive_ids: Vec<WalkId>,
+}
+
+impl Engine {
+    pub fn new(
+        graph: Arc<Graph>,
+        params: SimParams,
+        control: Box<dyn ControlAlgorithm>,
+        failures: Box<dyn FailureModel>,
+        mut rng: Rng,
+    ) -> Self {
+        let n = graph.n();
+        let z0 = params.z0;
+        let mut idgen = WalkIdGen::new();
+        let mut walks = Vec::with_capacity(z0 as usize);
+        for slot in 0..z0 {
+            let at = match params.start {
+                StartPlacement::AtNode(v) => v,
+                StartPlacement::Random => rng.below(n) as u32,
+            };
+            walks.push(Walk {
+                id: idgen.fresh(),
+                lineage: Lineage::Original { slot: slot as u16 },
+                at,
+                alive: true,
+                born: 0,
+                died: None,
+                payload: None,
+            });
+        }
+        let states = (0..n)
+            .map(|i| NodeState::new(z0 as usize, params.survival.resolve(&graph, i)))
+            .collect();
+        let mut trace = Trace::default();
+        trace.z.push(z0);
+        let control_start = params
+            .control_start
+            .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
+        Engine {
+            graph,
+            params,
+            walks,
+            states,
+            control,
+            failures,
+            rng,
+            idgen,
+            t: 0,
+            trace,
+            alive_count: z0,
+            control_start,
+            alive_ids: Vec::new(),
+        }
+    }
+
+    /// The resolved control warm-up boundary.
+    pub fn control_start(&self) -> u64 {
+        self.control_start
+    }
+
+    /// Current time.
+    pub fn now(&self) -> u64 {
+        self.t
+    }
+
+    /// Number of active walks.
+    pub fn alive(&self) -> u32 {
+        self.alive_count
+    }
+
+    /// All walks (including dead ones, for lineage inspection).
+    pub fn walks(&self) -> &[Walk] {
+        &self.walks
+    }
+
+    /// Node states (telemetry/tests).
+    pub fn states(&self) -> &[NodeState] {
+        &self.states
+    }
+
+    /// Mutable payload access for hooks run outside `step` (e.g. seeding).
+    pub fn walks_mut(&mut self) -> &mut [Walk] {
+        &mut self.walks
+    }
+
+    fn kill(&mut self, idx: usize, t: u64, node: u32, kind: EventKind, hook: &mut dyn VisitHook) {
+        let w = &mut self.walks[idx];
+        if !w.alive {
+            return;
+        }
+        w.alive = false;
+        w.died = Some(t);
+        self.alive_count -= 1;
+        self.trace.events.push(Event { t, node, walk: w.id.0, kind });
+        hook.on_death(t, &self.walks[idx]);
+    }
+
+    /// Advance one time step with an application hook.
+    pub fn step_with(&mut self, hook: &mut dyn VisitHook) {
+        self.t += 1;
+        let t = self.t;
+
+        // 1. External failure events (bursts, Byzantine state flips).
+        self.alive_ids.clear();
+        self.alive_ids
+            .extend(self.walks.iter().filter(|w| w.alive).map(|w| w.id));
+        let killed = self.failures.pre_step(t, &self.alive_ids, &mut self.rng);
+        if !killed.is_empty() {
+            // Ids are issued sequentially, so id.0 indexes `walks`.
+            for id in killed {
+                let idx = id.0 as usize;
+                let node = self.walks[idx].at;
+                self.kill(idx, t, node, EventKind::Failure, hook);
+            }
+        }
+
+        // 2. Every walk alive at the start of the step hops once. Walks
+        //    forked during this step have `born == t` and do not hop.
+        let snapshot_len = self.walks.len();
+        for idx in 0..snapshot_len {
+            if !self.walks[idx].alive || self.walks[idx].born == t {
+                continue;
+            }
+            let from = self.walks[idx].at;
+            let to = self.graph.step(from as usize, &mut self.rng) as u32;
+            let wid = self.walks[idx].id;
+
+            // 2a. Loss in transit.
+            if self.failures.on_hop(t, wid, from, to, &mut self.rng) {
+                self.kill(idx, t, from, EventKind::Failure, hook);
+                continue;
+            }
+            self.walks[idx].at = to;
+
+            // 2b. Byzantine arrival.
+            if self.failures.on_arrival(t, wid, to, &mut self.rng) {
+                self.kill(idx, t, to, EventKind::Failure, hook);
+                continue;
+            }
+
+            // 2c. The node records the visit (return-time sample).
+            let slot = self.walks[idx].lineage.slot();
+            self.states[to as usize].observe(t, wid, slot);
+
+            // 2d. Application work (e.g. one SGD step on the payload).
+            hook.on_visit(t, to, &mut self.walks[idx]);
+
+            // 2e. Control decision — not during warm-up, and at most one
+            //     per node per step (footnote 6).
+            if t < self.control_start || self.states[to as usize].last_control_step == Some(t) {
+                continue;
+            }
+            self.states[to as usize].last_control_step = Some(t);
+            let decision = {
+                let mut ctx = VisitCtx {
+                    t,
+                    node: to,
+                    walk: wid,
+                    slot,
+                    z0: self.params.z0,
+                    state: &mut self.states[to as usize],
+                    rng: &mut self.rng,
+                };
+                self.control.on_visit(&mut ctx)
+            };
+            if self.params.record_theta {
+                if let Some(th) = decision.theta {
+                    self.trace.theta.push((t, th));
+                }
+            }
+            for fork_slot in decision.forks {
+                if self.alive_count as usize >= self.params.max_walks {
+                    self.trace.capped = true;
+                    break;
+                }
+                let child_id = self.idgen.fresh();
+                let mut child = Walk {
+                    id: child_id,
+                    lineage: Lineage::Forked { parent: wid, by: to, at: t, slot: fork_slot },
+                    at: to,
+                    alive: true,
+                    born: t,
+                    died: None,
+                    payload: None,
+                };
+                hook.on_fork(t, &self.walks[idx], &mut child);
+                // The new walk is immediately visible to the forking node
+                // (it "leaves the forking node" next step, footnote 7).
+                self.states[to as usize].observe(t, child_id, fork_slot);
+                self.walks.push(child);
+                self.alive_count += 1;
+                self.trace.events.push(Event { t, node: to, walk: child_id.0, kind: EventKind::Fork });
+            }
+            if decision.terminate {
+                self.kill(idx, t, to, EventKind::ControlTermination, hook);
+            }
+        }
+
+        // 3. Housekeeping.
+        if self.params.prune_every > 0 && t % self.params.prune_every == 0 {
+            for s in &mut self.states {
+                s.prune(t);
+            }
+        }
+        self.trace.z.push(self.alive_count);
+        if self.alive_count == 0 {
+            self.trace.extinct = true;
+        }
+    }
+
+    /// Advance one step without application hooks.
+    pub fn step(&mut self) {
+        let mut h = NoHook;
+        self.step_with(&mut h);
+    }
+
+    /// Run until `horizon` (inclusive), stopping early on extinction
+    /// (the population can never recover from zero — the catastrophic
+    /// failure the paper is designed to prevent; the trace is padded with
+    /// zeros so aggregation windows line up).
+    pub fn run_to(&mut self, horizon: u64) {
+        self.run_to_with(horizon, &mut NoHook)
+    }
+
+    /// `run_to` with an application hook.
+    pub fn run_to_with(&mut self, horizon: u64, hook: &mut dyn VisitHook) {
+        while self.t < horizon {
+            if self.alive_count == 0 {
+                self.trace.z.resize(horizon as usize + 1, 0);
+                self.trace.extinct = true;
+                self.t = horizon;
+                break;
+            }
+            self.step_with(hook);
+        }
+    }
+
+    /// Consume the engine, returning its telemetry.
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+
+    /// Borrow telemetry.
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::{Decafork, NoControl};
+    use crate::failures::{Burst, NoFailures, Probabilistic};
+    use crate::graph::generators;
+
+    fn small_graph() -> Arc<Graph> {
+        Arc::new(generators::random_regular(30, 4, &mut Rng::new(7)).unwrap())
+    }
+
+    #[test]
+    fn population_constant_without_failures_or_control() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 5, ..Default::default() },
+            Box::new(NoControl),
+            Box::new(NoFailures),
+            Rng::new(1),
+        );
+        e.run_to(500);
+        assert_eq!(e.alive(), 5);
+        assert!(e.trace().z.iter().all(|&z| z == 5));
+        assert!(e.trace().events.is_empty());
+    }
+
+    #[test]
+    fn burst_reduces_population_permanently_without_control() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 10, ..Default::default() },
+            Box::new(NoControl),
+            Box::new(Burst::new(vec![(50, 4)])),
+            Rng::new(2),
+        );
+        e.run_to(100);
+        assert_eq!(e.alive(), 6);
+        assert_eq!(e.trace().z[49], 10);
+        assert_eq!(e.trace().z[50], 6);
+        assert_eq!(e.trace().count(EventKind::Failure), 4);
+    }
+
+    #[test]
+    fn extinction_flagged_and_padded() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 3, ..Default::default() },
+            Box::new(NoControl),
+            Box::new(Probabilistic::new(0.5)),
+            Rng::new(3),
+        );
+        e.run_to(200);
+        assert!(e.trace().extinct);
+        assert_eq!(e.trace().z.len(), 201);
+        assert_eq!(*e.trace().z.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn z_trace_consistent_with_events() {
+        // Conservation: z[t] - z[t-1] == forks(t) - deaths(t).
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 8, record_theta: true, ..Default::default() },
+            Box::new(Decafork::new(2.0)),
+            Box::new(Burst::new(vec![(100, 4), (300, 3)])),
+            Rng::new(4),
+        );
+        e.run_to(600);
+        let tr = e.trace();
+        let mut delta = vec![0i64; tr.z.len()];
+        for ev in &tr.events {
+            match ev.kind {
+                EventKind::Fork => delta[ev.t as usize] += 1,
+                _ => delta[ev.t as usize] -= 1,
+            }
+        }
+        for t in 1..tr.z.len() {
+            assert_eq!(
+                tr.z[t] as i64 - tr.z[t - 1] as i64,
+                delta[t],
+                "conservation violated at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn decafork_recovers_from_burst() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 10, ..Default::default() },
+            Box::new(Decafork::new(2.0)),
+            Box::new(Burst::new(vec![(800, 5)])),
+            Rng::new(5),
+        );
+        e.run_to(2500);
+        let tr = e.trace();
+        assert!(!tr.extinct);
+        let rec = tr.recovery_time(800, 10);
+        assert!(rec.is_some(), "never recovered: final z = {}", e.alive());
+        // Should not massively overshoot either.
+        assert!(tr.max_z(800, 2500) <= 16, "overshoot {}", tr.max_z(800, 2500));
+    }
+
+    #[test]
+    fn forked_walk_waits_one_step() {
+        // A walk forked at t has born == t and must not hop until t+1;
+        // verified indirectly: forked walks appear in the trace and the
+        // engine never panics on the same-step snapshot boundary.
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 4, control_start: Some(0), ..Default::default() },
+            Box::new(Decafork { epsilon: 50.0, p: Some(1.0) }), // forks every visit
+            Box::new(NoFailures),
+            Rng::new(6),
+        );
+        for _ in 0..3 {
+            e.step();
+        }
+        assert!(e.alive() > 4);
+        for w in e.walks() {
+            if let Lineage::Forked { at, .. } = w.lineage {
+                assert!(at >= w.born);
+            }
+        }
+    }
+
+    #[test]
+    fn max_walks_cap_enforced() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 4, max_walks: 16, control_start: Some(0), ..Default::default() },
+            Box::new(Decafork { epsilon: 100.0, p: Some(1.0) }),
+            Box::new(NoFailures),
+            Rng::new(7),
+        );
+        e.run_to(100);
+        assert!(e.alive() <= 16);
+        assert!(e.trace().capped);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mk = |seed| {
+            let mut e = Engine::new(
+                small_graph(),
+                SimParams { z0: 10, ..Default::default() },
+                Box::new(Decafork::new(2.0)),
+                Box::new(Burst::paper_default()),
+                Rng::new(seed),
+            );
+            e.run_to(3000);
+            e.into_trace().z
+        };
+        assert_eq!(mk(11), mk(11));
+        assert_ne!(mk(11), mk(12));
+    }
+
+    #[test]
+    fn hook_sees_visits_forks_deaths() {
+        struct Counter {
+            visits: usize,
+            forks: usize,
+            deaths: usize,
+        }
+        impl VisitHook for Counter {
+            fn on_visit(&mut self, _t: u64, _n: u32, _w: &mut Walk) {
+                self.visits += 1;
+            }
+            fn on_fork(&mut self, _t: u64, _p: &Walk, _c: &mut Walk) {
+                self.forks += 1;
+            }
+            fn on_death(&mut self, _t: u64, _w: &Walk) {
+                self.deaths += 1;
+            }
+        }
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 6, ..Default::default() },
+            Box::new(Decafork::new(2.0)),
+            Box::new(Burst::new(vec![(40, 3)])),
+            Rng::new(8),
+        );
+        let mut h = Counter { visits: 0, forks: 0, deaths: 0 };
+        e.run_to_with(300, &mut h);
+        assert!(h.visits > 1000);
+        assert_eq!(h.deaths, e.trace().count(EventKind::Failure) + e.trace().count(EventKind::ControlTermination));
+        assert_eq!(h.forks, e.trace().count(EventKind::Fork));
+    }
+}

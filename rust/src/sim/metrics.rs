@@ -1,0 +1,202 @@
+//! Simulation telemetry: per-run traces of the walk population `Z_t`,
+//! discrete events (forks, control terminations, failures), and the
+//! derived quantities the paper's evaluation reports — reaction time after
+//! a failure event, overshoot beyond `Z0`, and extinction.
+
+/// What happened to a walk at a point in time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A control fork created a new walk.
+    Fork,
+    /// A control algorithm deliberately terminated the walk (DECAFORK+).
+    ControlTermination,
+    /// A failure model killed the walk.
+    Failure,
+}
+
+/// One recorded event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub t: u64,
+    pub node: u32,
+    pub walk: u64,
+    pub kind: EventKind,
+}
+
+/// Full telemetry from one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// `z[t]` = number of active walks at the end of step `t`
+    /// (`z[0]` is the initial population `Z0`).
+    pub z: Vec<u32>,
+    pub events: Vec<Event>,
+    /// Optional estimator telemetry: (t, θ̂) samples from control decisions.
+    pub theta: Vec<(u64, f64)>,
+    /// True if the population hit zero (catastrophic failure).
+    pub extinct: bool,
+    /// True if the safety cap on the number of walks was hit (flooding).
+    pub capped: bool,
+}
+
+impl Trace {
+    /// Steps simulated (excluding the t=0 entry).
+    pub fn horizon(&self) -> u64 {
+        self.z.len().saturating_sub(1) as u64
+    }
+
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// First time `>= from` at which `Z_t >= target`; `None` if never.
+    /// With `from` = a burst time this is the paper's *reaction time*
+    /// (time until the system restores the desired redundancy).
+    pub fn recovery_time(&self, from: u64, target: u32) -> Option<u64> {
+        (from as usize..self.z.len())
+            .find(|&t| self.z[t] >= target)
+            .map(|t| t as u64 - from)
+    }
+
+    /// Maximum population in the window `[from, to]` — overshoot probe.
+    pub fn max_z(&self, from: u64, to: u64) -> u32 {
+        let hi = (to as usize + 1).min(self.z.len());
+        self.z[from as usize..hi].iter().copied().max().unwrap_or(0)
+    }
+
+    /// Minimum population in the window `[from, to]`.
+    pub fn min_z(&self, from: u64, to: u64) -> u32 {
+        let hi = (to as usize + 1).min(self.z.len());
+        self.z[from as usize..hi].iter().copied().min().unwrap_or(0)
+    }
+
+    /// Mean population over the window `[from, to]`.
+    pub fn mean_z(&self, from: u64, to: u64) -> f64 {
+        let hi = (to as usize + 1).min(self.z.len());
+        let slice = &self.z[from as usize..hi];
+        if slice.is_empty() {
+            return f64::NAN;
+        }
+        slice.iter().map(|&z| z as f64).sum::<f64>() / slice.len() as f64
+    }
+}
+
+/// Mean ± std aggregation of `Z_t` across runs (the shaded bands in the
+/// paper's figures), plus run-level outcome counters.
+#[derive(Debug, Clone, Default)]
+pub struct AggregateTrace {
+    pub mean: Vec<f64>,
+    pub std: Vec<f64>,
+    pub min: Vec<u32>,
+    pub max: Vec<u32>,
+    pub runs: usize,
+    pub extinctions: usize,
+    pub capped_runs: usize,
+    /// Per-run total fork / control-termination / failure counts.
+    pub forks_per_run: Vec<usize>,
+    pub terms_per_run: Vec<usize>,
+    pub failures_per_run: Vec<usize>,
+}
+
+impl AggregateTrace {
+    /// Combine per-run traces (all must share the same horizon).
+    pub fn from_traces(traces: &[Trace]) -> Self {
+        assert!(!traces.is_empty());
+        let len = traces.iter().map(|t| t.z.len()).min().unwrap();
+        let runs = traces.len();
+        let mut mean = vec![0.0; len];
+        let mut m2 = vec![0.0; len];
+        let mut min = vec![u32::MAX; len];
+        let mut max = vec![0u32; len];
+        for (k, tr) in traces.iter().enumerate() {
+            for i in 0..len {
+                let x = tr.z[i] as f64;
+                // Welford online mean/variance across runs.
+                let delta = x - mean[i];
+                mean[i] += delta / (k + 1) as f64;
+                m2[i] += delta * (x - mean[i]);
+                min[i] = min[i].min(tr.z[i]);
+                max[i] = max[i].max(tr.z[i]);
+            }
+        }
+        let std = m2.iter().map(|&v| (v / runs as f64).sqrt()).collect();
+        AggregateTrace {
+            mean,
+            std,
+            min,
+            max,
+            runs,
+            extinctions: traces.iter().filter(|t| t.extinct).count(),
+            capped_runs: traces.iter().filter(|t| t.capped).count(),
+            forks_per_run: traces.iter().map(|t| t.count(EventKind::Fork)).collect(),
+            terms_per_run: traces.iter().map(|t| t.count(EventKind::ControlTermination)).collect(),
+            failures_per_run: traces.iter().map(|t| t.count(EventKind::Failure)).collect(),
+        }
+    }
+
+    /// Mean recovery time across runs after a burst at `from` (runs that
+    /// never recover are excluded; the count is returned separately).
+    pub fn mean_recovery(traces: &[Trace], from: u64, target: u32) -> (Option<f64>, usize) {
+        let times: Vec<f64> = traces
+            .iter()
+            .filter_map(|t| t.recovery_time(from, target))
+            .map(|t| t as f64)
+            .collect();
+        let unrecovered = traces.len() - times.len();
+        if times.is_empty() {
+            (None, unrecovered)
+        } else {
+            (Some(times.iter().sum::<f64>() / times.len() as f64), unrecovered)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tr(z: Vec<u32>) -> Trace {
+        Trace { z, ..Default::default() }
+    }
+
+    #[test]
+    fn recovery_and_windows() {
+        let t = tr(vec![10, 10, 4, 5, 7, 10, 12, 10]);
+        assert_eq!(t.recovery_time(2, 10), Some(3)); // z[5] = 10
+        assert_eq!(t.recovery_time(2, 13), None);
+        assert_eq!(t.max_z(2, 7), 12);
+        assert_eq!(t.min_z(0, 7), 4);
+        assert!((t.mean_z(0, 1) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_mean_std() {
+        let a = tr(vec![10, 8, 6]);
+        let b = tr(vec![10, 12, 6]);
+        let agg = AggregateTrace::from_traces(&[a, b]);
+        assert_eq!(agg.runs, 2);
+        assert_eq!(agg.mean, vec![10.0, 10.0, 6.0]);
+        assert!((agg.std[1] - 2.0).abs() < 1e-12);
+        assert_eq!(agg.std[0], 0.0);
+        assert_eq!(agg.min, vec![10, 8, 6]);
+        assert_eq!(agg.max, vec![10, 12, 6]);
+    }
+
+    #[test]
+    fn mean_recovery_excludes_failures() {
+        let a = tr(vec![10, 5, 10]);
+        let b = tr(vec![10, 5, 5]);
+        let (mean, unrec) = AggregateTrace::mean_recovery(&[a, b], 1, 10);
+        assert_eq!(mean, Some(1.0));
+        assert_eq!(unrec, 1);
+    }
+
+    #[test]
+    fn event_counts() {
+        let mut t = tr(vec![1, 1]);
+        t.events.push(Event { t: 0, node: 0, walk: 0, kind: EventKind::Fork });
+        t.events.push(Event { t: 1, node: 0, walk: 1, kind: EventKind::Failure });
+        assert_eq!(t.count(EventKind::Fork), 1);
+        assert_eq!(t.count(EventKind::Failure), 1);
+        assert_eq!(t.count(EventKind::ControlTermination), 0);
+    }
+}

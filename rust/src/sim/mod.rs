@@ -1,0 +1,19 @@
+//! Discrete-time multi-random-walk simulation: the engine, metrics, the
+//! multi-seed runner (mean ± std aggregation as in the paper's 50-run
+//! figures) and experiment configuration.
+//!
+//! Time model (matches the paper's synchronous simulations): at every step
+//! each active walk performs one hop; failures strike before/during/after
+//! the hop depending on the model; the arrival node records the visit and
+//! — at most once per step (footnote 6) — runs the control algorithm on
+//! the visiting walk.
+
+pub mod config;
+pub mod engine;
+pub mod metrics;
+pub mod runner;
+
+pub use config::{ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
+pub use engine::{Engine, SimParams, StartPlacement, VisitHook};
+pub use metrics::{AggregateTrace, Event, EventKind, Trace};
+pub use runner::run_many;

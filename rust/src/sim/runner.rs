@@ -1,0 +1,98 @@
+//! Multi-seed experiment runner: fans replications out over OS threads
+//! (no async runtime needed — runs are CPU-bound and independent) and
+//! aggregates traces into the mean ± std bands the paper plots.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::config::ExperimentConfig;
+use crate::sim::metrics::{AggregateTrace, Trace};
+
+/// Run `cfg.runs` independent replications of the experiment, in parallel
+/// across up to `threads` OS threads (0 = available parallelism), and
+/// return all traces (ordered by run index) plus their aggregate.
+pub fn run_many(cfg: &ExperimentConfig, threads: usize) -> anyhow::Result<(Vec<Trace>, AggregateTrace)> {
+    let runs = cfg.runs;
+    anyhow::ensure!(runs > 0, "need at least one run");
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(runs);
+
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<(usize, anyhow::Result<Trace>)>> = Mutex::new(Vec::with_capacity(runs));
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let run = next.fetch_add(1, Ordering::Relaxed);
+                if run >= runs {
+                    break;
+                }
+                let out = cfg.build_engine(run).map(|mut e| {
+                    e.run_to(cfg.horizon);
+                    e.into_trace()
+                });
+                results.lock().unwrap().push((run, out));
+            });
+        }
+    });
+
+    let mut collected = results.into_inner().unwrap();
+    collected.sort_by_key(|(run, _)| *run);
+    let mut traces = Vec::with_capacity(runs);
+    for (_, r) in collected {
+        traces.push(r?);
+    }
+    let agg = AggregateTrace::from_traces(&traces);
+    Ok((traces, agg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::{ControlSpec, FailureSpec, GraphSpec};
+    use crate::sim::engine::SimParams;
+
+    fn tiny_cfg(runs: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            graph: GraphSpec::RandomRegular { n: 30, d: 4 },
+            params: SimParams { z0: 6, ..Default::default() },
+            control: ControlSpec::Decafork { epsilon: 1.5 },
+            failures: FailureSpec::Burst { events: vec![(200, 3)] },
+            horizon: 600,
+            runs,
+            seed: 99,
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = tiny_cfg(6);
+        let (t1, _) = run_many(&cfg, 1).unwrap();
+        let (t4, _) = run_many(&cfg, 4).unwrap();
+        assert_eq!(t1.len(), t4.len());
+        for (a, b) in t1.iter().zip(t4.iter()) {
+            assert_eq!(a.z, b.z, "run traces differ between thread counts");
+        }
+    }
+
+    #[test]
+    fn aggregate_shape() {
+        let cfg = tiny_cfg(4);
+        let (traces, agg) = run_many(&cfg, 0).unwrap();
+        assert_eq!(agg.runs, 4);
+        assert_eq!(agg.mean.len(), traces[0].z.len());
+        assert_eq!(agg.mean[0], 6.0);
+        // The burst kills 3 walks at t=200: the mean must drop by ~3
+        // relative to the pre-burst level (whatever forking did before).
+        assert!(
+            agg.mean[201] < agg.mean[199] - 2.0,
+            "burst should dent the mean: {} -> {}",
+            agg.mean[199],
+            agg.mean[201]
+        );
+    }
+}

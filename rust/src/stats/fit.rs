@@ -1,0 +1,112 @@
+//! Maximum-likelihood fits for the return/hitting-time relaxations of
+//! Assumption 1 (exponential in continuous time, geometric in discrete
+//! time), plus goodness-of-fit helpers. DECAFORK can run with the
+//! empirical survival function (default) or with an analytic fit to speed
+//! up the initialization phase (paper footnote 5); these fits provide the
+//! parameters.
+
+use super::ecdf::EmpiricalCdf;
+
+/// Exponential(λ) MLE from samples: λ̂ = 1 / mean.
+pub fn fit_exponential(samples: &[f64]) -> f64 {
+    assert!(!samples.is_empty());
+    let m = samples.iter().sum::<f64>() / samples.len() as f64;
+    assert!(m > 0.0, "non-positive mean");
+    1.0 / m
+}
+
+/// Geometric(q) MLE on support {1,2,…}: q̂ = 1 / mean.
+pub fn fit_geometric(samples: &[u32]) -> f64 {
+    assert!(!samples.is_empty());
+    let m = samples.iter().map(|&x| x as f64).sum::<f64>() / samples.len() as f64;
+    assert!(m >= 1.0, "geometric samples must be >= 1");
+    1.0 / m
+}
+
+/// Geometric fit straight from an [`EmpiricalCdf`].
+pub fn fit_geometric_ecdf(e: &EmpiricalCdf) -> f64 {
+    let m = e.mean();
+    assert!(m.is_finite() && m >= 1.0, "need non-empty ecdf with mean >= 1");
+    1.0 / m
+}
+
+/// Survival function of Exponential(λ): `exp(−λ x)`.
+#[inline]
+pub fn exp_survival(lambda: f64, x: f64) -> f64 {
+    (-lambda * x).exp()
+}
+
+/// Survival function of Geometric(q) on {1,2,…}: `(1−q)^x` = Pr(R > x).
+#[inline]
+pub fn geom_survival(q: f64, x: u32) -> f64 {
+    (1.0 - q).powi(x as i32)
+}
+
+/// The paper's Sec. IV-A expectation of `S(r)` when R is geometric(q)
+/// evaluated at an independent copy of itself:
+/// `E[S(R)] = Σ_r (1−q)^{2r−1} q = (1−q)/(2−q)` — the discrete-time bias
+/// away from ½ that Proposition 1 quantifies.
+pub fn geom_self_survival_mean(q: f64) -> f64 {
+    (1.0 - q) / (2.0 - q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn exponential_fit_recovers_lambda() {
+        let mut rng = Rng::new(1);
+        let lambda = 0.02;
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.exponential(lambda)).collect();
+        let est = fit_exponential(&xs);
+        assert!((est - lambda).abs() / lambda < 0.02, "est {est}");
+    }
+
+    #[test]
+    fn geometric_fit_recovers_q() {
+        let mut rng = Rng::new(2);
+        let q = 0.01;
+        let xs: Vec<u32> = (0..200_000).map(|_| rng.geometric(q) as u32).collect();
+        let est = fit_geometric(&xs);
+        assert!((est - q).abs() / q < 0.03, "est {est}");
+    }
+
+    #[test]
+    fn ecdf_fit_agrees_with_slice_fit() {
+        let mut rng = Rng::new(3);
+        let mut e = EmpiricalCdf::new();
+        let mut v = Vec::new();
+        for _ in 0..50_000 {
+            let x = rng.geometric(0.05) as u32;
+            e.add(x);
+            v.push(x);
+        }
+        assert!((fit_geometric_ecdf(&e) - fit_geometric(&v)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survival_functions() {
+        assert!((exp_survival(0.5, 0.0) - 1.0).abs() < 1e-12);
+        assert!((exp_survival(0.5, 2.0) - (-1.0f64).exp()).abs() < 1e-12);
+        assert!((geom_survival(0.1, 0) - 1.0).abs() < 1e-12);
+        assert!((geom_survival(0.1, 2) - 0.81).abs() < 1e-12);
+    }
+
+    #[test]
+    fn self_survival_mean_bias() {
+        // For small q the bias is tiny (≈ 0.5 − q/4), for large q severe.
+        assert!((geom_self_survival_mean(0.01) - 0.4975).abs() < 1e-3);
+        assert!((geom_self_survival_mean(1.0) - 0.0).abs() < 1e-12);
+        // Monte-Carlo check of E[S(R)] = (1-q)/(2-q).
+        let mut rng = Rng::new(4);
+        let q = 0.2;
+        let trials = 200_000;
+        let mean: f64 = (0..trials)
+            .map(|_| geom_survival(q, rng.geometric(q) as u32))
+            .sum::<f64>()
+            / trials as f64;
+        assert!((mean - geom_self_survival_mean(q)).abs() < 0.005, "mean {mean}");
+    }
+}

@@ -1,0 +1,253 @@
+//! Irwin–Hall distribution: the sum of `K` i.i.d. `U(0,1)` variables.
+//!
+//! Proposition 3 of the paper shows the DECAFORK estimator `θ̂_i(t) − ½`
+//! under `K` infinitely-long-active walks is Irwin–Hall with parameter
+//! `K − 1`; the fork threshold ε and the DECAFORK+ termination threshold
+//! ε₂ are designed from its quantiles:
+//!
+//! * choose ε   so `F_{Σ_{Z0−1}}(ε − ½) = δ`   (forking w/ Z0 walks is rare)
+//! * choose ε₂  so `1 − F_{Σ_{Z0−1}}(ε₂ − ½) = δ` (terminating likewise)
+
+use super::{ln_binom, ln_gamma};
+
+/// Irwin–Hall distribution with `n` summands.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IrwinHall {
+    pub n: u32,
+}
+
+impl IrwinHall {
+    /// New distribution of the sum of `n` U(0,1) variables.
+    pub fn new(n: u32) -> Self {
+        IrwinHall { n }
+    }
+
+    /// CDF `F_{Σ_n}(x) = (1/n!) Σ_{k=0}^{⌊x⌋} (−1)^k C(n,k) (x−k)^n`.
+    ///
+    /// Evaluated in log-space with cancellation care: the alternating sum
+    /// is accumulated as two positive log-sums and combined at the end.
+    /// That is stable in the lower half of the support; the upper half is
+    /// mapped there through the symmetry `F(x) = 1 − F(n − x)`, keeping
+    /// absolute error ~1e-14 across the whole range for the `n ≤ ~60`
+    /// relevant here (Z0 is tens, not thousands).
+    pub fn cdf(&self, x: f64) -> f64 {
+        let n = self.n;
+        if n == 0 {
+            // Sum of zero variables is the constant 0.
+            return if x >= 0.0 { 1.0 } else { 0.0 };
+        }
+        if x <= 0.0 {
+            return 0.0;
+        }
+        if x >= n as f64 {
+            return 1.0;
+        }
+        if x > n as f64 / 2.0 {
+            return 1.0 - self.cdf_lower(n as f64 - x);
+        }
+        self.cdf_lower(x)
+    }
+
+    /// Raw alternating sum; accurate for `x ≤ n/2`.
+    fn cdf_lower(&self, x: f64) -> f64 {
+        let n = self.n;
+        let ln_fact_n = ln_gamma(n as f64 + 1.0);
+        let kmax = x.floor() as u64;
+        let mut pos = f64::NEG_INFINITY; // log-sum of positive terms
+        let mut neg = f64::NEG_INFINITY; // log-sum of negative terms
+        for k in 0..=kmax {
+            let term = ln_binom(n as u64, k) + (n as f64) * (x - k as f64).ln() - ln_fact_n;
+            if k % 2 == 0 {
+                pos = log_add(pos, term);
+            } else {
+                neg = log_add(neg, term);
+            }
+        }
+        let value = if neg == f64::NEG_INFINITY {
+            pos.exp()
+        } else {
+            // pos >= neg for a valid CDF; guard against tiny negatives.
+            (pos.exp() - neg.exp()).max(0.0)
+        };
+        value.clamp(0.0, 1.0)
+    }
+
+    /// Survival `1 − F(x)`; the symmetry `1 − F(x) = F(n − x)` gives full
+    /// relative precision in the upper tail.
+    pub fn survival(&self, x: f64) -> f64 {
+        if x >= self.n as f64 {
+            return 0.0;
+        }
+        if x <= 0.0 {
+            return 1.0;
+        }
+        if x > self.n as f64 / 2.0 {
+            self.cdf_lower(self.n as f64 - x)
+        } else {
+            1.0 - self.cdf_lower(x)
+        }
+    }
+
+    /// Inverse CDF via bisection: smallest `x` with `F(x) ≥ p`.
+    pub fn quantile(&self, p: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&p), "p out of range");
+        if self.n == 0 {
+            return 0.0;
+        }
+        if p <= 0.0 {
+            return 0.0;
+        }
+        if p >= 1.0 {
+            return self.n as f64;
+        }
+        let (mut lo, mut hi) = (0.0f64, self.n as f64);
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.cdf(mid) < p {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// Mean `n/2`.
+    pub fn mean(&self) -> f64 {
+        self.n as f64 / 2.0
+    }
+
+    /// Variance `n/12`.
+    pub fn variance(&self) -> f64 {
+        self.n as f64 / 12.0
+    }
+}
+
+/// log(exp(a) + exp(b)) without overflow.
+fn log_add(a: f64, b: f64) -> f64 {
+    if a == f64::NEG_INFINITY {
+        return b;
+    }
+    if b == f64::NEG_INFINITY {
+        return a;
+    }
+    let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+    hi + (lo - hi).exp().ln_1p()
+}
+
+/// Design the DECAFORK forking threshold ε for target `z0` walks and
+/// confidence `delta`: the probability of seeing `θ̂ < ε` with `Z0` active
+/// walks is `delta` (Sec. III-B, "Choosing the threshold").
+pub fn design_epsilon(z0: u32, delta: f64) -> f64 {
+    assert!(z0 >= 1);
+    IrwinHall::new(z0 - 1).quantile(delta) + 0.5
+}
+
+/// Design the DECAFORK+ termination threshold ε₂: the probability of
+/// seeing `θ̂ > ε₂` with `Z0` active walks is `delta` (Sec. III-C).
+pub fn design_epsilon2(z0: u32, delta: f64) -> f64 {
+    assert!(z0 >= 1);
+    IrwinHall::new(z0 - 1).quantile(1.0 - delta) + 0.5
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_edges() {
+        let ih = IrwinHall::new(5);
+        assert_eq!(ih.cdf(-1.0), 0.0);
+        assert_eq!(ih.cdf(0.0), 0.0);
+        assert_eq!(ih.cdf(5.0), 1.0);
+        assert_eq!(ih.cdf(99.0), 1.0);
+    }
+
+    #[test]
+    fn n1_is_uniform() {
+        let ih = IrwinHall::new(1);
+        for x in [0.1, 0.25, 0.5, 0.9] {
+            assert!((ih.cdf(x) - x).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn n2_is_triangular() {
+        let ih = IrwinHall::new(2);
+        // F(x) = x²/2 on [0,1]; 1 − (2−x)²/2 on [1,2].
+        assert!((ih.cdf(0.5) - 0.125).abs() < 1e-10);
+        assert!((ih.cdf(1.0) - 0.5).abs() < 1e-10);
+        assert!((ih.cdf(1.5) - 0.875).abs() < 1e-10);
+    }
+
+    #[test]
+    fn symmetry_about_mean() {
+        for n in [3u32, 9, 20, 41] {
+            let ih = IrwinHall::new(n);
+            for frac in [0.1, 0.3, 0.45] {
+                let x = frac * n as f64;
+                let a = ih.cdf(x);
+                let b = 1.0 - ih.cdf(n as f64 - x);
+                assert!((a - b).abs() < 1e-8, "n={n} x={x}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_cdf() {
+        let ih = IrwinHall::new(9);
+        let mut prev = -1.0;
+        for i in 0..=90 {
+            let f = ih.cdf(i as f64 / 10.0);
+            assert!(f >= prev - 1e-12);
+            prev = f;
+        }
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let ih = IrwinHall::new(9);
+        for p in [0.01, 0.1, 0.5, 0.9, 0.99] {
+            let x = ih.quantile(p);
+            assert!((ih.cdf(x) - p).abs() < 1e-6, "p={p} x={x}");
+        }
+    }
+
+    #[test]
+    fn matches_monte_carlo() {
+        let mut rng = crate::rng::Rng::new(8);
+        let n = 9;
+        let ih = IrwinHall::new(n);
+        let trials = 100_000;
+        for threshold in [2.0f64, 3.5, 4.5, 6.0] {
+            let hits = (0..trials)
+                .filter(|_| (0..n).map(|_| rng.f64()).sum::<f64>() <= threshold)
+                .count();
+            let emp = hits as f64 / trials as f64;
+            assert!((emp - ih.cdf(threshold)).abs() < 0.01, "thr={threshold}");
+        }
+    }
+
+    #[test]
+    fn paper_thresholds_are_in_range() {
+        // The paper uses ε = 2 for Z0 = 10 (Fig. 1): under Z0 active walks
+        // the fork probability F_{Σ9}(1.5) must be small but non-zero.
+        let p_fork = IrwinHall::new(9).cdf(2.0 - 0.5);
+        assert!(p_fork < 0.01, "fork prob at eps=2: {p_fork}");
+        assert!(p_fork > 1e-8);
+        // ε2 = 5.75 ⇒ termination prob 1 − F_{Σ9}(5.25) small.
+        let p_term = IrwinHall::new(9).survival(5.75 - 0.5);
+        assert!(p_term < 0.35, "term prob at eps2=5.75: {p_term}");
+    }
+
+    #[test]
+    fn designers_roundtrip() {
+        let eps = design_epsilon(10, 1e-4);
+        let eps2 = design_epsilon2(10, 1e-4);
+        assert!(eps > 0.5 && eps < 5.0, "eps={eps}");
+        assert!(eps2 > 5.0 && eps2 < 9.6, "eps2={eps2}");
+        let ih = IrwinHall::new(9);
+        assert!((ih.cdf(eps - 0.5) - 1e-4).abs() < 1e-5);
+        assert!((ih.survival(eps2 - 0.5) - 1e-4).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,117 @@
+//! Statistics toolbox: the per-node empirical return-time distribution
+//! (the heart of DECAFORK's estimator), the Irwin–Hall distribution used
+//! for threshold design (Prop. 3), maximum-likelihood fits for the
+//! exponential/geometric relaxations of Assumption 1, and small numeric
+//! helpers (ln-gamma, ln-binomial, summary statistics).
+
+pub mod ecdf;
+pub mod fit;
+pub mod irwin_hall;
+
+pub use ecdf::EmpiricalCdf;
+pub use irwin_hall::IrwinHall;
+
+/// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
+/// Accurate to ~1e-13 over the positive reals — ample for CDF work.
+pub fn ln_gamma(x: f64) -> f64 {
+    // Coefficients for g=7, n=9 (Godfrey / numerical recipes style).
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        return std::f64::consts::PI.ln() - (std::f64::consts::PI * x).sin().ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln C(n, k) via ln-gamma.
+pub fn ln_binom(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_gamma(n as f64 + 1.0) - ln_gamma(k as f64 + 1.0) - ln_gamma((n - k) as f64 + 1.0)
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation of a slice.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Two-sided Kolmogorov–Smirnov distance between an empirical sample and a
+/// CDF callback. Used by tests to verify distributional claims.
+pub fn ks_distance(samples: &mut [f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in samples.iter().enumerate() {
+        let f = cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_binom_values() {
+        assert!((ln_binom(10, 3) - 120f64.ln()).abs() < 1e-9);
+        assert!((ln_binom(5, 0)).abs() < 1e-9);
+        assert_eq!(ln_binom(3, 5), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ks_uniform_small() {
+        let mut rng = crate::rng::Rng::new(31);
+        let mut xs: Vec<f64> = (0..20_000).map(|_| rng.f64()).collect();
+        let d = ks_distance(&mut xs, |x| x.clamp(0.0, 1.0));
+        assert!(d < 0.02, "KS {d}");
+    }
+}

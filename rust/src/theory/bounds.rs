@@ -1,0 +1,404 @@
+//! Worst-case guarantees: reaction time (Theorem 2), growth without
+//! failures (Theorem 3 / Corollary 2), fork/termination probability
+//! bounds (Lemmas 4/5, Bennett), and the overshoot recursion
+//! (Corollary 3) with a small exact Theorem-4 tree evaluator.
+
+use super::estimator::EventHistory;
+use super::Rates;
+use crate::stats::IrwinHall;
+
+/// Bennett's `h(ζ) = (1+ζ)·ln(1+ζ) − ζ`.
+pub fn bennett_h(zeta: f64) -> f64 {
+    assert!(zeta >= 0.0);
+    (1.0 + zeta) * zeta.ln_1p() - zeta
+}
+
+/// Lemma 4: upper bound on the probability that a node forks at time `t`
+/// given event history `h`, when `E[θ̂_i(t)] > ε`.
+///
+/// The paper's display squares the deviation inside `h`; the classical
+/// Bennett inequality for variables in `[0,1]` uses the raw deviation
+/// (`P(S ≤ E−d) ≤ exp(−σ² h(d/σ²))`). We expose the classical form —
+/// which we verify is a genuine upper bound by Monte-Carlo in
+/// `integration_theory.rs` — and note the printed variant in DESIGN.md.
+pub fn fork_probability_bound(h: &EventHistory, rates: Rates, t: f64, epsilon: f64, p: f64) -> f64 {
+    let mean = h.mean_theta(rates, t);
+    if mean <= epsilon {
+        return p; // no concentration help below the threshold
+    }
+    let sigma2 = h.sigma2(rates, t).max(1e-12);
+    let dev = mean - epsilon;
+    p * (-sigma2 * bennett_h(dev / sigma2)).exp()
+}
+
+/// Lemma 5: upper bound on the probability that a node *terminates* at
+/// time `t` when `E[θ̂_i(t)] < ε₂` (mirror image of Lemma 4).
+pub fn termination_probability_bound(
+    h: &EventHistory,
+    rates: Rates,
+    t: f64,
+    epsilon2: f64,
+    p: f64,
+) -> f64 {
+    let mean = h.mean_theta(rates, t);
+    if mean >= epsilon2 {
+        return p;
+    }
+    let sigma2 = h.sigma2(rates, t).max(1e-12);
+    let dev = epsilon2 - mean;
+    p * (-sigma2 * bennett_h(dev / sigma2)).exp()
+}
+
+/// Theorem 2: bound on the time until at least one fork occurs after `D`
+/// walks failed at `T_d` and `R` forks already happened, with `K` walks
+/// surviving the burst (`K = K' − D`).
+///
+/// Returns the smallest `T − T_d` such that the no-fork probability
+/// `δ(T) = Π_t [1 − p·F_{Σ_{K+R−1}}(ε')·F_{Σ_{D−R}}((ε−ε'−½)·e^{λ_r (t−T_d)})]`
+/// drops below `delta`, scanning `eps_prime` over a grid to get the best
+/// (smallest) bound, as the paper suggests. `None` if not reached within
+/// `max_t` steps.
+pub fn reaction_time_bound(
+    d: u32,
+    r: u32,
+    k: u32,
+    epsilon: f64,
+    p: f64,
+    rates: Rates,
+    delta: f64,
+    max_t: u64,
+) -> Option<u64> {
+    assert!(r < d, "need R < D");
+    let best = (1..40)
+        .map(|i| epsilon * i as f64 / 40.0)
+        .filter(|&e1| e1 < epsilon - 0.5)
+        .filter_map(|e1| reaction_time_bound_fixed(d, r, k, epsilon, e1, p, rates, delta, max_t))
+        .min();
+    best
+}
+
+/// Theorem 2 with a fixed ε′ split.
+#[allow(clippy::too_many_arguments)]
+pub fn reaction_time_bound_fixed(
+    d: u32,
+    r: u32,
+    k: u32,
+    epsilon: f64,
+    eps_prime: f64,
+    p: f64,
+    rates: Rates,
+    delta: f64,
+    max_t: u64,
+) -> Option<u64> {
+    assert!(eps_prime > 0.0 && eps_prime < epsilon - 0.5);
+    let surviving = IrwinHall::new(k + r - 1);
+    let dead = IrwinHall::new(d - r);
+    let f_surv = surviving.cdf(eps_prime);
+    let mut log_no_fork = 0.0f64;
+    let log_delta = delta.ln();
+    for dt in 0..=max_t {
+        // Terminated walks' contribution lives on [0, e^{−λ_r dt}]:
+        // F'_{Σ_D}(x) = F_{Σ_D}(x · e^{λ_r dt}).
+        let scaled = (epsilon - eps_prime - 0.5) * (rates.lambda_r * dt as f64).exp();
+        let f_dead = dead.cdf(scaled);
+        let q = 1.0 - p * f_surv * f_dead;
+        log_no_fork += q.ln();
+        if log_no_fork <= log_delta {
+            return Some(dt);
+        }
+    }
+    None
+}
+
+/// Theorem 3 building block: `p_ν⁺ = ν · p · F_{Σ_{ν−1}}(ε − ½)` — the
+/// per-step forking probability bound with `ν` walks all known to all
+/// nodes.
+pub fn p_nu_plus(nu: u32, p: f64, epsilon: f64) -> f64 {
+    (nu as f64 * p * IrwinHall::new(nu - 1).cdf(epsilon - 0.5)).min(1.0)
+}
+
+/// Result of the Theorem 3 growth bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GrowthBound {
+    /// Probability bound δ on ever exceeding `z` walks within time `T`.
+    pub delta: f64,
+    /// The per-level propagation times `T_{ν,1}`.
+    pub t_nu1: Vec<f64>,
+    /// The index `m` reached by the schedule.
+    pub m: u32,
+}
+
+/// Theorem 3: bound the probability that, running DECAFORK for duration
+/// `t_total` with **no failures** and starting from `Z0 = z0` walks, the
+/// population ever exceeds `z`.
+pub fn growth_bound(z0: u32, z: u32, epsilon: f64, p: f64, n: usize, rates: Rates, t_total: f64) -> GrowthBound {
+    assert!(z > z0);
+    let lambda_a = rates.lambda_a;
+    let mut t_nu1 = Vec::new();
+    let mut elapsed = 0.0;
+    let mut delta = 0.0;
+    let mut m = z0;
+    // Walk the fork ladder ν = Z0 … z−1 while the schedule fits in T.
+    for nu in z0..z {
+        let p_nu = p_nu_plus(nu, p, epsilon);
+        if p_nu <= 0.0 {
+            // Forking impossible at this ν ⇒ growth beyond it has
+            // probability 0 under the bound.
+            m = nu;
+            return GrowthBound { delta, t_nu1, m };
+        }
+        let t1 = (lambda_a * n as f64 / p_nu).ln().max(0.0) / lambda_a;
+        if elapsed + t1 >= t_total || nu == z - 1 {
+            // Remaining time at level ν = m: no more forks allowed.
+            let t_m2 = (t_total - elapsed).max(0.0);
+            delta += p_nu * t_m2;
+            m = nu;
+            return GrowthBound { delta: delta.min(1.0), t_nu1, m };
+        }
+        delta += n as f64 * (-lambda_a * t1).exp() + t1 * p_nu;
+        t_nu1.push(t1);
+        elapsed += t1;
+        m = nu + 1;
+    }
+    GrowthBound { delta: delta.min(1.0), t_nu1, m }
+}
+
+/// Corollary 2: for confidence `delta`, the time horizon `T` during which
+/// `Z_t < z` holds with probability ≥ 1 − δ. Inverts [`growth_bound`] by
+/// bisection over `t_total`.
+pub fn time_until_growth(z0: u32, z: u32, epsilon: f64, p: f64, n: usize, rates: Rates, delta: f64) -> f64 {
+    let mut lo = 0.0f64;
+    let mut hi = 1.0f64;
+    while growth_bound(z0, z, epsilon, p, n, rates, hi).delta < delta && hi < 1e12 {
+        hi *= 2.0;
+    }
+    for _ in 0..100 {
+        let mid = 0.5 * (lo + hi);
+        if growth_bound(z0, z, epsilon, p, n, rates, mid).delta < delta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+/// Corollary 3: approximate upper bound on `E[Z_{t}]` after a failure at
+/// `T_d` left `z_td` walks, assuming the expected number of forks
+/// materializes every step. Returns the trajectory
+/// `[E[Z_{T_d}], …, E[Z_{T_d + steps}]]`.
+pub fn overshoot_recursion(
+    z_td: u32,
+    t_d: f64,
+    steps: usize,
+    epsilon: f64,
+    p: f64,
+    rates: Rates,
+    d_failed: u32,
+) -> Vec<f64> {
+    let mut traj = Vec::with_capacity(steps + 1);
+    let mut h = EventHistory {
+        active_forever: z_td as f64,
+        terminated: vec![(t_d, d_failed as f64)],
+        forked: Vec::new(),
+    };
+    let mut z = z_td as f64;
+    traj.push(z);
+    for s in 1..=steps {
+        let t = t_d + s as f64;
+        let zc = z.ceil();
+        // Every one of the ⌈z⌉ visited nodes may fork with bounded prob.
+        let pf = fork_probability_bound(&h, rates, t, epsilon, p);
+        let forks = zc * pf;
+        if forks > 1e-9 {
+            h.forked.push((t, forks));
+        }
+        z = zc + forks;
+        traj.push(z);
+    }
+    traj
+}
+
+/// Theorem 4 (small-depth exact tree): upper bound on `E[Z_{t0+x}]` after
+/// failures, evaluating the full binary threshold tree. Exponential in
+/// `x`; intended for `x ≤ ~14`. Thresholds are chosen per-branch as
+/// `κ = ceil(E[Z] + slack·√Var)` with binomial fork counts bounded by
+/// Lemma 4 — a concrete instantiation of the paper's "appropriate choice".
+pub fn theorem4_tree_bound(
+    z_t0: u32,
+    t0: f64,
+    x: u32,
+    epsilon: f64,
+    p: f64,
+    rates: Rates,
+    d_failed: u32,
+    t_d: f64,
+) -> f64 {
+    assert!(x >= 1 && x <= 20, "tree depth must be small");
+    struct Ctx {
+        epsilon: f64,
+        p: f64,
+        rates: Rates,
+    }
+    // Recursive expectation over {fork-burst, no-burst} branches.
+    fn rec(ctx: &Ctx, h: &EventHistory, z: f64, t: f64, depth: u32) -> f64 {
+        if depth == 0 {
+            let pf = fork_probability_bound(h, ctx.rates, t, ctx.epsilon, ctx.p);
+            return z + z * pf;
+        }
+        let pf = fork_probability_bound(h, ctx.rates, t, ctx.epsilon, ctx.p);
+        // Threshold: expected forks plus 3σ of Binomial(z, pf).
+        let mean_forks = z * pf;
+        let sd = (z * pf * (1.0 - pf)).sqrt();
+        let kappa_extra = (mean_forks + 3.0 * sd).ceil();
+        // P(more than κ_extra forks) via Chernoff-style tail of Binomial.
+        let tail = binom_tail(z.round() as u64, pf, kappa_extra as u64);
+        // Branch "many forks": worst case doubles the population.
+        let mut h_hi = h.clone();
+        h_hi.forked.push((t, z));
+        let hi = rec(ctx, &h_hi, 2.0 * z, t + 1.0, depth - 1);
+        // Branch "few forks": at most κ_extra forks.
+        let mut h_lo = h.clone();
+        if kappa_extra > 0.0 {
+            h_lo.forked.push((t, kappa_extra));
+        }
+        let lo = rec(ctx, &h_lo, z + kappa_extra, t + 1.0, depth - 1);
+        tail * hi + (1.0 - tail).min(1.0) * lo
+    }
+    let h = EventHistory {
+        active_forever: z_t0 as f64,
+        terminated: vec![(t_d, d_failed as f64)],
+        forked: Vec::new(),
+    };
+    let ctx = Ctx { epsilon, p, rates };
+    rec(&ctx, &h, z_t0 as f64, t0, x - 1)
+}
+
+/// Upper tail `P(Bin(n, p) > k)` via the exact sum (n is small here).
+fn binom_tail(n: u64, p: f64, k: u64) -> f64 {
+    if k >= n {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for i in (k + 1)..=n {
+        let logp = crate::stats::ln_binom(n, i) + i as f64 * p.max(1e-300).ln() + (n - i) as f64 * (1.0 - p).max(1e-300).ln();
+        acc += logp.exp();
+    }
+    acc.min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rates() -> Rates {
+        Rates::new(0.01, 0.025)
+    }
+
+    #[test]
+    fn bennett_h_properties() {
+        assert!((bennett_h(0.0)).abs() < 1e-12);
+        assert!(bennett_h(1.0) > 0.0);
+        // Convex increasing.
+        assert!(bennett_h(2.0) > 2.0 * bennett_h(1.0));
+    }
+
+    #[test]
+    fn fork_bound_decreases_with_health() {
+        // Healthy population far above ε ⇒ tiny fork probability.
+        let healthy = EventHistory { active_forever: 10.0, ..Default::default() };
+        let b = fork_probability_bound(&healthy, rates(), 1000.0, 2.0, 0.1);
+        assert!(b < 0.01, "bound {b}");
+        // Depleted population ⇒ bound degrades to p.
+        let dead = EventHistory { active_forever: 2.0, ..Default::default() };
+        let b2 = fork_probability_bound(&dead, rates(), 1000.0, 2.0, 0.1);
+        assert!((b2 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn termination_bound_mirrors_fork_bound() {
+        let low = EventHistory { active_forever: 4.0, ..Default::default() };
+        let b = termination_probability_bound(&low, rates(), 1000.0, 5.75, 0.1);
+        assert!(b < 0.01, "bound {b}");
+        let high = EventHistory { active_forever: 14.0, ..Default::default() };
+        let b2 = termination_probability_bound(&high, rates(), 1000.0, 5.75, 0.1);
+        assert!((b2 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reaction_time_bound_finite_and_monotone() {
+        // 5 of 10 walks fail; bound the time to the first fork.
+        let t1 = reaction_time_bound(5, 0, 5, 2.0, 0.1, rates(), 0.1, 100_000).unwrap();
+        assert!(t1 > 0, "t1 {t1}");
+        // Tighter confidence takes longer.
+        let t2 = reaction_time_bound(5, 0, 5, 2.0, 0.1, rates(), 0.01, 100_000).unwrap();
+        assert!(t2 >= t1, "{t2} < {t1}");
+        // Larger ε reacts faster.
+        let t3 = reaction_time_bound(5, 0, 5, 3.25, 0.1, rates(), 0.1, 100_000).unwrap();
+        assert!(t3 <= t1, "{t3} > {t1}");
+    }
+
+    #[test]
+    fn later_forks_take_longer_theorem2_implication() {
+        // After R forks the remaining deficit is smaller ⇒ slower forks.
+        let t_r0 = reaction_time_bound(5, 0, 5, 2.0, 0.1, rates(), 0.1, 200_000).unwrap();
+        let t_r3 = reaction_time_bound(5, 3, 5, 2.0, 0.1, rates(), 0.1, 200_000).unwrap();
+        assert!(t_r3 >= t_r0, "{t_r3} < {t_r0}");
+    }
+
+    #[test]
+    fn p_nu_plus_decays_in_nu() {
+        let p = 0.1;
+        let eps = 2.0;
+        let a = p_nu_plus(10, p, eps);
+        let b = p_nu_plus(14, p, eps);
+        assert!(b < a, "{b} >= {a}");
+        assert!(a < 0.01);
+    }
+
+    #[test]
+    fn growth_bound_monotone_in_time_and_eps() {
+        let r = rates();
+        let g1 = growth_bound(10, 15, 2.0, 0.1, 100, r, 1_000.0);
+        let g2 = growth_bound(10, 15, 2.0, 0.1, 100, r, 100_000.0);
+        assert!(g2.delta >= g1.delta);
+        let g3 = growth_bound(10, 15, 3.25, 0.1, 100, r, 1_000.0);
+        assert!(g3.delta >= g1.delta, "larger eps forks more");
+    }
+
+    #[test]
+    fn time_until_growth_inverts() {
+        let r = rates();
+        let t = time_until_growth(10, 15, 2.0, 0.1, 100, r, 0.1);
+        assert!(t > 0.0);
+        let d = growth_bound(10, 15, 2.0, 0.1, 100, r, t).delta;
+        assert!(d <= 0.11, "delta at T: {d}");
+    }
+
+    #[test]
+    fn overshoot_recursion_grows_then_saturates_slowly() {
+        let traj = overshoot_recursion(5, 2000.0, 400, 2.0, 0.1, rates(), 5);
+        assert_eq!(traj.len(), 401);
+        assert!(traj[0] == 5.0);
+        assert!(traj[400] >= traj[0]);
+        // Non-decreasing (Z_t is a submartingale here).
+        for w in traj.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn theorem4_small_tree_bounds_corollary3_start() {
+        let r = rates();
+        let t4 = theorem4_tree_bound(5, 2010.0, 6, 2.0, 0.1, r, 5, 2000.0);
+        assert!(t4 >= 5.0);
+        assert!(t4 < 40.0, "tree bound exploded: {t4}");
+    }
+
+    #[test]
+    fn binom_tail_sane() {
+        assert_eq!(binom_tail(10, 0.5, 10), 0.0);
+        let t = binom_tail(10, 0.5, 4); // P(X > 4) = P(X >= 5) ≈ 0.623
+        assert!((t - 0.623).abs() < 0.01, "{t}");
+    }
+}

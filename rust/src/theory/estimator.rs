@@ -1,0 +1,305 @@
+//! Distributional analysis of the DECAFORK estimator under Assumption 1.
+//!
+//! The central object is `θ̂_{Tf,Td}(t) = S(t − L_{i,k}(t))` — the survival
+//! estimate a random node holds at time `t` for one walk forked at `Tf`
+//! and terminated at `Td` (set `Td = t` while the walk is alive). Lemma 1
+//! gives its CDF, Corollary 1 its mean, Lemma 3 its variance; Lemma 2
+//! assembles the mean of the full estimator `θ̂_i(t)` from an event
+//! history, and Theorem 1's limits fall out of those pieces.
+
+use super::Rates;
+
+/// The distribution of a single walk's survival estimate `S(t − L)` under
+/// Assumption 1 (Lemma 1). Times are absolute; requires `Tf ≤ Td ≤ t`.
+#[derive(Debug, Clone, Copy)]
+pub struct ThetaHatDistribution {
+    pub rates: Rates,
+    /// Fork time of the walk (use a very negative number for "active since
+    /// forever"; `f64::NEG_INFINITY` is handled).
+    pub t_f: f64,
+    /// Termination time (set `= t` for a still-active walk).
+    pub t_d: f64,
+    /// Evaluation time.
+    pub t: f64,
+}
+
+impl ThetaHatDistribution {
+    pub fn new(rates: Rates, t_f: f64, t_d: f64, t: f64) -> Self {
+        assert!(t_f <= t_d && t_d <= t, "need Tf <= Td <= t");
+        ThetaHatDistribution { rates, t_f, t_d, t }
+    }
+
+    /// Active walk forked at `t_f` (Lemma 1 with `Td = t`).
+    pub fn active(rates: Rates, t_f: f64, t: f64) -> Self {
+        Self::new(rates, t_f, t, t)
+    }
+
+    /// Lemma 1: CDF of `S(t − L)` at `x ∈ [0, 1]`.
+    pub fn cdf(&self, x: f64) -> f64 {
+        let Rates { lambda_r, lambda_a } = self.rates;
+        let (t, t_f, t_d) = (self.t, self.t_f, self.t_d);
+        if x < 0.0 {
+            return 0.0;
+        }
+        // Upper support point: values above e^{−λ_r (t − T_d)} cannot be
+        // observed (the walk was last seen no later than T_d).
+        let upper = (-lambda_r * (t - t_d)).exp();
+        if x >= upper {
+            return 1.0;
+        }
+        // Atom at (near) zero: the fork never reached the observing node
+        // before dying, probability e^{−λ_a (T_d − T_f)}; below the lower
+        // support point e^{−λ_r (t − T_f)} only the atom contributes.
+        let atom = if t_f == f64::NEG_INFINITY {
+            0.0
+        } else {
+            (-lambda_a * (t_d - t_f)).exp()
+        };
+        let lower = if t_f == f64::NEG_INFINITY { 0.0 } else { (-lambda_r * (t - t_f)).exp() };
+        if x < lower {
+            return atom;
+        }
+        if t_f == f64::NEG_INFINITY {
+            // Active-forever walk: S is uniform on (0, upper] (Obs. 2/3).
+            return (x / upper).clamp(0.0, 1.0);
+        }
+        // Main branch of Lemma 1.
+        let val = x * (1.0 - (-lambda_a * (t - t_f)).exp() * x.powf(-lambda_a / lambda_r)) / upper + atom;
+        val.clamp(0.0, 1.0)
+    }
+
+    /// Corollary 1: closed-form mean.
+    pub fn mean(&self) -> f64 {
+        let Rates { lambda_r, lambda_a } = self.rates.regularized();
+        let (t, t_f, t_d) = (self.t, self.t_f, self.t_d);
+        if t_f == f64::NEG_INFINITY {
+            // Obs. 2/3: uniform on (0, e^{−λ_r (t − T_d)}).
+            return 0.5 * (-lambda_r * (t - t_d)).exp();
+        }
+        let ratio = 1.0 / (2.0 - lambda_a / lambda_r);
+        (-lambda_a * (t_d - t_f)).exp() * (-lambda_r * (t - t_d)).exp() * (ratio - 1.0)
+            + 0.5 * (-lambda_r * (t - t_d)).exp()
+            + (-2.0 * lambda_r * (t - t_f)).exp() * (lambda_r * (t - t_d)).exp() * (0.5 - ratio)
+    }
+
+    /// Mean via numerical integration of the CDF: `E[X] = ∫ (1−F) dx` on
+    /// `[0, 1]`. Used to cross-validate Corollary 1 (and to expose any
+    /// transcription typo in the closed form — see tests).
+    pub fn mean_quadrature(&self) -> f64 {
+        self.moment_quadrature(1)
+    }
+
+    /// `E[X^k]` by integrating `k x^{k−1} (1 − F(x))` over the support.
+    pub fn moment_quadrature(&self, k: u32) -> f64 {
+        let n = 20_000;
+        let upper = (-self.rates.lambda_r * (self.t - self.t_d)).exp();
+        let h = upper / n as f64;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let x = (i as f64 + 0.5) * h;
+            acc += k as f64 * x.powi(k as i32 - 1) * (1.0 - self.cdf(x)) * h;
+        }
+        acc
+    }
+
+    /// Variance via quadrature (robust reference implementation).
+    pub fn variance_quadrature(&self) -> f64 {
+        let m1 = self.moment_quadrature(1);
+        let m2 = self.moment_quadrature(2);
+        (m2 - m1 * m1).max(0.0)
+    }
+
+    /// Lemma 3's closed-form variance as printed in the paper (requires
+    /// `λ_a ∉ {2λ_r, 3λ_r}`). The printed expression is long and easy to
+    /// mis-transcribe; [`variance_quadrature`] is the ground truth the
+    /// tests compare against — see `integration_theory.rs`.
+    pub fn variance_closed_form(&self) -> f64 {
+        let Rates { lambda_r: lr, lambda_a: la } = self.rates.regularized();
+        assert!((la - 2.0 * lr).abs() > 1e-9 && (la - 3.0 * lr).abs() > 1e-9);
+        let (t, tf, td) = (self.t, self.t_f, self.t_d);
+        let pref = (td * (lr - la) - 4.0 * lr * t).exp()
+            / (12.0 * (la - 3.0 * lr) * (la - 2.0 * lr).powi(2));
+        let term1 = 3.0 * (-la + 3.0 * lr)
+            * (2.0 * (la * (tf - td)).exp() * (lr - la)
+                + la * (2.0 * lr * (tf - td)).exp()
+                + la
+                - 2.0 * lr)
+                .powi(2)
+            * ((la + lr) * td + 2.0 * lr * t).exp();
+        let term2 = 4.0 * (la - 2.0 * lr).powi(2)
+            * (2.0 * lr * (t - td)).exp()
+            * (2.0 * la * (la * td + 3.0 * tf * lr).exp()
+                + (la - 3.0 * lr) * (td * (la + 3.0 * lr)).exp()
+                - (lr - la) * 3.0 * (la * tf + 3.0 * lr * td).exp());
+        pref * (term1 + term2)
+    }
+}
+
+/// Event history for Lemma 2 / Theorem 1: counts of walks active forever,
+/// terminated at given times, and forked at given times. Fractional counts
+/// are allowed so Corollary 3's expected-fork recursion can reuse this.
+#[derive(Debug, Clone, Default)]
+pub struct EventHistory {
+    /// `|A_t|` — walks active since (effectively) forever.
+    pub active_forever: f64,
+    /// `(T_d, |D_{T_d}|)` — termination events.
+    pub terminated: Vec<(f64, f64)>,
+    /// `(T_f, |F_{T_f}|)` — fork events (walks still active).
+    pub forked: Vec<(f64, f64)>,
+}
+
+impl EventHistory {
+    /// Lemma 2: `E[θ̂_i(t)]` for a node visited by one of the
+    /// active-forever walks at time `t`.
+    pub fn mean_theta(&self, rates: Rates, t: f64) -> f64 {
+        let Rates { lambda_r, lambda_a } = rates.regularized();
+        let ratio = 1.0 / (2.0 - lambda_a / lambda_r);
+        let mut acc = 0.5 + (self.active_forever - 1.0).max(0.0) / 2.0;
+        for &(t_d, count) in &self.terminated {
+            acc += count * 0.5 * (-lambda_r * (t - t_d)).exp();
+        }
+        for &(t_f, count) in &self.forked {
+            acc += count
+                * (0.5 + (-lambda_a * (t - t_f)).exp() * (ratio - 1.0)
+                    + (-2.0 * lambda_r * (t - t_f)).exp() * (0.5 - ratio));
+        }
+        acc
+    }
+
+    /// The variance proxy `σ²(t)` from Lemmas 4/5: active walks contribute
+    /// `1/12` each (uniform), forked walks their Lemma-3 variance,
+    /// terminated walks `e^{−2λ_r (t−T_d)}/12` (scaled uniform).
+    pub fn sigma2(&self, rates: Rates, t: f64) -> f64 {
+        let mut acc = (self.active_forever - 1.0).max(0.0) / 12.0;
+        for &(t_d, count) in &self.terminated {
+            acc += count * (-2.0 * rates.lambda_r * (t - t_d)).exp() / 12.0;
+        }
+        for &(t_f, count) in &self.forked {
+            let dist = ThetaHatDistribution::active(rates, t_f, t);
+            acc += count * dist.variance_quadrature();
+        }
+        acc
+    }
+
+    /// Theorem 1 limit check: the number of walks active between the last
+    /// event and `t` (what `2·E[θ̂]` should converge to).
+    pub fn current_population(&self) -> f64 {
+        self.active_forever + self.forked.iter().map(|&(_, c)| c).sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rates() -> Rates {
+        Rates::new(0.01, 0.025) // mean return 100, mean arrival 40
+    }
+
+    #[test]
+    fn cdf_is_monotone_and_bounded() {
+        let d = ThetaHatDistribution::new(rates(), 0.0, 400.0, 500.0);
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let x = i as f64 / 100.0;
+            let f = d.cdf(x);
+            assert!((0.0..=1.0).contains(&f), "F({x}) = {f}");
+            assert!(f >= prev - 1e-12, "non-monotone at {x}");
+            prev = f;
+        }
+        assert_eq!(d.cdf(1.0), 1.0);
+        assert_eq!(d.cdf(-0.1), 0.0);
+    }
+
+    #[test]
+    fn active_forever_is_uniform() {
+        // Obs. 2: active-forever walk's survival estimate ~ U(0,1).
+        let d = ThetaHatDistribution::new(rates(), f64::NEG_INFINITY, 500.0, 500.0);
+        for x in [0.1, 0.4, 0.9] {
+            assert!((d.cdf(x) - x).abs() < 1e-9);
+        }
+        assert!((d.mean() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn terminated_forever_walk_is_scaled_uniform() {
+        // Obs. 3: terminated at T_d, support [0, e^{−λ_r (t−T_d)}].
+        let r = rates();
+        let d = ThetaHatDistribution::new(r, f64::NEG_INFINITY, 400.0, 500.0);
+        let upper = (-r.lambda_r * 100.0).exp();
+        assert!((d.mean() - upper / 2.0).abs() < 1e-9);
+        assert!((d.cdf(upper / 2.0) - 0.5).abs() < 1e-9);
+        assert_eq!(d.cdf(upper * 1.01), 1.0);
+    }
+
+    #[test]
+    fn corollary1_matches_quadrature() {
+        for (tf, td, t) in [(0.0, 400.0, 500.0), (100.0, 450.0, 500.0), (0.0, 500.0, 500.0)] {
+            let d = ThetaHatDistribution::new(rates(), tf, td, t);
+            let closed = d.mean();
+            let quad = d.mean_quadrature();
+            assert!(
+                (closed - quad).abs() < 2e-3,
+                "Tf={tf} Td={td} t={t}: closed {closed} vs quad {quad}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_decays_after_termination() {
+        let r = rates();
+        let d1 = ThetaHatDistribution::new(r, 0.0, 300.0, 400.0);
+        let d2 = ThetaHatDistribution::new(r, 0.0, 300.0, 800.0);
+        assert!(d1.mean() > d2.mean());
+        assert!(d2.mean() < 0.05);
+    }
+
+    #[test]
+    fn freshly_forked_walk_converges_to_half() {
+        // Theorem 1 ingredient: active fork contribution → ½ as t−Tf → ∞.
+        let r = rates();
+        let early = ThetaHatDistribution::active(r, 0.0, 50.0);
+        let late = ThetaHatDistribution::active(r, 0.0, 2000.0).mean();
+        assert!((late - 0.5).abs() < 0.01, "late {late}");
+        // Transient value is rate-dependent (with λ_a > 2λ_r the node sees
+        // the fork quickly and the estimate *overshoots* ½ at first); what
+        // must hold is consistency with the Lemma-1 distribution.
+        let m = early.mean();
+        assert!((0.0..=1.0).contains(&m));
+        assert!((m - early.mean_quadrature()).abs() < 2e-3, "closed {m}");
+    }
+
+    #[test]
+    fn lemma2_stationary_population() {
+        // K walks active forever: E[θ̂] = ½ + (K−1)/2 = K/2.
+        let h = EventHistory { active_forever: 10.0, ..Default::default() };
+        assert!((h.mean_theta(rates(), 1000.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lemma2_tracks_population_theorem1() {
+        // 10 forever + 5 terminated at 300 + 3 forked at 310, evaluated
+        // long after: E[θ̂] → (10 + 3)/2.
+        let h = EventHistory {
+            active_forever: 10.0,
+            terminated: vec![(300.0, 5.0)],
+            forked: vec![(310.0, 3.0)],
+        };
+        let m = h.mean_theta(rates(), 5000.0);
+        assert!((2.0 * m - h.current_population()).abs() < 0.05, "2E[θ̂] = {}", 2.0 * m);
+    }
+
+    #[test]
+    fn sigma2_positive_and_scales() {
+        let h = EventHistory {
+            active_forever: 10.0,
+            terminated: vec![(300.0, 5.0)],
+            forked: vec![(320.0, 2.0)],
+        };
+        let s_early = h.sigma2(rates(), 330.0);
+        assert!(s_early > 9.0 / 12.0);
+        // Terminated contribution decays.
+        let s_late = h.sigma2(rates(), 5000.0);
+        assert!(s_late < s_early + 2.0 / 12.0 + 1e-9);
+    }
+}

@@ -1,0 +1,68 @@
+//! The paper's theoretical toolbox (Secs. IV–V), implemented as executable
+//! formulas and validated against Monte-Carlo simulation in
+//! `rust/tests/integration_theory.rs`.
+//!
+//! Everything here works under **Assumption 1**: return times
+//! `R_i ~ Exp(λ_r)` and first hitting times of forked walks
+//! `H ~ Exp(λ_a)`, the continuous relaxation of the (empirically
+//! geometric) discrete distributions on random regular graphs.
+//!
+//! Contents:
+//! * [`estimator`] — Lemma 1 (CDF of a single walk's survival estimate),
+//!   Corollary 1 (its mean), Lemma 3 (its variance, plus a quadrature
+//!   cross-check), Lemma 2 (mean of the full estimator under an event
+//!   history), Observations 2–3, Propositions 3–4 (Irwin–Hall forms).
+//! * [`bounds`] — Lemma 4 / Lemma 5 (Bennett bounds on fork/termination
+//!   probabilities), Theorem 2 (reaction time), Theorem 3 / Corollary 2
+//!   (growth without failures), Corollary 3 (overshoot recursion) and a
+//!   small Theorem 4 tree evaluator.
+
+pub mod bounds;
+pub mod estimator;
+
+pub use bounds::{
+    fork_probability_bound, growth_bound, overshoot_recursion, reaction_time_bound,
+    termination_probability_bound, time_until_growth, GrowthBound,
+};
+pub use estimator::{EventHistory, ThetaHatDistribution};
+
+/// Assumption-1 rates bundled together.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rates {
+    /// Return-time rate λ_r (mean return time 1/λ_r ≈ n for regular graphs).
+    pub lambda_r: f64,
+    /// Fork arrival rate λ_a (mean first-hitting time 1/λ_a).
+    pub lambda_a: f64,
+}
+
+impl Rates {
+    pub fn new(lambda_r: f64, lambda_a: f64) -> Self {
+        assert!(lambda_r > 0.0 && lambda_a > 0.0);
+        Rates { lambda_r, lambda_a }
+    }
+
+    /// The closed forms of Corollary 1 / Lemmas 2–3 have removable
+    /// singularities at `λ_a ∈ {2λ_r, 3λ_r}` (the paper excludes them in
+    /// Lemma 3). Nudge `λ_a` off those points by a relative 1e-6 — the
+    /// formulas are continuous there, so the perturbation error is far
+    /// below Monte-Carlo noise.
+    pub fn regularized(&self) -> Rates {
+        let mut la = self.lambda_a;
+        for mult in [2.0, 3.0] {
+            let s = mult * self.lambda_r;
+            if (la - s).abs() < 1e-6 * self.lambda_r {
+                la = s * (1.0 + 1e-6);
+            }
+        }
+        Rates { lambda_r: self.lambda_r, lambda_a: la }
+    }
+
+    /// Rates implied by a graph under the regular-graph approximation:
+    /// `λ_r ≈ π_i = 1 / E[R_i]` and `λ_a ≈ 1 / E[H]` with `E[H] ≈ n`
+    /// (mean hitting time from a random start on a well-connected regular
+    /// graph is Θ(n)).
+    pub fn from_graph(g: &crate::graph::Graph, node: usize) -> Self {
+        let mean_return = g.mean_return_time(node);
+        Rates { lambda_r: 1.0 / mean_return, lambda_a: 1.0 / g.n() as f64 }
+    }
+}

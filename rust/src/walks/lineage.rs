@@ -1,0 +1,138 @@
+//! Lineage analytics over the walk forest (paper footnote 8: identifiers
+//! accumulate fork ancestry). Used by the learning reports to show which
+//! initial models' progress survives failures, and by tests to verify
+//! fork bookkeeping.
+
+use super::{Lineage, Walk, WalkId};
+use std::collections::HashMap;
+
+/// Index walks by id for ancestry traversal.
+fn by_id(walks: &[Walk]) -> HashMap<WalkId, &Walk> {
+    walks.iter().map(|w| (w.id, w)).collect()
+}
+
+/// The original slot (root identity in `[Z0]`) a walk descends from.
+pub fn root_slot(walks: &[Walk], id: WalkId) -> Option<u16> {
+    let idx = by_id(walks);
+    let mut cur = idx.get(&id)?;
+    loop {
+        match cur.lineage {
+            Lineage::Original { slot } => return Some(slot),
+            Lineage::Forked { parent, .. } => cur = idx.get(&parent)?,
+        }
+    }
+}
+
+/// Fork depth (0 for originals).
+pub fn depth(walks: &[Walk], id: WalkId) -> Option<usize> {
+    let idx = by_id(walks);
+    let mut cur = idx.get(&id)?;
+    let mut d = 0;
+    loop {
+        match cur.lineage {
+            Lineage::Original { .. } => return Some(d),
+            Lineage::Forked { parent, .. } => {
+                d += 1;
+                cur = idx.get(&parent)?;
+            }
+        }
+    }
+}
+
+/// The full ancestry chain id → … → original (inclusive).
+pub fn ancestry(walks: &[Walk], id: WalkId) -> Vec<WalkId> {
+    let idx = by_id(walks);
+    let mut chain = Vec::new();
+    let mut cur = match idx.get(&id) {
+        Some(w) => *w,
+        None => return chain,
+    };
+    loop {
+        chain.push(cur.id);
+        match cur.lineage {
+            Lineage::Original { .. } => return chain,
+            Lineage::Forked { parent, .. } => match idx.get(&parent) {
+                Some(p) => cur = p,
+                None => return chain,
+            },
+        }
+    }
+}
+
+/// Count of *living* walks per original slot — the redundancy each
+/// initial task identity still enjoys.
+pub fn survivors_per_root(walks: &[Walk]) -> HashMap<u16, usize> {
+    let mut out = HashMap::new();
+    for w in walks.iter().filter(|w| w.alive) {
+        if let Some(slot) = root_slot(walks, w.id) {
+            *out.entry(slot).or_insert(0) += 1;
+        }
+    }
+    out
+}
+
+/// Summary line for reports: living walks, distinct surviving roots,
+/// max fork depth among the living.
+pub fn lineage_summary(walks: &[Walk]) -> String {
+    let alive: Vec<&Walk> = walks.iter().filter(|w| w.alive).collect();
+    let roots = survivors_per_root(walks);
+    let max_depth = alive
+        .iter()
+        .filter_map(|w| depth(walks, w.id))
+        .max()
+        .unwrap_or(0);
+    format!(
+        "{} living walks from {} surviving root identities (max fork depth {})",
+        alive.len(),
+        roots.len(),
+        max_depth
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk(id: u64, lineage: Lineage, alive: bool) -> Walk {
+        Walk { id: WalkId(id), lineage, at: 0, alive, born: 0, died: None, payload: None }
+    }
+
+    fn forest() -> Vec<Walk> {
+        vec![
+            walk(0, Lineage::Original { slot: 0 }, false),
+            walk(1, Lineage::Original { slot: 1 }, true),
+            walk(2, Lineage::Forked { parent: WalkId(0), by: 3, at: 10, slot: 0 }, true),
+            walk(3, Lineage::Forked { parent: WalkId(2), by: 5, at: 20, slot: 0 }, true),
+            walk(4, Lineage::Forked { parent: WalkId(1), by: 7, at: 30, slot: 1 }, false),
+        ]
+    }
+
+    #[test]
+    fn roots_and_depths() {
+        let f = forest();
+        assert_eq!(root_slot(&f, WalkId(3)), Some(0));
+        assert_eq!(root_slot(&f, WalkId(4)), Some(1));
+        assert_eq!(depth(&f, WalkId(0)), Some(0));
+        assert_eq!(depth(&f, WalkId(3)), Some(2));
+        assert_eq!(root_slot(&f, WalkId(99)), None);
+    }
+
+    #[test]
+    fn ancestry_chain() {
+        let f = forest();
+        assert_eq!(ancestry(&f, WalkId(3)), vec![WalkId(3), WalkId(2), WalkId(0)]);
+        assert_eq!(ancestry(&f, WalkId(1)), vec![WalkId(1)]);
+    }
+
+    #[test]
+    fn survivor_counts() {
+        let f = forest();
+        let s = survivors_per_root(&f);
+        assert_eq!(s.get(&0), Some(&2)); // walks 2 and 3
+        assert_eq!(s.get(&1), Some(&1)); // walk 1 (walk 4 dead)
+        let summary = lineage_summary(&f);
+        assert!(summary.contains("3 living walks"));
+        assert!(summary.contains("2 surviving root"));
+        assert!(summary.contains("depth 2"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Random-walk tokens and per-node bookkeeping.
+//!
+//! A *walk* is the paper's token: the currently visited node holds it,
+//! performs local work (in the learning application, one SGD step) and
+//! forwards it to a uniformly random neighbor. Each walk carries a unique
+//! identifier plus a fork lineage (paper footnote 8: a forked walk appends
+//! the forking node and fork time to its identifier).
+//!
+//! Every node maintains a [`NodeState`]: the last-seen table `L_{i,k}`,
+//! the pooled empirical return-time distribution `R̂_i`, and the estimator
+//! `θ̂_i(t) = ½ + Σ_{ℓ≠k} S(t − L_{i,ℓ})` from Eq. (1).
+
+pub mod lineage;
+pub mod node_state;
+
+pub use node_state::{NodeState, SurvivalModel};
+
+/// Globally unique walk identifier (never reused within a simulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WalkId(pub u64);
+
+impl std::fmt::Display for WalkId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "w{}", self.0)
+    }
+}
+
+/// Fork lineage: how this walk came to exist (paper footnote 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lineage {
+    /// One of the `Z0` walks created at start-up; `slot` is its index.
+    Original { slot: u16 },
+    /// Forked from `parent` by node `by` at time `at`. For MISSINGPERSON
+    /// replacements, `slot` records the identity being replaced; DECAFORK
+    /// forks carry the parent's slot for reporting only.
+    Forked { parent: WalkId, by: u32, at: u64, slot: u16 },
+}
+
+impl Lineage {
+    /// The slot label (original index or replaced identity).
+    pub fn slot(&self) -> u16 {
+        match *self {
+            Lineage::Original { slot } => slot,
+            Lineage::Forked { slot, .. } => slot,
+        }
+    }
+}
+
+/// A live (or dead) walk token.
+#[derive(Debug, Clone)]
+pub struct Walk {
+    pub id: WalkId,
+    pub lineage: Lineage,
+    /// Node currently holding the token.
+    pub at: u32,
+    pub alive: bool,
+    /// Time of creation (0 for originals).
+    pub born: u64,
+    /// Time of death, if any.
+    pub died: Option<u64>,
+    /// Index of an application payload (e.g. model parameters) in the
+    /// engine's payload store; forks clone the payload.
+    pub payload: Option<usize>,
+}
+
+/// Allocator for unique walk ids.
+#[derive(Debug, Default, Clone)]
+pub struct WalkIdGen {
+    next: u64,
+}
+
+impl WalkIdGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn fresh(&mut self) -> WalkId {
+        let id = WalkId(self.next);
+        self.next += 1;
+        id
+    }
+
+    /// Number of ids handed out so far.
+    pub fn issued(&self) -> u64 {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_unique_and_ordered() {
+        let mut g = WalkIdGen::new();
+        let a = g.fresh();
+        let b = g.fresh();
+        assert_ne!(a, b);
+        assert!(a < b);
+        assert_eq!(g.issued(), 2);
+    }
+
+    #[test]
+    fn lineage_slots() {
+        let orig = Lineage::Original { slot: 3 };
+        assert_eq!(orig.slot(), 3);
+        let fork = Lineage::Forked { parent: WalkId(0), by: 7, at: 100, slot: 3 };
+        assert_eq!(fork.slot(), 3);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(WalkId(5).to_string(), "w5");
+    }
+}

@@ -1,0 +1,293 @@
+//! Per-node bookkeeping for the DECAFORK estimator.
+//!
+//! Node `i` tracks, for every walk `k` it has ever seen, the last visit
+//! time `L_{i,k}(t)`; revisits yield samples `t − L_{i,k}(t)` of the
+//! return-time variable `R_i` (pooled across walks — they are i.i.d.).
+//! The survival function `S(·)` used in the estimator can come from the
+//! empirical distribution (the algorithm's default) or from an analytic
+//! fit (footnote 5: speeds up initialization when the family is known).
+
+use super::WalkId;
+use crate::stats::fit::{exp_survival, geom_survival};
+use crate::stats::EmpiricalCdf;
+
+/// Which survival function backs `S(t − L)` in the estimator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SurvivalModel {
+    /// Empirical CDF of observed return times (paper default).
+    Empirical,
+    /// Analytic geometric tail `S(x) = (1−q)^x` (random regular graphs,
+    /// Tishby et al. 2021; q ≈ π_i = deg(i)/2|E|).
+    Geometric { q: f64 },
+    /// Analytic exponential tail `S(x) = exp(−λ x)` (the continuous
+    /// relaxation used for the paper's theory, Assumption 1).
+    Exponential { lambda: f64 },
+}
+
+/// State a single node keeps to run MISSINGPERSON / DECAFORK / DECAFORK+.
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    /// `L_{i,k}`: last time each known walk was seen here. Stored as a
+    /// flat vector in first-seen order: the set is small (Z0 plus
+    /// surviving forks, pruned), a linear scan beats hashing at this
+    /// size, and — crucially — iteration order is deterministic, so the
+    /// floating-point sum in [`theta`](Self::theta) is reproducible
+    /// across runs (HashMap order randomization flipped near-threshold
+    /// decisions; see DESIGN.md §Perf).
+    last_seen: Vec<(WalkId, u64)>,
+    /// Pooled empirical return-time distribution `R̂_i`.
+    pub return_cdf: EmpiricalCdf,
+    /// Survival model used by `theta`.
+    pub model: SurvivalModel,
+    /// Per-slot last-seen table for MISSINGPERSON (indexed by original
+    /// walk identity `ℓ ∈ [Z0]`); initialized to 0 per the algorithm.
+    pub slot_last_seen: Vec<u64>,
+    /// Step at which this node last executed a control decision; the paper
+    /// (footnote 6) has a node process one visiting walk per time step.
+    pub last_control_step: Option<u64>,
+}
+
+impl NodeState {
+    /// Fresh state with `z0` MISSINGPERSON slots.
+    pub fn new(z0: usize, model: SurvivalModel) -> Self {
+        NodeState {
+            last_seen: Vec::new(),
+            return_cdf: EmpiricalCdf::new(),
+            model,
+            slot_last_seen: vec![0; z0],
+            last_control_step: None,
+        }
+    }
+
+    /// Record a visit of walk `id` (with MISSINGPERSON slot `slot`) at
+    /// time `t`. Returns the return-time sample `t − L_{i,k}` if this is a
+    /// revisit. Updates both tables.
+    pub fn observe(&mut self, t: u64, id: WalkId, slot: u16) -> Option<u32> {
+        let sample = match self.last_seen.iter_mut().find(|(k, _)| *k == id) {
+            Some((_, last)) => {
+                let dt = (t - *last) as u32;
+                *last = t;
+                if dt > 0 {
+                    self.return_cdf.add(dt);
+                    Some(dt)
+                } else {
+                    None
+                }
+            }
+            None => {
+                self.last_seen.push((id, t));
+                None
+            }
+        };
+        if let Some(s) = self.slot_last_seen.get_mut(slot as usize) {
+            *s = t;
+        }
+        sample
+    }
+
+    /// Number of distinct walks this node has ever seen (`|L_i(t)|`).
+    pub fn known_walks(&self) -> usize {
+        self.last_seen.len()
+    }
+
+    /// Whether walk `id` has visited this node before.
+    pub fn knows(&self, id: WalkId) -> bool {
+        self.last_seen.iter().any(|(k, _)| *k == id)
+    }
+
+    /// Last-seen time for a walk, if known.
+    pub fn last_seen_of(&self, id: WalkId) -> Option<u64> {
+        self.last_seen.iter().find(|(k, _)| *k == id).map(|(_, t)| *t)
+    }
+
+    /// Survival `S(dt)` under the configured model.
+    #[inline]
+    pub fn survival(&mut self, dt: u32) -> f64 {
+        match self.model {
+            SurvivalModel::Empirical => self.return_cdf.survival(dt),
+            SurvivalModel::Geometric { q } => geom_survival(q, dt),
+            SurvivalModel::Exponential { lambda } => exp_survival(lambda, dt as f64),
+        }
+    }
+
+    /// The DECAFORK estimator, Eq. (1):
+    /// `θ̂_i(t) = ½ + Σ_{ℓ ∈ L_i(t) \ {k}} S(t − L_{i,ℓ}(t))`,
+    /// where `k` is the currently visiting walk (known to be alive, hence
+    /// the deterministic ½ from Prop. 1).
+    pub fn theta(&mut self, t: u64, visiting: WalkId) -> f64 {
+        let mut acc = 0.5;
+        // Iteration is in first-seen order (deterministic), so the
+        // floating-point sum — and therefore every threshold comparison —
+        // is reproducible across runs and thread counts.
+        let model = self.model;
+        match model {
+            SurvivalModel::Empirical => {
+                // Disjoint-field split borrow: mutate the CDF cache while
+                // iterating the last-seen table.
+                let cdf = &mut self.return_cdf;
+                for &(id, last) in self.last_seen.iter() {
+                    if id == visiting {
+                        continue;
+                    }
+                    acc += cdf.survival((t - last) as u32);
+                }
+            }
+            SurvivalModel::Geometric { q } => {
+                // exp(dt·ln(1−q)) — one ln hoisted out of the loop beats
+                // per-walk powi (§Perf iteration 4).
+                let log1mq = (-q).ln_1p();
+                for &(id, last) in self.last_seen.iter() {
+                    if id != visiting {
+                        acc += ((t - last) as f64 * log1mq).exp();
+                    }
+                }
+            }
+            SurvivalModel::Exponential { lambda } => {
+                for &(id, last) in self.last_seen.iter() {
+                    if id != visiting {
+                        acc += exp_survival(lambda, (t - last) as f64);
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Drop walks whose survival contribution is *exactly* zero and whose
+    /// absence can no longer change future estimates (dt already beyond
+    /// twice the largest observed return time). This is a pure
+    /// memory/speed optimization — contributions removed are identically 0
+    /// under the empirical model and < 1e-12 under analytic models.
+    pub fn prune(&mut self, t: u64) {
+        let max_obs = self.return_cdf.max_observed() as u64;
+        let horizon = match self.model {
+            SurvivalModel::Empirical => 2 * max_obs.max(1),
+            SurvivalModel::Geometric { q } => {
+                if q <= 0.0 {
+                    return;
+                }
+                (28.0 / -(1.0 - q).ln()).ceil() as u64 // S < 1e-12
+            }
+            SurvivalModel::Exponential { lambda } => (28.0 / lambda).ceil() as u64,
+        };
+        self.last_seen.retain(|&(_, last)| t.saturating_sub(last) <= horizon);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn id(n: u64) -> WalkId {
+        WalkId(n)
+    }
+
+    #[test]
+    fn observe_records_return_samples() {
+        let mut s = NodeState::new(4, SurvivalModel::Empirical);
+        assert_eq!(s.observe(10, id(1), 0), None); // first sighting
+        assert_eq!(s.observe(25, id(1), 0), Some(15)); // revisit: sample 15
+        assert_eq!(s.return_cdf.len(), 1);
+        assert_eq!(s.last_seen_of(id(1)), Some(25));
+        assert_eq!(s.slot_last_seen[0], 25);
+    }
+
+    #[test]
+    fn same_step_revisit_yields_no_sample() {
+        let mut s = NodeState::new(1, SurvivalModel::Empirical);
+        s.observe(5, id(1), 0);
+        assert_eq!(s.observe(5, id(1), 0), None);
+        assert_eq!(s.return_cdf.len(), 0);
+    }
+
+    #[test]
+    fn theta_base_is_half_for_lone_walk() {
+        let mut s = NodeState::new(1, SurvivalModel::Empirical);
+        s.observe(3, id(1), 0);
+        assert!((s.theta(10, id(1)) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_counts_other_walks_with_empty_cdf_as_alive() {
+        let mut s = NodeState::new(3, SurvivalModel::Empirical);
+        s.observe(1, id(1), 0);
+        s.observe(2, id(2), 1);
+        s.observe(3, id(3), 2);
+        // Empty return distribution → survival = 1 for all others.
+        assert!((s.theta(4, id(1)) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn theta_decays_for_stale_walks_geometric() {
+        let mut s = NodeState::new(2, SurvivalModel::Geometric { q: 0.1 });
+        s.observe(0, id(1), 0);
+        s.observe(0, id(2), 1);
+        let early = s.theta(1, id(1));
+        let late = s.theta(100, id(1));
+        assert!(early > late);
+        assert!((late - 0.5) < 1e-4, "stale contribution should vanish: {late}");
+    }
+
+    #[test]
+    fn theta_bounds() {
+        let mut s = NodeState::new(4, SurvivalModel::Empirical);
+        for k in 0..8u64 {
+            s.observe(k, id(k), (k % 4) as u16);
+        }
+        for v in [5u32, 20, 100] {
+            s.return_cdf.add(v);
+        }
+        let th = s.theta(50, id(0));
+        assert!(th >= 0.5 - 1e-12);
+        assert!(th <= 0.5 + (s.known_walks() - 1) as f64 + 1e-12);
+    }
+
+    #[test]
+    fn exponential_model_survival() {
+        let mut s = NodeState::new(1, SurvivalModel::Exponential { lambda: 0.05 });
+        assert!((s.survival(0) - 1.0).abs() < 1e-12);
+        assert!((s.survival(20) - (-1.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prune_drops_only_dead_weight() {
+        let mut s = NodeState::new(2, SurvivalModel::Empirical);
+        s.observe(0, id(1), 0);
+        s.observe(90, id(2), 1);
+        // Observed return times max out at 10.
+        for v in [5u32, 10] {
+            s.return_cdf.add(v);
+        }
+        let before = s.theta(100, id(2));
+        s.prune(100);
+        let after = s.theta(100, id(2));
+        assert_eq!(s.known_walks(), 1); // id(1) dropped (dt=100 > 2*10)
+        assert!((before - after).abs() < 1e-12, "prune changed theta");
+    }
+
+    #[test]
+    fn theta_matches_irwin_hall_mean_under_stationarity() {
+        // Prop. 1 sanity: K walks whose elapsed times are drawn from R_i
+        // itself give E[θ̂] ≈ K/2 (within Monte-Carlo noise).
+        let mut rng = crate::rng::Rng::new(42);
+        let q = 0.05;
+        let k = 10u64;
+        let trials = 3000;
+        let mut total = 0.0;
+        for trial in 0..trials {
+            let mut s = NodeState::new(k as usize, SurvivalModel::Geometric { q });
+            let t = 1_000_000u64;
+            for w in 0..k {
+                // Elapsed time since last visit ~ R_i (probability integral
+                // transform argument from Prop. 1).
+                let dt = rng.geometric(q);
+                s.observe(t - dt, id(w + trial * k), (w % k) as u16);
+            }
+            total += s.theta(t, id(trial * k)); // first walk is "visiting"
+        }
+        let mean = total / trials as f64;
+        // E[θ̂] = ½ + (K−1)·(1−q)/(2−q) ≈ ½ + 9·0.487 = 4.886
+        let expect = 0.5 + (k - 1) as f64 * crate::stats::fit::geom_self_survival_mean(q);
+        assert!((mean - expect).abs() < 0.15, "mean {mean} expect {expect}");
+    }
+}

@@ -1,0 +1,193 @@
+//! Runtime + learning integration: requires `make artifacts`. Every test
+//! is skipped (with a loud message) when artifacts are absent so
+//! `cargo test` works on a fresh checkout; `make test` builds them first.
+
+use std::sync::Arc;
+
+use decafork::learning::{ShardedCorpus, TrainingRun};
+use decafork::rng::Rng;
+use decafork::runtime::{artifacts_present, default_artifacts_dir, Runtime, TrainStep};
+
+macro_rules! require_artifacts {
+    () => {{
+        let dir = default_artifacts_dir();
+        if !artifacts_present(&dir) {
+            eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", dir.display());
+            return;
+        }
+        dir
+    }};
+}
+
+fn read_init_params(dir: &std::path::Path, m: &decafork::runtime::Manifest) -> Vec<f32> {
+    let bytes = std::fs::read(dir.join(m.get("init_params").unwrap())).unwrap();
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[test]
+fn train_step_roundtrip_and_loss_decrease() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let ts = TrainStep::load(&rt, &dir).unwrap();
+    let params = read_init_params(&dir, &ts.manifest);
+    assert_eq!(params.len(), ts.param_count().unwrap());
+
+    let (b, t1) = ts.token_shape().unwrap();
+    let vocab = ts.manifest.get_usize("vocab").unwrap() as i32;
+    let tokens: Vec<i32> = (0..b * t1).map(|i| (i as i32 * 7 + 3) % vocab).collect();
+
+    let (p1, l0) = ts.step(&params, &tokens).unwrap();
+    assert!(l0.is_finite());
+    // Near-uniform initial loss ≈ ln(vocab).
+    assert!((l0 - (vocab as f32).ln()).abs() < 0.5, "init loss {l0}");
+    let mut p = p1;
+    let mut l = l0;
+    for _ in 0..15 {
+        let (np, nl) = ts.step(&p, &tokens).unwrap();
+        p = np;
+        l = nl;
+    }
+    assert!(l < 0.7 * l0, "loss did not drop: {l0} -> {l}");
+    assert_ne!(p[..10], params[..10], "params unchanged");
+}
+
+#[test]
+fn train_step_rejects_bad_shapes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let ts = TrainStep::load(&rt, &dir).unwrap();
+    let params = vec![0.0f32; ts.param_count().unwrap()];
+    assert!(ts.step(&params, &[0i32; 3]).is_err());
+    assert!(ts.step(&params[..10], &vec![0i32; {
+        let (b, t1) = ts.token_shape().unwrap();
+        b * t1
+    }]).is_err());
+}
+
+#[test]
+fn theta_kernel_matches_rust_estimator() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let th = decafork::runtime::ThetaKernel::load(&rt, &dir).unwrap();
+    let (n, k) = (th.nodes, th.walks);
+    let mut rng = Rng::new(9);
+    let elapsed: Vec<f32> = (0..n * k).map(|_| rng.below(300) as f32).collect();
+    let q: Vec<f32> = (0..n).map(|_| 0.005 + rng.f32() * 0.05).collect();
+    let mask: Vec<f32> = (0..n * k).map(|_| if rng.bernoulli(0.7) { 1.0 } else { 0.0 }).collect();
+    let theta = th.theta(&elapsed, &q, &mask).unwrap();
+    // Rust-side reference: θ = ½ + Σ mask·(1−q)^elapsed.
+    for i in 0..n {
+        let mut want = 0.5f64;
+        for j in 0..k {
+            if mask[i * k + j] > 0.0 {
+                want += (1.0 - q[i] as f64).powf(elapsed[i * k + j] as f64);
+            }
+        }
+        assert!(
+            (theta[i] as f64 - want).abs() < 1e-3,
+            "node {i}: kernel {} vs rust {want}",
+            theta[i]
+        );
+    }
+}
+
+#[test]
+fn eval_loss_artifact_loads_and_runs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let ts = TrainStep::load(&rt, &dir).unwrap();
+    let exec = rt
+        .load_hlo_text(dir.join(ts.manifest.get("eval_loss").unwrap()))
+        .unwrap();
+    let params = read_init_params(&dir, &ts.manifest);
+    let (b, t1) = ts.token_shape().unwrap();
+    let tokens: Vec<i32> = vec![1; b * t1];
+    let p = xla::Literal::vec1(&params);
+    let t = xla::Literal::vec1(&tokens).reshape(&[b as i64, t1 as i64]).unwrap();
+    let result = exec.exe.execute::<xla::Literal>(&[p, t]).unwrap()[0][0]
+        .to_literal_sync()
+        .unwrap();
+    let loss = result.to_tuple1().unwrap().to_vec::<f32>().unwrap()[0];
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn end_to_end_training_with_failures_and_decafork() {
+    // The headline integration: models ride walks, a burst kills some,
+    // DECAFORK forks replacements carrying copied models, loss improves.
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let ts = TrainStep::load(&rt, &dir).unwrap();
+    let n = 32;
+    let corpus = Arc::new(ShardedCorpus::markov(
+        n,
+        2048,
+        ts.manifest.get_usize("vocab").unwrap(),
+        123,
+    ));
+    let graph = Arc::new(
+        decafork::graph::generators::random_regular(n, 6, &mut Rng::new(5)).unwrap(),
+    );
+    let mut engine = decafork::sim::engine::Engine::new(
+        graph,
+        decafork::sim::engine::SimParams {
+            z0: 3,
+            control_start: Some(100),
+            max_walks: 12,
+            ..Default::default()
+        },
+        Box::new(decafork::control::Decafork::new(1.5)),
+        Box::new(decafork::failures::Burst::new(vec![(110, 1)])),
+        Rng::new(6),
+    );
+    let summary = TrainingRun::execute(&mut engine, &ts, corpus, 220, 7).unwrap();
+    assert!(summary.steps > 100, "too few SGD steps: {}", summary.steps);
+    assert!(summary.survivors >= 1, "no surviving walk");
+    assert!(
+        summary.last_loss_mean < summary.first_loss,
+        "no learning progress: {} -> {}",
+        summary.first_loss,
+        summary.last_loss_mean
+    );
+    // The burst must show in the trace as exactly one failure event.
+    use decafork::sim::metrics::EventKind;
+    assert_eq!(summary.trace.count(EventKind::Failure), 1);
+    assert!(summary.trace.events.iter().any(|e| e.kind == EventKind::Failure && e.t == 110));
+    assert!(summary.lineage.contains("living walks"), "{}", summary.lineage);
+}
+
+#[test]
+fn gossip_on_meet_merges_models() {
+    // Extension test: with merge_on_meet, co-located walks average their
+    // parameters. On a tiny dense graph meetings are frequent.
+    let dir = require_artifacts!();
+    let rt = Runtime::cpu().unwrap();
+    let ts = TrainStep::load(&rt, &dir).unwrap();
+    let n = 8;
+    let corpus = Arc::new(ShardedCorpus::markov(
+        n,
+        2048,
+        ts.manifest.get_usize("vocab").unwrap(),
+        321,
+    ));
+    let graph = Arc::new(decafork::graph::generators::complete(n));
+    let mut engine = decafork::sim::engine::Engine::new(
+        graph,
+        decafork::sim::engine::SimParams {
+            z0: 4,
+            control_start: Some(10_000), // no control: isolate the merge path
+            ..Default::default()
+        },
+        Box::new(decafork::control::NoControl),
+        Box::new(decafork::failures::NoFailures),
+        Rng::new(13),
+    );
+    let summary =
+        TrainingRun::execute_opts(&mut engine, &ts, corpus, 120, 17, true).unwrap();
+    assert!(summary.merges > 0, "no meetings on a complete graph in 120 steps?");
+    assert!(summary.last_loss_mean < summary.first_loss);
+    assert_eq!(summary.survivors, 4);
+}

@@ -1,0 +1,255 @@
+//! End-to-end simulation invariants across the full stack
+//! (graph × control × failures × engine × runner), at the paper's scales.
+
+use decafork::control::{Decafork, DecaforkPlus};
+use decafork::failures::{Burst, Byzantine, Composite, NoFailures, Probabilistic};
+use decafork::graph::generators;
+use decafork::rng::Rng;
+use decafork::sim::engine::{Engine, SimParams};
+use decafork::sim::metrics::EventKind;
+use decafork::sim::{run_many, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
+use std::sync::Arc;
+
+fn paper_graph(seed: u64) -> Arc<decafork::graph::Graph> {
+    Arc::new(generators::random_regular(100, 8, &mut Rng::new(seed)).unwrap())
+}
+
+#[test]
+fn decafork_survives_the_paper_scenario() {
+    // Fig. 1 setting, single run: bursts of 5 and 6 walks; DECAFORK must
+    // recover both times and stay within a sane corridor.
+    let mut e = Engine::new(
+        paper_graph(1),
+        SimParams::default(),
+        Box::new(Decafork::new(2.0)),
+        Box::new(Burst::paper_default()),
+        Rng::new(42),
+    );
+    e.run_to(10_000);
+    let tr = e.trace();
+    assert!(!tr.extinct);
+    assert!(tr.recovery_time(2000, 10).is_some(), "no recovery from burst 1");
+    assert!(tr.recovery_time(6000, 10).is_some(), "no recovery from burst 2");
+    assert!(tr.max_z(0, 10_000) <= 25, "overshoot {}", tr.max_z(0, 10_000));
+    // Warm-up must silence the cold-start over-forking.
+    assert!(tr.max_z(0, 1500) <= 12, "pre-failure forking: {}", tr.max_z(0, 1500));
+}
+
+#[test]
+fn no_control_goes_extinct_under_continuous_failures() {
+    let mut e = Engine::new(
+        paper_graph(2),
+        SimParams::default(),
+        Box::new(decafork::control::NoControl),
+        Box::new(Probabilistic::new(0.002)),
+        Rng::new(7),
+    );
+    e.run_to(10_000);
+    assert!(e.trace().extinct, "10 walks with p_f=0.002 must die within 10k steps");
+}
+
+#[test]
+fn decafork_plus_handles_byzantine_flip() {
+    // Fig. 3 scenario: Byzantine node active until t=5000, honest after.
+    // Byz starts after the failure-free initialization the paper requires.
+    let failures = Composite::new(vec![
+        Box::new(Burst::paper_default()),
+        Box::new(Byzantine::scheduled(1, vec![(1000, true), (5000, false)])),
+    ]);
+    let mut e = Engine::new(
+        paper_graph(3),
+        SimParams::default(),
+        Box::new(DecaforkPlus::new(3.25, 5.75)),
+        Box::new(failures),
+        Rng::new(11),
+    );
+    e.run_to(10_000);
+    let tr = e.trace();
+    assert!(!tr.extinct, "DECAFORK+ must survive the Byzantine phase");
+    // After the node turns honest the population must not explode.
+    assert!(tr.max_z(5000, 10_000) <= 30, "post-flip overshoot {}", tr.max_z(5000, 10_000));
+    assert!(tr.min_z(8000, 10_000) >= 1);
+}
+
+#[test]
+fn theta_telemetry_tracks_population() {
+    // Prop. 1 / Thm. 1 in vivo: estimator mean ≈ Z/2 during the stable
+    // pre-failure window.
+    let mut e = Engine::new(
+        paper_graph(4),
+        SimParams { record_theta: true, ..Default::default() },
+        Box::new(Decafork::new(2.0)),
+        Box::new(NoFailures),
+        Rng::new(5),
+    );
+    e.run_to(6000);
+    let tr = e.trace();
+    let window: Vec<f64> = tr
+        .theta
+        .iter()
+        .filter(|&&(t, _)| t > 3000)
+        .map(|&(_, th)| th)
+        .collect();
+    assert!(window.len() > 100);
+    let mean = window.iter().sum::<f64>() / window.len() as f64;
+    let z_mean = tr.mean_z(3000, 6000);
+    // The estimator lags the true population by the propagation time of
+    // recent forks (Thm. 1 is asymptotic in t − T_ℓ), and the empirical
+    // survival adds a small negative bias — allow a ±2 corridor.
+    assert!(
+        (2.0 * mean - z_mean).abs() < 2.0,
+        "2E[theta] = {:.2} vs Z = {:.2}",
+        2.0 * mean,
+        z_mean
+    );
+}
+
+#[test]
+fn missingperson_overshoots_more_than_decafork() {
+    // The Fig. 1 qualitative ranking.
+    let base = ExperimentConfig {
+        graph: GraphSpec::RandomRegular { n: 100, d: 8 },
+        params: SimParams::default(),
+        control: ControlSpec::Decafork { epsilon: 2.0 },
+        failures: FailureSpec::paper_bursts(),
+        horizon: 10_000,
+        runs: 5,
+        seed: 77,
+    };
+    let (_, dk) = run_many(&base, 0).unwrap();
+    let mp_cfg = ExperimentConfig {
+        control: ControlSpec::MissingPerson { eps_mp: 800 },
+        ..base.clone()
+    };
+    let (_, mp) = run_many(&mp_cfg, 0).unwrap();
+    let dk_max = dk.max.iter().max().copied().unwrap();
+    let mp_max = mp.max.iter().max().copied().unwrap();
+    assert!(
+        mp_max > dk_max,
+        "missingperson should overshoot more: mp {mp_max} vs dk {dk_max}"
+    );
+    assert_eq!(dk.extinctions + mp.extinctions, 0);
+}
+
+#[test]
+fn decafork_plus_reacts_faster_than_decafork() {
+    let base = ExperimentConfig {
+        graph: GraphSpec::RandomRegular { n: 100, d: 8 },
+        params: SimParams::default(),
+        control: ControlSpec::Decafork { epsilon: 2.0 },
+        failures: FailureSpec::Burst { events: vec![(2000, 5)] },
+        horizon: 5000,
+        runs: 8,
+        seed: 3,
+    };
+    let (t_dk, _) = run_many(&base, 0).unwrap();
+    let plus_cfg = ExperimentConfig {
+        control: ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 },
+        ..base.clone()
+    };
+    let (t_plus, _) = run_many(&plus_cfg, 0).unwrap();
+    let mean_rec = |traces: &[decafork::sim::metrics::Trace]| {
+        let (m, _) = decafork::sim::AggregateTrace::mean_recovery(traces, 2000, 10);
+        m.unwrap_or(f64::INFINITY)
+    };
+    let r_dk = mean_rec(&t_dk);
+    let r_plus = mean_rec(&t_plus);
+    assert!(
+        r_plus < r_dk,
+        "DECAFORK+ should react faster: {r_plus:.0} vs {r_dk:.0}"
+    );
+}
+
+#[test]
+fn probabilistic_failures_fig2_shape() {
+    // DECAFORK with ε=2 under p_f=0.001 settles below Z0; DECAFORK+
+    // (ε=3.25) holds more redundancy. This is the headline claim of Fig. 2.
+    let failures = FailureSpec::Composite(vec![
+        FailureSpec::paper_bursts(),
+        FailureSpec::Probabilistic { p_f: 0.001 },
+    ]);
+    let base = ExperimentConfig {
+        graph: GraphSpec::RandomRegular { n: 100, d: 8 },
+        params: SimParams::default(),
+        control: ControlSpec::Decafork { epsilon: 2.0 },
+        failures,
+        horizon: 10_000,
+        runs: 6,
+        seed: 21,
+    };
+    let (_, agg_dk) = run_many(&base, 0).unwrap();
+    let cfg_plus = ExperimentConfig {
+        control: ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 },
+        ..base.clone()
+    };
+    let (_, agg_plus) = run_many(&cfg_plus, 0).unwrap();
+    let tail_dk: f64 = agg_dk.mean[8000..].iter().sum::<f64>() / agg_dk.mean[8000..].len() as f64;
+    let tail_plus: f64 =
+        agg_plus.mean[8000..].iter().sum::<f64>() / agg_plus.mean[8000..].len() as f64;
+    assert!(tail_dk < 10.0, "DECAFORK should sag below Z0: {tail_dk:.2}");
+    assert!(tail_plus > tail_dk, "DECAFORK+ should hold more redundancy");
+    assert_eq!(agg_plus.extinctions, 0);
+}
+
+#[test]
+fn engine_conservation_across_scenarios() {
+    // Z_t deltas must equal fork-minus-death counts for every step in
+    // every scenario (burst, probabilistic, byzantine).
+    let scenarios: Vec<Box<dyn decafork::failures::FailureModel>> = vec![
+        Box::new(Burst::new(vec![(500, 4)])),
+        Box::new(Probabilistic::new(0.001)),
+        Box::new(Byzantine::scheduled(0, vec![(100, true), (900, false)])),
+    ];
+    for (i, f) in scenarios.into_iter().enumerate() {
+        let mut e = Engine::new(
+            Arc::new(generators::random_regular(40, 6, &mut Rng::new(9)).unwrap()),
+            SimParams { z0: 8, ..Default::default() },
+            Box::new(DecaforkPlus::new(2.0, 5.0)),
+            f,
+            Rng::new(100 + i as u64),
+        );
+        e.run_to(2000);
+        let tr = e.trace();
+        let mut delta = vec![0i64; tr.z.len()];
+        for ev in &tr.events {
+            let d = if ev.kind == EventKind::Fork { 1 } else { -1 };
+            delta[ev.t as usize] += d;
+        }
+        for t in 1..tr.z.len() {
+            assert_eq!(
+                tr.z[t] as i64 - tr.z[t - 1] as i64,
+                delta[t],
+                "scenario {i} violated conservation at t={t}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_graph_families_stable_fig6() {
+    for (graph, eps) in [
+        (GraphSpec::RandomRegular { n: 100, d: 8 }, 2.0),
+        (GraphSpec::Complete { n: 100 }, 2.0),
+        (GraphSpec::ErdosRenyi { n: 100, p: 0.08 }, 1.9),
+        (GraphSpec::PowerLaw { n: 100, m: 4 }, 2.1),
+    ] {
+        let cfg = ExperimentConfig {
+            graph: graph.clone(),
+            params: SimParams::default(),
+            control: ControlSpec::Decafork { epsilon: eps },
+            failures: FailureSpec::paper_bursts(),
+            horizon: 10_000,
+            runs: 3,
+            seed: 5,
+        };
+        let (traces, agg) = run_many(&cfg, 0).unwrap();
+        assert_eq!(agg.extinctions, 0, "{} died", graph.label());
+        for tr in &traces {
+            assert!(
+                tr.recovery_time(2000, 10).is_some(),
+                "{} failed to recover",
+                graph.label()
+            );
+        }
+    }
+}

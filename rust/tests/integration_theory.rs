@@ -1,0 +1,243 @@
+//! Theory vs Monte-Carlo: the paper's distributional claims and bounds
+//! validated against direct simulation of the Assumption-1 model and
+//! against the full walk simulator.
+
+use decafork::rng::Rng;
+use decafork::stats::IrwinHall;
+use decafork::theory::estimator::{EventHistory, ThetaHatDistribution};
+use decafork::theory::{
+    fork_probability_bound, growth_bound, reaction_time_bound, Rates,
+};
+
+fn rates() -> Rates {
+    Rates::new(0.01, 0.025)
+}
+
+/// Simulate one sample of the survival estimate S(t − L) for a walk
+/// forked at `t_f` and terminated at `t_d`, observed at `t` by a random
+/// node, under Assumption 1.
+fn sample_theta_hat(rng: &mut Rng, r: Rates, t_f: f64, t_d: f64, t: f64) -> f64 {
+    // Arrival of the forked walk at the observing node.
+    let arrive = t_f + rng.exponential(r.lambda_a);
+    if arrive > t_d {
+        return 0.0; // never seen before the walk died
+    }
+    // Renewal process of returns with rate λ_r from `arrive` to `t_d`;
+    // the last visit before t_d is t_d minus a stationary age, but for an
+    // exponential renewal the age at t_d since the last event given at
+    // least the arrival is min(Exp(λ_r), t_d − arrive).
+    let age = rng.exponential(r.lambda_r).min(t_d - arrive);
+    let last = t_d - age;
+    (-r.lambda_r * (t - last)).exp()
+}
+
+#[test]
+fn lemma1_cdf_matches_monte_carlo() {
+    let r = rates();
+    let (t_f, t_d, t) = (0.0, 300.0, 400.0);
+    let dist = ThetaHatDistribution::new(r, t_f, t_d, t);
+    let mut rng = Rng::new(1);
+    let n = 200_000;
+    let samples: Vec<f64> = (0..n).map(|_| sample_theta_hat(&mut rng, r, t_f, t_d, t)).collect();
+    for x in [0.005, 0.01, 0.02, 0.03] {
+        let emp = samples.iter().filter(|&&s| s <= x).count() as f64 / n as f64;
+        let thy = dist.cdf(x);
+        assert!(
+            (emp - thy).abs() < 0.015,
+            "CDF mismatch at {x}: emp {emp:.4} thy {thy:.4}"
+        );
+    }
+}
+
+#[test]
+fn corollary1_mean_matches_monte_carlo() {
+    let r = rates();
+    let (t_f, t_d, t) = (0.0, 300.0, 350.0);
+    let dist = ThetaHatDistribution::new(r, t_f, t_d, t);
+    let mut rng = Rng::new(2);
+    let n = 400_000;
+    let mean: f64 =
+        (0..n).map(|_| sample_theta_hat(&mut rng, r, t_f, t_d, t)).sum::<f64>() / n as f64;
+    assert!(
+        (mean - dist.mean()).abs() < 0.01,
+        "mean: MC {mean:.4} vs closed form {:.4}",
+        dist.mean()
+    );
+}
+
+#[test]
+fn lemma3_variance_quadrature_consistent() {
+    // The printed closed form is cross-checked against quadrature; where
+    // they disagree the quadrature (integral of the Lemma-1 CDF) wins —
+    // DESIGN.md records this as a suspected transcription issue.
+    let r = rates();
+    let dist = ThetaHatDistribution::new(r, 0.0, 300.0, 400.0);
+    let vq = dist.variance_quadrature();
+    assert!(vq > 0.0 && vq < 1.0 / 4.0, "variance out of range: {vq}");
+    // Monte-Carlo agreement.
+    let mut rng = Rng::new(3);
+    let n = 400_000;
+    let samples: Vec<f64> =
+        (0..n).map(|_| sample_theta_hat(&mut rng, r, 0.0, 300.0, 400.0)).collect();
+    let m = samples.iter().sum::<f64>() / n as f64;
+    let v = samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>() / n as f64;
+    assert!((v - vq).abs() < 0.01, "variance: MC {v:.5} vs quadrature {vq:.5}");
+}
+
+#[test]
+fn proposition3_irwin_hall_in_simulator() {
+    // In the real simulator with K stable walks and warm estimates, θ̂
+    // samples should follow ~½ + Irwin-Hall(K−1): compare a few quantiles.
+    use decafork::control::Decafork;
+    use decafork::failures::NoFailures;
+    use decafork::graph::generators;
+    use decafork::sim::engine::{Engine, SimParams};
+    use std::sync::Arc;
+
+    let g = Arc::new(generators::random_regular(100, 8, &mut Rng::new(4)).unwrap());
+    let mut e = Engine::new(
+        g,
+        SimParams { record_theta: true, ..Default::default() },
+        Box::new(Decafork::new(2.0)),
+        Box::new(NoFailures),
+        Rng::new(4),
+    );
+    e.run_to(8000);
+    let samples: Vec<f64> = e
+        .trace()
+        .theta
+        .iter()
+        .filter(|&&(t, _)| t > 4000)
+        .map(|&(_, th)| th - 0.5)
+        .collect();
+    assert!(samples.len() > 1000);
+    // Prop. 3 describes θ̂ for K *active, fully propagated* walks.
+    // Without failures the population drifts slightly above Z0 (Thm. 3's
+    // slow growth) while recent forks are under-counted at most nodes, so
+    // the realized distribution sits between Irwin–Hall(Z0−1) and
+    // Irwin–Hall(K̄−1). Check the median lands in that corridor and the
+    // spread matches the Irwin–Hall scale.
+    let z_mean = e.trace().mean_z(4000, 8000);
+    let k_hi = (z_mean.round() as u32).saturating_sub(1).max(9);
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let quant = |q: f64| sorted[(q * sorted.len() as f64) as usize];
+    let med = quant(0.5);
+    let lo = IrwinHall::new(9).quantile(0.5) - 0.3;
+    let hi = IrwinHall::new(k_hi).quantile(0.5) + 0.3;
+    assert!(
+        (lo..=hi).contains(&med),
+        "median {med:.2} outside [{lo:.2}, {hi:.2}] (Z mean {z_mean:.1})"
+    );
+    let iqr = quant(0.75) - quant(0.25);
+    let iqr_lo = IrwinHall::new(9).quantile(0.75) - IrwinHall::new(9).quantile(0.25);
+    assert!(
+        iqr > 0.6 * iqr_lo && iqr < 2.5 * iqr_lo,
+        "IQR {iqr:.2} inconsistent with Irwin-Hall scale {iqr_lo:.2}"
+    );
+}
+
+#[test]
+fn lemma4_bound_is_an_upper_bound_in_the_assumption1_model() {
+    // Directly simulate θ̂ = ½ + Σ U(0,1) for K = 10 healthy walks and
+    // check the Bennett bound dominates the true fork probability.
+    let r = rates();
+    let h = EventHistory { active_forever: 10.0, ..Default::default() };
+    let eps = 2.0;
+    let p = 0.1;
+    let bound = fork_probability_bound(&h, r, 1000.0, eps, p);
+    let mut rng = Rng::new(5);
+    let n = 2_000_000;
+    let mut forks = 0u64;
+    for _ in 0..n {
+        let theta = 0.5 + (0..9).map(|_| rng.f64()).sum::<f64>();
+        if theta < eps && rng.bernoulli(p) {
+            forks += 1;
+        }
+    }
+    let emp = forks as f64 / n as f64;
+    assert!(
+        emp <= bound * 1.05 + 1e-9,
+        "Lemma 4 violated: empirical {emp:.2e} > bound {bound:.2e}"
+    );
+}
+
+#[test]
+fn theorem2_bound_dominates_simulated_reaction_time() {
+    // After D = 5 of 10 walks fail, the simulator's median time to the
+    // first fork must be below the Thm. 2 worst-case bound at δ = 0.5.
+    use decafork::control::Decafork;
+    use decafork::failures::Burst;
+    use decafork::graph::generators;
+    use decafork::sim::engine::{Engine, SimParams};
+    use decafork::sim::metrics::EventKind;
+    use std::sync::Arc;
+
+    let r = Rates::new(0.01, 0.01); // λ ≈ 1/n for n = 100
+    let bound = reaction_time_bound(5, 0, 5, 2.0, 0.1, r, 0.5, 5_000_000)
+        .expect("bound should be finite");
+    let mut first_forks = Vec::new();
+    for seed in 0..10 {
+        let g = Arc::new(generators::random_regular(100, 8, &mut Rng::new(seed)).unwrap());
+        let mut e = Engine::new(
+            g,
+            SimParams::default(),
+            Box::new(Decafork::new(2.0)),
+            Box::new(Burst::new(vec![(2000, 5)])),
+            Rng::new(1000 + seed),
+        );
+        e.run_to(2000 + bound.max(10_000));
+        if let Some(ev) = e
+            .trace()
+            .events
+            .iter()
+            .find(|ev| ev.kind == EventKind::Fork && ev.t >= 2000)
+        {
+            first_forks.push(ev.t - 2000);
+        }
+    }
+    assert!(first_forks.len() >= 8, "forks should happen in most runs");
+    first_forks.sort_unstable();
+    let median = first_forks[first_forks.len() / 2];
+    assert!(
+        median <= bound,
+        "median first fork {median} exceeds Thm2 bound {bound}"
+    );
+}
+
+#[test]
+fn theorem3_growth_bound_holds_in_simulator() {
+    // Without failures, the probability of exceeding z = 2·Z0 within the
+    // horizon must be below the Thm. 3 bound (evaluated at the same T).
+    use decafork::control::Decafork;
+    use decafork::failures::NoFailures;
+    use decafork::graph::generators;
+    use decafork::sim::engine::{Engine, SimParams};
+    use std::sync::Arc;
+
+    let r = Rates::new(0.01, 0.01);
+    let horizon = 10_000.0;
+    let g_bound = growth_bound(10, 20, 2.0, 0.1, 100, r, horizon);
+    let runs = 20;
+    let mut exceed = 0;
+    for seed in 0..runs {
+        let g = Arc::new(generators::random_regular(100, 8, &mut Rng::new(seed)).unwrap());
+        let mut e = Engine::new(
+            g,
+            SimParams::default(),
+            Box::new(Decafork::new(2.0)),
+            Box::new(NoFailures),
+            Rng::new(2000 + seed),
+        );
+        e.run_to(horizon as u64);
+        if e.trace().max_z(0, horizon as u64) > 20 {
+            exceed += 1;
+        }
+    }
+    let emp = exceed as f64 / runs as f64;
+    assert!(
+        emp <= g_bound.delta + 0.1,
+        "Thm3 violated: empirical {emp} > bound {:.3}",
+        g_bound.delta
+    );
+}

@@ -1,0 +1,270 @@
+//! Property-based tests (in-repo harness; `proptest` is not in the
+//! vendored crate set — see DESIGN.md substitutions). Each property runs
+//! against many seeded random cases and reports the failing seed.
+
+use decafork::graph::{generators, Graph};
+use decafork::rng::Rng;
+use decafork::stats::{ecdf::EmpiricalCdf, IrwinHall};
+use decafork::walks::{NodeState, SurvivalModel, WalkId};
+
+/// Run `cases` random cases; on panic the failing seed is in the message.
+fn prop(cases: u64, f: impl Fn(&mut Rng)) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xBADC0DE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property failed at case {seed}: {e:?}");
+        }
+    }
+}
+
+fn random_graph(rng: &mut Rng) -> Graph {
+    match rng.below(5) {
+        0 => {
+            let n = 2 * rng.range(5, 40);
+            let d = [2, 3, 4, 6, 8][rng.below(5)].min(n - 1);
+            let d = if n * d % 2 == 1 { d + 1 } else { d };
+            generators::random_regular(n, d, rng).unwrap()
+        }
+        1 => generators::complete(rng.range(3, 30)),
+        2 => generators::erdos_renyi(rng.range(10, 50), 0.3, rng).unwrap(),
+        3 => generators::barabasi_albert(rng.range(10, 60), 3, rng).unwrap(),
+        _ => generators::ring(rng.range(3, 50)),
+    }
+}
+
+#[test]
+fn prop_graphs_are_simple_symmetric_connected() {
+    prop(40, |rng| {
+        let g = random_graph(rng);
+        assert!(g.is_connected());
+        let mut edge_count = 0usize;
+        for i in 0..g.n() {
+            let nbrs = g.neighbors(i);
+            edge_count += nbrs.len();
+            // No self-loops, sorted, no duplicates.
+            let mut prev: Option<u32> = None;
+            for &v in nbrs {
+                assert_ne!(v as usize, i, "self-loop at {i}");
+                if let Some(p) = prev {
+                    assert!(v > p, "unsorted/duplicate adjacency at {i}");
+                }
+                prev = Some(v);
+                // Symmetry.
+                assert!(
+                    g.neighbors(v as usize).contains(&(i as u32)),
+                    "asymmetric edge ({i},{v})"
+                );
+            }
+        }
+        assert_eq!(edge_count, 2 * g.m());
+    });
+}
+
+#[test]
+fn prop_stationary_distribution_sums_to_one_and_kac_holds() {
+    prop(20, |rng| {
+        let g = random_graph(rng);
+        let total: f64 = (0..g.n()).map(|i| g.stationary(i)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        for i in 0..g.n() {
+            let kac = g.mean_return_time(i);
+            assert!((kac * g.stationary(i) - 1.0).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_ecdf_is_a_cdf() {
+    prop(50, |rng| {
+        let mut e = EmpiricalCdf::new();
+        let n = rng.range(1, 500);
+        let max = rng.range(2, 1000);
+        for _ in 0..n {
+            e.add(rng.below(max) as u32);
+        }
+        let mut prev = 0.0;
+        for x in (0..max as u32 + 10).step_by(7) {
+            let f = e.cdf(x);
+            assert!((0.0..=1.0).contains(&f));
+            assert!(f >= prev - 1e-15, "not monotone at {x}");
+            assert!((e.survival(x) - (1.0 - f)).abs() < 1e-12);
+            prev = f;
+        }
+        assert_eq!(e.cdf(max as u32 + 100), 1.0);
+        assert_eq!(e.len(), n as u64);
+    });
+}
+
+#[test]
+fn prop_ecdf_quantile_inverts_cdf() {
+    prop(30, |rng| {
+        let mut e = EmpiricalCdf::new();
+        for _ in 0..rng.range(10, 400) {
+            e.add(rng.below(200) as u32);
+        }
+        for pi in 1..=9 {
+            let p = pi as f64 / 10.0;
+            let q = e.quantile(p);
+            assert!(e.cdf(q) >= p - 1e-12, "cdf(quantile({p})) too small");
+            if q > 0 {
+                assert!(e.cdf(q - 1) < p + 1e-12, "quantile({p}) not minimal");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_irwin_hall_cdf_properties() {
+    prop(25, |rng| {
+        let n = rng.range(1, 45) as u32;
+        let ih = IrwinHall::new(n);
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let x = n as f64 * i as f64 / 20.0;
+            let f = ih.cdf(x);
+            assert!((0.0..=1.0 + 1e-12).contains(&f));
+            assert!(f >= prev - 1e-9, "not monotone: n={n} x={x}");
+            // CDF + survival = 1.
+            assert!((f + ih.survival(x) - 1.0).abs() < 1e-9);
+            prev = f;
+        }
+        // Mean/median symmetry (the alternating sum cancels hardest at
+        // the midpoint; ~1e-8 absolute error at n=40 is expected).
+        assert!((ih.cdf(n as f64 / 2.0) - 0.5).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_theta_estimator_bounds() {
+    // ½ ≤ θ̂ ≤ ½ + (known − 1) always, with any survival model and any
+    // visit pattern.
+    prop(40, |rng| {
+        let model = match rng.below(3) {
+            0 => SurvivalModel::Empirical,
+            1 => SurvivalModel::Geometric { q: 0.001 + rng.f64() * 0.5 },
+            _ => SurvivalModel::Exponential { lambda: 0.001 + rng.f64() * 0.2 },
+        };
+        let mut s = NodeState::new(8, model);
+        let walks = rng.range(1, 30) as u64;
+        let mut t = 0u64;
+        for _ in 0..rng.range(1, 200) {
+            t += rng.range(0, 10) as u64;
+            let id = WalkId(rng.below(walks as usize) as u64);
+            s.observe(t, id, (id.0 % 8) as u16);
+        }
+        let visiting = WalkId(rng.below(walks as usize) as u64);
+        s.observe(t + 1, visiting, 0);
+        let theta = s.theta(t + 1, visiting);
+        let known = s.known_walks() as f64;
+        assert!(theta >= 0.5 - 1e-12, "theta {theta} < 0.5");
+        assert!(theta <= 0.5 + known - 1.0 + 1e-12, "theta {theta} > bound");
+    });
+}
+
+#[test]
+fn prop_theta_monotone_decreasing_in_staleness() {
+    // With an analytic survival model, waiting longer without seeing the
+    // other walks can only lower the estimate.
+    prop(30, |rng| {
+        let q = 0.001 + rng.f64() * 0.3;
+        let mut s = NodeState::new(4, SurvivalModel::Geometric { q });
+        let k = rng.range(2, 10) as u64;
+        for w in 0..k {
+            s.observe(rng.below(50) as u64, WalkId(w), (w % 4) as u16);
+        }
+        let visiting = WalkId(0);
+        let t1 = 100 + rng.below(100) as u64;
+        let t2 = t1 + 1 + rng.below(500) as u64;
+        assert!(s.theta(t1, visiting) >= s.theta(t2, visiting) - 1e-12);
+    });
+}
+
+#[test]
+fn prop_prune_never_changes_theta() {
+    prop(30, |rng| {
+        let mut s = NodeState::new(8, SurvivalModel::Empirical);
+        let mut t = 0u64;
+        for _ in 0..rng.range(10, 300) {
+            t += rng.range(0, 5) as u64;
+            let id = WalkId(rng.below(20) as u64);
+            s.observe(t, id, (id.0 % 8) as u16);
+        }
+        let visiting = WalkId(0);
+        s.observe(t + 1, visiting, 0);
+        let now = t + 1 + rng.below(2000) as u64;
+        let before = s.theta(now, visiting);
+        s.prune(now);
+        let after = s.theta(now, visiting);
+        assert!((before - after).abs() < 1e-12, "{before} != {after}");
+    });
+}
+
+#[test]
+fn prop_engine_z_trace_conserved_and_bounded() {
+    use decafork::control::DecaforkPlus;
+    use decafork::failures::Probabilistic;
+    use decafork::sim::engine::{Engine, SimParams};
+    use decafork::sim::metrics::EventKind;
+    use std::sync::Arc;
+
+    prop(15, |rng| {
+        let g = Arc::new(generators::random_regular(30, 4, rng).unwrap());
+        let z0 = rng.range(2, 12) as u32;
+        let max_walks = 64;
+        let mut e = Engine::new(
+            g,
+            SimParams {
+                z0,
+                max_walks,
+                control_start: Some(rng.below(100) as u64),
+                ..Default::default()
+            },
+            Box::new(DecaforkPlus::new(1.0 + rng.f64() * 2.0, 4.0 + rng.f64() * 3.0)),
+            Box::new(Probabilistic::new(rng.f64() * 0.005)),
+            rng.split(99),
+        );
+        e.run_to(800);
+        let tr = e.trace();
+        // Conservation.
+        let mut delta = vec![0i64; tr.z.len()];
+        for ev in &tr.events {
+            delta[ev.t as usize] += if ev.kind == EventKind::Fork { 1 } else { -1 };
+        }
+        for t in 1..tr.z.len() {
+            assert_eq!(tr.z[t] as i64 - tr.z[t - 1] as i64, delta[t]);
+        }
+        // Cap respected.
+        assert!(tr.z.iter().all(|&z| z as usize <= max_walks));
+        // Extinction is flagged iff the trace hits zero.
+        assert_eq!(tr.extinct, tr.z.contains(&0));
+    });
+}
+
+#[test]
+fn prop_walk_positions_always_valid() {
+    use decafork::control::Decafork;
+    use decafork::failures::Burst;
+    use decafork::sim::engine::{Engine, SimParams};
+    use std::sync::Arc;
+
+    prop(10, |rng| {
+        let g = Arc::new(random_graph(rng));
+        let n = g.n();
+        let mut e = Engine::new(
+            g,
+            SimParams { z0: 5, ..Default::default() },
+            Box::new(Decafork::new(1.5)),
+            Box::new(Burst::new(vec![(50, 2)])),
+            rng.split(1),
+        );
+        e.run_to(300);
+        for w in e.walks() {
+            assert!((w.at as usize) < n, "walk off-graph");
+            if let Some(d) = w.died {
+                assert!(d >= w.born);
+                assert!(!w.alive);
+            }
+        }
+    });
+}
