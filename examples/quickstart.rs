@@ -26,9 +26,9 @@ fn main() -> anyhow::Result<()> {
     let mut engine = Engine::new(
         graph,
         SimParams::default(), // Z0 = 10, empirical survival, auto warm-up
-        Box::new(Decafork::new(2.0)),
+        Decafork::new(2.0),
         // 3. Failures: 5 walks die at t=2000, 6 more at t=6000 (Fig. 1).
-        Box::new(Burst::paper_default()),
+        Burst::paper_default(),
         Rng::new(42),
     );
     println!("control warm-up until t = {}", engine.control_start());

@@ -28,7 +28,7 @@ const BURST_KILL: usize = 3;
 
 fn run_arm(
     label: &str,
-    control: Box<dyn decafork::control::ControlAlgorithm>,
+    control: decafork::control::Control,
     train: &TrainStep,
     corpus: Arc<ShardedCorpus>,
 ) -> anyhow::Result<decafork::learning::TrainingSummary> {
@@ -37,7 +37,7 @@ fn run_arm(
         graph,
         SimParams { z0: Z0, max_walks: 8, ..Default::default() },
         control,
-        Box::new(Burst::new(vec![(BURST_T, BURST_KILL)])),
+        Burst::new(vec![(BURST_T, BURST_KILL)]),
         Rng::new(23),
     );
     let t0 = std::time::Instant::now();
@@ -90,11 +90,11 @@ fn main() -> anyhow::Result<()> {
     // from the Irwin–Hall design rule (Sec. III-B) for Z0 = 4.
     let eps = decafork::stats::irwin_hall::design_epsilon(Z0, 0.02);
     println!("designed DECAFORK threshold for Z0={Z0}: eps = {eps:.2}\n");
-    let resilient = run_arm("decafork", Box::new(Decafork::new(eps)), &train, corpus.clone())?;
+    let resilient = run_arm("decafork", Decafork::new(eps).into(), &train, corpus.clone())?;
 
     // Fragile arm: same failure, no control. (With 3 of 4 walks killed,
     // one walk limps on — kill all Z0 and the task is simply gone.)
-    let fragile = run_arm("no-control", Box::new(NoControl), &train, corpus)?;
+    let fragile = run_arm("no-control", NoControl.into(), &train, corpus)?;
 
     // Report: loss curves (visit order) and population traces.
     let curve = |s: &decafork::learning::TrainingSummary| -> Vec<f64> {

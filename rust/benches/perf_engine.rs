@@ -1,52 +1,154 @@
-//! L3 hot-path throughput: walk-hops/second of the simulation engine on
-//! the Fig. 1 workload, plus a scaling sweep. §Perf target:
-//! ≥ 10⁷ hops/s single-thread (n=100, Z≈10, empirical survival).
+//! L3 hot-path throughput: the arena engine vs the frozen seed engine
+//! (`ReferenceEngine`) on the ISSUE-1 acceptance workload — 1000-node
+//! random-regular graph, 256 walks, 10k steps, ~30% cumulative failures
+//! with DECAFORK refilling — plus the historical hops/sec sweep.
+//!
+//! Writes `BENCH_engine.json` (relative to the bench's working
+//! directory — the `rust/` package root under cargo — or to
+//! `$DECAFORK_BENCH_OUT`) with steps/sec for both engines and the
+//! speedup ratio, so the perf trajectory is recorded run over run.
+//! Acceptance bar: `ratio >= 2.0`.
+//!
+//! Env knobs: `DECAFORK_PERF_STEPS` overrides the 10k-step horizon (CI
+//! smoke uses a smaller value), `DECAFORK_BENCH_OUT` the JSON path.
 
 use decafork::control::Decafork;
 use decafork::failures::NoFailures;
 use decafork::graph::generators;
 use decafork::rng::Rng;
+use decafork::scenario::presets;
 use decafork::sim::engine::{Engine, SimParams};
 use std::sync::Arc;
+use std::time::Instant;
 
 fn bench_case(n: usize, d: usize, z0: u32, steps: u64) -> (f64, u64) {
     let g = Arc::new(generators::random_regular(n, d, &mut Rng::new(1)).unwrap());
     let mut e = Engine::new(
         g,
         SimParams { z0, ..Default::default() },
-        Box::new(Decafork::new(2.0)),
-        Box::new(NoFailures),
+        Decafork::new(2.0),
+        NoFailures,
         Rng::new(2),
     );
     // Warm: populate node tables.
     e.run_to(steps / 5);
     let hops0 = e.trace().z.iter().map(|&z| z as u64).sum::<u64>();
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     e.run_to(steps);
     let dt = t0.elapsed();
     let hops = e.trace().z.iter().map(|&z| z as u64).sum::<u64>() - hops0;
     (hops as f64 / dt.as_secs_f64(), hops)
 }
 
-fn main() {
-    println!("perf_engine: simulation hot-path throughput (single thread)\n");
+fn main() -> anyhow::Result<()> {
+    // ------------------------------------------------------------------
+    // 1. Arena vs reference on the acceptance scenario.
+    // ------------------------------------------------------------------
+    let mut scenario = presets::perf_hot_loop();
+    if let Ok(steps) = std::env::var("DECAFORK_PERF_STEPS") {
+        // Floor keeps the scaled burst times nonzero (t=0 bursts never
+        // fire — the engine starts at t=1) so the 30%-burst component
+        // the JSON describes is always present.
+        let steps: u64 = steps.parse::<u64>()?.max(100);
+        scenario.horizon = steps;
+        // Keep the 30%-cumulative-burst + continuous-churn shape at any
+        // horizon (control warm-up scales to the first fifth).
+        scenario.failures = decafork::scenario::FailureSpec::Composite(vec![
+            decafork::scenario::FailureSpec::Burst {
+                events: vec![(steps * 3 / 10, 26), (steps * 11 / 20, 26), (steps * 8 / 10, 25)],
+            },
+            decafork::scenario::FailureSpec::Probabilistic { p_f: 0.004 },
+        ]);
+    }
+    let horizon = scenario.horizon;
     println!(
-        "{:<28} {:>14} {:>12}",
-        "case", "hops/s", "hops"
+        "perf_engine: {} | n=1000 d=8 Z0=256, {horizon} steps, ~30% cumulative failures",
+        scenario.label()
     );
+
+    let t0 = Instant::now();
+    let mut reference = scenario.reference_engine(0)?;
+    reference.run_to(horizon);
+    let dt_ref = t0.elapsed().as_secs_f64();
+    let ref_steps_per_s = horizon as f64 / dt_ref;
+
+    let t0 = Instant::now();
+    let mut arena = scenario.engine(0)?;
+    arena.run_to(horizon);
+    let dt_arena = t0.elapsed().as_secs_f64();
+    let arena_steps_per_s = horizon as f64 / dt_arena;
+
+    // Sanity: both engines must have simulated the same system.
+    assert_eq!(
+        arena.trace().z,
+        reference.trace().z,
+        "arena and reference diverged — perf numbers would be meaningless"
+    );
+
+    let ratio = arena_steps_per_s / ref_steps_per_s;
+    println!("  reference (seed) : {ref_steps_per_s:>12.1} steps/s  ({dt_ref:.2}s)");
+    println!("  arena            : {arena_steps_per_s:>12.1} steps/s  ({dt_arena:.2}s)");
+    println!("  speedup          : {ratio:>12.2}x  (acceptance bar: >= 2.0x)");
+    println!(
+        "  final population : {} walks, {} retired",
+        arena.alive(),
+        arena.arena().graveyard().len()
+    );
+
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_engine.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"perf_engine\",\n  \"scenario\": {{\n    \"graph\": \"random-regular n=1000 d=8\",\n    \"z0\": 256,\n    \"steps\": {horizon},\n    \"failures\": \"3 bursts (30% cumulative) + p_f=0.004 churn\"\n  }},\n  \"reference_steps_per_sec\": {ref_steps_per_s:.1},\n  \"arena_steps_per_sec\": {arena_steps_per_s:.1},\n  \"speedup\": {ratio:.3},\n  \"acceptance_min_speedup\": 2.0,\n  \"pass\": {}\n}}\n",
+        ratio >= 2.0
+    );
+    std::fs::write(&out, json)?;
+    println!("  wrote {out}");
+
+    // ------------------------------------------------------------------
+    // 2. Graph-step sampler micro-bench: precomputed Lemire threshold
+    //    (Graph::step) vs the seed's generic nbrs[rng.below(len)] path.
+    //    Both consume identical RNG streams (tested in graph::tests);
+    //    this records what hoisting the rejection constant buys.
+    // ------------------------------------------------------------------
+    {
+        let g = Arc::new(generators::random_regular(1000, 8, &mut Rng::new(3)).unwrap());
+        let hops = 20_000_000u64;
+        let mut rng = Rng::new(4);
+        let mut pos = 0usize;
+        let t0 = Instant::now();
+        for _ in 0..hops {
+            pos = g.step(pos, &mut rng);
+        }
+        let strata = hops as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(pos);
+        let mut rng = Rng::new(4);
+        let mut pos = 0usize;
+        let t0 = Instant::now();
+        for _ in 0..hops {
+            let nbrs = g.neighbors(pos);
+            pos = nbrs[rng.below(nbrs.len())] as usize;
+        }
+        let below = hops as f64 / t0.elapsed().as_secs_f64();
+        std::hint::black_box(pos);
+        println!("\ngraph-step sampler ({hops} hops, n=1000 d=8):");
+        println!("  rng.below (seed)   : {below:>12.3e} hops/s");
+        println!("  precomputed strata : {strata:>12.3e} hops/s  ({:.2}x)", strata / below);
+    }
+
+    // ------------------------------------------------------------------
+    // 3. Historical hops/sec sweep (arena engine). §Perf target:
+    //    >= 10^7 hops/s single-thread on the Fig. 1 workload.
+    // ------------------------------------------------------------------
+    println!("\nhops/sec sweep (single thread):");
+    println!("{:<28} {:>14} {:>12}", "case", "hops/s", "hops");
     for (n, d, z0, steps) in [
         (100usize, 8usize, 10u32, 200_000u64), // Fig.1 workload
         (50, 8, 10, 200_000),
         (200, 8, 10, 200_000),
-        (100, 8, 40, 100_000),                 // 4x walk density
-        (1000, 8, 10, 100_000),                // big graph
+        (100, 8, 40, 100_000), // 4x walk density
+        (1000, 8, 10, 100_000), // big graph
     ] {
         let (rate, hops) = bench_case(n, d, z0, steps);
-        println!(
-            "{:<28} {:>14.3e} {:>12}",
-            format!("n={n} d={d} Z0={z0}"),
-            rate,
-            hops
-        );
+        println!("{:<28} {:>14.3e} {:>12}", format!("n={n} d={d} Z0={z0}"), rate, hops);
     }
+    Ok(())
 }

@@ -57,6 +57,75 @@ impl Decision {
     }
 }
 
+/// Closed-world enum over the control algorithms, used by the arena
+/// engine's hot loop. Unlike `Box<dyn ControlAlgorithm>`, the `match`
+/// dispatch is visible to the compiler, so the per-visit decision code
+/// inlines into the hop loop. The open trait below remains for the
+/// actor runtime and the frozen reference engine.
+#[derive(Debug, Clone)]
+pub enum Control {
+    None(NoControl),
+    Periodic(PeriodicFork),
+    MissingPerson(MissingPerson),
+    Decafork(Decafork),
+    DecaforkPlus(DecaforkPlus),
+}
+
+impl Control {
+    /// Short name for reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Control::None(a) => a.name(),
+            Control::Periodic(a) => a.name(),
+            Control::MissingPerson(a) => a.name(),
+            Control::Decafork(a) => a.name(),
+            Control::DecaforkPlus(a) => a.name(),
+        }
+    }
+
+    /// Statically dispatched control decision (see [`ControlAlgorithm::on_visit`]).
+    #[inline]
+    pub fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision {
+        match self {
+            Control::None(a) => a.on_visit(ctx),
+            Control::Periodic(a) => a.on_visit(ctx),
+            Control::MissingPerson(a) => a.on_visit(ctx),
+            Control::Decafork(a) => a.on_visit(ctx),
+            Control::DecaforkPlus(a) => a.on_visit(ctx),
+        }
+    }
+}
+
+impl From<NoControl> for Control {
+    fn from(a: NoControl) -> Self {
+        Control::None(a)
+    }
+}
+
+impl From<PeriodicFork> for Control {
+    fn from(a: PeriodicFork) -> Self {
+        Control::Periodic(a)
+    }
+}
+
+impl From<MissingPerson> for Control {
+    fn from(a: MissingPerson) -> Self {
+        Control::MissingPerson(a)
+    }
+}
+
+impl From<Decafork> for Control {
+    fn from(a: Decafork) -> Self {
+        Control::Decafork(a)
+    }
+}
+
+impl From<DecaforkPlus> for Control {
+    fn from(a: DecaforkPlus) -> Self {
+        Control::DecaforkPlus(a)
+    }
+}
+
 /// A decentralized control algorithm executed at the visited node.
 pub trait ControlAlgorithm: Send {
     /// Short name for reports.
@@ -99,15 +168,29 @@ impl ControlAlgorithm for NoControl {
 /// visiting walk every `period` steps, regardless of system state. For
 /// small periods it floods the network; for large ones it goes extinct —
 /// exactly the failure mode DECAFORK is designed to avoid.
+///
+/// Nodes start phase-staggered (node `i`'s first fork window opens at
+/// `i·period/n`), so the aggregate fork rate ramps to its steady
+/// `n/period` immediately instead of every node firing in the same step
+/// once `period` has first elapsed — the synchronized-storm artifact
+/// would otherwise dominate the strawman's cold start.
 #[derive(Debug, Clone)]
 pub struct PeriodicFork {
     pub period: u64,
-    last_fork: Vec<u64>,
+    /// Earliest step at which each node may fork next.
+    next_fork: Vec<u64>,
 }
 
 impl PeriodicFork {
     pub fn new(n_nodes: usize, period: u64) -> Self {
-        PeriodicFork { period, last_fork: vec![0; n_nodes] }
+        // u128 keeps the phase math exact for absurd periods (the
+        // "never fork" strawman arm passes u64-scale values); each
+        // phase is < period, so the result always fits back in u64.
+        let n = n_nodes.max(1) as u128;
+        let next_fork = (0..n_nodes)
+            .map(|i| ((i as u128 * period as u128) / n) as u64)
+            .collect();
+        PeriodicFork { period, next_fork }
     }
 }
 
@@ -117,9 +200,9 @@ impl ControlAlgorithm for PeriodicFork {
     }
 
     fn on_visit(&mut self, ctx: &mut VisitCtx<'_>) -> Decision {
-        let last = &mut self.last_fork[ctx.node as usize];
-        if ctx.t.saturating_sub(*last) >= self.period {
-            *last = ctx.t;
+        let next = &mut self.next_fork[ctx.node as usize];
+        if ctx.t >= *next {
+            *next = ctx.t.saturating_add(self.period);
             Decision { forks: vec![ctx.slot], terminate: false, theta: None }
         } else {
             Decision::none()
@@ -157,16 +240,49 @@ mod tests {
 
     #[test]
     fn periodic_forks_on_schedule() {
+        // Node 0's phase opens at t=0 (stagger i·T/n = 0), so with
+        // period 10 and visits every step it forks at t = 1, 11, 21, …
+        // — asserting the exact times locks the stagger formula, not
+        // just the steady-state rate.
         let mut state = NodeState::new(10, SurvivalModel::Empirical);
         let mut rng = Rng::new(1);
         let mut alg = PeriodicFork::new(4, 10);
-        let mut forks = 0;
+        let mut fork_times = Vec::new();
         for t in 1..=50 {
             let mut c = ctx_at(t, &mut state, &mut rng);
             if !alg.on_visit(&mut c).forks.is_empty() {
-                forks += 1;
+                fork_times.push(t);
             }
         }
-        assert_eq!(forks, 5); // t = 10, 20, 30, 40, 50
+        assert_eq!(fork_times, vec![1, 11, 21, 31, 41]);
+    }
+
+    #[test]
+    fn periodic_phases_staggered_and_huge_periods_safe() {
+        // Node i's first window opens at i·T/n.
+        let mut state = NodeState::new(10, SurvivalModel::Empirical);
+        let mut rng = Rng::new(2);
+        let mut alg = PeriodicFork::new(4, 100);
+        for (node, first_allowed) in [(0u32, 0u64), (1, 25), (2, 50), (3, 75)] {
+            let mut c = VisitCtx {
+                t: first_allowed.max(1),
+                node,
+                walk: WalkId(1),
+                slot: 0,
+                z0: 10,
+                state: &mut state,
+                rng: &mut rng,
+            };
+            assert!(!alg.on_visit(&mut c).forks.is_empty(), "node {node} window not open");
+        }
+        // An absurd "never fork" period must not overflow: each node
+        // forks at most once (phase 0 node), then saturates.
+        let mut alg = PeriodicFork::new(4, u64::MAX);
+        let mut forks = 0;
+        for t in 1..200u64 {
+            let mut c = ctx_at(t, &mut state, &mut rng);
+            forks += alg.on_visit(&mut c).forks.len();
+        }
+        assert!(forks <= 1, "huge period must not flood: {forks} forks");
     }
 }

@@ -7,6 +7,113 @@
 use crate::rng::Rng;
 use crate::walks::WalkId;
 
+/// Closed-world enum over the failure models, used by the arena engine's
+/// hot loop: the `match` dispatch is visible to the compiler, so the
+/// per-hop checks (`on_hop`, `on_arrival`) inline into the hop loop
+/// instead of going through a vtable per visit. The open trait below
+/// remains for the frozen reference engine and external extensions.
+///
+/// Semantics mirror the trait implementations exactly (the composite
+/// variant unions kills with the same sort+dedup and the same
+/// short-circuiting as [`Composite`]), so enum- and box-dispatched
+/// engines consume identical RNG streams.
+#[derive(Debug, Clone)]
+pub enum Failures {
+    None(NoFailures),
+    Burst(Burst),
+    Probabilistic(Probabilistic),
+    Byzantine(Byzantine),
+    Composite(Vec<Failures>),
+}
+
+impl Failures {
+    /// Combine several models; a walk dies if any component kills it.
+    pub fn composite(parts: Vec<Failures>) -> Self {
+        Failures::Composite(parts)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Failures::None(f) => f.name(),
+            Failures::Burst(f) => f.name(),
+            Failures::Probabilistic(f) => f.name(),
+            Failures::Byzantine(f) => f.name(),
+            Failures::Composite(_) => "composite",
+        }
+    }
+
+    /// Walks to kill at the start of step `t` (see [`FailureModel::pre_step`]).
+    pub fn pre_step(&mut self, t: u64, alive: &[WalkId], rng: &mut Rng) -> Vec<WalkId> {
+        match self {
+            Failures::None(f) => f.pre_step(t, alive, rng),
+            Failures::Burst(f) => f.pre_step(t, alive, rng),
+            Failures::Probabilistic(f) => f.pre_step(t, alive, rng),
+            Failures::Byzantine(f) => f.pre_step(t, alive, rng),
+            Failures::Composite(parts) => {
+                let mut killed = Vec::new();
+                for p in parts {
+                    killed.extend(p.pre_step(t, alive, rng));
+                }
+                killed.sort_unstable();
+                killed.dedup();
+                killed
+            }
+        }
+    }
+
+    /// Whether the walk dies while hopping `from → to` at step `t`.
+    #[inline]
+    pub fn on_hop(&mut self, t: u64, walk: WalkId, from: u32, to: u32, rng: &mut Rng) -> bool {
+        match self {
+            Failures::None(f) => f.on_hop(t, walk, from, to, rng),
+            Failures::Burst(f) => f.on_hop(t, walk, from, to, rng),
+            Failures::Probabilistic(f) => f.on_hop(t, walk, from, to, rng),
+            Failures::Byzantine(f) => f.on_hop(t, walk, from, to, rng),
+            Failures::Composite(parts) => {
+                parts.iter_mut().any(|p| p.on_hop(t, walk, from, to, rng))
+            }
+        }
+    }
+
+    /// Whether the walk dies upon arriving at `node` at step `t`.
+    #[inline]
+    pub fn on_arrival(&mut self, t: u64, walk: WalkId, node: u32, rng: &mut Rng) -> bool {
+        match self {
+            Failures::None(f) => f.on_arrival(t, walk, node, rng),
+            Failures::Burst(f) => f.on_arrival(t, walk, node, rng),
+            Failures::Probabilistic(f) => f.on_arrival(t, walk, node, rng),
+            Failures::Byzantine(f) => f.on_arrival(t, walk, node, rng),
+            Failures::Composite(parts) => {
+                parts.iter_mut().any(|p| p.on_arrival(t, walk, node, rng))
+            }
+        }
+    }
+}
+
+impl From<NoFailures> for Failures {
+    fn from(f: NoFailures) -> Self {
+        Failures::None(f)
+    }
+}
+
+impl From<Burst> for Failures {
+    fn from(f: Burst) -> Self {
+        Failures::Burst(f)
+    }
+}
+
+impl From<Probabilistic> for Failures {
+    fn from(f: Probabilistic) -> Self {
+        Failures::Probabilistic(f)
+    }
+}
+
+impl From<Byzantine> for Failures {
+    fn from(f: Byzantine) -> Self {
+        Failures::Byzantine(f)
+    }
+}
+
 /// A failure model injected into the simulation engine.
 ///
 /// Hooks mirror where failures physically occur:
@@ -301,6 +408,36 @@ mod tests {
             }
         }
         assert!(flips > 300, "flips {flips}");
+    }
+
+    #[test]
+    fn enum_dispatch_matches_boxed_composite() {
+        // The enum path must consume the identical RNG stream as the
+        // boxed-trait path (golden-trace parity depends on it).
+        let mut boxed = Composite::new(vec![
+            Box::new(Burst::new(vec![(1, 2)])),
+            Box::new(Probabilistic::new(0.25)),
+        ]);
+        let mut enumed = Failures::composite(vec![
+            Burst::new(vec![(1, 2)]).into(),
+            Probabilistic::new(0.25).into(),
+        ]);
+        let alive = ids(6);
+        let mut ra = Rng::new(31);
+        let mut rb = ra.clone();
+        for t in 0..200 {
+            assert_eq!(
+                boxed.pre_step(t, &alive, &mut ra),
+                enumed.pre_step(t, &alive, &mut rb)
+            );
+            for w in 0..4 {
+                assert_eq!(
+                    boxed.on_hop(t, WalkId(w), 0, 1, &mut ra),
+                    enumed.on_hop(t, WalkId(w), 0, 1, &mut rb)
+                );
+            }
+            assert_eq!(ra.next_u64(), rb.next_u64(), "rng streams diverged at t={t}");
+        }
     }
 
     #[test]

@@ -11,11 +11,9 @@
 //! default reproduces the paper (`--runs 50`).
 
 use crate::report::{self, Table};
-use crate::sim::{
-    run_many, AggregateTrace, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec,
-};
-use crate::sim::engine::SimParams;
+use crate::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::sim::metrics::Trace;
+use crate::sim::{run_many, AggregateTrace};
 
 /// One curve: label + aggregate across runs (+ raw traces for derived
 /// statistics).
@@ -121,21 +119,13 @@ impl FigureResult {
     }
 }
 
-fn run_curve(label: &str, cfg: &ExperimentConfig, threads: usize) -> anyhow::Result<Curve> {
+fn run_curve(label: &str, cfg: &Scenario, threads: usize) -> anyhow::Result<Curve> {
     let (traces, agg) = run_many(cfg, threads)?;
     Ok(Curve { label: label.to_string(), agg, traces })
 }
 
-fn base_cfg(runs: usize) -> ExperimentConfig {
-    ExperimentConfig {
-        graph: GraphSpec::RandomRegular { n: 100, d: 8 },
-        params: SimParams::default(),
-        control: ControlSpec::Decafork { epsilon: 2.0 },
-        failures: FailureSpec::paper_bursts(),
-        horizon: 10_000,
-        runs,
-        seed: 0xDECAF,
-    }
+fn base_cfg(runs: usize) -> Scenario {
+    presets::fig1_base(runs)
 }
 
 /// MISSINGPERSON ε_mp: the paper says "properly tuned"; the natural scale
@@ -156,7 +146,7 @@ pub fn fig1(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
         ("decafork(e=2)", ControlSpec::Decafork { epsilon: 2.0 }),
         ("decafork+(3.25/5.75)", ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 }),
     ] {
-        let cfg = ExperimentConfig { control, ..base.clone() };
+        let cfg = Scenario { control, ..base.clone() };
         curves.push(run_curve(label, &cfg, threads)?);
     }
     Ok(FigureResult {
@@ -187,7 +177,7 @@ pub fn fig2(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
                 ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 },
             ),
         ] {
-            let cfg = ExperimentConfig { control, failures: failures.clone(), ..base.clone() };
+            let cfg = Scenario { control, failures: failures.clone(), ..base.clone() };
             curves.push(run_curve(&label, &cfg, threads)?);
         }
     }
@@ -216,7 +206,7 @@ pub fn fig3(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
         ("decafork(e=3.25)", ControlSpec::Decafork { epsilon: 3.25 }),
         ("decafork+(3.25/5.75)", ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 }),
     ] {
-        let cfg = ExperimentConfig { control, failures: failures.clone(), ..base.clone() };
+        let cfg = Scenario { control, failures: failures.clone(), ..base.clone() };
         curves.push(run_curve(label, &cfg, threads)?);
     }
     Ok(FigureResult {
@@ -238,7 +228,7 @@ pub fn fig4(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs);
     let mut curves = Vec::new();
     for (n, eps) in [(50usize, 2.1), (100, 2.0), (200, 1.85)] {
-        let cfg = ExperimentConfig {
+        let cfg = Scenario {
             graph: GraphSpec::RandomRegular { n, d: 8 },
             control: ControlSpec::Decafork { epsilon: eps },
             ..base.clone()
@@ -259,7 +249,7 @@ pub fn fig5(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs);
     let mut curves = Vec::new();
     for eps in [1.5, 2.0, 2.5, 3.0, 3.5] {
-        let cfg = ExperimentConfig {
+        let cfg = Scenario {
             control: ControlSpec::Decafork { epsilon: eps },
             ..base.clone()
         };
@@ -284,7 +274,7 @@ pub fn fig6(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
         ("erdos-renyi", GraphSpec::ErdosRenyi { n: 100, p: 0.08 }, 1.9),
         ("power-law", GraphSpec::PowerLaw { n: 100, m: 4 }, 2.1),
     ] {
-        let cfg = ExperimentConfig {
+        let cfg = Scenario {
             graph,
             control: ControlSpec::Decafork { epsilon: eps },
             ..base.clone()

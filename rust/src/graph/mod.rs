@@ -14,10 +14,21 @@ use crate::rng::Rng;
 /// Undirected graph in CSR form. Nodes are `0..n`; `neighbors(i)` is the
 /// adjacency list of `i`. The representation is immutable after
 /// construction — the simulator never rewires the topology mid-run.
+///
+/// Construction also precomputes per-node sampling strata for the hop
+/// loop: the Lemire rejection threshold `(2⁶⁴ − deg) mod deg` for each
+/// node, so [`step`](Self::step) draws a uniform neighbor with zero
+/// integer divisions per hop while consuming the RNG stream **bit-for-bit
+/// identically** to `rng.below(deg)` (the determinism lock in
+/// `tests/golden_traces.rs` depends on that equivalence — an alias table
+/// would be division-free too but would change the draw sequence).
 #[derive(Debug, Clone)]
 pub struct Graph {
     offsets: Vec<usize>,
     adj: Vec<u32>,
+    /// Per-node Lemire rejection threshold `deg.wrapping_neg() % deg`
+    /// (0 for isolated nodes, where `step` is undefined anyway).
+    step_threshold: Vec<u64>,
 }
 
 impl Graph {
@@ -52,7 +63,18 @@ impl Graph {
         }
         // Sort each adjacency list for deterministic iteration order.
         let g = {
-            let mut g = Graph { offsets, adj };
+            let step_threshold = deg
+                .iter()
+                .map(|&d| {
+                    let d = d as u64;
+                    if d == 0 {
+                        0
+                    } else {
+                        d.wrapping_neg() % d
+                    }
+                })
+                .collect();
+            let mut g = Graph { offsets, adj, step_threshold };
             for i in 0..n {
                 let (lo, hi) = (g.offsets[i], g.offsets[i + 1]);
                 g.adj[lo..hi].sort_unstable();
@@ -87,11 +109,30 @@ impl Graph {
     }
 
     /// One step of a simple random walk from `i`: uniform neighbor.
+    ///
+    /// Division-free: Lemire's multiply-shift with the per-node rejection
+    /// threshold precomputed at construction. `rng.below(n)` accepts a
+    /// draw iff `lo ≥ n` or `lo ≥ (2⁶⁴ − n) mod n`; since the threshold
+    /// is `< n`, both collapse to the single precomputed comparison, so
+    /// this consumes the identical RNG stream (asserted by
+    /// `step_matches_rng_below_stream` below).
     #[inline]
     pub fn step(&self, i: usize, rng: &mut Rng) -> usize {
-        let nbrs = self.neighbors(i);
-        debug_assert!(!nbrs.is_empty(), "walk stranded at isolated node {i}");
-        nbrs[rng.below(nbrs.len())] as usize
+        // Indexing through the per-node slice keeps the seed's
+        // release-mode backstop: an isolated node (deg = 0) panics on
+        // the empty slice instead of silently reading a neighbor of
+        // the next node.
+        let nbrs = &self.adj[self.offsets[i]..self.offsets[i + 1]];
+        let deg = nbrs.len() as u64;
+        debug_assert!(deg > 0, "walk stranded at isolated node {i}");
+        let threshold = self.step_threshold[i];
+        loop {
+            let x = rng.next_u64();
+            let m = (x as u128).wrapping_mul(deg as u128);
+            if (m as u64) >= threshold {
+                return nbrs[(m >> 64) as usize] as usize;
+            }
+        }
     }
 
     /// Whether the graph is connected (BFS from node 0). Empty graphs are
@@ -213,6 +254,31 @@ mod tests {
         }
         let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
         assert!((mean - g.mean_return_time(0)).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn step_matches_rng_below_stream() {
+        // The precomputed-threshold sampler must consume the RNG stream
+        // bit-for-bit identically to `nbrs[rng.below(nbrs.len())]` — the
+        // determinism lock depends on this equivalence.
+        for (n, edges) in [
+            (4, vec![(0u32, 1u32), (1, 2), (2, 3), (3, 0)]),
+            (5, vec![(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (3, 4)]),
+            (3, vec![(0, 1), (1, 2)]),
+        ] {
+            let g = Graph::from_edges(n, &edges).unwrap();
+            let mut ra = Rng::new(0xFEED);
+            let mut rb = ra.clone();
+            let mut pos_a = 0usize;
+            let mut pos_b = 0usize;
+            for _ in 0..50_000 {
+                pos_a = g.step(pos_a, &mut ra);
+                let nbrs = g.neighbors(pos_b);
+                pos_b = nbrs[rb.below(nbrs.len())] as usize;
+                assert_eq!(pos_a, pos_b);
+                assert_eq!(ra.next_u64(), rb.next_u64(), "rng streams diverged");
+            }
+        }
     }
 
     #[test]

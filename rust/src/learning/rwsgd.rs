@@ -13,7 +13,7 @@ use crate::rng::Rng;
 use crate::runtime::TrainStep;
 use crate::sim::engine::{Engine, VisitHook};
 use crate::sim::metrics::Trace;
-use crate::walks::Walk;
+use crate::walks::{Walk, WalkMut, WalkRef};
 
 /// Per-visit training hook.
 pub struct TrainerHook<'a> {
@@ -86,8 +86,8 @@ impl<'a> TrainerHook<'a> {
 }
 
 impl VisitHook for TrainerHook<'_> {
-    fn on_visit(&mut self, t: u64, node: u32, walk: &mut Walk) {
-        let Some(idx) = walk.payload else { return };
+    fn on_visit(&mut self, t: u64, node: u32, walk: WalkMut<'_>) {
+        let Some(idx) = *walk.payload else { return };
         // Gossip-on-meet: average with any co-located model first (the
         // position map is updated per visit, so "co-located" means the
         // other walk's latest processed position — an approximation of a
@@ -138,11 +138,11 @@ impl VisitHook for TrainerHook<'_> {
         }
     }
 
-    fn on_fork(&mut self, _t: u64, parent: &Walk, child: &mut Walk) {
+    fn on_fork(&mut self, _t: u64, parent: WalkRef, child: WalkMut<'_>) {
         if let Some(pidx) = parent.payload {
             if let Some(p) = self.params[pidx].clone() {
                 self.params.push(Some(p));
-                child.payload = Some(self.params.len() - 1);
+                *child.payload = Some(self.params.len() - 1);
                 if self.merge_on_meet {
                     self.walk_pos.insert(child.id.0, (child.at, self.params.len() - 1));
                 }
@@ -212,10 +212,9 @@ impl TrainingRun {
         let init: Vec<f32> = (0..pcount)
             .map(|_| (init_rng.f64() as f32 - 0.5) * 2.0 * scale as f32)
             .collect();
-        for w in engine.walks_mut() {
-            let idx_init = init.clone();
+        for payload in engine.payloads_mut() {
             // Allocate one payload per initial walk.
-            w.payload = Some(hook.alloc(idx_init));
+            *payload = Some(hook.alloc(init.clone()));
         }
         engine.run_to_with(horizon, &mut hook);
         let trace = engine.trace().clone();
@@ -227,7 +226,7 @@ impl TrainingRun {
             hook.losses[tail..].iter().map(|&(_, _, l)| l).sum::<f32>()
                 / (hook.losses.len() - tail) as f32
         };
-        let survivors = engine.walks().iter().filter(|w| w.alive).count();
+        let survivors = engine.alive() as usize;
         Ok(TrainingSummary {
             trace,
             losses: hook.losses.clone(),
@@ -236,7 +235,7 @@ impl TrainingRun {
             last_loss_mean,
             survivors,
             merges: hook.merges,
-            lineage: crate::walks::lineage::lineage_summary(engine.walks()),
+            lineage: crate::walks::lineage::lineage_summary(&engine.snapshot()),
         })
     }
 }
@@ -247,16 +246,16 @@ mod tests {
     // (they need real artifacts). Here we test the payload bookkeeping
     // with a stub hook exercising the same lifecycle.
     use crate::sim::engine::VisitHook;
-    use crate::walks::{Lineage, Walk, WalkId};
+    use crate::walks::{Lineage, Walk, WalkId, WalkMut, WalkRef};
 
     struct StubStore {
         params: Vec<Option<Vec<f32>>>,
     }
     impl VisitHook for StubStore {
-        fn on_fork(&mut self, _t: u64, parent: &Walk, child: &mut Walk) {
+        fn on_fork(&mut self, _t: u64, parent: WalkRef, child: WalkMut<'_>) {
             if let Some(p) = parent.payload.and_then(|i| self.params[i].clone()) {
                 self.params.push(Some(p));
-                child.payload = Some(self.params.len() - 1);
+                *child.payload = Some(self.params.len() - 1);
             }
         }
         fn on_death(&mut self, _t: u64, w: &Walk) {
@@ -283,7 +282,7 @@ mod tests {
         let mut store = StubStore { params: vec![Some(vec![1.0, 2.0])] };
         let parent = walk(0, Some(0));
         let mut child = walk(1, None);
-        store.on_fork(5, &parent, &mut child);
+        store.on_fork(5, WalkRef::from(&parent), WalkMut::from(&mut child));
         assert_eq!(child.payload, Some(1));
         assert_eq!(store.params[1].as_deref(), Some(&[1.0, 2.0][..]));
         store.on_death(6, &parent);

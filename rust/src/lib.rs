@@ -6,7 +6,9 @@
 //! describes:
 //!
 //! * graph substrates (random regular, Erdős–Rényi, complete, power-law, …),
-//! * multi-random-walk simulation with arbitrary failure models,
+//! * multi-random-walk simulation on a struct-of-arrays walk arena with
+//!   generational ids and arbitrary failure models, described by the
+//!   unified scenario layer (`scenario::Scenario`),
 //! * the decentralized control algorithms MISSINGPERSON (baseline),
 //!   DECAFORK and DECAFORK+,
 //! * the paper's full theoretical toolbox (Irwin–Hall threshold design,
@@ -27,6 +29,7 @@ pub mod stats;
 pub mod walks;
 pub mod control;
 pub mod failures;
+pub mod scenario;
 pub mod sim;
 pub mod theory;
 pub mod runtime;

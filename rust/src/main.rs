@@ -16,13 +16,15 @@ use std::time::Duration;
 use decafork::cli::Args;
 use decafork::control::{Decafork, DecaforkPlus, MissingPerson, NoControl};
 use decafork::coordinator::ActorRuntime;
+use decafork::failures::Burst;
 use decafork::graph::generators;
 use decafork::learning::{ShardedCorpus, TrainingRun};
 use decafork::report::{ascii_plot, Table};
 use decafork::rng::Rng;
 use decafork::runtime::{default_artifacts_dir, Runtime, TrainStep};
+use decafork::scenario::parse;
 use decafork::sim::engine::SimParams;
-use decafork::sim::{run_many, ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
+use decafork::sim::run_many;
 use decafork::stats::irwin_hall::{design_epsilon, design_epsilon2};
 use decafork::theory::{growth_bound, overshoot_recursion, reaction_time_bound, Rates};
 use decafork::walks::SurvivalModel;
@@ -68,92 +70,8 @@ fn run() -> anyhow::Result<()> {
     }
 }
 
-fn parse_graph(args: &Args) -> anyhow::Result<GraphSpec> {
-    let n = args.get("n", 100usize)?;
-    Ok(match args.get_str("graph", "regular").as_str() {
-        "regular" => GraphSpec::RandomRegular { n, d: args.get("d", 8usize)? },
-        "er" | "erdos-renyi" => GraphSpec::ErdosRenyi { n, p: args.get("p", 0.08f64)? },
-        "complete" => GraphSpec::Complete { n },
-        "ba" | "power-law" => GraphSpec::PowerLaw { n, m: args.get("m", 4usize)? },
-        "ring" => GraphSpec::Ring { n },
-        other => anyhow::bail!("unknown graph '{other}'"),
-    })
-}
-
-fn parse_bursts(s: &str) -> anyhow::Result<Vec<(u64, usize)>> {
-    if s.is_empty() || s == "none" {
-        return Ok(Vec::new());
-    }
-    s.split(',')
-        .map(|pair| {
-            let (t, c) = pair
-                .split_once(':')
-                .ok_or_else(|| anyhow::anyhow!("burst '{pair}' must be t:count"))?;
-            Ok((t.trim().parse()?, c.trim().parse()?))
-        })
-        .collect()
-}
-
-fn parse_control(args: &Args) -> anyhow::Result<ControlSpec> {
-    Ok(match args.get_str("control", "decafork").as_str() {
-        "decafork" => ControlSpec::Decafork { epsilon: args.get("eps", 2.0)? },
-        "decafork+" | "decaforkplus" => ControlSpec::DecaforkPlus {
-            epsilon: args.get("eps", 3.25)?,
-            epsilon2: args.get("eps2", 5.75)?,
-        },
-        "missingperson" | "mp" => ControlSpec::MissingPerson { eps_mp: args.get("eps-mp", 600u64)? },
-        "periodic" => ControlSpec::Periodic { period: args.get("period", 100u64)? },
-        "none" => ControlSpec::None,
-        other => anyhow::bail!("unknown control '{other}'"),
-    })
-}
-
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let mut failures = vec![];
-    let bursts = parse_bursts(&args.get_str("bursts", "2000:5,6000:6"))?;
-    if !bursts.is_empty() {
-        failures.push(FailureSpec::Burst { events: bursts });
-    }
-    let pf = args.get("pf", 0.0f64)?;
-    if pf > 0.0 {
-        failures.push(FailureSpec::Probabilistic { p_f: pf });
-    }
-    let byz: i64 = args.get("byz-node", -1i64)?;
-    if byz >= 0 {
-        failures.push(FailureSpec::ByzantineScheduled {
-            node: byz as u32,
-            schedule: vec![
-                (args.get("byz-from", 1000u64)?, true),
-                (args.get("byz-until", 5000u64)?, false),
-            ],
-        });
-    }
-    let failures = match failures.len() {
-        0 => FailureSpec::None,
-        1 => failures.pop().unwrap(),
-        _ => FailureSpec::Composite(failures),
-    };
-    let survival = match args.get_str("survival", "empirical").as_str() {
-        "empirical" => decafork::sim::engine::SurvivalSpec::Empirical,
-        "geometric" => decafork::sim::engine::SurvivalSpec::AnalyticGeometric,
-        "exponential" => decafork::sim::engine::SurvivalSpec::AnalyticExponential,
-        other => anyhow::bail!("unknown survival model '{other}'"),
-    };
-    let cfg = ExperimentConfig {
-        graph: parse_graph(args)?,
-        params: SimParams {
-            z0: args.get("z0", 10u32)?,
-            record_theta: args.has("record-theta"),
-            survival,
-            control_start: args.flags.get("warmup").map(|w| w.parse()).transpose()?,
-            ..Default::default()
-        },
-        control: parse_control(args)?,
-        failures,
-        horizon: args.get("horizon", 10_000u64)?,
-        runs: args.get("runs", 10usize)?,
-        seed: args.get("seed", 0xDECAFu64)?,
-    };
+    let cfg = parse::scenario(args)?;
     let t0 = std::time::Instant::now();
     let (_traces, agg) = run_many(&cfg, args.get("threads", 0usize)?)?;
     let dt = t0.elapsed();
@@ -211,7 +129,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let horizon = args.get("horizon", 400u64)?;
     let seed = args.get("seed", 7u64)?;
     let eps = args.get("eps", 2.0f64)?;
-    let bursts = parse_bursts(&args.get_str("burst", "200:2"))?;
+    let bursts = parse::bursts(&args.get_str("burst", "200:2"))?;
 
     let rt = Runtime::cpu()?;
     let train = TrainStep::load(&rt, &artifacts)?;
@@ -232,8 +150,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut engine = decafork::sim::engine::Engine::new(
         graph,
         SimParams { z0, ..Default::default() },
-        Box::new(Decafork::new(eps)),
-        Box::new(decafork::failures::Burst::new(bursts)),
+        Decafork::new(eps),
+        Burst::new(bursts),
         Rng::new(seed),
     );
     let t0 = std::time::Instant::now();
@@ -358,7 +276,7 @@ fn cmd_design(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
-    let spec = parse_graph(args)?;
+    let spec = parse::graph(args)?;
     let mut rng = Rng::new(args.get("seed", 1u64)?);
     let g = spec.build(&mut rng)?;
     let stats = decafork::graph::properties::degree_stats(&g);

@@ -1,0 +1,150 @@
+//! The scenario layer: one place where `config → (graph, control,
+//! failures, params) → engine` wiring lives.
+//!
+//! Before this layer existed the same five steps — derive per-run RNG
+//! streams, build the graph, instantiate control, instantiate failures,
+//! assemble an engine — were duplicated across `main.rs`, `figures.rs`,
+//! the integration tests and every bench. A [`Scenario`] is the single
+//! pure-data description of an experiment; it can be turned into
+//!
+//! * an arena [`Engine`] (`engine(run)`) — the production hot path with
+//!   enum-dispatched control/failures, and
+//! * a [`ReferenceEngine`] (`reference_engine(run)`) — the frozen seed
+//!   engine used as the determinism oracle and perf baseline,
+//!
+//! both fed from **identical** per-run RNG streams, which is what makes
+//! the golden-trace equivalence tests (`tests/golden_traces.rs`) and the
+//! `perf_engine` before/after comparison meaningful.
+//!
+//! Dataflow (DESIGN.md §Scenario layer has the diagram):
+//!
+//! ```text
+//! Scenario { graph, params, control, failures, horizon, runs, seed }
+//!    │  rngs(run): root=Rng(seed); grng=root.split("grap").split(run)
+//!    │             srng=root.split("simu").split(run)
+//!    ├─ graph.build(grng)          → Arc<Graph>
+//!    ├─ control.build_control(n)   → Control   (enum, inlined)   ─┐
+//!    ├─ failures.build_failures()  → Failures  (enum, inlined)   ─┤→ Engine
+//!    └─ control.build(n)/failures.build() → Box<dyn …> → ReferenceEngine
+//! ```
+
+pub mod parse;
+pub mod presets;
+mod spec;
+
+pub use spec::{ControlSpec, FailureSpec, GraphSpec};
+
+use std::sync::Arc;
+
+use crate::graph::Graph;
+use crate::rng::Rng;
+use crate::sim::engine::{Engine, SimParams};
+use crate::sim::reference::ReferenceEngine;
+
+/// A complete experiment: graph + engine params + control + failures +
+/// replication. (The historical name `ExperimentConfig` is kept as an
+/// alias in `crate::sim::config`.)
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub graph: GraphSpec,
+    pub params: SimParams,
+    pub control: ControlSpec,
+    pub failures: FailureSpec,
+    pub horizon: u64,
+    pub runs: usize,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Paper Fig. 1 base setup (per-algorithm variants set `control`).
+    pub fn fig1_base() -> Self {
+        presets::fig1_base(50)
+    }
+
+    /// One-line description for logs and reports.
+    pub fn label(&self) -> String {
+        format!("{} on {}", self.control.label(), self.graph.label())
+    }
+
+    /// Per-run RNG streams: (graph stream, simulation stream). The
+    /// derivation is frozen — golden traces and every recorded experiment
+    /// depend on it. The paper regenerates graphs per simulation, so the
+    /// graph stream is split per run too.
+    fn rngs(&self, run: usize) -> (Rng, Rng) {
+        let root = Rng::new(self.seed);
+        let grng = root.split(0x67726170).split(run as u64); // "grap"
+        let srng = root.split(0x73696d75).split(run as u64); // "simu"
+        (grng, srng)
+    }
+
+    /// Build the run's graph (deterministic in `seed` + `run`).
+    pub fn build_graph(&self, run: usize) -> anyhow::Result<Arc<Graph>> {
+        let (mut grng, _) = self.rngs(run);
+        Ok(Arc::new(self.graph.build(&mut grng)?))
+    }
+
+    /// Build the arena engine for run index `run`.
+    pub fn engine(&self, run: usize) -> anyhow::Result<Engine> {
+        let (mut grng, srng) = self.rngs(run);
+        let graph = Arc::new(self.graph.build(&mut grng)?);
+        let control = self.control.build_control(graph.n());
+        let failures = self.failures.build_failures();
+        Ok(Engine::new(graph, self.params.clone(), control, failures, srng))
+    }
+
+    /// Historical name for [`engine`](Self::engine).
+    pub fn build_engine(&self, run: usize) -> anyhow::Result<Engine> {
+        self.engine(run)
+    }
+
+    /// Build the frozen seed engine for the same run — identical graph
+    /// and RNG streams, boxed dispatch, O(history) stepping. Determinism
+    /// oracle and perf baseline only.
+    pub fn reference_engine(&self, run: usize) -> anyhow::Result<ReferenceEngine> {
+        let (mut grng, srng) = self.rngs(run);
+        let graph = Arc::new(self.graph.build(&mut grng)?);
+        let control = self.control.build(graph.n());
+        let failures = self.failures.build();
+        Ok(ReferenceEngine::new(graph, self.params.clone(), control, failures, srng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scenario_deterministic() {
+        let mut cfg = presets::fig1_base(1);
+        cfg.graph = GraphSpec::RandomRegular { n: 30, d: 4 };
+        cfg.horizon = 300;
+        let z1 = {
+            let mut e = cfg.engine(0).unwrap();
+            e.run_to(300);
+            e.into_trace().z
+        };
+        let z2 = {
+            let mut e = cfg.engine(0).unwrap();
+            e.run_to(300);
+            e.into_trace().z
+        };
+        assert_eq!(z1, z2);
+        let z3 = {
+            let mut e = cfg.engine(1).unwrap();
+            e.run_to(300);
+            e.into_trace().z
+        };
+        assert_ne!(z1, z3);
+    }
+
+    #[test]
+    fn engine_and_reference_share_graph_stream() {
+        let mut cfg = presets::fig1_base(1);
+        cfg.graph = GraphSpec::RandomRegular { n: 24, d: 4 };
+        let a = cfg.engine(3).unwrap();
+        let b = cfg.reference_engine(3).unwrap();
+        for i in 0..24 {
+            assert_eq!(a.graph.neighbors(i), b.graph.neighbors(i));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! CLI-flag → [`Scenario`] parsing, shared by every binary entry point
+//! (previously private helpers inside `main.rs`).
+
+use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
+use crate::cli::Args;
+use crate::sim::engine::{SimParams, SurvivalSpec};
+
+/// `--graph regular|er|complete|ba|ring` plus its family flags.
+pub fn graph(args: &Args) -> anyhow::Result<GraphSpec> {
+    let n = args.get("n", 100usize)?;
+    Ok(match args.get_str("graph", "regular").as_str() {
+        "regular" => GraphSpec::RandomRegular { n, d: args.get("d", 8usize)? },
+        "er" | "erdos-renyi" => GraphSpec::ErdosRenyi { n, p: args.get("p", 0.08f64)? },
+        "complete" => GraphSpec::Complete { n },
+        "ba" | "power-law" => GraphSpec::PowerLaw { n, m: args.get("m", 4usize)? },
+        "ring" => GraphSpec::Ring { n },
+        other => anyhow::bail!("unknown graph '{other}'"),
+    })
+}
+
+/// `t:count,t:count,…` burst schedules (empty / "none" = no bursts).
+pub fn bursts(s: &str) -> anyhow::Result<Vec<(u64, usize)>> {
+    if s.is_empty() || s == "none" {
+        return Ok(Vec::new());
+    }
+    s.split(',')
+        .map(|pair| {
+            let (t, c) = pair
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("burst '{pair}' must be t:count"))?;
+            Ok((t.trim().parse()?, c.trim().parse()?))
+        })
+        .collect()
+}
+
+/// `--control decafork|decafork+|missingperson|periodic|none` plus its
+/// threshold flags.
+pub fn control(args: &Args) -> anyhow::Result<ControlSpec> {
+    Ok(match args.get_str("control", "decafork").as_str() {
+        "decafork" => ControlSpec::Decafork { epsilon: args.get("eps", 2.0)? },
+        "decafork+" | "decaforkplus" => ControlSpec::DecaforkPlus {
+            epsilon: args.get("eps", 3.25)?,
+            epsilon2: args.get("eps2", 5.75)?,
+        },
+        "missingperson" | "mp" => {
+            ControlSpec::MissingPerson { eps_mp: args.get("eps-mp", 600u64)? }
+        }
+        "periodic" => ControlSpec::Periodic { period: args.get("period", 100u64)? },
+        "none" => ControlSpec::None,
+        other => anyhow::bail!("unknown control '{other}'"),
+    })
+}
+
+/// Assemble the failure model from `--bursts`, `--pf` and `--byz-node`.
+pub fn failures(args: &Args) -> anyhow::Result<FailureSpec> {
+    let mut parts = vec![];
+    let burst_events = bursts(&args.get_str("bursts", "2000:5,6000:6"))?;
+    if !burst_events.is_empty() {
+        parts.push(FailureSpec::Burst { events: burst_events });
+    }
+    let pf = args.get("pf", 0.0f64)?;
+    if pf > 0.0 {
+        parts.push(FailureSpec::Probabilistic { p_f: pf });
+    }
+    let byz: i64 = args.get("byz-node", -1i64)?;
+    if byz >= 0 {
+        parts.push(FailureSpec::ByzantineScheduled {
+            node: byz as u32,
+            schedule: vec![
+                (args.get("byz-from", 1000u64)?, true),
+                (args.get("byz-until", 5000u64)?, false),
+            ],
+        });
+    }
+    Ok(match parts.len() {
+        0 => FailureSpec::None,
+        1 => parts.pop().unwrap(),
+        _ => FailureSpec::Composite(parts),
+    })
+}
+
+/// `--survival empirical|geometric|exponential`.
+pub fn survival(args: &Args) -> anyhow::Result<SurvivalSpec> {
+    Ok(match args.get_str("survival", "empirical").as_str() {
+        "empirical" => SurvivalSpec::Empirical,
+        "geometric" => SurvivalSpec::AnalyticGeometric,
+        "exponential" => SurvivalSpec::AnalyticExponential,
+        other => anyhow::bail!("unknown survival model '{other}'"),
+    })
+}
+
+/// The full `simulate` scenario from the command line.
+pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
+    Ok(Scenario {
+        graph: graph(args)?,
+        params: SimParams {
+            z0: args.get("z0", 10u32)?,
+            record_theta: args.has("record-theta"),
+            survival: survival(args)?,
+            control_start: args.flags.get("warmup").map(|w| w.parse()).transpose()?,
+            ..Default::default()
+        },
+        control: control(args)?,
+        failures: failures(args)?,
+        horizon: args.get("horizon", 10_000u64)?,
+        runs: args.get("runs", 10usize)?,
+        seed: args.get("seed", 0xDECAFu64)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn bursts_parse_and_reject() {
+        assert_eq!(bursts("2000:5,6000:6").unwrap(), vec![(2000, 5), (6000, 6)]);
+        assert!(bursts("none").unwrap().is_empty());
+        assert!(bursts("2000").is_err());
+    }
+
+    #[test]
+    fn full_scenario_from_flags() {
+        let a = args(
+            "simulate --graph regular --n 50 --d 4 --z0 8 --control decafork+ \
+             --eps 3.0 --eps2 6.0 --pf 0.001 --bursts 100:2 --horizon 500 --runs 3 --seed 9",
+        );
+        let s = scenario(&a).unwrap();
+        assert_eq!(s.graph, GraphSpec::RandomRegular { n: 50, d: 4 });
+        assert_eq!(s.control, ControlSpec::DecaforkPlus { epsilon: 3.0, epsilon2: 6.0 });
+        assert_eq!(s.params.z0, 8);
+        assert_eq!(s.horizon, 500);
+        assert_eq!(s.runs, 3);
+        assert_eq!(s.seed, 9);
+        match s.failures {
+            FailureSpec::Composite(parts) => assert_eq!(parts.len(), 2),
+            other => panic!("expected composite, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_match_paper() {
+        let a = args("simulate");
+        let s = scenario(&a).unwrap();
+        assert_eq!(s.failures, FailureSpec::paper_bursts());
+        assert_eq!(s.control, ControlSpec::Decafork { epsilon: 2.0 });
+    }
+}

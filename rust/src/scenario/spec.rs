@@ -1,0 +1,209 @@
+//! Pure-data specs for the graph, control algorithm and failure model.
+//! A spec is a value: cheap to clone, comparable, buildable any number of
+//! times from a seed. Each spec builds both the enum-dispatched form the
+//! arena engine inlines (`build_control` / `build_failures`) and the
+//! boxed-trait form the frozen reference engine consumes (`build`).
+
+use crate::control::{
+    Control, ControlAlgorithm, Decafork, DecaforkPlus, MissingPerson, NoControl, PeriodicFork,
+};
+use crate::failures::{
+    Burst, Byzantine, Composite, FailureModel, Failures, NoFailures, Probabilistic,
+};
+use crate::graph::{generators, Graph};
+use crate::rng::Rng;
+
+/// Which graph to build.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphSpec {
+    RandomRegular { n: usize, d: usize },
+    ErdosRenyi { n: usize, p: f64 },
+    Complete { n: usize },
+    PowerLaw { n: usize, m: usize },
+    Ring { n: usize },
+    Torus { w: usize, h: usize },
+}
+
+impl GraphSpec {
+    pub fn build(&self, rng: &mut Rng) -> anyhow::Result<Graph> {
+        match *self {
+            GraphSpec::RandomRegular { n, d } => generators::random_regular(n, d, rng),
+            GraphSpec::ErdosRenyi { n, p } => generators::erdos_renyi(n, p, rng),
+            GraphSpec::Complete { n } => Ok(generators::complete(n)),
+            GraphSpec::PowerLaw { n, m } => generators::barabasi_albert(n, m, rng),
+            GraphSpec::Ring { n } => Ok(generators::ring(n)),
+            GraphSpec::Torus { w, h } => Ok(generators::grid_torus(w, h)),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            GraphSpec::RandomRegular { n, d } => format!("{d}-regular(n={n})"),
+            GraphSpec::ErdosRenyi { n, p } => format!("ER(n={n},p={p})"),
+            GraphSpec::Complete { n } => format!("complete(n={n})"),
+            GraphSpec::PowerLaw { n, m } => format!("power-law(n={n},m={m})"),
+            GraphSpec::Ring { n } => format!("ring(n={n})"),
+            GraphSpec::Torus { w, h } => format!("torus({w}x{h})"),
+        }
+    }
+}
+
+/// Which control algorithm to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlSpec {
+    None,
+    Periodic { period: u64 },
+    MissingPerson { eps_mp: u64 },
+    Decafork { epsilon: f64 },
+    DecaforkPlus { epsilon: f64, epsilon2: f64 },
+}
+
+impl ControlSpec {
+    /// Enum-dispatched form for the arena engine.
+    pub fn build_control(&self, n_nodes: usize) -> Control {
+        match *self {
+            ControlSpec::None => NoControl.into(),
+            ControlSpec::Periodic { period } => PeriodicFork::new(n_nodes, period).into(),
+            ControlSpec::MissingPerson { eps_mp } => MissingPerson::new(eps_mp).into(),
+            ControlSpec::Decafork { epsilon } => Decafork::new(epsilon).into(),
+            ControlSpec::DecaforkPlus { epsilon, epsilon2 } => {
+                DecaforkPlus::new(epsilon, epsilon2).into()
+            }
+        }
+    }
+
+    /// Boxed-trait form (reference engine, open extensions).
+    pub fn build(&self, n_nodes: usize) -> Box<dyn ControlAlgorithm> {
+        match *self {
+            ControlSpec::None => Box::new(NoControl),
+            ControlSpec::Periodic { period } => Box::new(PeriodicFork::new(n_nodes, period)),
+            ControlSpec::MissingPerson { eps_mp } => Box::new(MissingPerson::new(eps_mp)),
+            ControlSpec::Decafork { epsilon } => Box::new(Decafork::new(epsilon)),
+            ControlSpec::DecaforkPlus { epsilon, epsilon2 } => {
+                Box::new(DecaforkPlus::new(epsilon, epsilon2))
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            ControlSpec::None => "none".into(),
+            ControlSpec::Periodic { period } => format!("periodic(T={period})"),
+            ControlSpec::MissingPerson { eps_mp } => format!("missingperson(eps={eps_mp})"),
+            ControlSpec::Decafork { epsilon } => format!("decafork(eps={epsilon})"),
+            ControlSpec::DecaforkPlus { epsilon, epsilon2 } => {
+                format!("decafork+(eps={epsilon},eps2={epsilon2})")
+            }
+        }
+    }
+}
+
+/// Which failure model to inject.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FailureSpec {
+    None,
+    Burst { events: Vec<(u64, usize)> },
+    Probabilistic { p_f: f64 },
+    ByzantineScheduled { node: u32, schedule: Vec<(u64, bool)> },
+    ByzantineMarkov { node: u32, p_b: f64 },
+    Composite(Vec<FailureSpec>),
+}
+
+impl FailureSpec {
+    /// Enum-dispatched form for the arena engine.
+    pub fn build_failures(&self) -> Failures {
+        match self {
+            FailureSpec::None => NoFailures.into(),
+            FailureSpec::Burst { events } => Burst::new(events.clone()).into(),
+            FailureSpec::Probabilistic { p_f } => Probabilistic::new(*p_f).into(),
+            FailureSpec::ByzantineScheduled { node, schedule } => {
+                Byzantine::scheduled(*node, schedule.clone()).into()
+            }
+            FailureSpec::ByzantineMarkov { node, p_b } => {
+                Byzantine::markov(*node, *p_b, false).into()
+            }
+            FailureSpec::Composite(parts) => {
+                Failures::composite(parts.iter().map(|p| p.build_failures()).collect())
+            }
+        }
+    }
+
+    /// Boxed-trait form (reference engine, open extensions).
+    pub fn build(&self) -> Box<dyn FailureModel> {
+        match self {
+            FailureSpec::None => Box::new(NoFailures),
+            FailureSpec::Burst { events } => Box::new(Burst::new(events.clone())),
+            FailureSpec::Probabilistic { p_f } => Box::new(Probabilistic::new(*p_f)),
+            FailureSpec::ByzantineScheduled { node, schedule } => {
+                Box::new(Byzantine::scheduled(*node, schedule.clone()))
+            }
+            FailureSpec::ByzantineMarkov { node, p_b } => {
+                Box::new(Byzantine::markov(*node, *p_b, false))
+            }
+            FailureSpec::Composite(parts) => {
+                Box::new(Composite::new(parts.iter().map(|p| p.build()).collect()))
+            }
+        }
+    }
+
+    /// The paper's Fig. 1 bursts.
+    pub fn paper_bursts() -> Self {
+        FailureSpec::Burst { events: vec![(2000, 5), (6000, 6)] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_build() {
+        let mut rng = Rng::new(1);
+        for spec in [
+            GraphSpec::RandomRegular { n: 20, d: 4 },
+            GraphSpec::Complete { n: 10 },
+            GraphSpec::Ring { n: 12 },
+            GraphSpec::Torus { w: 4, h: 4 },
+            GraphSpec::ErdosRenyi { n: 30, p: 0.3 },
+            GraphSpec::PowerLaw { n: 30, m: 3 },
+        ] {
+            let g = spec.build(&mut rng).unwrap();
+            assert!(g.is_connected(), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn control_specs_build_both_forms() {
+        for spec in [
+            ControlSpec::None,
+            ControlSpec::Periodic { period: 10 },
+            ControlSpec::MissingPerson { eps_mp: 100 },
+            ControlSpec::Decafork { epsilon: 2.0 },
+            ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 },
+        ] {
+            let boxed = spec.build(16);
+            let enumed = spec.build_control(16);
+            assert_eq!(boxed.name(), enumed.name());
+            assert!(!spec.label().is_empty());
+        }
+    }
+
+    #[test]
+    fn failure_specs_build_both_forms() {
+        for spec in [
+            FailureSpec::None,
+            FailureSpec::paper_bursts(),
+            FailureSpec::Probabilistic { p_f: 0.01 },
+            FailureSpec::ByzantineScheduled { node: 1, schedule: vec![(5, true)] },
+            FailureSpec::ByzantineMarkov { node: 0, p_b: 0.1 },
+            FailureSpec::Composite(vec![
+                FailureSpec::paper_bursts(),
+                FailureSpec::Probabilistic { p_f: 0.001 },
+            ]),
+        ] {
+            let boxed = spec.build();
+            let enumed = spec.build_failures();
+            assert_eq!(boxed.name(), enumed.name());
+        }
+    }
+}

@@ -1,223 +1,10 @@
-//! Declarative experiment configuration: pure-data specs for the graph,
-//! control algorithm and failure model, so experiments (CLI, figures,
-//! benches) are described by values and built reproducibly from a seed.
+//! Back-compat shim: experiment configuration moved to the scenario
+//! layer ([`crate::scenario`]), which unifies the config→engine wiring
+//! for the CLI, figures, benches and tests. Existing imports through
+//! `crate::sim::config` (and the historical `ExperimentConfig` name)
+//! keep working.
 
-use std::sync::Arc;
+pub use crate::scenario::{ControlSpec, FailureSpec, GraphSpec, Scenario};
 
-use crate::control::{ControlAlgorithm, Decafork, DecaforkPlus, MissingPerson, NoControl, PeriodicFork};
-use crate::failures::{Burst, Byzantine, Composite, FailureModel, NoFailures, Probabilistic};
-use crate::graph::{generators, Graph};
-use crate::rng::Rng;
-use crate::sim::engine::{Engine, SimParams};
-
-/// Which graph to build.
-#[derive(Debug, Clone, PartialEq)]
-pub enum GraphSpec {
-    RandomRegular { n: usize, d: usize },
-    ErdosRenyi { n: usize, p: f64 },
-    Complete { n: usize },
-    PowerLaw { n: usize, m: usize },
-    Ring { n: usize },
-    Torus { w: usize, h: usize },
-}
-
-impl GraphSpec {
-    pub fn build(&self, rng: &mut Rng) -> anyhow::Result<Graph> {
-        match *self {
-            GraphSpec::RandomRegular { n, d } => generators::random_regular(n, d, rng),
-            GraphSpec::ErdosRenyi { n, p } => generators::erdos_renyi(n, p, rng),
-            GraphSpec::Complete { n } => Ok(generators::complete(n)),
-            GraphSpec::PowerLaw { n, m } => generators::barabasi_albert(n, m, rng),
-            GraphSpec::Ring { n } => Ok(generators::ring(n)),
-            GraphSpec::Torus { w, h } => Ok(generators::grid_torus(w, h)),
-        }
-    }
-
-    pub fn label(&self) -> String {
-        match *self {
-            GraphSpec::RandomRegular { n, d } => format!("{d}-regular(n={n})"),
-            GraphSpec::ErdosRenyi { n, p } => format!("ER(n={n},p={p})"),
-            GraphSpec::Complete { n } => format!("complete(n={n})"),
-            GraphSpec::PowerLaw { n, m } => format!("power-law(n={n},m={m})"),
-            GraphSpec::Ring { n } => format!("ring(n={n})"),
-            GraphSpec::Torus { w, h } => format!("torus({w}x{h})"),
-        }
-    }
-}
-
-/// Which control algorithm to run.
-#[derive(Debug, Clone, PartialEq)]
-pub enum ControlSpec {
-    None,
-    Periodic { period: u64 },
-    MissingPerson { eps_mp: u64 },
-    Decafork { epsilon: f64 },
-    DecaforkPlus { epsilon: f64, epsilon2: f64 },
-}
-
-impl ControlSpec {
-    pub fn build(&self, n_nodes: usize) -> Box<dyn ControlAlgorithm> {
-        match *self {
-            ControlSpec::None => Box::new(NoControl),
-            ControlSpec::Periodic { period } => Box::new(PeriodicFork::new(n_nodes, period)),
-            ControlSpec::MissingPerson { eps_mp } => Box::new(MissingPerson::new(eps_mp)),
-            ControlSpec::Decafork { epsilon } => Box::new(Decafork::new(epsilon)),
-            ControlSpec::DecaforkPlus { epsilon, epsilon2 } => {
-                Box::new(DecaforkPlus::new(epsilon, epsilon2))
-            }
-        }
-    }
-
-    pub fn label(&self) -> String {
-        match *self {
-            ControlSpec::None => "none".into(),
-            ControlSpec::Periodic { period } => format!("periodic(T={period})"),
-            ControlSpec::MissingPerson { eps_mp } => format!("missingperson(eps={eps_mp})"),
-            ControlSpec::Decafork { epsilon } => format!("decafork(eps={epsilon})"),
-            ControlSpec::DecaforkPlus { epsilon, epsilon2 } => {
-                format!("decafork+(eps={epsilon},eps2={epsilon2})")
-            }
-        }
-    }
-}
-
-/// Which failure model to inject.
-#[derive(Debug, Clone, PartialEq)]
-pub enum FailureSpec {
-    None,
-    Burst { events: Vec<(u64, usize)> },
-    Probabilistic { p_f: f64 },
-    ByzantineScheduled { node: u32, schedule: Vec<(u64, bool)> },
-    ByzantineMarkov { node: u32, p_b: f64 },
-    Composite(Vec<FailureSpec>),
-}
-
-impl FailureSpec {
-    pub fn build(&self) -> Box<dyn FailureModel> {
-        match self {
-            FailureSpec::None => Box::new(NoFailures),
-            FailureSpec::Burst { events } => Box::new(Burst::new(events.clone())),
-            FailureSpec::Probabilistic { p_f } => Box::new(Probabilistic::new(*p_f)),
-            FailureSpec::ByzantineScheduled { node, schedule } => {
-                Box::new(Byzantine::scheduled(*node, schedule.clone()))
-            }
-            FailureSpec::ByzantineMarkov { node, p_b } => {
-                Box::new(Byzantine::markov(*node, *p_b, false))
-            }
-            FailureSpec::Composite(parts) => {
-                Box::new(Composite::new(parts.iter().map(|p| p.build()).collect()))
-            }
-        }
-    }
-
-    /// The paper's Fig. 1 bursts.
-    pub fn paper_bursts() -> Self {
-        FailureSpec::Burst { events: vec![(2000, 5), (6000, 6)] }
-    }
-}
-
-/// A complete experiment: graph + engine params + control + failures +
-/// replication.
-#[derive(Debug, Clone)]
-pub struct ExperimentConfig {
-    pub graph: GraphSpec,
-    pub params: SimParams,
-    pub control: ControlSpec,
-    pub failures: FailureSpec,
-    pub horizon: u64,
-    pub runs: usize,
-    pub seed: u64,
-}
-
-impl ExperimentConfig {
-    /// Paper Fig. 1 base setup (per-algorithm variants set `control`).
-    pub fn fig1_base() -> Self {
-        ExperimentConfig {
-            graph: GraphSpec::RandomRegular { n: 100, d: 8 },
-            params: SimParams::default(),
-            control: ControlSpec::Decafork { epsilon: 2.0 },
-            failures: FailureSpec::paper_bursts(),
-            horizon: 10_000,
-            runs: 50,
-            seed: 0xDECAF,
-        }
-    }
-
-    /// Build one engine for run index `run` (deterministic in seed+run).
-    pub fn build_engine(&self, run: usize) -> anyhow::Result<Engine> {
-        let root = Rng::new(self.seed);
-        // Graph stream is shared across runs when `shared_graph` semantics
-        // are wanted; the paper regenerates graphs per simulation, so we
-        // derive a per-run graph stream.
-        let mut grng = root.split(0x67726170).split(run as u64);
-        let graph = Arc::new(self.graph.build(&mut grng)?);
-        let srng = root.split(0x73696d75).split(run as u64);
-        Ok(Engine::new(
-            graph.clone(),
-            self.params.clone(),
-            self.control.build(graph.n()),
-            self.failures.build(),
-            srng,
-        ))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn specs_build() {
-        let mut rng = Rng::new(1);
-        for spec in [
-            GraphSpec::RandomRegular { n: 20, d: 4 },
-            GraphSpec::Complete { n: 10 },
-            GraphSpec::Ring { n: 12 },
-            GraphSpec::Torus { w: 4, h: 4 },
-            GraphSpec::ErdosRenyi { n: 30, p: 0.3 },
-            GraphSpec::PowerLaw { n: 30, m: 3 },
-        ] {
-            let g = spec.build(&mut rng).unwrap();
-            assert!(g.is_connected(), "{}", spec.label());
-        }
-    }
-
-    #[test]
-    fn control_specs_build() {
-        for spec in [
-            ControlSpec::None,
-            ControlSpec::Periodic { period: 10 },
-            ControlSpec::MissingPerson { eps_mp: 100 },
-            ControlSpec::Decafork { epsilon: 2.0 },
-            ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 },
-        ] {
-            let alg = spec.build(16);
-            assert!(!alg.name().is_empty());
-            assert!(!spec.label().is_empty());
-        }
-    }
-
-    #[test]
-    fn experiment_deterministic() {
-        let mut cfg = ExperimentConfig::fig1_base();
-        cfg.graph = GraphSpec::RandomRegular { n: 30, d: 4 };
-        cfg.horizon = 300;
-        let z1 = {
-            let mut e = cfg.build_engine(0).unwrap();
-            e.run_to(300);
-            e.into_trace().z
-        };
-        let z2 = {
-            let mut e = cfg.build_engine(0).unwrap();
-            e.run_to(300);
-            e.into_trace().z
-        };
-        assert_eq!(z1, z2);
-        let z3 = {
-            let mut e = cfg.build_engine(1).unwrap();
-            e.run_to(300);
-            e.into_trace().z
-        };
-        assert_ne!(z1, z3);
-    }
-}
+/// Historical name for [`Scenario`].
+pub type ExperimentConfig = Scenario;

@@ -1,4 +1,5 @@
-//! The synchronous multi-walk simulation engine.
+//! The synchronous multi-walk simulation engine, built on the
+//! [`WalkArena`].
 //!
 //! One call to [`Engine::step`] advances global time by one unit:
 //! failures strike, every active walk hops to a uniformly random
@@ -7,15 +8,35 @@
 //! Fork and termination actions take effect immediately — a forked walk
 //! counts toward `Z_t` at once and starts hopping from the forking node on
 //! the next step (footnote 7).
+//!
+//! ## Hot-loop shape (DESIGN.md §Walk arena)
+//!
+//! Per-step cost is **O(live walks)**, not O(walks ever created): the
+//! arena's dense struct-of-arrays columns hold only live walks, in
+//! creation order. The step is organized around two compaction barriers:
+//!
+//! 1. pre-step failures kill → **compact** → the hop loop scans a dense,
+//!    all-alive prefix with no liveness or `born == t` checks (walks
+//!    forked during the step are appended past the scan bound, and
+//!    mid-loop kills only ever target the walk currently being
+//!    processed);
+//! 2. end of step → **compact** → `Z_t` recorded.
+//!
+//! Compaction is stable (creation-order preserving), which is what keeps
+//! the RNG draw sequence — and therefore every trace — byte-identical to
+//! the frozen [`ReferenceEngine`](crate::sim::reference::ReferenceEngine)
+//! (`tests/golden_traces.rs`). Control and failure models are
+//! enum-dispatched ([`Control`], [`Failures`]) so their per-visit code
+//! inlines into this loop instead of bouncing through vtables.
 
 use std::sync::Arc;
 
-use crate::control::{ControlAlgorithm, VisitCtx};
-use crate::failures::FailureModel;
+use crate::control::{Control, VisitCtx};
+use crate::failures::Failures;
 use crate::graph::Graph;
 use crate::rng::Rng;
 use crate::sim::metrics::{Event, EventKind, Trace};
-use crate::walks::{Lineage, NodeState, SurvivalModel, Walk, WalkId, WalkIdGen};
+use crate::walks::{Lineage, NodeState, SurvivalModel, Walk, WalkArena, WalkMut, WalkRef};
 
 /// Where the initial `Z0` walks start.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -29,13 +50,19 @@ pub enum StartPlacement {
 /// Application hook invoked on walk lifecycle events — the learning layer
 /// implements this to run an SGD step per visit and to duplicate model
 /// payloads on forks. Default impls make hooks opt-in.
+///
+/// Hooks see arena views, not owned records: [`WalkMut`] exposes the
+/// walk's identity read-only plus a mutable borrow of its payload slot
+/// (the only field application code may change); [`WalkRef`] is a cheap
+/// by-value copy. Dead walks arrive as materialized [`Walk`] records from
+/// the arena graveyard.
 pub trait VisitHook {
     /// Walk `walk` arrived at `node` at time `t` (after the node recorded
     /// the visit, before control runs).
-    fn on_visit(&mut self, _t: u64, _node: u32, _walk: &mut Walk) {}
+    fn on_visit(&mut self, _t: u64, _node: u32, _walk: WalkMut<'_>) {}
 
     /// `child` was just forked from `parent`; duplicate any payload.
-    fn on_fork(&mut self, _t: u64, _parent: &Walk, _child: &mut Walk) {}
+    fn on_fork(&mut self, _t: u64, _parent: WalkRef, _child: WalkMut<'_>) {}
 
     /// Walk died (failure or deliberate termination).
     fn on_death(&mut self, _t: u64, _walk: &Walk) {}
@@ -117,52 +144,40 @@ impl Default for SimParams {
     }
 }
 
-/// The simulation engine. Generic over nothing; control and failures are
-/// boxed strategies so experiment configs stay data.
+/// The simulation engine. Control and failure strategies are closed-world
+/// enums so the compiler inlines their per-visit decisions into the hop
+/// loop; experiment configs stay data (see [`crate::scenario`]).
 pub struct Engine {
     pub graph: Arc<Graph>,
     pub params: SimParams,
-    walks: Vec<Walk>,
+    arena: WalkArena,
     states: Vec<NodeState>,
-    control: Box<dyn ControlAlgorithm>,
-    failures: Box<dyn FailureModel>,
+    control: Control,
+    failures: Failures,
     rng: Rng,
-    idgen: WalkIdGen,
     t: u64,
     trace: Trace,
-    alive_count: u32,
     /// Resolved control warm-up boundary.
     control_start: u64,
-    /// Scratch buffer reused every step (avoids per-step allocation).
-    alive_ids: Vec<WalkId>,
 }
 
 impl Engine {
     pub fn new(
         graph: Arc<Graph>,
         params: SimParams,
-        control: Box<dyn ControlAlgorithm>,
-        failures: Box<dyn FailureModel>,
+        control: impl Into<Control>,
+        failures: impl Into<Failures>,
         mut rng: Rng,
     ) -> Self {
         let n = graph.n();
         let z0 = params.z0;
-        let mut idgen = WalkIdGen::new();
-        let mut walks = Vec::with_capacity(z0 as usize);
+        let mut arena = WalkArena::with_capacity(z0 as usize);
         for slot in 0..z0 {
             let at = match params.start {
                 StartPlacement::AtNode(v) => v,
                 StartPlacement::Random => rng.below(n) as u32,
             };
-            walks.push(Walk {
-                id: idgen.fresh(),
-                lineage: Lineage::Original { slot: slot as u16 },
-                at,
-                alive: true,
-                born: 0,
-                died: None,
-                payload: None,
-            });
+            arena.spawn(at, 0, Lineage::Original { slot: slot as u16 });
         }
         let states = (0..n)
             .map(|i| NodeState::new(z0 as usize, params.survival.resolve(&graph, i)))
@@ -175,17 +190,14 @@ impl Engine {
         Engine {
             graph,
             params,
-            walks,
+            arena,
             states,
-            control,
-            failures,
+            control: control.into(),
+            failures: failures.into(),
             rng,
-            idgen,
             t: 0,
             trace,
-            alive_count: z0,
             control_start,
-            alive_ids: Vec::new(),
         }
     }
 
@@ -201,12 +213,18 @@ impl Engine {
 
     /// Number of active walks.
     pub fn alive(&self) -> u32 {
-        self.alive_count
+        self.arena.live()
     }
 
-    /// All walks (including dead ones, for lineage inspection).
-    pub fn walks(&self) -> &[Walk] {
-        &self.walks
+    /// The walk store (telemetry/tests).
+    pub fn arena(&self) -> &WalkArena {
+        &self.arena
+    }
+
+    /// Materialize every walk — live and retired — for lineage
+    /// inspection and reports. Cold path; allocates.
+    pub fn snapshot(&self) -> Vec<Walk> {
+        self.arena.snapshot()
     }
 
     /// Node states (telemetry/tests).
@@ -214,21 +232,27 @@ impl Engine {
         &self.states
     }
 
-    /// Mutable payload access for hooks run outside `step` (e.g. seeding).
-    pub fn walks_mut(&mut self) -> &mut [Walk] {
-        &mut self.walks
+    /// Mutable access to the live walks' payload slots, in creation
+    /// order — used by application layers to seed payloads before the
+    /// run (e.g. one model per initial walk).
+    pub fn payloads_mut(&mut self) -> impl Iterator<Item = &mut Option<usize>> {
+        self.arena.payloads_mut()
     }
 
-    fn kill(&mut self, idx: usize, t: u64, node: u32, kind: EventKind, hook: &mut dyn VisitHook) {
-        let w = &mut self.walks[idx];
-        if !w.alive {
-            return;
-        }
-        w.alive = false;
-        w.died = Some(t);
-        self.alive_count -= 1;
-        self.trace.events.push(Event { t, node, walk: w.id.0, kind });
-        hook.on_death(t, &self.walks[idx]);
+    /// Retire the walk at dense position `dense`: trace event, graveyard
+    /// move, death hook. Mirrors the reference engine's `kill` ordering.
+    fn kill_dense(
+        &mut self,
+        dense: usize,
+        t: u64,
+        node: u32,
+        kind: EventKind,
+        hook: &mut dyn VisitHook,
+    ) {
+        let id = self.arena.id_at(dense);
+        self.trace.events.push(Event { t, node, walk: id.0, kind });
+        let dead = self.arena.retire(dense, t);
+        hook.on_death(t, dead);
     }
 
     /// Advance one time step with an application hook.
@@ -236,50 +260,51 @@ impl Engine {
         self.t += 1;
         let t = self.t;
 
-        // 1. External failure events (bursts, Byzantine state flips).
-        self.alive_ids.clear();
-        self.alive_ids
-            .extend(self.walks.iter().filter(|w| w.alive).map(|w| w.id));
-        let killed = self.failures.pre_step(t, &self.alive_ids, &mut self.rng);
-        if !killed.is_empty() {
-            // Ids are issued sequentially, so id.0 indexes `walks`.
-            for id in killed {
-                let idx = id.0 as usize;
-                let node = self.walks[idx].at;
-                self.kill(idx, t, node, EventKind::Failure, hook);
+        // 1. External failure events (bursts, Byzantine state flips). The
+        //    arena's dense id column *is* the alive roster — no per-step
+        //    scratch rebuild.
+        let killed = self.failures.pre_step(t, self.arena.ids(), &mut self.rng);
+        for id in killed {
+            // Stale ids (never minted, or already retired) resolve to
+            // None instead of relying on id==index.
+            if let Some(dense) = self.arena.resolve(id) {
+                let node = self.arena.position(dense);
+                self.kill_dense(dense, t, node, EventKind::Failure, hook);
             }
         }
+        self.arena.compact();
 
-        // 2. Every walk alive at the start of the step hops once. Walks
-        //    forked during this step have `born == t` and do not hop.
-        let snapshot_len = self.walks.len();
-        for idx in 0..snapshot_len {
-            if !self.walks[idx].alive || self.walks[idx].born == t {
-                continue;
-            }
-            let from = self.walks[idx].at;
+        // 2. Every walk alive at the start of the step hops once. After
+        //    the barrier the dense prefix [0, len0) is exactly those
+        //    walks, in creation order; forks spawned below land at
+        //    positions >= len0 and hop next step (footnote 7). Mid-loop
+        //    kills only ever hit the walk being processed, so no
+        //    liveness check is needed on entry.
+        let len0 = self.arena.dense_len();
+        for i in 0..len0 {
+            let from = self.arena.position(i);
             let to = self.graph.step(from as usize, &mut self.rng) as u32;
-            let wid = self.walks[idx].id;
+            let wid = self.arena.id_at(i);
 
             // 2a. Loss in transit.
             if self.failures.on_hop(t, wid, from, to, &mut self.rng) {
-                self.kill(idx, t, from, EventKind::Failure, hook);
+                self.kill_dense(i, t, from, EventKind::Failure, hook);
                 continue;
             }
-            self.walks[idx].at = to;
+            self.arena.set_position(i, to);
 
             // 2b. Byzantine arrival.
             if self.failures.on_arrival(t, wid, to, &mut self.rng) {
-                self.kill(idx, t, to, EventKind::Failure, hook);
+                self.kill_dense(i, t, to, EventKind::Failure, hook);
                 continue;
             }
 
             // 2c. The node records the visit (return-time sample).
-            let slot = self.walks[idx].lineage.slot();
+            let slot = self.arena.lineage_at(i).slot();
             self.states[to as usize].observe(t, wid, slot);
 
             // 2d. Application work (e.g. one SGD step on the payload).
-            hook.on_visit(t, to, &mut self.walks[idx]);
+            hook.on_visit(t, to, self.arena.walk_mut(i));
 
             // 2e. Control decision — not during warm-up, and at most one
             //     per node per step (footnote 6).
@@ -304,31 +329,30 @@ impl Engine {
                     self.trace.theta.push((t, th));
                 }
             }
-            for fork_slot in decision.forks {
-                if self.alive_count as usize >= self.params.max_walks {
-                    self.trace.capped = true;
-                    break;
+            if !decision.forks.is_empty() {
+                let parent = self.arena.walk_ref(i);
+                for fork_slot in decision.forks {
+                    if self.arena.live() as usize >= self.params.max_walks {
+                        self.trace.capped = true;
+                        break;
+                    }
+                    let lineage = Lineage::Forked { parent: wid, by: to, at: t, slot: fork_slot };
+                    let (child_id, child) = self.arena.spawn(to, t, lineage);
+                    hook.on_fork(t, parent, self.arena.walk_mut(child));
+                    // The new walk is immediately visible to the forking
+                    // node (it "leaves the forking node" next step,
+                    // footnote 7).
+                    self.states[to as usize].observe(t, child_id, fork_slot);
+                    self.trace.events.push(Event {
+                        t,
+                        node: to,
+                        walk: child_id.0,
+                        kind: EventKind::Fork,
+                    });
                 }
-                let child_id = self.idgen.fresh();
-                let mut child = Walk {
-                    id: child_id,
-                    lineage: Lineage::Forked { parent: wid, by: to, at: t, slot: fork_slot },
-                    at: to,
-                    alive: true,
-                    born: t,
-                    died: None,
-                    payload: None,
-                };
-                hook.on_fork(t, &self.walks[idx], &mut child);
-                // The new walk is immediately visible to the forking node
-                // (it "leaves the forking node" next step, footnote 7).
-                self.states[to as usize].observe(t, child_id, fork_slot);
-                self.walks.push(child);
-                self.alive_count += 1;
-                self.trace.events.push(Event { t, node: to, walk: child_id.0, kind: EventKind::Fork });
             }
             if decision.terminate {
-                self.kill(idx, t, to, EventKind::ControlTermination, hook);
+                self.kill_dense(i, t, to, EventKind::ControlTermination, hook);
             }
         }
 
@@ -338,8 +362,9 @@ impl Engine {
                 s.prune(t);
             }
         }
-        self.trace.z.push(self.alive_count);
-        if self.alive_count == 0 {
+        self.arena.compact();
+        self.trace.z.push(self.arena.live());
+        if self.arena.live() == 0 {
             self.trace.extinct = true;
         }
     }
@@ -361,7 +386,7 @@ impl Engine {
     /// `run_to` with an application hook.
     pub fn run_to_with(&mut self, horizon: u64, hook: &mut dyn VisitHook) {
         while self.t < horizon {
-            if self.alive_count == 0 {
+            if self.arena.live() == 0 {
                 self.trace.z.resize(horizon as usize + 1, 0);
                 self.trace.extinct = true;
                 self.t = horizon;
@@ -388,6 +413,8 @@ mod tests {
     use crate::control::{Decafork, NoControl};
     use crate::failures::{Burst, NoFailures, Probabilistic};
     use crate::graph::generators;
+    use crate::walks::WalkId;
+    use std::collections::HashSet;
 
     fn small_graph() -> Arc<Graph> {
         Arc::new(generators::random_regular(30, 4, &mut Rng::new(7)).unwrap())
@@ -398,8 +425,8 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 5, ..Default::default() },
-            Box::new(NoControl),
-            Box::new(NoFailures),
+            NoControl,
+            NoFailures,
             Rng::new(1),
         );
         e.run_to(500);
@@ -413,8 +440,8 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 10, ..Default::default() },
-            Box::new(NoControl),
-            Box::new(Burst::new(vec![(50, 4)])),
+            NoControl,
+            Burst::new(vec![(50, 4)]),
             Rng::new(2),
         );
         e.run_to(100);
@@ -422,6 +449,7 @@ mod tests {
         assert_eq!(e.trace().z[49], 10);
         assert_eq!(e.trace().z[50], 6);
         assert_eq!(e.trace().count(EventKind::Failure), 4);
+        assert_eq!(e.arena().graveyard().len(), 4);
     }
 
     #[test]
@@ -429,8 +457,8 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 3, ..Default::default() },
-            Box::new(NoControl),
-            Box::new(Probabilistic::new(0.5)),
+            NoControl,
+            Probabilistic::new(0.5),
             Rng::new(3),
         );
         e.run_to(200);
@@ -445,8 +473,8 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 8, record_theta: true, ..Default::default() },
-            Box::new(Decafork::new(2.0)),
-            Box::new(Burst::new(vec![(100, 4), (300, 3)])),
+            Decafork::new(2.0),
+            Burst::new(vec![(100, 4), (300, 3)]),
             Rng::new(4),
         );
         e.run_to(600);
@@ -472,8 +500,8 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 10, ..Default::default() },
-            Box::new(Decafork::new(2.0)),
-            Box::new(Burst::new(vec![(800, 5)])),
+            Decafork::new(2.0),
+            Burst::new(vec![(800, 5)]),
             Rng::new(5),
         );
         e.run_to(2500);
@@ -493,15 +521,15 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 4, control_start: Some(0), ..Default::default() },
-            Box::new(Decafork { epsilon: 50.0, p: Some(1.0) }), // forks every visit
-            Box::new(NoFailures),
+            Decafork { epsilon: 50.0, p: Some(1.0) }, // forks every visit
+            NoFailures,
             Rng::new(6),
         );
         for _ in 0..3 {
             e.step();
         }
         assert!(e.alive() > 4);
-        for w in e.walks() {
+        for w in e.snapshot() {
             if let Lineage::Forked { at, .. } = w.lineage {
                 assert!(at >= w.born);
             }
@@ -513,8 +541,8 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 4, max_walks: 16, control_start: Some(0), ..Default::default() },
-            Box::new(Decafork { epsilon: 100.0, p: Some(1.0) }),
-            Box::new(NoFailures),
+            Decafork { epsilon: 100.0, p: Some(1.0) },
+            NoFailures,
             Rng::new(7),
         );
         e.run_to(100);
@@ -528,8 +556,8 @@ mod tests {
             let mut e = Engine::new(
                 small_graph(),
                 SimParams { z0: 10, ..Default::default() },
-                Box::new(Decafork::new(2.0)),
-                Box::new(Burst::paper_default()),
+                Decafork::new(2.0),
+                Burst::paper_default(),
                 Rng::new(seed),
             );
             e.run_to(3000);
@@ -540,6 +568,97 @@ mod tests {
     }
 
     #[test]
+    fn walk_ids_never_alias_under_heavy_churn() {
+        // The id-reuse satellite: Probabilistic(0.2) killing walks every
+        // step while Decafork(p=1) forks on every visit — arena slots are
+        // freed and reused constantly, and every id the trace ever
+        // mentions must still be globally unique (generation bump).
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 8, control_start: Some(0), max_walks: 256, ..Default::default() },
+            Decafork { epsilon: 100.0, p: Some(1.0) },
+            Probabilistic::new(0.2),
+            Rng::new(13),
+        );
+        e.run_to(400);
+        let tr = e.trace();
+        // Ids born: the initial Z0 plus one per fork event. Every fork
+        // must mint an id never seen before (not an initial id, not a
+        // previously forked id — dead or alive).
+        let mut seen: HashSet<u64> = (0..8u64).map(|k| WalkId(k).0).collect();
+        let mut deaths_of_known = 0usize;
+        for ev in &tr.events {
+            match ev.kind {
+                EventKind::Fork => {
+                    assert!(
+                        seen.insert(ev.walk),
+                        "fork at t={} reused id {} — generation aliasing",
+                        ev.t,
+                        WalkId(ev.walk)
+                    );
+                }
+                _ => {
+                    assert!(seen.contains(&ev.walk), "death of unknown id");
+                    deaths_of_known += 1;
+                }
+            }
+        }
+        assert!(deaths_of_known > 100, "churn too low to exercise slot reuse");
+        // Slot indices *are* reused (that's the point of the arena):
+        // strictly fewer slots than ids when churn recycles them.
+        let max_slot = tr
+            .events
+            .iter()
+            .map(|ev| WalkId(ev.walk).index())
+            .max()
+            .unwrap();
+        assert!(
+            (max_slot as usize) < seen.len() - 1,
+            "no slot reuse happened (max slot {max_slot}, {} ids)",
+            seen.len()
+        );
+        // And conservation still holds under maximal churn.
+        let mut delta = vec![0i64; tr.z.len()];
+        for ev in &tr.events {
+            delta[ev.t as usize] += if ev.kind == EventKind::Fork { 1 } else { -1 };
+        }
+        for t in 1..tr.z.len() {
+            assert_eq!(tr.z[t] as i64 - tr.z[t - 1] as i64, delta[t], "churn broke z at t={t}");
+        }
+    }
+
+    #[test]
+    fn graveyard_preserves_lineage_of_dead_walks() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 6, ..Default::default() },
+            Decafork::new(2.0),
+            Burst::new(vec![(40, 3), (80, 2)]),
+            Rng::new(21),
+        );
+        e.run_to(300);
+        let snap = e.snapshot();
+        let dead: Vec<_> = snap.iter().filter(|w| !w.alive).collect();
+        let losses = e.trace().count(EventKind::Failure)
+            + e.trace().count(EventKind::ControlTermination);
+        assert_eq!(dead.len(), losses);
+        for w in &dead {
+            assert!(w.died.is_some());
+            assert!(w.died.unwrap() >= w.born);
+            // Ancestry of every dead walk still resolves to a root slot.
+            assert!(
+                crate::walks::lineage::root_slot(&snap, w.id).is_some(),
+                "lost ancestry for {}",
+                w.id
+            );
+        }
+        assert_eq!(
+            snap.iter().filter(|w| w.alive).count(),
+            e.alive() as usize
+        );
+    }
+
+    #[test]
     fn hook_sees_visits_forks_deaths() {
         struct Counter {
             visits: usize,
@@ -547,10 +666,10 @@ mod tests {
             deaths: usize,
         }
         impl VisitHook for Counter {
-            fn on_visit(&mut self, _t: u64, _n: u32, _w: &mut Walk) {
+            fn on_visit(&mut self, _t: u64, _n: u32, _w: WalkMut<'_>) {
                 self.visits += 1;
             }
-            fn on_fork(&mut self, _t: u64, _p: &Walk, _c: &mut Walk) {
+            fn on_fork(&mut self, _t: u64, _p: WalkRef, _c: WalkMut<'_>) {
                 self.forks += 1;
             }
             fn on_death(&mut self, _t: u64, _w: &Walk) {
@@ -560,14 +679,16 @@ mod tests {
         let mut e = Engine::new(
             small_graph(),
             SimParams { z0: 6, ..Default::default() },
-            Box::new(Decafork::new(2.0)),
-            Box::new(Burst::new(vec![(40, 3)])),
+            Decafork::new(2.0),
+            Burst::new(vec![(40, 3)]),
             Rng::new(8),
         );
         let mut h = Counter { visits: 0, forks: 0, deaths: 0 };
         e.run_to_with(300, &mut h);
         assert!(h.visits > 1000);
-        assert_eq!(h.deaths, e.trace().count(EventKind::Failure) + e.trace().count(EventKind::ControlTermination));
+        let losses = e.trace().count(EventKind::Failure)
+            + e.trace().count(EventKind::ControlTermination);
+        assert_eq!(h.deaths, losses);
         assert_eq!(h.forks, e.trace().count(EventKind::Fork));
     }
 }

@@ -1,6 +1,8 @@
-//! Discrete-time multi-random-walk simulation: the engine, metrics, the
-//! multi-seed runner (mean ± std aggregation as in the paper's 50-run
-//! figures) and experiment configuration.
+//! Discrete-time multi-random-walk simulation: the arena engine, metrics,
+//! the multi-seed runner (mean ± std aggregation as in the paper's 50-run
+//! figures) and the frozen reference engine (determinism oracle / perf
+//! baseline). Experiment *description* lives in [`crate::scenario`];
+//! `sim::config` re-exports it for back-compat.
 //!
 //! Time model (matches the paper's synchronous simulations): at every step
 //! each active walk performs one hop; failures strike before/during/after
@@ -11,9 +13,11 @@
 pub mod config;
 pub mod engine;
 pub mod metrics;
+pub mod reference;
 pub mod runner;
 
 pub use config::{ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
 pub use engine::{Engine, SimParams, StartPlacement, VisitHook};
 pub use metrics::{AggregateTrace, Event, EventKind, Trace};
+pub use reference::ReferenceEngine;
 pub use runner::run_many;

@@ -1,0 +1,288 @@
+//! The **frozen seed engine**: a verbatim-semantics copy of the
+//! pre-arena `Engine` (boxed trait dispatch, one `Vec<Walk>` holding
+//! every walk ever created, `O(history)` stepping, per-step `alive_ids`
+//! scratch rebuild, sequential ids doubling as vector indices).
+//!
+//! It exists for two jobs and must not be "improved":
+//!
+//! 1. **Determinism oracle** — `tests/golden_traces.rs` asserts the
+//!    arena engine reproduces this engine's `Trace::z` byte-for-byte on
+//!    the golden scenarios ([`crate::scenario::presets::golden`]). Any
+//!    edit here invalidates the lock.
+//! 2. **Perf baseline** — `benches/perf_engine.rs` reports the arena
+//!    engine's steps/sec as a multiple of this engine's on the same
+//!    scenario (`BENCH_engine.json`).
+//!
+//! Scope of the freeze: this file pins the seed **engine core** (walk
+//! storage, step loop, kill path, id scheme). Control and failure
+//! *implementations* are shared with the arena engine — the lock proves
+//! engine-core equivalence, not historical control behavior. One shared
+//! implementation changed in the same PR: `PeriodicFork` now staggers
+//! node phases (see `control/mod.rs`), so seed-era periodic-strawman
+//! traces (ablation_strawman) are not reproducible bit-for-bit; none of
+//! the golden scenarios use periodic control.
+//!
+//! Hooks and payloads are not supported; the learning layer runs on the
+//! arena engine only.
+
+use std::sync::Arc;
+
+use crate::control::{ControlAlgorithm, VisitCtx};
+use crate::failures::FailureModel;
+use crate::graph::Graph;
+use crate::rng::Rng;
+use crate::sim::engine::{SimParams, StartPlacement};
+use crate::sim::metrics::{Event, EventKind, Trace};
+use crate::walks::{Lineage, NodeState, Walk, WalkId, WalkIdGen};
+
+/// The seed engine, preserved for golden-trace and perf comparison.
+pub struct ReferenceEngine {
+    pub graph: Arc<Graph>,
+    pub params: SimParams,
+    walks: Vec<Walk>,
+    states: Vec<NodeState>,
+    control: Box<dyn ControlAlgorithm>,
+    failures: Box<dyn FailureModel>,
+    rng: Rng,
+    idgen: WalkIdGen,
+    t: u64,
+    trace: Trace,
+    alive_count: u32,
+    /// Resolved control warm-up boundary.
+    control_start: u64,
+    /// Scratch buffer rebuilt every step (the seed's per-step cost).
+    alive_ids: Vec<WalkId>,
+}
+
+impl ReferenceEngine {
+    pub fn new(
+        graph: Arc<Graph>,
+        params: SimParams,
+        control: Box<dyn ControlAlgorithm>,
+        failures: Box<dyn FailureModel>,
+        mut rng: Rng,
+    ) -> Self {
+        let n = graph.n();
+        let z0 = params.z0;
+        let mut idgen = WalkIdGen::new();
+        let mut walks = Vec::with_capacity(z0 as usize);
+        for slot in 0..z0 {
+            let at = match params.start {
+                StartPlacement::AtNode(v) => v,
+                StartPlacement::Random => rng.below(n) as u32,
+            };
+            walks.push(Walk {
+                id: idgen.fresh(),
+                lineage: Lineage::Original { slot: slot as u16 },
+                at,
+                alive: true,
+                born: 0,
+                died: None,
+                payload: None,
+            });
+        }
+        let states = (0..n)
+            .map(|i| NodeState::new(z0 as usize, params.survival.resolve(&graph, i)))
+            .collect();
+        let mut trace = Trace::default();
+        trace.z.push(z0);
+        let control_start = params
+            .control_start
+            .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
+        ReferenceEngine {
+            graph,
+            params,
+            walks,
+            states,
+            control,
+            failures,
+            rng,
+            idgen,
+            t: 0,
+            trace,
+            alive_count: z0,
+            control_start,
+            alive_ids: Vec::new(),
+        }
+    }
+
+    /// Number of active walks.
+    pub fn alive(&self) -> u32 {
+        self.alive_count
+    }
+
+    /// All walks ever created (dead ones included — the seed layout).
+    pub fn walks(&self) -> &[Walk] {
+        &self.walks
+    }
+
+    fn kill(&mut self, idx: usize, t: u64, node: u32, kind: EventKind) {
+        let w = &mut self.walks[idx];
+        if !w.alive {
+            return;
+        }
+        w.alive = false;
+        w.died = Some(t);
+        self.alive_count -= 1;
+        self.trace.events.push(Event { t, node, walk: w.id.0, kind });
+    }
+
+    /// Advance one time step (seed semantics, O(walks ever created)).
+    pub fn step(&mut self) {
+        self.t += 1;
+        let t = self.t;
+
+        // 1. External failure events (bursts, Byzantine state flips).
+        self.alive_ids.clear();
+        self.alive_ids
+            .extend(self.walks.iter().filter(|w| w.alive).map(|w| w.id));
+        let killed = self.failures.pre_step(t, &self.alive_ids, &mut self.rng);
+        if !killed.is_empty() {
+            // Ids are issued sequentially, so id.0 indexes `walks`.
+            for id in killed {
+                let idx = id.0 as usize;
+                let node = self.walks[idx].at;
+                self.kill(idx, t, node, EventKind::Failure);
+            }
+        }
+
+        // 2. Every walk alive at the start of the step hops once. Walks
+        //    forked during this step have `born == t` and do not hop.
+        let snapshot_len = self.walks.len();
+        for idx in 0..snapshot_len {
+            if !self.walks[idx].alive || self.walks[idx].born == t {
+                continue;
+            }
+            let from = self.walks[idx].at;
+            let to = self.graph.step(from as usize, &mut self.rng) as u32;
+            let wid = self.walks[idx].id;
+
+            // 2a. Loss in transit.
+            if self.failures.on_hop(t, wid, from, to, &mut self.rng) {
+                self.kill(idx, t, from, EventKind::Failure);
+                continue;
+            }
+            self.walks[idx].at = to;
+
+            // 2b. Byzantine arrival.
+            if self.failures.on_arrival(t, wid, to, &mut self.rng) {
+                self.kill(idx, t, to, EventKind::Failure);
+                continue;
+            }
+
+            // 2c. The node records the visit (return-time sample).
+            let slot = self.walks[idx].lineage.slot();
+            self.states[to as usize].observe(t, wid, slot);
+
+            // 2d. Control decision — not during warm-up, and at most one
+            //     per node per step (footnote 6).
+            if t < self.control_start || self.states[to as usize].last_control_step == Some(t) {
+                continue;
+            }
+            self.states[to as usize].last_control_step = Some(t);
+            let decision = {
+                let mut ctx = VisitCtx {
+                    t,
+                    node: to,
+                    walk: wid,
+                    slot,
+                    z0: self.params.z0,
+                    state: &mut self.states[to as usize],
+                    rng: &mut self.rng,
+                };
+                self.control.on_visit(&mut ctx)
+            };
+            if self.params.record_theta {
+                if let Some(th) = decision.theta {
+                    self.trace.theta.push((t, th));
+                }
+            }
+            for fork_slot in decision.forks {
+                if self.alive_count as usize >= self.params.max_walks {
+                    self.trace.capped = true;
+                    break;
+                }
+                let child_id = self.idgen.fresh();
+                let child = Walk {
+                    id: child_id,
+                    lineage: Lineage::Forked { parent: wid, by: to, at: t, slot: fork_slot },
+                    at: to,
+                    alive: true,
+                    born: t,
+                    died: None,
+                    payload: None,
+                };
+                // The new walk is immediately visible to the forking node
+                // (it "leaves the forking node" next step, footnote 7).
+                self.states[to as usize].observe(t, child_id, fork_slot);
+                self.walks.push(child);
+                self.alive_count += 1;
+                self.trace.events.push(Event { t, node: to, walk: child_id.0, kind: EventKind::Fork });
+            }
+            if decision.terminate {
+                self.kill(idx, t, to, EventKind::ControlTermination);
+            }
+        }
+
+        // 3. Housekeeping.
+        if self.params.prune_every > 0 && t % self.params.prune_every == 0 {
+            for s in &mut self.states {
+                s.prune(t);
+            }
+        }
+        self.trace.z.push(self.alive_count);
+        if self.alive_count == 0 {
+            self.trace.extinct = true;
+        }
+    }
+
+    /// Run until `horizon` (inclusive), stopping early on extinction.
+    pub fn run_to(&mut self, horizon: u64) {
+        while self.t < horizon {
+            if self.alive_count == 0 {
+                self.trace.z.resize(horizon as usize + 1, 0);
+                self.trace.extinct = true;
+                self.t = horizon;
+                break;
+            }
+            self.step();
+        }
+    }
+
+    /// Consume the engine, returning its telemetry.
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+
+    /// Borrow telemetry.
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::Decafork;
+    use crate::failures::Burst;
+    use crate::graph::generators;
+
+    #[test]
+    fn reference_reproduces_seed_behaviour() {
+        // The seed suite's headline invariants, pinned on the frozen
+        // engine so regressions here are caught independently of the
+        // arena equivalence tests.
+        let g = Arc::new(generators::random_regular(30, 4, &mut Rng::new(7)).unwrap());
+        let mut e = ReferenceEngine::new(
+            g,
+            SimParams { z0: 10, ..Default::default() },
+            Box::new(Decafork::new(2.0)),
+            Box::new(Burst::new(vec![(800, 5)])),
+            Rng::new(5),
+        );
+        e.run_to(2500);
+        assert!(!e.trace().extinct);
+        assert!(e.trace().recovery_time(800, 10).is_some());
+        assert_eq!(e.trace().z.len(), 2501);
+    }
+}

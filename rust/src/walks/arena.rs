@@ -1,0 +1,404 @@
+//! The walk arena: a struct-of-arrays store for live walks with
+//! generational ids, a cold graveyard for retired walks, and stable
+//! (order-preserving) compaction.
+//!
+//! ## Why this shape (DESIGN.md §Walk arena has the full discussion)
+//!
+//! The seed engine kept every walk ever created in one `Vec<Walk>` and
+//! relied on ids being sequential so `id.0` indexed the vector. That made
+//! `step` O(walks ever created) and blocked any compaction. The arena
+//! instead keeps:
+//!
+//! * **dense columns** (`ids`, `at`, `born`, `lineage`, `payload`) that
+//!   hold only live walks, **in creation order** — the engine's hop loop
+//!   is a straight scan of `at` with no liveness checks;
+//! * a **sparse slot table** mapping `WalkId::index()` to the walk's
+//!   dense position, with a per-slot generation bumped on every retire so
+//!   freed indices can be reused without id aliasing;
+//! * a **graveyard** of materialized [`Walk`] records for retired walks,
+//!   so lineage inspection and trace post-mortems keep working off the
+//!   hot path.
+//!
+//! Compaction is **stable**, not swap-remove: the engine's determinism
+//! lock (`tests/golden_traces.rs`) requires the hop loop to draw RNG
+//! values in exactly the seed engine's order, i.e. creation order of the
+//! surviving walks. A swap-remove would permute that order and change
+//! every trace. Stable compaction costs one O(live) sweep per step *with
+//! deaths* (steps without deaths skip it entirely) and keeps the columns
+//! byte-for-byte in seed iteration order.
+//!
+//! Mid-step kills only tombstone the dense entry (`dead[i] = true`); the
+//! engine compacts at well-defined barriers (after pre-step failures and
+//! at end of step), so dense indices are stable for the whole hop loop.
+
+use super::{Lineage, Walk, WalkId, WalkMut, WalkRef};
+
+/// Sentinel for "this slot's walk is retired".
+const RETIRED: u32 = u32::MAX;
+
+#[derive(Debug, Clone, Copy)]
+struct SlotMeta {
+    /// Generation minted into ids spawned from this slot.
+    gen: u32,
+    /// Dense position of the slot's live walk, or [`RETIRED`].
+    dense: u32,
+}
+
+/// Struct-of-arrays store for the live walk population.
+#[derive(Debug, Clone, Default)]
+pub struct WalkArena {
+    // Dense, creation-ordered columns; one entry per live (or
+    // tombstoned-this-step) walk.
+    ids: Vec<WalkId>,
+    at: Vec<u32>,
+    born: Vec<u64>,
+    lineage: Vec<Lineage>,
+    payload: Vec<Option<usize>>,
+    /// Tombstones for walks retired since the last compaction.
+    dead: Vec<bool>,
+    /// Sparse table indexed by `WalkId::index()`.
+    slots: Vec<SlotMeta>,
+    /// Reusable slot indices (retired walks' slots).
+    free: Vec<u32>,
+    /// Cold store of retired walks, in retirement order.
+    graveyard: Vec<Walk>,
+    /// Live walks (dense entries minus tombstones).
+    live: u32,
+}
+
+impl WalkArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        WalkArena {
+            ids: Vec::with_capacity(n),
+            at: Vec::with_capacity(n),
+            born: Vec::with_capacity(n),
+            lineage: Vec::with_capacity(n),
+            payload: Vec::with_capacity(n),
+            dead: Vec::with_capacity(n),
+            slots: Vec::with_capacity(n),
+            ..Self::default()
+        }
+    }
+
+    /// Number of live walks.
+    #[inline]
+    pub fn live(&self) -> u32 {
+        self.live
+    }
+
+    /// Length of the dense columns (live walks plus tombstones not yet
+    /// compacted away). Equals `live()` right after [`compact`](Self::compact).
+    #[inline]
+    pub fn dense_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Dense id column. Creation-ordered and tombstone-free when called
+    /// at a compaction barrier (which is the only place the engine reads
+    /// it — as the `alive` roster handed to failure models).
+    #[inline]
+    pub fn ids(&self) -> &[WalkId] {
+        debug_assert_eq!(self.ids.len(), self.live as usize, "ids() read between barriers");
+        &self.ids
+    }
+
+    /// Current node of the walk at dense position `i`.
+    #[inline]
+    pub fn position(&self, i: usize) -> u32 {
+        self.at[i]
+    }
+
+    #[inline]
+    pub fn set_position(&mut self, i: usize, node: u32) {
+        self.at[i] = node;
+    }
+
+    #[inline]
+    pub fn id_at(&self, i: usize) -> WalkId {
+        self.ids[i]
+    }
+
+    #[inline]
+    pub fn lineage_at(&self, i: usize) -> Lineage {
+        self.lineage[i]
+    }
+
+    #[inline]
+    pub fn born_at(&self, i: usize) -> u64 {
+        self.born[i]
+    }
+
+    /// By-value view of the live walk at dense position `i`.
+    #[inline]
+    pub fn walk_ref(&self, i: usize) -> WalkRef {
+        WalkRef {
+            id: self.ids[i],
+            at: self.at[i],
+            born: self.born[i],
+            lineage: self.lineage[i],
+            payload: self.payload[i],
+        }
+    }
+
+    /// Mutable view (payload only) of the live walk at dense position `i`.
+    #[inline]
+    pub fn walk_mut(&mut self, i: usize) -> WalkMut<'_> {
+        WalkMut {
+            id: self.ids[i],
+            at: self.at[i],
+            born: self.born[i],
+            lineage: self.lineage[i],
+            payload: &mut self.payload[i],
+        }
+    }
+
+    /// Mutable iterator over the payload column (creation order). Only
+    /// meaningful at a compaction barrier; used to seed initial payloads.
+    pub fn payloads_mut(&mut self) -> impl Iterator<Item = &mut Option<usize>> {
+        debug_assert_eq!(self.ids.len(), self.live as usize);
+        self.payload.iter_mut()
+    }
+
+    /// Spawn a walk, reusing a retired slot when one is free (its
+    /// generation was bumped at retirement, so the new id never aliases
+    /// the old one). Returns the id and the dense position.
+    pub fn spawn(&mut self, at: u32, born: u64, lineage: Lineage) -> (WalkId, usize) {
+        let index = match self.free.pop() {
+            Some(i) => i,
+            None => {
+                assert!(self.slots.len() < RETIRED as usize, "walk slot space exhausted");
+                self.slots.push(SlotMeta { gen: 0, dense: RETIRED });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let dense = self.ids.len();
+        let meta = &mut self.slots[index as usize];
+        meta.dense = dense as u32;
+        let id = WalkId::compose(index, meta.gen);
+        self.ids.push(id);
+        self.at.push(at);
+        self.born.push(born);
+        self.lineage.push(lineage);
+        self.payload.push(None);
+        self.dead.push(false);
+        self.live += 1;
+        (id, dense)
+    }
+
+    /// Dense position of a live walk, or `None` if the id is stale
+    /// (retired, or from a previous occupant of the slot).
+    #[inline]
+    pub fn resolve(&self, id: WalkId) -> Option<usize> {
+        let meta = self.slots.get(id.index() as usize)?;
+        if meta.gen != id.generation() || meta.dense == RETIRED {
+            return None;
+        }
+        Some(meta.dense as usize)
+    }
+
+    /// Whether `id` names a currently live walk.
+    #[inline]
+    pub fn is_live(&self, id: WalkId) -> bool {
+        self.resolve(id).is_some()
+    }
+
+    /// Retire the walk at dense position `i`: tombstone the dense entry,
+    /// move the record to the graveyard, bump the slot generation and
+    /// free the slot for reuse. Returns the graveyard record.
+    pub fn retire(&mut self, i: usize, died: u64) -> &Walk {
+        debug_assert!(!self.dead[i], "double retire at dense {i}");
+        self.dead[i] = true;
+        self.live -= 1;
+        let id = self.ids[i];
+        let index = id.index() as usize;
+        let meta = &mut self.slots[index];
+        debug_assert_eq!(meta.dense, i as u32);
+        meta.dense = RETIRED;
+        meta.gen = meta.gen.wrapping_add(1);
+        self.free.push(index as u32);
+        self.graveyard.push(Walk {
+            id,
+            lineage: self.lineage[i],
+            at: self.at[i],
+            alive: false,
+            born: self.born[i],
+            died: Some(died),
+            payload: self.payload[i],
+        });
+        self.graveyard.last().unwrap()
+    }
+
+    /// Remove tombstones with a stable in-place sweep, preserving the
+    /// creation order of survivors (the determinism lock — see module
+    /// docs). No-op when nothing died since the last call.
+    pub fn compact(&mut self) {
+        if self.ids.len() == self.live as usize {
+            return;
+        }
+        let mut w = 0;
+        for r in 0..self.ids.len() {
+            if self.dead[r] {
+                continue;
+            }
+            if w != r {
+                self.ids[w] = self.ids[r];
+                self.at[w] = self.at[r];
+                self.born[w] = self.born[r];
+                self.lineage[w] = self.lineage[r];
+                self.payload[w] = self.payload[r];
+                self.dead[w] = false;
+                self.slots[self.ids[w].index() as usize].dense = w as u32;
+            }
+            w += 1;
+        }
+        self.ids.truncate(w);
+        self.at.truncate(w);
+        self.born.truncate(w);
+        self.lineage.truncate(w);
+        self.payload.truncate(w);
+        self.dead.truncate(w);
+        debug_assert_eq!(w, self.live as usize);
+    }
+
+    /// Retired walks, in retirement order (cold storage).
+    pub fn graveyard(&self) -> &[Walk] {
+        &self.graveyard
+    }
+
+    /// Materialize every walk this arena has ever held — live walks first
+    /// (creation order), then the graveyard (retirement order). Cold
+    /// path: used by lineage analytics and reports, never per step.
+    pub fn snapshot(&self) -> Vec<Walk> {
+        let mut out = Vec::with_capacity(self.ids.len() + self.graveyard.len());
+        for i in 0..self.ids.len() {
+            if self.dead[i] {
+                continue;
+            }
+            out.push(Walk {
+                id: self.ids[i],
+                lineage: self.lineage[i],
+                at: self.at[i],
+                alive: true,
+                born: self.born[i],
+                died: None,
+                payload: self.payload[i],
+            });
+        }
+        out.extend(self.graveyard.iter().cloned());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn orig(slot: u16) -> Lineage {
+        Lineage::Original { slot }
+    }
+
+    #[test]
+    fn spawn_assigns_sequential_generation_zero_ids() {
+        let mut a = WalkArena::new();
+        for k in 0..5u16 {
+            let (id, dense) = a.spawn(k as u32, 0, orig(k));
+            assert_eq!(id, WalkId(k as u64), "fresh slots mint seed-compatible ids");
+            assert_eq!(dense, k as usize);
+        }
+        assert_eq!(a.live(), 5);
+        assert_eq!(a.ids().len(), 5);
+    }
+
+    #[test]
+    fn retire_then_spawn_reuses_slot_without_aliasing() {
+        let mut a = WalkArena::new();
+        let (id0, _) = a.spawn(1, 0, orig(0));
+        let (id1, _) = a.spawn(2, 0, orig(1));
+        a.retire(a.resolve(id0).unwrap(), 10);
+        a.compact();
+        // The fork reuses slot 0 but with a bumped generation.
+        let (id2, _) = a.spawn(3, 10, orig(2));
+        assert_eq!(id2.index(), id0.index());
+        assert_eq!(id2.generation(), id0.generation() + 1);
+        assert_ne!(id2, id0, "reused slot must never alias the retired walk");
+        // Stale id no longer resolves; live ones do.
+        assert!(a.resolve(id0).is_none());
+        assert!(a.is_live(id1));
+        assert!(a.is_live(id2));
+        assert_eq!(a.live(), 2);
+    }
+
+    #[test]
+    fn same_step_kill_and_fork_never_alias() {
+        // The satellite invariant: retire tombstones immediately free the
+        // slot, and a spawn in the same step (before compaction) gets the
+        // bumped generation.
+        let mut a = WalkArena::new();
+        let (id0, d0) = a.spawn(0, 0, orig(0));
+        a.retire(d0, 5);
+        let (id1, _) = a.spawn(9, 5, orig(1)); // same step, reuses slot 0
+        assert_eq!(id1.index(), id0.index());
+        assert_ne!(id1, id0);
+        assert!(a.resolve(id0).is_none());
+        assert_eq!(a.resolve(id1), Some(1)); // dense 1: tombstone not yet compacted
+        a.compact();
+        assert_eq!(a.resolve(id1), Some(0));
+        assert_eq!(a.live(), 1);
+        assert_eq!(a.graveyard().len(), 1);
+        assert_eq!(a.graveyard()[0].id, id0);
+        assert_eq!(a.graveyard()[0].died, Some(5));
+    }
+
+    #[test]
+    fn compact_is_stable_in_creation_order() {
+        let mut a = WalkArena::new();
+        let ids: Vec<WalkId> = (0..6).map(|k| a.spawn(k, 0, orig(k as u16)).0).collect();
+        // Kill 1 and 4.
+        a.retire(a.resolve(ids[1]).unwrap(), 3);
+        a.retire(a.resolve(ids[4]).unwrap(), 3);
+        a.compact();
+        let survivors: Vec<WalkId> = a.ids().to_vec();
+        assert_eq!(survivors, vec![ids[0], ids[2], ids[3], ids[5]]);
+        // Slot table repointed correctly.
+        for (want_dense, id) in survivors.iter().enumerate() {
+            assert_eq!(a.resolve(*id), Some(want_dense));
+        }
+    }
+
+    #[test]
+    fn snapshot_has_live_and_dead_with_lineage() {
+        let mut a = WalkArena::new();
+        let (p, _) = a.spawn(0, 0, orig(0));
+        let (c, _) = a.spawn(1, 2, Lineage::Forked { parent: p, by: 1, at: 2, slot: 0 });
+        a.retire(a.resolve(p).unwrap(), 4);
+        a.compact();
+        let snap = a.snapshot();
+        assert_eq!(snap.len(), 2);
+        let alive: Vec<_> = snap.iter().filter(|w| w.alive).collect();
+        assert_eq!(alive.len(), 1);
+        assert_eq!(alive[0].id, c);
+        let dead = snap.iter().find(|w| !w.alive).unwrap();
+        assert_eq!(dead.id, p);
+        assert_eq!(dead.died, Some(4));
+        // Ancestry still resolvable through the graveyard.
+        assert_eq!(crate::walks::lineage::root_slot(&snap, c), Some(0));
+    }
+
+    #[test]
+    fn payload_follows_walk_through_compaction_and_retirement() {
+        let mut a = WalkArena::new();
+        let (id0, d0) = a.spawn(0, 0, orig(0));
+        let (id1, d1) = a.spawn(1, 0, orig(1));
+        *a.walk_mut(d0).payload = Some(10);
+        *a.walk_mut(d1).payload = Some(11);
+        a.retire(a.resolve(id0).unwrap(), 1);
+        a.compact();
+        assert_eq!(a.walk_ref(a.resolve(id1).unwrap()).payload, Some(11));
+        let dead = &a.graveyard()[0];
+        assert_eq!((dead.id, dead.payload), (id0, Some(10)));
+    }
+}

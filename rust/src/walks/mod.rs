@@ -6,22 +6,64 @@
 //! identifier plus a fork lineage (paper footnote 8: a forked walk appends
 //! the forking node and fork time to its identifier).
 //!
+//! ## Storage layout (see `DESIGN.md` §Walk arena)
+//!
+//! Live walks are stored in a [`WalkArena`]: a struct-of-arrays store
+//! whose dense columns (`at`, `born`, `lineage`, `payload`) hold **only
+//! live walks, in creation order**, so the engine's hot loop touches
+//! cache-contiguous data and never skips dead entries. Retired walks move
+//! to a cold `graveyard` that preserves the full [`Walk`] record for
+//! lineage inspection. Walk identity is a generational [`WalkId`]
+//! (arena slot index + generation), so a slot freed by a kill can be
+//! reused by a fork in the same step without the two walks ever aliasing.
+//!
 //! Every node maintains a [`NodeState`]: the last-seen table `L_{i,k}`,
 //! the pooled empirical return-time distribution `R̂_i`, and the estimator
 //! `θ̂_i(t) = ½ + Σ_{ℓ≠k} S(t − L_{i,ℓ})` from Eq. (1).
 
+pub mod arena;
 pub mod lineage;
 pub mod node_state;
 
+pub use arena::WalkArena;
 pub use node_state::{NodeState, SurvivalModel};
 
-/// Globally unique walk identifier (never reused within a simulation).
+/// Unique walk identifier: a packed generational index. The low 32 bits
+/// are the walk's [`WalkArena`] slot index, the high 32 bits the slot's
+/// generation at spawn time. Two walks that ever coexist — or that reuse
+/// the same slot at different times — always compare unequal, which is
+/// all the estimator's last-seen tables rely on.
+///
+/// The raw `u64` constructor is kept public: `WalkId(n)` with `n < 2³²`
+/// is simply "slot n, generation 0", which is how sequential allocators
+/// (the actor runtime, the frozen reference engine, tests) mint ids.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct WalkId(pub u64);
 
+impl WalkId {
+    /// Pack a slot index and generation into an id.
+    pub const fn compose(index: u32, generation: u32) -> WalkId {
+        WalkId(((generation as u64) << 32) | index as u64)
+    }
+
+    /// Arena slot index (low 32 bits).
+    pub const fn index(self) -> u32 {
+        self.0 as u32
+    }
+
+    /// Slot generation at spawn time (high 32 bits).
+    pub const fn generation(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+}
+
 impl std::fmt::Display for WalkId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "w{}", self.0)
+        if self.generation() == 0 {
+            write!(f, "w{}", self.index())
+        } else {
+            write!(f, "w{}.g{}", self.index(), self.generation())
+        }
     }
 }
 
@@ -46,12 +88,15 @@ impl Lineage {
     }
 }
 
-/// A live (or dead) walk token.
+/// A materialized walk record: what the arena's graveyard stores and what
+/// [`WalkArena::snapshot`] hands to lineage analytics. The live hot path
+/// never builds these — it works on the arena's columns directly through
+/// [`WalkRef`]/[`WalkMut`] views.
 #[derive(Debug, Clone)]
 pub struct Walk {
     pub id: WalkId,
     pub lineage: Lineage,
-    /// Node currently holding the token.
+    /// Node currently (or last) holding the token.
     pub at: u32,
     pub alive: bool,
     /// Time of creation (0 for originals).
@@ -59,11 +104,47 @@ pub struct Walk {
     /// Time of death, if any.
     pub died: Option<u64>,
     /// Index of an application payload (e.g. model parameters) in the
-    /// engine's payload store; forks clone the payload.
+    /// learning layer's payload store; forks clone the payload.
     pub payload: Option<usize>,
 }
 
-/// Allocator for unique walk ids.
+/// Cheap by-value view of a live walk (all fields `Copy`), handed to
+/// hooks that only read walk state.
+#[derive(Debug, Clone, Copy)]
+pub struct WalkRef {
+    pub id: WalkId,
+    pub at: u32,
+    pub born: u64,
+    pub lineage: Lineage,
+    pub payload: Option<usize>,
+}
+
+impl From<&Walk> for WalkRef {
+    fn from(w: &Walk) -> Self {
+        WalkRef { id: w.id, at: w.at, born: w.born, lineage: w.lineage, payload: w.payload }
+    }
+}
+
+/// Mutable view of a live walk: read-only identity plus a mutable borrow
+/// of the application payload slot — the only field hooks may change.
+#[derive(Debug)]
+pub struct WalkMut<'a> {
+    pub id: WalkId,
+    pub at: u32,
+    pub born: u64,
+    pub lineage: Lineage,
+    pub payload: &'a mut Option<usize>,
+}
+
+impl<'a> From<&'a mut Walk> for WalkMut<'a> {
+    fn from(w: &'a mut Walk) -> Self {
+        WalkMut { id: w.id, at: w.at, born: w.born, lineage: w.lineage, payload: &mut w.payload }
+    }
+}
+
+/// Sequential allocator for unique walk ids (generation always 0). Used
+/// by the actor runtime and the frozen reference engine; the arena mints
+/// its own generational ids.
 #[derive(Debug, Default, Clone)]
 pub struct WalkIdGen {
     next: u64,
@@ -101,6 +182,17 @@ mod tests {
     }
 
     #[test]
+    fn generational_packing_roundtrips() {
+        let id = WalkId::compose(7, 3);
+        assert_eq!(id.index(), 7);
+        assert_eq!(id.generation(), 3);
+        assert_ne!(id, WalkId::compose(7, 4));
+        assert_ne!(id, WalkId::compose(8, 3));
+        // Sequential ids are generation-0 slots.
+        assert_eq!(WalkId(5), WalkId::compose(5, 0));
+    }
+
+    #[test]
     fn lineage_slots() {
         let orig = Lineage::Original { slot: 3 };
         assert_eq!(orig.slot(), 3);
@@ -111,5 +203,6 @@ mod tests {
     #[test]
     fn display() {
         assert_eq!(WalkId(5).to_string(), "w5");
+        assert_eq!(WalkId::compose(5, 2).to_string(), "w5.g2");
     }
 }

@@ -28,13 +28,28 @@ pub enum SurvivalModel {
 #[derive(Debug, Clone)]
 pub struct NodeState {
     /// `L_{i,k}`: last time each known walk was seen here. Stored as a
-    /// flat vector in first-seen order: the set is small (Z0 plus
-    /// surviving forks, pruned), a linear scan beats hashing at this
-    /// size, and — crucially — iteration order is deterministic, so the
-    /// floating-point sum in [`theta`](Self::theta) is reproducible
-    /// across runs (HashMap order randomization flipped near-threshold
-    /// decisions; see DESIGN.md §Perf).
+    /// flat vector in **first-seen order** — iteration order is
+    /// deterministic, so the floating-point sum in
+    /// [`theta`](Self::theta) is reproducible across runs (HashMap order
+    /// randomization flipped near-threshold decisions; see DESIGN.md
+    /// §Perf). Lookups go through `slot_pos`, not a linear scan: under
+    /// sustained churn this vector accumulates one entry per walk that
+    /// ever visited (dead walks linger until [`prune`](Self::prune)), so
+    /// a scan would make every *visit* O(history) — the node-table twin
+    /// of the seed engine's O(history) step loop.
     last_seen: Vec<(WalkId, u64)>,
+    /// `WalkId::index()` → position of that slot's **latest** walk in
+    /// `last_seen` (`u32::MAX` = none). Entries for earlier generations
+    /// of a reused slot stay in `last_seen` (they still decay inside θ̂,
+    /// exactly like the seed's unique-id entries) but become unreachable
+    /// here — dead walks never visit again, so nothing ever looks them
+    /// up. Bounded by the peak *concurrent* population for the arena
+    /// engine's generational ids; sequential allocators (reference
+    /// engine, actor runtime) grow it with ids-ever-minted instead —
+    /// the seed's own O(history) footprint, acceptable for those
+    /// paths, and ids are assumed < 2³² (`WalkArena::spawn` asserts
+    /// the same bound on slot space).
+    slot_pos: Vec<u32>,
     /// Pooled empirical return-time distribution `R̂_i`.
     pub return_cdf: EmpiricalCdf,
     /// Survival model used by `theta`.
@@ -52,6 +67,7 @@ impl NodeState {
     pub fn new(z0: usize, model: SurvivalModel) -> Self {
         NodeState {
             last_seen: Vec::new(),
+            slot_pos: Vec::new(),
             return_cdf: EmpiricalCdf::new(),
             model,
             slot_last_seen: vec![0; z0],
@@ -61,23 +77,31 @@ impl NodeState {
 
     /// Record a visit of walk `id` (with MISSINGPERSON slot `slot`) at
     /// time `t`. Returns the return-time sample `t − L_{i,k}` if this is a
-    /// revisit. Updates both tables.
+    /// revisit. Updates both tables. O(1): the `slot_pos` index replaces
+    /// the seed's linear scan; behaviour (entries, order, samples) is
+    /// identical — a reused slot index with a different generation misses
+    /// the stored id and is treated as a brand-new walk, exactly as a
+    /// fresh unique id was.
     pub fn observe(&mut self, t: u64, id: WalkId, slot: u16) -> Option<u32> {
-        let sample = match self.last_seen.iter_mut().find(|(k, _)| *k == id) {
-            Some((_, last)) => {
-                let dt = (t - *last) as u32;
-                *last = t;
-                if dt > 0 {
-                    self.return_cdf.add(dt);
-                    Some(dt)
-                } else {
-                    None
-                }
-            }
-            None => {
-                self.last_seen.push((id, t));
+        let idx = id.index() as usize;
+        if idx >= self.slot_pos.len() {
+            self.slot_pos.resize(idx + 1, u32::MAX);
+        }
+        let pos = self.slot_pos[idx];
+        let sample = if pos != u32::MAX && self.last_seen[pos as usize].0 == id {
+            let last = &mut self.last_seen[pos as usize].1;
+            let dt = (t - *last) as u32;
+            *last = t;
+            if dt > 0 {
+                self.return_cdf.add(dt);
+                Some(dt)
+            } else {
                 None
             }
+        } else {
+            self.slot_pos[idx] = self.last_seen.len() as u32;
+            self.last_seen.push((id, t));
+            None
         };
         if let Some(s) = self.slot_last_seen.get_mut(slot as usize) {
             *s = t;
@@ -170,7 +194,26 @@ impl NodeState {
             }
             SurvivalModel::Exponential { lambda } => (28.0 / lambda).ceil() as u64,
         };
-        self.last_seen.retain(|&(_, last)| t.saturating_sub(last) <= horizon);
+        // Stable in-place sweep (the seed's `retain`, plus index fix-up
+        // in the same O(|last_seen|) pass). `slot_pos` entries are only
+        // touched when they point at the entry being moved or dropped —
+        // an entry superseded by a later generation of its slot leaves
+        // the newer walk's index pointer alone.
+        let mut w = 0usize;
+        for r in 0..self.last_seen.len() {
+            let (id, last) = self.last_seen[r];
+            let sp = &mut self.slot_pos[id.index() as usize];
+            if t.saturating_sub(last) <= horizon {
+                if *sp == r as u32 {
+                    *sp = w as u32;
+                }
+                self.last_seen[w] = (id, last);
+                w += 1;
+            } else if *sp == r as u32 {
+                *sp = u32::MAX;
+            }
+        }
+        self.last_seen.truncate(w);
     }
 }
 
@@ -198,6 +241,32 @@ mod tests {
         s.observe(5, id(1), 0);
         assert_eq!(s.observe(5, id(1), 0), None);
         assert_eq!(s.return_cdf.len(), 0);
+    }
+
+    #[test]
+    fn reused_slot_index_is_a_new_walk() {
+        // Arena slot reuse: a later generation of the same slot index
+        // must be treated as a brand-new walk (no return-time sample
+        // against the dead predecessor), while the predecessor's entry
+        // keeps decaying inside theta until pruned — the same behaviour
+        // the seed had with globally unique ids.
+        let mut s = NodeState::new(2, SurvivalModel::Geometric { q: 0.1 });
+        let old = WalkId::compose(3, 0);
+        let new = WalkId::compose(3, 1);
+        s.observe(10, old, 0);
+        assert_eq!(s.observe(50, new, 1), None, "new generation must not look like a revisit");
+        assert_eq!(s.known_walks(), 2);
+        assert_eq!(s.last_seen_of(old), Some(10));
+        assert_eq!(s.last_seen_of(new), Some(50));
+        // Revisit of the live generation hits its own entry.
+        assert_eq!(s.observe(60, new, 1), Some(10));
+        assert_eq!(s.last_seen_of(old), Some(10), "dead predecessor untouched");
+        // After pruning the stale predecessor (geometric horizon
+        // 28/−ln(0.9) ≈ 266 < its staleness 290), the live walk's
+        // index entry survives the rebuild and still resolves.
+        s.prune(300);
+        assert_eq!(s.known_walks(), 1);
+        assert_eq!(s.observe(310, new, 1), Some(250));
     }
 
     #[test]

@@ -1,0 +1,101 @@
+//! The determinism lock (ISSUE 1): the arena engine must reproduce the
+//! frozen seed engine's `Trace::z` **byte-for-byte** on three seeded
+//! golden scenarios covering every failure surface (pre-step bursts,
+//! per-hop probabilistic losses, Byzantine arrivals) and every forking
+//! control family (DECAFORK, DECAFORK+, MISSINGPERSON).
+//!
+//! Two layers of locking:
+//!
+//! 1. **Executable oracle** — `ReferenceEngine` in `sim/reference.rs` is
+//!    a verbatim-semantics copy of the pre-refactor engine; both engines
+//!    are built from the same [`Scenario`] (identical graph and RNG
+//!    streams) and their z-traces compared on every `cargo test`.
+//! 2. **Pinned files** — if `tests/golden/<name>.z.txt` exists, both
+//!    traces are also compared against it, so a *simultaneous* regression
+//!    of both engines cannot slip through. Set `DECAFORK_WRITE_GOLDEN=1`
+//!    while running this test once to (re)record the files. The files
+//!    are not yet committed: the refactor was authored in an offline
+//!    sandbox with no Rust toolchain, so the first toolchain-equipped
+//!    run must record and commit them (the CI `record golden traces`
+//!    step uploads them as an artifact for exactly that purpose). Until
+//!    then layer 1 — the frozen reference engine — is the active oracle.
+
+use decafork::scenario::presets;
+use std::path::PathBuf;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(format!("{name}.z.txt"))
+}
+
+fn encode(z: &[u32]) -> String {
+    z.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn arena_engine_reproduces_reference_engine_exactly() {
+    for (name, scenario) in presets::golden() {
+        let reference = {
+            let mut e = scenario.reference_engine(0).unwrap();
+            e.run_to(scenario.horizon);
+            e.into_trace()
+        };
+        let arena = {
+            let mut e = scenario.engine(0).unwrap();
+            e.run_to(scenario.horizon);
+            e.into_trace()
+        };
+
+        assert_eq!(
+            arena.z, reference.z,
+            "golden scenario '{name}': arena z-trace diverged from the seed engine"
+        );
+        assert_eq!(arena.extinct, reference.extinct, "'{name}': extinction flag diverged");
+        assert_eq!(arena.capped, reference.capped, "'{name}': cap flag diverged");
+        // Event *sets* must agree even though arena ids are generational:
+        // same number of forks/deaths at every t (kill order inside one
+        // composite pre-step may differ, values of ids may differ).
+        let count_at = |tr: &decafork::sim::metrics::Trace, fork: bool| {
+            let mut v = vec![0i64; tr.z.len()];
+            for ev in &tr.events {
+                use decafork::sim::metrics::EventKind;
+                if (ev.kind == EventKind::Fork) == fork {
+                    v[ev.t as usize] += 1;
+                }
+            }
+            v
+        };
+        assert_eq!(count_at(&arena, true), count_at(&reference, true), "'{name}': fork counts");
+        assert_eq!(count_at(&arena, false), count_at(&reference, false), "'{name}': death counts");
+
+        // Layer 2: pinned golden files, when present.
+        let path = golden_path(name);
+        if std::env::var("DECAFORK_WRITE_GOLDEN").is_ok() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, encode(&arena.z)).unwrap();
+            eprintln!("recorded golden trace {}", path.display());
+        } else if path.exists() {
+            let want = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                encode(&arena.z),
+                want.trim_end(),
+                "golden scenario '{name}': z-trace diverged from the pinned file {}",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_scenarios_are_nontrivial() {
+    // Guard against the lock silently testing a dead scenario: each
+    // golden run must actually exercise forks AND failures.
+    use decafork::sim::metrics::EventKind;
+    for (name, scenario) in presets::golden() {
+        let mut e = scenario.engine(0).unwrap();
+        e.run_to(scenario.horizon);
+        let tr = e.trace();
+        assert!(!tr.extinct, "'{name}' went extinct — useless as a lock");
+        assert!(tr.count(EventKind::Fork) > 0, "'{name}' never forked");
+        assert!(tr.count(EventKind::Failure) > 0, "'{name}' never failed a walk");
+    }
+}

@@ -139,8 +139,8 @@ fn end_to_end_training_with_failures_and_decafork() {
             max_walks: 12,
             ..Default::default()
         },
-        Box::new(decafork::control::Decafork::new(1.5)),
-        Box::new(decafork::failures::Burst::new(vec![(110, 1)])),
+        decafork::control::Decafork::new(1.5),
+        decafork::failures::Burst::new(vec![(110, 1)]),
         Rng::new(6),
     );
     let summary = TrainingRun::execute(&mut engine, &ts, corpus, 220, 7).unwrap();
@@ -181,8 +181,8 @@ fn gossip_on_meet_merges_models() {
             control_start: Some(10_000), // no control: isolate the merge path
             ..Default::default()
         },
-        Box::new(decafork::control::NoControl),
-        Box::new(decafork::failures::NoFailures),
+        decafork::control::NoControl,
+        decafork::failures::NoFailures,
         Rng::new(13),
     );
     let summary =

@@ -2,7 +2,7 @@
 //! (graph × control × failures × engine × runner), at the paper's scales.
 
 use decafork::control::{Decafork, DecaforkPlus};
-use decafork::failures::{Burst, Byzantine, Composite, NoFailures, Probabilistic};
+use decafork::failures::{Burst, Byzantine, Failures, NoFailures, Probabilistic};
 use decafork::graph::generators;
 use decafork::rng::Rng;
 use decafork::sim::engine::{Engine, SimParams};
@@ -21,8 +21,8 @@ fn decafork_survives_the_paper_scenario() {
     let mut e = Engine::new(
         paper_graph(1),
         SimParams::default(),
-        Box::new(Decafork::new(2.0)),
-        Box::new(Burst::paper_default()),
+        Decafork::new(2.0),
+        Burst::paper_default(),
         Rng::new(42),
     );
     e.run_to(10_000);
@@ -40,8 +40,8 @@ fn no_control_goes_extinct_under_continuous_failures() {
     let mut e = Engine::new(
         paper_graph(2),
         SimParams::default(),
-        Box::new(decafork::control::NoControl),
-        Box::new(Probabilistic::new(0.002)),
+        decafork::control::NoControl,
+        Probabilistic::new(0.002),
         Rng::new(7),
     );
     e.run_to(10_000);
@@ -52,15 +52,15 @@ fn no_control_goes_extinct_under_continuous_failures() {
 fn decafork_plus_handles_byzantine_flip() {
     // Fig. 3 scenario: Byzantine node active until t=5000, honest after.
     // Byz starts after the failure-free initialization the paper requires.
-    let failures = Composite::new(vec![
-        Box::new(Burst::paper_default()),
-        Box::new(Byzantine::scheduled(1, vec![(1000, true), (5000, false)])),
+    let failures = Failures::composite(vec![
+        Burst::paper_default().into(),
+        Byzantine::scheduled(1, vec![(1000, true), (5000, false)]).into(),
     ]);
     let mut e = Engine::new(
         paper_graph(3),
         SimParams::default(),
-        Box::new(DecaforkPlus::new(3.25, 5.75)),
-        Box::new(failures),
+        DecaforkPlus::new(3.25, 5.75),
+        failures,
         Rng::new(11),
     );
     e.run_to(10_000);
@@ -78,8 +78,8 @@ fn theta_telemetry_tracks_population() {
     let mut e = Engine::new(
         paper_graph(4),
         SimParams { record_theta: true, ..Default::default() },
-        Box::new(Decafork::new(2.0)),
-        Box::new(NoFailures),
+        Decafork::new(2.0),
+        NoFailures,
         Rng::new(5),
     );
     e.run_to(6000);
@@ -195,16 +195,16 @@ fn probabilistic_failures_fig2_shape() {
 fn engine_conservation_across_scenarios() {
     // Z_t deltas must equal fork-minus-death counts for every step in
     // every scenario (burst, probabilistic, byzantine).
-    let scenarios: Vec<Box<dyn decafork::failures::FailureModel>> = vec![
-        Box::new(Burst::new(vec![(500, 4)])),
-        Box::new(Probabilistic::new(0.001)),
-        Box::new(Byzantine::scheduled(0, vec![(100, true), (900, false)])),
+    let scenarios: Vec<Failures> = vec![
+        Burst::new(vec![(500, 4)]).into(),
+        Probabilistic::new(0.001).into(),
+        Byzantine::scheduled(0, vec![(100, true), (900, false)]).into(),
     ];
     for (i, f) in scenarios.into_iter().enumerate() {
         let mut e = Engine::new(
             Arc::new(generators::random_regular(40, 6, &mut Rng::new(9)).unwrap()),
             SimParams { z0: 8, ..Default::default() },
-            Box::new(DecaforkPlus::new(2.0, 5.0)),
+            DecaforkPlus::new(2.0, 5.0),
             f,
             Rng::new(100 + i as u64),
         );

@@ -98,8 +98,8 @@ fn proposition3_irwin_hall_in_simulator() {
     let mut e = Engine::new(
         g,
         SimParams { record_theta: true, ..Default::default() },
-        Box::new(Decafork::new(2.0)),
-        Box::new(NoFailures),
+        Decafork::new(2.0),
+        NoFailures,
         Rng::new(4),
     );
     e.run_to(8000);
@@ -182,8 +182,8 @@ fn theorem2_bound_dominates_simulated_reaction_time() {
         let mut e = Engine::new(
             g,
             SimParams::default(),
-            Box::new(Decafork::new(2.0)),
-            Box::new(Burst::new(vec![(2000, 5)])),
+            Decafork::new(2.0),
+            Burst::new(vec![(2000, 5)]),
             Rng::new(1000 + seed),
         );
         e.run_to(2000 + bound.max(10_000));
@@ -225,8 +225,8 @@ fn theorem3_growth_bound_holds_in_simulator() {
         let mut e = Engine::new(
             g,
             SimParams::default(),
-            Box::new(Decafork::new(2.0)),
-            Box::new(NoFailures),
+            Decafork::new(2.0),
+            NoFailures,
             Rng::new(2000 + seed),
         );
         e.run_to(horizon as u64);

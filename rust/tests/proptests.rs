@@ -220,8 +220,8 @@ fn prop_engine_z_trace_conserved_and_bounded() {
                 control_start: Some(rng.below(100) as u64),
                 ..Default::default()
             },
-            Box::new(DecaforkPlus::new(1.0 + rng.f64() * 2.0, 4.0 + rng.f64() * 3.0)),
-            Box::new(Probabilistic::new(rng.f64() * 0.005)),
+            DecaforkPlus::new(1.0 + rng.f64() * 2.0, 4.0 + rng.f64() * 3.0),
+            Probabilistic::new(rng.f64() * 0.005),
             rng.split(99),
         );
         e.run_to(800);
@@ -254,12 +254,12 @@ fn prop_walk_positions_always_valid() {
         let mut e = Engine::new(
             g,
             SimParams { z0: 5, ..Default::default() },
-            Box::new(Decafork::new(1.5)),
-            Box::new(Burst::new(vec![(50, 2)])),
+            Decafork::new(1.5),
+            Burst::new(vec![(50, 2)]),
             rng.split(1),
         );
         e.run_to(300);
-        for w in e.walks() {
+        for w in e.snapshot() {
             assert!((w.at as usize) < n, "walk off-graph");
             if let Some(d) = w.died {
                 assert!(d >= w.born);

@@ -1,0 +1,112 @@
+//! Offline stub of the `xla-rs` PJRT bindings.
+//!
+//! The build environment has neither crates.io access nor a PJRT plugin,
+//! so this crate provides just enough of the `xla` API surface for
+//! `decafork::runtime` to compile. Every entry point that would touch a
+//! real accelerator returns an [`Error`] explaining how to enable the
+//! real runtime; nothing in the simulation/control stack depends on it.
+//! All runtime-dependent tests, benches and examples gate on
+//! `artifacts_present()` and skip before reaching these stubs.
+//!
+//! To enable real execution, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual bindings; the API below matches the
+//! call sites in `decafork::runtime` one-to-one.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type for all stubbed PJRT operations.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: decafork was built with the offline `xla` stub \
+         (rust/vendor/xla). Point the `xla` dependency at the real PJRT bindings \
+         and run `make artifacts` to enable the learning runtime."
+    ))
+}
+
+/// Stub of the PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("XLA compilation"))
+    }
+}
+
+/// Stub of a parsed HLO module.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+/// Stub of an XLA computation.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// Stub of a compiled, loaded executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+/// Stub of a device buffer.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("device-to-host transfer"))
+    }
+}
+
+/// Stub of a host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable("literal reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("tuple destructuring"))
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        Err(unavailable("tuple destructuring"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable("literal readback"))
+    }
+}
