@@ -1,0 +1,139 @@
+//! Control-path throughput: survival-cached θ̂ (arena engine) vs direct
+//! θ̂ (frozen reference engine) on the **control-bound** workloads —
+//! DECAFORK / DECAFORK+ at Z0 = 256 on a 1000-node churn scenario, both
+//! survival families (`presets::perf_control_{geometric,empirical}`).
+//! This is the regime `perf_engine` deliberately avoids (its PeriodicFork
+//! scenario keeps the workload engine-bound); here the Θ(known-walks)
+//! estimator *is* the cost, and the measurement isolates what the
+//! [`SurvivalTable`] memo + SoA node columns buy.
+//!
+//! Both engines are built from the same `Scenario` (identical graph and
+//! RNG streams); the bench **asserts byte-identical z-traces** before
+//! reporting any number — a perf win that changes a single fork decision
+//! is a bug, not a result.
+//!
+//! Also reports the arena-only `scale_10k` probe (10k nodes, 1024 walks)
+//! as absolute steps/sec; the reference engine at that size runs minutes
+//! per attempt and would tell us nothing new.
+//!
+//! Writes `BENCH_control.json` (to the bench's working directory — the
+//! `rust/` package root under cargo — or to `$DECAFORK_BENCH_OUT`).
+//! Acceptance bar: speedup ≥ 3.0 on both control-bound scenarios,
+//! **enforced** — the bench exits nonzero below the bar, so the CI
+//! smoke step is a real perf gate.
+//!
+//! Env knobs: `DECAFORK_PERF_STEPS` rescales every horizon
+//! ([`Scenario::rescale_to`] — burst times, control warm-up and the
+//! step count shrink proportionally), `DECAFORK_BENCH_OUT` sets the
+//! JSON path, `DECAFORK_PERF_NO_ENFORCE=1` downgrades the gate to a
+//! report.
+//!
+//! [`SurvivalTable`]: decafork::stats::SurvivalTable
+
+use decafork::scenario::{presets, Scenario};
+use std::time::Instant;
+
+struct Pair {
+    name: &'static str,
+    reference_sps: f64,
+    arena_sps: f64,
+    speedup: f64,
+}
+
+/// Run reference (direct θ̂) then arena (cached θ̂) and demand identical
+/// traces before trusting the clock.
+fn run_pair(name: &'static str, scenario: &Scenario) -> anyhow::Result<Pair> {
+    let horizon = scenario.horizon;
+
+    // Clocks cover only the stepping: graph generation and node-state
+    // allocation are identical setup work on both sides and would bias
+    // the short smoke runs toward 1.0x.
+    let mut reference = scenario.reference_engine(0)?;
+    let t0 = Instant::now();
+    reference.run_to(horizon);
+    let dt_ref = t0.elapsed().as_secs_f64();
+
+    let mut arena = scenario.engine(0)?;
+    let t0 = Instant::now();
+    arena.run_to(horizon);
+    let dt_arena = t0.elapsed().as_secs_f64();
+
+    assert_eq!(
+        arena.trace().z,
+        reference.trace().z,
+        "{name}: cached θ̂ diverged from direct — perf numbers would be meaningless"
+    );
+    assert_eq!(arena.trace().extinct, reference.trace().extinct, "{name}: extinction flag");
+    assert_eq!(arena.trace().capped, reference.trace().capped, "{name}: cap flag");
+
+    let reference_sps = horizon as f64 / dt_ref;
+    let arena_sps = horizon as f64 / dt_arena;
+    let speedup = arena_sps / reference_sps;
+    println!("{name}: {} steps, final z = {}", horizon, arena.alive());
+    println!("  reference (direct θ̂) : {reference_sps:>12.1} steps/s  ({dt_ref:.2}s)");
+    println!("  arena (cached θ̂)     : {arena_sps:>12.1} steps/s  ({dt_arena:.2}s)");
+    println!("  speedup              : {speedup:>12.2}x  (acceptance bar: >= 3.0x)");
+    Ok(Pair { name, reference_sps, arena_sps, speedup })
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
+        .ok()
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .map(|s| s.max(200));
+
+    let mut geometric = presets::perf_control_geometric();
+    let mut empirical = presets::perf_control_empirical();
+    let mut scale = presets::scale_10k();
+    if let Some(steps) = quick_steps {
+        geometric.rescale_to(steps);
+        empirical.rescale_to(steps);
+        // The 10k-node probe is ~4x the per-step work; keep smoke runs
+        // inside a CI minute.
+        scale.rescale_to((steps / 2).max(100));
+    }
+
+    println!("perf_control: θ̂-bound workloads, cached vs direct estimator\n");
+    let pairs = [
+        run_pair("perf_control_geometric", &geometric)?,
+        run_pair("perf_control_empirical", &empirical)?,
+    ];
+
+    // Arena-only scale probe (again, clock excludes the graph build).
+    let mut big = scale.engine(0)?;
+    let t0 = Instant::now();
+    big.run_to(scale.horizon);
+    let dt_big = t0.elapsed().as_secs_f64();
+    let big_sps = scale.horizon as f64 / dt_big;
+    println!("scale_10k: {} steps, final z = {}", scale.horizon, big.alive());
+    println!("  arena (cached θ̂)     : {big_sps:>12.1} steps/s  ({dt_big:.2}s, arena-only)");
+
+    let pass = pairs.iter().all(|p| p.speedup >= 3.0);
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_control.json".into());
+    let scenarios = pairs
+        .iter()
+        .map(|p| {
+            format!(
+                "    \"{}\": {{\n      \"reference_steps_per_sec\": {:.1},\n      \"arena_steps_per_sec\": {:.1},\n      \"speedup\": {:.3}\n    }}",
+                p.name, p.reference_sps, p.arena_sps, p.speedup
+            )
+        })
+        .collect::<Vec<_>>()
+        .join(",\n");
+    let json = format!(
+        "{{\n  \"bench\": \"perf_control\",\n  \"workload\": \"1000-node churn, Z0=256, DECAFORK/DECAFORK+, both survival families\",\n  \"steps\": {},\n  \"scenarios\": {{\n{scenarios},\n    \"scale_10k\": {{\n      \"graph\": \"random-regular n=10000 d=8\",\n      \"z0\": 1024,\n      \"steps\": {},\n      \"arena_steps_per_sec\": {:.1}\n    }}\n  }},\n  \"acceptance_min_speedup\": 3.0,\n  \"pass\": {pass}\n}}\n",
+        geometric.horizon, scale.horizon, big_sps
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    // The gate is a gate: a regression below the bar fails the bench
+    // (and the CI smoke step) instead of hiding in an artifact nobody
+    // reads. `DECAFORK_PERF_NO_ENFORCE=1` downgrades it to a report for
+    // exploratory runs on busy machines.
+    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
+        anyhow::bail!("perf_control below the 3.0x acceptance bar — see {out}");
+    }
+    Ok(())
+}

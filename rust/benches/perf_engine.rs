@@ -46,19 +46,12 @@ fn main() -> anyhow::Result<()> {
     // ------------------------------------------------------------------
     let mut scenario = presets::perf_hot_loop();
     if let Ok(steps) = std::env::var("DECAFORK_PERF_STEPS") {
-        // Floor keeps the scaled burst times nonzero (t=0 bursts never
-        // fire — the engine starts at t=1) so the 30%-burst component
-        // the JSON describes is always present.
-        let steps: u64 = steps.parse::<u64>()?.max(100);
-        scenario.horizon = steps;
-        // Keep the 30%-cumulative-burst + continuous-churn shape at any
-        // horizon (control warm-up scales to the first fifth).
-        scenario.failures = decafork::scenario::FailureSpec::Composite(vec![
-            decafork::scenario::FailureSpec::Burst {
-                events: vec![(steps * 3 / 10, 26), (steps * 11 / 20, 26), (steps * 8 / 10, 25)],
-            },
-            decafork::scenario::FailureSpec::Probabilistic { p_f: 0.004 },
-        ]);
+        // Proportional shrink via the shared scenario-layer helper:
+        // burst times scale with the horizon (floored so t=0 bursts —
+        // which never fire, the engine starts at t=1 — cannot appear),
+        // the per-hop churn rate stays, so the 30%-cumulative-burst +
+        // continuous-churn shape holds at any horizon.
+        scenario.rescale_to(steps.parse::<u64>()?.max(100));
     }
     let horizon = scenario.horizon;
     println!(

@@ -1,11 +1,19 @@
 //! Estimator micro-bench: θ̂ evaluations/second for each survival model
-//! and walk-table size — the innermost loop of every control decision.
+//! and walk-table size — the innermost loop of every control decision —
+//! with the survival-cached path (`NodeState::new`, SurvivalTable memo)
+//! benched against the direct path (`NodeState::new_uncached`, the seed
+//! arithmetic). The `cached/direct` column is the microscopic version of
+//! what `perf_control` measures end-to-end.
 
 use decafork::rng::Rng;
 use decafork::walks::{NodeState, SurvivalModel, WalkId};
 
-fn bench(model: SurvivalModel, known: usize, iters: u64) -> f64 {
-    let mut s = NodeState::new(16, model);
+fn bench(model: SurvivalModel, known: usize, iters: u64, cached: bool) -> f64 {
+    let mut s = if cached {
+        NodeState::new(16, model)
+    } else {
+        NodeState::new_uncached(16, model)
+    };
     let mut rng = Rng::new(3);
     for w in 0..known as u64 {
         s.observe(rng.below(1000) as u64, WalkId(w), (w % 16) as u16);
@@ -17,7 +25,11 @@ fn bench(model: SurvivalModel, known: usize, iters: u64) -> f64 {
     let mut acc = 0.0f64;
     let t0 = std::time::Instant::now();
     for i in 0..iters {
-        acc += s.theta(2000 + i % 64, WalkId(i % known as u64));
+        // Query just past the observe window (last-seen ∈ [0, 1000)), so
+        // empirical dt values land *inside* the CDF support (geometric
+        // q=0.01 samples reach ~700+) and the loop measures real survival
+        // lookups, not the beyond-support skip path.
+        acc += s.theta(1000 + i % 64, WalkId(i % known as u64));
     }
     let dt = t0.elapsed();
     std::hint::black_box(acc);
@@ -26,15 +38,20 @@ fn bench(model: SurvivalModel, known: usize, iters: u64) -> f64 {
 
 fn main() {
     println!("perf_estimator: theta() evaluations/second\n");
-    println!("{:<28} {:>10} {:>16}", "model", "known", "theta/s");
+    println!(
+        "{:<28} {:>10} {:>16} {:>16} {:>10}",
+        "model", "known", "direct/s", "cached/s", "ratio"
+    );
     for known in [10usize, 40, 200] {
         for (name, model) in [
             ("empirical", SurvivalModel::Empirical),
             ("geometric", SurvivalModel::Geometric { q: 0.01 }),
             ("exponential", SurvivalModel::Exponential { lambda: 0.01 }),
         ] {
-            let rate = bench(model, known, 2_000_000);
-            println!("{:<28} {:>10} {:>16.3e}", name, known, rate);
+            let direct = bench(model, known, 2_000_000, false);
+            let cached = bench(model, known, 2_000_000, true);
+            let ratio = cached / direct;
+            println!("{name:<28} {known:>10} {direct:>16.3e} {cached:>16.3e} {ratio:>9.2}x");
         }
     }
 }

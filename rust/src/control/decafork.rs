@@ -34,9 +34,17 @@ impl Decafork {
         Decafork { epsilon: design_epsilon(z0, delta), p: None }
     }
 
+    /// The per-decision fork/termination probability. `z0 = 0` yields
+    /// 0.0, not `1/0 = inf`: a zero-walk target means "never act" (an
+    /// infinite probability would make `Rng::bernoulli` fire always and
+    /// fork from a population that should not exist).
     #[inline]
     pub(crate) fn fork_prob(&self, z0: u32) -> f64 {
-        self.p.unwrap_or(1.0 / z0 as f64)
+        match self.p {
+            Some(p) => p,
+            None if z0 == 0 => 0.0,
+            None => 1.0 / z0 as f64,
+        }
     }
 }
 
@@ -182,6 +190,33 @@ mod tests {
         }
         let rate = forks as f64 / trials as f64;
         assert!((rate - 0.1).abs() < 0.01, "rate {rate}");
+    }
+
+    #[test]
+    fn zero_z0_never_forks() {
+        // 1/Z0 with Z0 = 0 used to be +inf; the guard maps it to "never".
+        let alg = Decafork::new(2.0);
+        assert_eq!(alg.fork_prob(0), 0.0);
+        assert!(alg.fork_prob(0).is_finite());
+        // An explicit p overrides the guard (the caller opted out of 1/Z0).
+        let forced = Decafork { epsilon: 2.0, p: Some(1.0) };
+        assert_eq!(forced.fork_prob(0), 1.0);
+        // End-to-end: a collapsed estimate with z0 = 0 must still not fork.
+        let mut alg = Decafork::new(2.0);
+        let mut s = state_with_walks(10, 0, 0.05);
+        let mut rng = Rng::new(6);
+        let mut ctx = VisitCtx {
+            t: 2000,
+            node: 0,
+            walk: WalkId(0),
+            slot: 0,
+            z0: 0,
+            state: &mut s,
+            rng: &mut rng,
+        };
+        let d = alg.on_visit(&mut ctx);
+        assert!(d.forks.is_empty(), "z0=0 forked: {d:?}");
+        assert!(d.theta.unwrap() < 2.0, "theta should be collapsed in this setup");
     }
 
     #[test]

@@ -107,6 +107,46 @@ impl Scenario {
         let failures = self.failures.build();
         Ok(ReferenceEngine::new(graph, self.params.clone(), control, failures, srng))
     }
+
+    /// Shrink (or stretch) the experiment to `steps` keeping its shape:
+    /// the horizon, the control warm-up and every burst time scale by
+    /// the same factor (floored at 1 so t=0 bursts — which never fire,
+    /// the engine starts at t=1 — cannot appear). Continuous failure
+    /// rates are left alone: they are per-step quantities. One shared
+    /// implementation for every bench's `DECAFORK_PERF_STEPS` quick
+    /// mode, so smoke runs exercise the same scenario shape everywhere.
+    pub fn rescale_to(&mut self, steps: u64) {
+        let old = self.horizon;
+        if steps == old || old == 0 {
+            return;
+        }
+        let scale = move |t: u64| ((t as u128 * steps as u128) / old as u128).max(1) as u64;
+        fn walk(f: &mut FailureSpec, scale: &dyn Fn(u64) -> u64) {
+            match f {
+                FailureSpec::Burst { events } => {
+                    for e in events.iter_mut() {
+                        e.0 = scale(e.0);
+                    }
+                }
+                FailureSpec::ByzantineScheduled { schedule, .. } => {
+                    for s in schedule.iter_mut() {
+                        s.0 = scale(s.0);
+                    }
+                }
+                FailureSpec::Composite(parts) => {
+                    for p in parts.iter_mut() {
+                        walk(p, scale);
+                    }
+                }
+                _ => {}
+            }
+        }
+        walk(&mut self.failures, &scale);
+        if let Some(cs) = self.params.control_start {
+            self.params.control_start = Some(scale(cs));
+        }
+        self.horizon = steps;
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +175,27 @@ mod tests {
             e.into_trace().z
         };
         assert_ne!(z1, z3);
+    }
+
+    #[test]
+    fn rescale_keeps_shape() {
+        let mut s = presets::perf_control_geometric();
+        s.rescale_to(1000);
+        assert_eq!(s.horizon, 1000);
+        assert_eq!(s.params.control_start, Some(100)); // 500 · 1000/5000
+        match &s.failures {
+            FailureSpec::Composite(parts) => match &parts[0] {
+                FailureSpec::Burst { events } => {
+                    assert_eq!(events.as_slice(), &[(300, 26), (550, 26), (800, 25)]);
+                }
+                other => panic!("expected burst, got {other:?}"),
+            },
+            other => panic!("expected composite, got {other:?}"),
+        }
+        // Identity rescale is a no-op.
+        let before = format!("{:?}", s.failures);
+        s.rescale_to(1000);
+        assert_eq!(format!("{:?}", s.failures), before);
     }
 
     #[test]

@@ -1,10 +1,12 @@
-//! Named scenarios: the paper's figure setups, the perf workload the
-//! engine is benchmarked on, and the golden determinism-lock trio. Keeping
-//! them here means the CLI, the figure harness, the benches and the tests
-//! all run the *same* experiment when they say the same name.
+//! Named scenarios: the paper's figure setups, the perf workloads the
+//! engine and the control stack are benchmarked on (`perf_hot_loop`,
+//! `perf_control_*`, `scale_10k`), and the golden determinism-lock
+//! quartet. Keeping them here means the CLI, the figure harness, the
+//! benches and the tests all run the *same* experiment when they say the
+//! same name.
 
 use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
-use crate::sim::engine::SimParams;
+use crate::sim::engine::{SimParams, SurvivalSpec};
 
 /// Paper Fig. 1 base setup: 8-regular n=100, Z0=10, DECAFORK ε=2,
 /// bursts −5 @ 2000 and −6 @ 6000, 10k-step horizon.
@@ -65,12 +67,109 @@ pub fn perf_hot_loop() -> Scenario {
     }
 }
 
-/// The three seeded scenarios whose `Trace::z` vectors are the
+/// The **control-bound** perf workloads (ISSUE 2): same 1000-node churn
+/// shape as [`perf_hot_loop`], but driven by the θ̂-computing control
+/// families at Z0 = 256 — the regime `perf_hot_loop` deliberately avoids
+/// because DECAFORK's Θ(known-walks) estimator dominates everything
+/// else. `benches/perf_control.rs` runs arena (survival-cached θ̂) vs
+/// reference (direct θ̂) on these, asserts byte-identical traces, and
+/// writes `BENCH_control.json` (bar: ≥ 3×).
+///
+/// Analytic-geometric family: every θ̂ term is an `exp` on the direct
+/// path, an indexed load on the cached one. Plain DECAFORK.
+///
+/// Tuning: q = π_i = 0.001 here, so survival decays on the E[R] ≈ 1000
+/// step scale while per-hop churn kills on the 1/p_f scale — p_f is kept
+/// at 5e-4 (E[R] ≪ 1/p_f) so the estimator outpaces attrition and the
+/// population rides out the three 10% bursts instead of sliding to
+/// extinction. ε = 110 ≈ the Irwin–Hall(255) mean 128 minus ~4σ
+/// (σ = √(255/12) ≈ 4.6) — the normal-approximation design point; the
+/// exact alternating-sum quantile is numerically unreliable at n = 255.
+pub fn perf_control_geometric() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 1000, d: 8 },
+        params: SimParams {
+            z0: 256,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(500),
+            max_walks: 2048,
+            ..SimParams::default()
+        },
+        control: ControlSpec::Decafork { epsilon: 110.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(1500, 26), (2750, 26), (4000, 25)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 5000,
+        runs: 1,
+        seed: 0xCAFE0,
+    }
+}
+
+/// Control-bound workload, empirical family (the paper default): every
+/// θ̂ term is a cached-CDF lookup + division on the direct path, an
+/// indexed load on the cached one — and the memo is regularly
+/// invalidated by return-time samples, so this scenario exercises the
+/// epoch-tracking machinery, not just steady-state replay. DECAFORK+
+/// (ε₂ = mean + ~4σ) bounds the early over-fork transient that the
+/// empirical model's short warm-up support produces.
+pub fn perf_control_empirical() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 1000, d: 8 },
+        params: SimParams {
+            z0: 256,
+            survival: SurvivalSpec::Empirical,
+            control_start: Some(500),
+            max_walks: 2048,
+            ..SimParams::default()
+        },
+        control: ControlSpec::DecaforkPlus { epsilon: 110.0, epsilon2: 146.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(1500, 26), (2750, 26), (4000, 25)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 5000,
+        runs: 1,
+        seed: 0xCAFE1,
+    }
+}
+
+/// Scale probe: 10k nodes, 1024 walks, DECAFORK+ on the empirical
+/// family. Arena-only in the bench (the reference engine's direct θ̂ at
+/// this size is minutes per run, not seconds) — reported as absolute
+/// steps/sec to track the production-scale trajectory. Thresholds are
+/// the Irwin–Hall(1023) normal-approximation design points
+/// (mean 512, σ ≈ 9.2).
+pub fn scale_10k() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 10_000, d: 8 },
+        params: SimParams {
+            z0: 1024,
+            survival: SurvivalSpec::Empirical,
+            control_start: Some(500),
+            max_walks: 4096,
+            ..SimParams::default()
+        },
+        control: ControlSpec::DecaforkPlus { epsilon: 476.0, epsilon2: 548.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(800, 102), (1400, 102)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 2000,
+        runs: 1,
+        seed: 0xCAFE2,
+    }
+}
+
+/// The four seeded scenarios whose `Trace::z` vectors are the
 /// determinism lock (`tests/golden_traces.rs`): the arena engine must
 /// reproduce the frozen reference engine on all of them, byte for byte.
 /// Chosen to cover the three failure surfaces (pre-step bursts, per-hop
-/// probabilistic losses, Byzantine arrivals) and all control families
-/// that fork (DECAFORK, DECAFORK+, MISSINGPERSON).
+/// probabilistic losses, Byzantine arrivals), all control families that
+/// fork (DECAFORK, DECAFORK+, MISSINGPERSON), and — via the
+/// DECAFORK-heavy churn scenario — the survival-cached θ̂ path against
+/// the reference's direct evaluation under sustained empirical-CDF
+/// growth.
 pub fn golden() -> Vec<(&'static str, Scenario)> {
     vec![
         (
@@ -114,6 +213,35 @@ pub fn golden() -> Vec<(&'static str, Scenario)> {
             },
         ),
         (
+            "churn_decafork_empirical",
+            // The survival-cache workout (ISSUE 2): plain DECAFORK on
+            // the empirical family under *sustained* per-hop churn, so
+            // the return-time CDF keeps gaining samples for the whole
+            // run — every insert can invalidate the θ̂ memo, and the
+            // arena engine's cached sums must still match the
+            // reference's direct ones bit-for-bit through hundreds of
+            // epoch changes. E[R] = 80 here vs 1/p_f = 500, so the
+            // estimator tracks attrition comfortably; the two ~35%
+            // bursts exercise recovery forking on top of the steady
+            // drip. ε = 3.5 ≈ Irwin–Hall(15) mean 8 minus ~4σ.
+            Scenario {
+                graph: GraphSpec::RandomRegular { n: 80, d: 8 },
+                params: SimParams {
+                    z0: 16,
+                    control_start: Some(200),
+                    ..SimParams::default()
+                },
+                control: ControlSpec::Decafork { epsilon: 3.5 },
+                failures: FailureSpec::Composite(vec![
+                    FailureSpec::Probabilistic { p_f: 0.002 },
+                    FailureSpec::Burst { events: vec![(600, 6), (1500, 5)] },
+                ]),
+                horizon: 2500,
+                runs: 1,
+                seed: 1337,
+            },
+        ),
+        (
             "bursts_missingperson",
             // MISSINGPERSON detects via slot staleness only, so its
             // reaction lag is several E[R] (= 60 here); instantaneous
@@ -151,5 +279,35 @@ mod tests {
             assert!(s.engine(0).is_ok(), "golden scenario {name} failed to build");
             assert!(s.reference_engine(0).is_ok(), "reference {name} failed to build");
         }
+    }
+
+    #[test]
+    fn perf_control_presets_build_engines() {
+        // Small stand-ins are not possible here (the preset IS the
+        // workload), but graph construction + wiring must not regress.
+        // scale_10k is exercised build-only too: a 10k-node random
+        // regular graph builds in well under a second.
+        for (name, s) in [
+            ("perf_control_geometric", perf_control_geometric()),
+            ("perf_control_empirical", perf_control_empirical()),
+            ("scale_10k", scale_10k()),
+        ] {
+            let e = s.engine(0);
+            assert!(e.is_ok(), "{name} failed to build: {:?}", e.err());
+        }
+        // The control-bound pair must be reference-buildable as well —
+        // perf_control benches arena against reference on them.
+        assert!(perf_control_geometric().reference_engine(0).is_ok());
+        assert!(perf_control_empirical().reference_engine(0).is_ok());
+    }
+
+    #[test]
+    fn golden_includes_survival_cache_workout() {
+        // The determinism lock must keep exercising the cached θ̂ path
+        // under empirical-CDF growth (ISSUE 2 satellite); guard against
+        // the scenario being dropped or renamed silently.
+        let names: Vec<&str> = golden().into_iter().map(|(n, _)| n).collect();
+        assert!(names.contains(&"churn_decafork_empirical"), "{names:?}");
+        assert_eq!(names.len(), 4);
     }
 }

@@ -179,6 +179,10 @@ impl Engine {
             };
             arena.spawn(at, 0, Lineage::Original { slot: slot as u16 });
         }
+        // Cached θ̂: per-node SurvivalTable memo — bit-identical to the
+        // reference engine's direct evaluation (golden-trace lock), but
+        // each survival term is an indexed load instead of an exp/CDF
+        // division (`benches/perf_control.rs` measures the gap).
         let states = (0..n)
             .map(|i| NodeState::new(z0 as usize, params.survival.resolve(&graph, i)))
             .collect();

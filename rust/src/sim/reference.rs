@@ -14,9 +14,14 @@
 //!    scenario (`BENCH_engine.json`).
 //!
 //! Scope of the freeze: this file pins the seed **engine core** (walk
-//! storage, step loop, kill path, id scheme). Control and failure
-//! *implementations* are shared with the arena engine — the lock proves
-//! engine-core equivalence, not historical control behavior. One shared
+//! storage, step loop, kill path, id scheme) **and the direct θ̂
+//! arithmetic path**: node states are built with
+//! [`NodeState::new_uncached`], so every survival term is computed the
+//! seed way (no [`SurvivalTable`](crate::stats::SurvivalTable) memo) and
+//! the golden-trace lock doubles as a cached-vs-direct equivalence
+//! proof. Control and failure *implementations* are shared with the
+//! arena engine — the lock proves engine-core equivalence, not
+//! historical control behavior. One shared
 //! implementation changed in the same PR: `PeriodicFork` now staggers
 //! node phases (see `control/mod.rs`), so seed-era periodic-strawman
 //! traces (ablation_strawman) are not reproducible bit-for-bit; none of
@@ -81,8 +86,13 @@ impl ReferenceEngine {
                 payload: None,
             });
         }
+        // Seed semantics: θ̂ is evaluated directly, term by term — no
+        // survival memo existed. Keeping the reference on the uncached
+        // path makes the golden-trace lock prove cached-vs-direct θ̂
+        // equivalence end-to-end, and gives `perf_control` its before
+        // side.
         let states = (0..n)
-            .map(|i| NodeState::new(z0 as usize, params.survival.resolve(&graph, i)))
+            .map(|i| NodeState::new_uncached(z0 as usize, params.survival.resolve(&graph, i)))
             .collect();
         let mut trace = Trace::default();
         trace.z.push(z0);

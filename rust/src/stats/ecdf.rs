@@ -36,6 +36,14 @@ pub struct EmpiricalCdf {
     cache: Vec<u64>,
     cache_total: u64,
     stale: u64,
+    /// Number of cache rebuilds so far — the survival function's change
+    /// counter. Between rebuilds (and max-value growth notwithstanding)
+    /// every `&mut`-path query returns values from the same frozen
+    /// `(cache, cache_total)` pair, so downstream memos
+    /// ([`SurvivalTable`](crate::stats::SurvivalTable)) are valid exactly
+    /// while this counter (and, pre-first-rebuild, `total`) holds still.
+    /// See [`survival_epoch`](Self::survival_epoch).
+    rebuilds: u64,
 }
 
 impl EmpiricalCdf {
@@ -104,6 +112,57 @@ impl EmpiricalCdf {
         }
         self.cache_total = self.total;
         self.stale = 0;
+        self.rebuilds += 1;
+    }
+
+    /// Apply the pending lazy rebuild (the same trigger `cdf`/`survival`
+    /// use) and return an **epoch** identifying the current observable
+    /// survival function. Contract, relied on by
+    /// [`SurvivalTable`](crate::stats::SurvivalTable)-backed θ̂
+    /// (`NodeState::theta`):
+    ///
+    /// * while the epoch is unchanged, `survival(x)` returns bit-identical
+    ///   values for every `x < max_observed()` (values at `x ≥
+    ///   max_observed()` are identically 0.0 in every epoch, and a growing
+    ///   `max_observed` cannot change them: the pre-growth cache already
+    ///   maps that range to 0);
+    /// * any mutation that can change those values advances the epoch.
+    ///
+    /// Two regimes, disambiguated by parity so their counters never
+    /// collide: before the first rebuild the cache is empty and queries
+    /// fall through to the Fenwick tree, which reflects every insert
+    /// immediately — the epoch is `(total << 1) | 1`. From the first
+    /// rebuild on, values come from the frozen `(cache, cache_total)`
+    /// snapshot and change only at the next rebuild — the epoch is
+    /// `rebuilds << 1`. Neither is ever 0 when queried with samples
+    /// present, so 0 serves as the "pristine memo" epoch.
+    ///
+    /// Callers must invoke this **before** reading memoised values and
+    /// only at points where the direct path would issue a below-maximum
+    /// query (the lazy trigger fires for those queries only) — see the
+    /// invariants note in `DESIGN.md` §Survival cache.
+    #[inline]
+    pub fn survival_epoch(&mut self) -> u64 {
+        if self.rebuild_pending() {
+            self.rebuild_cache();
+        }
+        if self.cache.is_empty() {
+            (self.total << 1) | 1
+        } else {
+            self.rebuilds << 1
+        }
+    }
+
+    /// The lazy-rebuild trigger: pending inserts exceed 1/64 of the
+    /// sample count (or of the histogram length, whichever is larger —
+    /// a large sparse support should not rebuild per insert). **One**
+    /// definition, shared by `cdf`, `survival` and `survival_epoch`:
+    /// the cached≡direct θ̂ bit-equality contract requires all three to
+    /// rebuild on exactly the same schedule, so the condition must not
+    /// be able to drift between call sites.
+    #[inline]
+    fn rebuild_pending(&self) -> bool {
+        self.total > 0 && self.stale * 64 >= self.total.max(self.counts.len() as u64)
     }
 
     /// Number of recorded observations.
@@ -127,7 +186,7 @@ impl EmpiricalCdf {
         if self.total == 0 {
             return 0.0;
         }
-        if self.stale * 64 >= self.total.max(self.counts.len() as u64) {
+        if self.rebuild_pending() {
             self.rebuild_cache();
         }
         if self.cache.is_empty() {
@@ -164,7 +223,7 @@ impl EmpiricalCdf {
         if x >= self.max_value {
             return 0.0;
         }
-        if self.stale * 64 >= self.total.max(self.counts.len() as u64) {
+        if self.rebuild_pending() {
             self.rebuild_cache();
         }
         if self.cache.is_empty() {

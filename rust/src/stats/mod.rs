@@ -1,15 +1,18 @@
 //! Statistics toolbox: the per-node empirical return-time distribution
-//! (the heart of DECAFORK's estimator), the Irwin–Hall distribution used
-//! for threshold design (Prop. 3), maximum-likelihood fits for the
-//! exponential/geometric relaxations of Assumption 1, and small numeric
-//! helpers (ln-gamma, ln-binomial, summary statistics).
+//! (the heart of DECAFORK's estimator), the lazy survival-value memo
+//! backing cached θ̂ evaluation ([`SurvivalTable`]), the Irwin–Hall
+//! distribution used for threshold design (Prop. 3), maximum-likelihood
+//! fits for the exponential/geometric relaxations of Assumption 1, and
+//! small numeric helpers (ln-gamma, ln-binomial, summary statistics).
 
 pub mod ecdf;
 pub mod fit;
 pub mod irwin_hall;
+pub mod survival_table;
 
 pub use ecdf::EmpiricalCdf;
 pub use irwin_hall::IrwinHall;
+pub use survival_table::SurvivalTable;
 
 /// Natural log of the gamma function (Lanczos approximation, g=7, n=9).
 /// Accurate to ~1e-13 over the positive reals — ample for CDF work.

@@ -1,0 +1,180 @@
+//! Lazy per-node memo `dt → S(dt)` for the DECAFORK estimator.
+//!
+//! Eq. (1) evaluates one survival value per known walk on **every**
+//! control decision. The survival function itself is cheap to describe
+//! but not to compute: a transcendental `exp` per term for the analytic
+//! models, a cached-CDF lookup with a division for the empirical one.
+//! At production walk counts (Z0 = 256+) that arithmetic dominates the
+//! whole step loop (DESIGN.md §Perf iteration 6).
+//!
+//! The fix is a memo table indexed by the integer elapsed time `dt`:
+//! each θ̂ term becomes one bounds-checked load, with the expensive
+//! computation run once per distinct `dt` per invalidation epoch. The
+//! table stays small and hot because [`NodeState::prune`] bounds the
+//! `dt` of live last-seen entries to the survival horizon (plus at most
+//! one prune interval of slack).
+//!
+//! ## Determinism contract
+//!
+//! The table stores **exactly** the `f64` the direct code path would
+//! have produced — the fill closure *is* the direct computation, called
+//! on miss — so a memoised θ̂ sum is bit-identical to the uncached one.
+//! That only holds while the underlying survival function does not
+//! change; the owner must [`sync`](SurvivalTable::sync) the table with
+//! an epoch that advances whenever the function's observable values can
+//! change:
+//!
+//! * analytic models (geometric / exponential): parameters are fixed at
+//!   construction, the function is pure — the epoch never advances and
+//!   the table is never cleared;
+//! * empirical model: the observable values of
+//!   [`EmpiricalCdf::survival`](crate::stats::EmpiricalCdf::survival)
+//!   change only at lazy cache rebuilds (and, before the first rebuild,
+//!   on every insert) — [`EmpiricalCdf::survival_epoch`] encodes exactly
+//!   that, see the invariants note in `DESIGN.md` §Survival cache.
+//!
+//! [`NodeState::prune`]: crate::walks::NodeState::prune
+//! [`EmpiricalCdf::survival_epoch`]: crate::stats::EmpiricalCdf::survival_epoch
+
+/// Memoised survival values for one node, indexed by elapsed time `dt`.
+///
+/// `f64::NAN` marks an unfilled slot (survival values are probabilities
+/// in `[0, 1]`, never NaN). Entries beyond [`Self::MAX_DT`] are not
+/// memoised — the fill closure runs every time — so pathological `dt`
+/// ranges (prune disabled, huge horizons) cost compute, never memory.
+#[derive(Debug, Clone, Default)]
+pub struct SurvivalTable {
+    values: Vec<f64>,
+    epoch: u64,
+}
+
+impl SurvivalTable {
+    /// Largest memoised `dt` (exclusive). 2¹⁶ entries = 512 KiB/node
+    /// worst case, far beyond any pruned table's live `dt` range.
+    pub const MAX_DT: usize = 1 << 16;
+
+    /// Empty table, valid for epoch 0 (the pristine epoch — real epochs
+    /// from [`EmpiricalCdf::survival_epoch`] are never 0, so the first
+    /// sync of an empirical table always clears the — empty — memo).
+    ///
+    /// [`EmpiricalCdf::survival_epoch`]: crate::stats::EmpiricalCdf::survival_epoch
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Re-validate the memo against the survival function's current
+    /// epoch, dropping every stored value if it advanced. Keeps the
+    /// allocation — refills after an invalidation reuse the buffer.
+    #[inline]
+    pub fn sync(&mut self, epoch: u64) {
+        if self.epoch != epoch {
+            self.values.clear();
+            self.epoch = epoch;
+        }
+    }
+
+    /// The memoised value for `dt`, computing and storing it via `fill`
+    /// on first use. `fill` must be the direct computation — its result
+    /// is returned (and replayed) verbatim.
+    #[inline]
+    pub fn lookup(&mut self, dt: u32, fill: impl FnOnce(u32) -> f64) -> f64 {
+        let i = dt as usize;
+        if i >= Self::MAX_DT {
+            return fill(dt);
+        }
+        if i >= self.values.len() {
+            self.values.resize(i + 1, f64::NAN);
+        }
+        let v = self.values[i];
+        if v.is_nan() {
+            let v = fill(dt);
+            self.values[i] = v;
+            v
+        } else {
+            v
+        }
+    }
+
+    /// Number of table slots currently allocated (filled or not).
+    pub fn capacity(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Number of filled (memoised) entries.
+    pub fn filled(&self) -> usize {
+        self.values.iter().filter(|v| !v.is_nan()).count()
+    }
+
+    /// The epoch the stored values belong to.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_fills_once_and_replays() {
+        let mut t = SurvivalTable::new();
+        let mut calls = 0;
+        let mut get = |t: &mut SurvivalTable, dt| {
+            t.lookup(dt, |d| {
+                calls += 1;
+                1.0 / (d as f64 + 1.0)
+            })
+        };
+        let a = get(&mut t, 7);
+        let b = get(&mut t, 7);
+        assert_eq!(a.to_bits(), b.to_bits());
+        assert_eq!(calls, 1, "second lookup must not recompute");
+        assert_eq!(t.filled(), 1);
+        assert!(t.capacity() >= 8);
+    }
+
+    #[test]
+    fn sync_same_epoch_keeps_values() {
+        let mut t = SurvivalTable::new();
+        t.lookup(3, |_| 0.25);
+        t.sync(t.epoch());
+        assert_eq!(t.filled(), 1);
+    }
+
+    #[test]
+    fn sync_new_epoch_invalidates() {
+        let mut t = SurvivalTable::new();
+        t.lookup(3, |_| 0.25);
+        t.sync(5);
+        assert_eq!(t.filled(), 0);
+        assert_eq!(t.epoch(), 5);
+        // Refill under the new epoch sees the new function.
+        assert_eq!(t.lookup(3, |_| 0.75), 0.75);
+    }
+
+    #[test]
+    fn beyond_cap_never_memoises() {
+        let mut t = SurvivalTable::new();
+        let dt = SurvivalTable::MAX_DT as u32 + 10;
+        let mut calls = 0;
+        for _ in 0..3 {
+            t.lookup(dt, |_| {
+                calls += 1;
+                0.5
+            });
+        }
+        assert_eq!(calls, 3);
+        assert_eq!(t.capacity(), 0, "out-of-range dt must not allocate");
+    }
+
+    #[test]
+    fn zero_and_one_survival_values_roundtrip() {
+        // 0.0 and 1.0 are legitimate survival values and must be
+        // distinguishable from the NaN sentinel.
+        let mut t = SurvivalTable::new();
+        assert_eq!(t.lookup(0, |_| 1.0), 1.0);
+        assert_eq!(t.lookup(1, |_| 0.0), 0.0);
+        assert_eq!(t.lookup(0, |_| panic!("must be memoised")), 1.0);
+        assert_eq!(t.lookup(1, |_| panic!("must be memoised")), 0.0);
+    }
+}

@@ -17,9 +17,12 @@
 //! (arena slot index + generation), so a slot freed by a kill can be
 //! reused by a fork in the same step without the two walks ever aliasing.
 //!
-//! Every node maintains a [`NodeState`]: the last-seen table `L_{i,k}`,
-//! the pooled empirical return-time distribution `R̂_i`, and the estimator
-//! `θ̂_i(t) = ½ + Σ_{ℓ≠k} S(t − L_{i,ℓ})` from Eq. (1).
+//! Every node maintains a [`NodeState`]: the last-seen table `L_{i,k}`
+//! (struct-of-arrays `ids ∥ last` columns with an O(1) `slot_pos`
+//! index), the pooled empirical return-time distribution `R̂_i`, a
+//! memoised survival table `dt → S(dt)` (DESIGN.md §Survival cache),
+//! and the estimator `θ̂_i(t) = ½ + Σ_{ℓ≠k} S(t − L_{i,ℓ})` from
+//! Eq. (1).
 
 pub mod arena;
 pub mod lineage;

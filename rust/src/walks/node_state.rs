@@ -6,10 +6,32 @@
 //! The survival function `S(·)` used in the estimator can come from the
 //! empirical distribution (the algorithm's default) or from an analytic
 //! fit (footnote 5: speeds up initialization when the family is known).
+//!
+//! ## θ̂ evaluation (DESIGN.md §Survival cache)
+//!
+//! Eq. (1) is a sum of one survival value per known walk, evaluated on
+//! every control decision — the hot path of the whole simulator once
+//! walk counts grow. Two layers keep it fast without moving a single
+//! bit of the result:
+//!
+//! * the last-seen table is stored **struct-of-arrays** (`ids ∥ last`),
+//!   so the θ̂ loop is a dense gather-and-sum over two contiguous
+//!   columns rather than a strided walk over `(WalkId, u64)` pairs;
+//! * survival values are memoised in a per-node [`SurvivalTable`]
+//!   (`dt → S(dt)`), turning the per-term `exp` / CDF division into an
+//!   indexed load. The memo stores exactly the `f64` the direct code
+//!   path produces and is invalidated precisely when the empirical CDF's
+//!   observable values change, so the float sum — in first-seen order,
+//!   always — is bit-identical to the uncached evaluation.
+//!
+//! The frozen reference engine opts out via [`NodeState::new_uncached`]
+//! (seed semantics had no memo); the golden-trace lock then proves the
+//! cached and direct paths equivalent end-to-end, and
+//! `benches/perf_control.rs` measures what the cache buys.
 
 use super::WalkId;
 use crate::stats::fit::{exp_survival, geom_survival};
-use crate::stats::EmpiricalCdf;
+use crate::stats::{EmpiricalCdf, SurvivalTable};
 
 /// Which survival function backs `S(t − L)` in the estimator.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,29 +49,40 @@ pub enum SurvivalModel {
 /// State a single node keeps to run MISSINGPERSON / DECAFORK / DECAFORK+.
 #[derive(Debug, Clone)]
 pub struct NodeState {
-    /// `L_{i,k}`: last time each known walk was seen here. Stored as a
-    /// flat vector in **first-seen order** — iteration order is
-    /// deterministic, so the floating-point sum in
+    /// `L_{i,k}` ids column: every known walk, in **first-seen order** —
+    /// iteration order is deterministic, so the floating-point sum in
     /// [`theta`](Self::theta) is reproducible across runs (HashMap order
     /// randomization flipped near-threshold decisions; see DESIGN.md
-    /// §Perf). Lookups go through `slot_pos`, not a linear scan: under
-    /// sustained churn this vector accumulates one entry per walk that
-    /// ever visited (dead walks linger until [`prune`](Self::prune)), so
-    /// a scan would make every *visit* O(history) — the node-table twin
-    /// of the seed engine's O(history) step loop.
-    last_seen: Vec<(WalkId, u64)>,
+    /// §Perf). Split from `last` (struct-of-arrays) so the θ̂ loop scans
+    /// two dense homogeneous columns. Lookups go through `slot_pos`, not
+    /// a linear scan: under sustained churn these columns accumulate one
+    /// entry per walk that ever visited (dead walks linger until
+    /// [`prune`](Self::prune)), so a scan would make every *visit*
+    /// O(history) — the node-table twin of the seed engine's O(history)
+    /// step loop.
+    ids: Vec<WalkId>,
+    /// `L_{i,k}` last-visit-time column, parallel to `ids`.
+    last: Vec<u64>,
     /// `WalkId::index()` → position of that slot's **latest** walk in
-    /// `last_seen` (`u32::MAX` = none). Entries for earlier generations
-    /// of a reused slot stay in `last_seen` (they still decay inside θ̂,
+    /// `ids`/`last` (`u32::MAX` = none). Entries for earlier generations
+    /// of a reused slot stay in the columns (they still decay inside θ̂,
     /// exactly like the seed's unique-id entries) but become unreachable
-    /// here — dead walks never visit again, so nothing ever looks them
-    /// up. Bounded by the peak *concurrent* population for the arena
-    /// engine's generational ids; sequential allocators (reference
-    /// engine, actor runtime) grow it with ids-ever-minted instead —
-    /// the seed's own O(history) footprint, acceptable for those
-    /// paths, and ids are assumed < 2³² (`WalkArena::spawn` asserts
+    /// here — dead walks never visit again. All point lookups
+    /// ([`observe`](Self::observe), [`knows`](Self::knows),
+    /// [`last_seen_of`](Self::last_seen_of)) resolve through this index,
+    /// so a superseded generation reads as *unknown* even while its entry
+    /// keeps decaying. Bounded by the peak *concurrent* population for
+    /// the arena engine's generational ids; sequential allocators
+    /// (reference engine, actor runtime) grow it with ids-ever-minted
+    /// instead — the seed's own O(history) footprint, acceptable for
+    /// those paths, and ids are assumed < 2³² (`WalkArena::spawn` asserts
     /// the same bound on slot space).
     slot_pos: Vec<u32>,
+    /// Memoised `dt → S(dt)` backing cached θ̂ evaluation.
+    table: SurvivalTable,
+    /// Whether [`theta`](Self::theta) uses the memo (hot default) or the
+    /// direct per-term computation (frozen reference engine).
+    cached: bool,
     /// Pooled empirical return-time distribution `R̂_i`.
     pub return_cdf: EmpiricalCdf,
     /// Survival model used by `theta`.
@@ -63,16 +96,42 @@ pub struct NodeState {
 }
 
 impl NodeState {
-    /// Fresh state with `z0` MISSINGPERSON slots.
+    /// Fresh state with `z0` MISSINGPERSON slots and survival-cached θ̂.
     pub fn new(z0: usize, model: SurvivalModel) -> Self {
+        Self::with_cache(z0, model, true)
+    }
+
+    /// Fresh state evaluating θ̂ **directly** (no [`SurvivalTable`]) —
+    /// the seed engine's exact arithmetic path. Used by the frozen
+    /// [`ReferenceEngine`](crate::sim::reference::ReferenceEngine) so
+    /// golden traces lock cached-vs-direct equivalence, and by
+    /// `perf_control` as the before side of the measurement.
+    pub fn new_uncached(z0: usize, model: SurvivalModel) -> Self {
+        Self::with_cache(z0, model, false)
+    }
+
+    fn with_cache(z0: usize, model: SurvivalModel, cached: bool) -> Self {
         NodeState {
-            last_seen: Vec::new(),
+            ids: Vec::new(),
+            last: Vec::new(),
             slot_pos: Vec::new(),
+            table: SurvivalTable::new(),
+            cached,
             return_cdf: EmpiricalCdf::new(),
             model,
             slot_last_seen: vec![0; z0],
             last_control_step: None,
         }
+    }
+
+    /// Whether θ̂ evaluation goes through the survival memo.
+    pub fn is_cached(&self) -> bool {
+        self.cached
+    }
+
+    /// The survival memo (telemetry/tests).
+    pub fn survival_table(&self) -> &SurvivalTable {
+        &self.table
     }
 
     /// Record a visit of walk `id` (with MISSINGPERSON slot `slot`) at
@@ -88,8 +147,8 @@ impl NodeState {
             self.slot_pos.resize(idx + 1, u32::MAX);
         }
         let pos = self.slot_pos[idx];
-        let sample = if pos != u32::MAX && self.last_seen[pos as usize].0 == id {
-            let last = &mut self.last_seen[pos as usize].1;
+        let sample = if pos != u32::MAX && self.ids[pos as usize] == id {
+            let last = &mut self.last[pos as usize];
             let dt = (t - *last) as u32;
             *last = t;
             if dt > 0 {
@@ -99,8 +158,9 @@ impl NodeState {
                 None
             }
         } else {
-            self.slot_pos[idx] = self.last_seen.len() as u32;
-            self.last_seen.push((id, t));
+            self.slot_pos[idx] = self.ids.len() as u32;
+            self.ids.push(id);
+            self.last.push(t);
             None
         };
         if let Some(s) = self.slot_last_seen.get_mut(slot as usize) {
@@ -111,20 +171,39 @@ impl NodeState {
 
     /// Number of distinct walks this node has ever seen (`|L_i(t)|`).
     pub fn known_walks(&self) -> usize {
-        self.last_seen.len()
+        self.ids.len()
     }
 
-    /// Whether walk `id` has visited this node before.
+    /// Position of `id` in the columns, resolved through the `slot_pos`
+    /// index: O(1), and superseded generations of a reused slot resolve
+    /// to `None` (they are unreachable to every walk that still exists —
+    /// the same semantics [`observe`](Self::observe) applies).
+    #[inline]
+    fn pos_of(&self, id: WalkId) -> Option<usize> {
+        let pos = *self.slot_pos.get(id.index() as usize)?;
+        if pos != u32::MAX && self.ids[pos as usize] == id {
+            Some(pos as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Whether walk `id` has visited this node before. O(1) via
+    /// `slot_pos` (previously a linear scan over the whole history).
     pub fn knows(&self, id: WalkId) -> bool {
-        self.last_seen.iter().any(|(k, _)| *k == id)
+        self.pos_of(id).is_some()
     }
 
-    /// Last-seen time for a walk, if known.
+    /// Last-seen time for a walk, if known. O(1) via `slot_pos`.
     pub fn last_seen_of(&self, id: WalkId) -> Option<u64> {
-        self.last_seen.iter().find(|(k, _)| *k == id).map(|(_, t)| *t)
+        self.pos_of(id).map(|p| self.last[p])
     }
 
-    /// Survival `S(dt)` under the configured model.
+    /// Survival `S(dt)` under the configured model. Cold-path helper —
+    /// deliberately **not** routed through the memo: its geometric form
+    /// (`powi`) is a different float expression than the θ̂ loop's
+    /// `exp(dt·ln(1−q))`, and mixing the two in one table would poison
+    /// the determinism contract.
     #[inline]
     pub fn survival(&mut self, dt: u32) -> f64 {
         match self.model {
@@ -138,38 +217,125 @@ impl NodeState {
     /// `θ̂_i(t) = ½ + Σ_{ℓ ∈ L_i(t) \ {k}} S(t − L_{i,ℓ}(t))`,
     /// where `k` is the currently visiting walk (known to be alive, hence
     /// the deterministic ½ from Prop. 1).
+    ///
+    /// Iteration is in first-seen order (deterministic), so the
+    /// floating-point sum — and therefore every threshold comparison —
+    /// is reproducible across runs and thread counts. The cached and
+    /// direct paths produce bit-identical sums (locked by
+    /// `prop_cached_theta_bit_identical_to_direct` and the golden
+    /// traces).
     pub fn theta(&mut self, t: u64, visiting: WalkId) -> f64 {
+        if self.cached {
+            self.theta_cached(t, visiting)
+        } else {
+            self.theta_direct(t, visiting)
+        }
+    }
+
+    /// Table-driven evaluation: every survival term is an indexed load,
+    /// computed at most once per distinct `dt` per memo epoch.
+    fn theta_cached(&mut self, t: u64, visiting: WalkId) -> f64 {
         let mut acc = 0.5;
-        // Iteration is in first-seen order (deterministic), so the
-        // floating-point sum — and therefore every threshold comparison —
-        // is reproducible across runs and thread counts.
-        let model = self.model;
-        match model {
+        match self.model {
             SurvivalModel::Empirical => {
-                // Disjoint-field split borrow: mutate the CDF cache while
-                // iterating the last-seen table.
-                let cdf = &mut self.return_cdf;
-                for &(id, last) in self.last_seen.iter() {
-                    if id == visiting {
+                let NodeState { ids, last, return_cdf, table, .. } = self;
+                // Constant during this call: `observe` (the only sample
+                // source on the sim path) never runs mid-θ̂.
+                let total = return_cdf.len();
+                let max_obs = return_cdf.max_observed();
+                // The cdf's lazy rebuild fires on the first below-maximum
+                // query; mirror that trigger exactly (not per-call, not
+                // per-add) so the memo epoch tracks the direct path's
+                // rebuild schedule bit-for-bit.
+                let mut synced = false;
+                for (&wid, &seen) in ids.iter().zip(last.iter()) {
+                    if wid == visiting {
                         continue;
                     }
-                    acc += cdf.survival((t - last) as u32);
+                    if total == 0 {
+                        // Warm-up fast path of `EmpiricalCdf::survival`.
+                        acc += 1.0;
+                        continue;
+                    }
+                    let dt = (t - seen) as u32;
+                    if dt >= max_obs {
+                        // Beyond-support fast path: identically 0.0 in
+                        // every epoch, never triggers a rebuild.
+                        continue;
+                    }
+                    if !synced {
+                        table.sync(return_cdf.survival_epoch());
+                        synced = true;
+                    }
+                    acc += table.lookup(dt, |d| return_cdf.survival(d));
                 }
             }
             SurvivalModel::Geometric { q } => {
                 // exp(dt·ln(1−q)) — one ln hoisted out of the loop beats
-                // per-walk powi (§Perf iteration 4).
+                // per-walk powi (§Perf iteration 4); the memo replays the
+                // exact same expression (§Perf iteration 6).
                 let log1mq = (-q).ln_1p();
-                for &(id, last) in self.last_seen.iter() {
-                    if id != visiting {
-                        acc += ((t - last) as f64 * log1mq).exp();
+                let NodeState { ids, last, table, .. } = self;
+                for (&wid, &seen) in ids.iter().zip(last.iter()) {
+                    if wid == visiting {
+                        continue;
+                    }
+                    let dt = t - seen;
+                    if dt < SurvivalTable::MAX_DT as u64 {
+                        acc += table.lookup(dt as u32, |d| (d as f64 * log1mq).exp());
+                    } else {
+                        // u32 would truncate; keep the direct u64 → f64
+                        // widening for absurd staleness (prune disabled).
+                        acc += (dt as f64 * log1mq).exp();
                     }
                 }
             }
             SurvivalModel::Exponential { lambda } => {
-                for &(id, last) in self.last_seen.iter() {
-                    if id != visiting {
-                        acc += exp_survival(lambda, (t - last) as f64);
+                let NodeState { ids, last, table, .. } = self;
+                for (&wid, &seen) in ids.iter().zip(last.iter()) {
+                    if wid == visiting {
+                        continue;
+                    }
+                    let dt = t - seen;
+                    if dt < SurvivalTable::MAX_DT as u64 {
+                        acc += table.lookup(dt as u32, |d| exp_survival(lambda, d as f64));
+                    } else {
+                        acc += exp_survival(lambda, dt as f64);
+                    }
+                }
+            }
+        }
+        acc
+    }
+
+    /// Direct (seed-exact) evaluation: one survival computation per term.
+    /// Frozen arithmetic — the reference side of the determinism lock and
+    /// of `perf_control`'s before/after measurement.
+    fn theta_direct(&mut self, t: u64, visiting: WalkId) -> f64 {
+        let mut acc = 0.5;
+        match self.model {
+            SurvivalModel::Empirical => {
+                // Disjoint-field split borrow: mutate the CDF cache while
+                // iterating the last-seen columns.
+                let NodeState { ids, last, return_cdf, .. } = self;
+                for (&wid, &seen) in ids.iter().zip(last.iter()) {
+                    if wid != visiting {
+                        acc += return_cdf.survival((t - seen) as u32);
+                    }
+                }
+            }
+            SurvivalModel::Geometric { q } => {
+                let log1mq = (-q).ln_1p();
+                for (&wid, &seen) in self.ids.iter().zip(self.last.iter()) {
+                    if wid != visiting {
+                        acc += ((t - seen) as f64 * log1mq).exp();
+                    }
+                }
+            }
+            SurvivalModel::Exponential { lambda } => {
+                for (&wid, &seen) in self.ids.iter().zip(self.last.iter()) {
+                    if wid != visiting {
+                        acc += exp_survival(lambda, (t - seen) as f64);
                     }
                 }
             }
@@ -181,7 +347,9 @@ impl NodeState {
     /// absence can no longer change future estimates (dt already beyond
     /// twice the largest observed return time). This is a pure
     /// memory/speed optimization — contributions removed are identically 0
-    /// under the empirical model and < 1e-12 under analytic models.
+    /// under the empirical model and < 1e-12 under analytic models. It is
+    /// also what keeps the [`SurvivalTable`] small: live `dt` values stay
+    /// within the horizon plus one prune interval.
     pub fn prune(&mut self, t: u64) {
         let max_obs = self.return_cdf.max_observed() as u64;
         let horizon = match self.model {
@@ -195,25 +363,27 @@ impl NodeState {
             SurvivalModel::Exponential { lambda } => (28.0 / lambda).ceil() as u64,
         };
         // Stable in-place sweep (the seed's `retain`, plus index fix-up
-        // in the same O(|last_seen|) pass). `slot_pos` entries are only
-        // touched when they point at the entry being moved or dropped —
-        // an entry superseded by a later generation of its slot leaves
-        // the newer walk's index pointer alone.
+        // in the same O(|L_i|) pass over both columns). `slot_pos`
+        // entries are only touched when they point at the entry being
+        // moved or dropped — an entry superseded by a later generation of
+        // its slot leaves the newer walk's index pointer alone.
         let mut w = 0usize;
-        for r in 0..self.last_seen.len() {
-            let (id, last) = self.last_seen[r];
+        for r in 0..self.ids.len() {
+            let (id, last) = (self.ids[r], self.last[r]);
             let sp = &mut self.slot_pos[id.index() as usize];
             if t.saturating_sub(last) <= horizon {
                 if *sp == r as u32 {
                     *sp = w as u32;
                 }
-                self.last_seen[w] = (id, last);
+                self.ids[w] = id;
+                self.last[w] = last;
                 w += 1;
             } else if *sp == r as u32 {
                 *sp = u32::MAX;
             }
         }
-        self.last_seen.truncate(w);
+        self.ids.truncate(w);
+        self.last.truncate(w);
     }
 }
 
@@ -244,28 +414,57 @@ mod tests {
     }
 
     #[test]
+    fn knows_and_last_seen_resolve_through_index() {
+        let mut s = NodeState::new(4, SurvivalModel::Empirical);
+        for w in 0..3u64 {
+            s.observe(10 + w, id(w), w as u16);
+        }
+        assert!(s.knows(id(0)) && s.knows(id(1)) && s.knows(id(2)));
+        assert_eq!(s.last_seen_of(id(1)), Some(11));
+        // Never-seen ids: both inside and beyond the index's range.
+        assert!(!s.knows(id(3)));
+        assert!(!s.knows(WalkId(1_000_000)));
+        assert_eq!(s.last_seen_of(WalkId(1_000_000)), None);
+        // Pruned ids become unknown again.
+        s.return_cdf.add(5);
+        s.prune(1000); // horizon 10 ≪ staleness ~990
+        assert!(!s.knows(id(0)));
+        assert_eq!(s.last_seen_of(id(0)), None);
+    }
+
+    #[test]
     fn reused_slot_index_is_a_new_walk() {
         // Arena slot reuse: a later generation of the same slot index
         // must be treated as a brand-new walk (no return-time sample
         // against the dead predecessor), while the predecessor's entry
         // keeps decaying inside theta until pruned — the same behaviour
-        // the seed had with globally unique ids.
+        // the seed had with globally unique ids. Point lookups resolve
+        // through `slot_pos`, so the superseded generation reads as
+        // unknown even while its entry still contributes to θ̂.
         let mut s = NodeState::new(2, SurvivalModel::Geometric { q: 0.1 });
         let old = WalkId::compose(3, 0);
         let new = WalkId::compose(3, 1);
         s.observe(10, old, 0);
+        assert!(s.knows(old));
         assert_eq!(s.observe(50, new, 1), None, "new generation must not look like a revisit");
         assert_eq!(s.known_walks(), 2);
-        assert_eq!(s.last_seen_of(old), Some(10));
+        // The index now resolves slot 3 to the live generation only.
+        assert!(s.knows(new) && !s.knows(old));
         assert_eq!(s.last_seen_of(new), Some(50));
+        assert_eq!(s.last_seen_of(old), None, "superseded generation is unreachable");
+        // ... but the predecessor's entry still decays inside θ̂ (visible
+        // as a positive contribution beyond the live walk's ½).
+        let th = s.theta(60, new);
+        let expect = 0.5 + (50f64 * (-0.1f64).ln_1p()).exp();
+        assert!((th - expect).abs() < 1e-12, "theta {th} expect {expect}");
         // Revisit of the live generation hits its own entry.
         assert_eq!(s.observe(60, new, 1), Some(10));
-        assert_eq!(s.last_seen_of(old), Some(10), "dead predecessor untouched");
         // After pruning the stale predecessor (geometric horizon
         // 28/−ln(0.9) ≈ 266 < its staleness 290), the live walk's
         // index entry survives the rebuild and still resolves.
         s.prune(300);
         assert_eq!(s.known_walks(), 1);
+        assert_eq!(s.last_seen_of(new), Some(60));
         assert_eq!(s.observe(310, new, 1), Some(250));
     }
 
@@ -332,6 +531,46 @@ mod tests {
         let after = s.theta(100, id(2));
         assert_eq!(s.known_walks(), 1); // id(1) dropped (dt=100 > 2*10)
         assert!((before - after).abs() < 1e-12, "prune changed theta");
+    }
+
+    #[test]
+    fn cached_theta_memoises_analytic_terms() {
+        // Two instances, same schedule: cached and direct θ̂ agree to the
+        // bit, and the memo demonstrably holds the values.
+        let mut c = NodeState::new(4, SurvivalModel::Geometric { q: 0.05 });
+        let mut d = NodeState::new_uncached(4, SurvivalModel::Geometric { q: 0.05 });
+        assert!(c.is_cached() && !d.is_cached());
+        for w in 0..6u64 {
+            c.observe(w * 7, id(w), (w % 4) as u16);
+            d.observe(w * 7, id(w), (w % 4) as u16);
+        }
+        for t in [50u64, 51, 90, 200] {
+            assert_eq!(c.theta(t, id(0)).to_bits(), d.theta(t, id(0)).to_bits(), "t={t}");
+        }
+        assert!(c.survival_table().filled() > 0, "memo never populated");
+        assert_eq!(d.survival_table().filled(), 0, "direct path must not touch the memo");
+    }
+
+    #[test]
+    fn cached_theta_tracks_empirical_updates() {
+        // Interleave samples (which can invalidate the memo) with θ̂ and
+        // check the cached value keeps matching a direct-path twin.
+        let mut rng = crate::rng::Rng::new(9);
+        let mut c = NodeState::new(8, SurvivalModel::Empirical);
+        let mut d = NodeState::new_uncached(8, SurvivalModel::Empirical);
+        let mut t = 0u64;
+        for step in 0..400u64 {
+            t += rng.below(4) as u64;
+            let w = id(rng.below(12) as u64);
+            c.observe(t, w, (w.0 % 8) as u16);
+            d.observe(t, w, (w.0 % 8) as u16);
+            if step % 3 == 0 {
+                let visiting = id(rng.below(12) as u64);
+                let a = c.theta(t, visiting);
+                let b = d.theta(t, visiting);
+                assert_eq!(a.to_bits(), b.to_bits(), "step {step} t {t}");
+            }
+        }
     }
 
     #[test]

@@ -1,8 +1,15 @@
-//! The determinism lock (ISSUE 1): the arena engine must reproduce the
-//! frozen seed engine's `Trace::z` **byte-for-byte** on three seeded
-//! golden scenarios covering every failure surface (pre-step bursts,
-//! per-hop probabilistic losses, Byzantine arrivals) and every forking
-//! control family (DECAFORK, DECAFORK+, MISSINGPERSON).
+//! The determinism lock (ISSUE 1, extended by ISSUE 2): the arena engine
+//! must reproduce the frozen seed engine's `Trace::z` **byte-for-byte**
+//! on four seeded golden scenarios covering every failure surface
+//! (pre-step bursts, per-hop probabilistic losses, Byzantine arrivals)
+//! and every forking control family (DECAFORK, DECAFORK+,
+//! MISSINGPERSON). Since the arena engine evaluates θ̂ through the
+//! per-node `SurvivalTable` memo while the reference computes every term
+//! directly, the lock also proves the cached and direct estimator paths
+//! bit-identical — the DECAFORK-heavy `churn_decafork_empirical`
+//! scenario exists specifically to stress that equivalence under
+//! sustained empirical-CDF growth (every return-time sample can
+//! invalidate the memo).
 //!
 //! Two layers of locking:
 //!

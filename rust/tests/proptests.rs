@@ -201,6 +201,78 @@ fn prop_prune_never_changes_theta() {
 }
 
 #[test]
+fn prop_cached_theta_bit_identical_to_direct() {
+    // The survival-cache determinism lock at the unit level (ISSUE 2):
+    // a `SurvivalTable`-backed NodeState and an uncached twin fed the
+    // *same* randomized schedule of visits (new walks, revisits, arena
+    // generation reuse), prunes, out-of-band CDF inserts and θ̂ queries
+    // must agree on every single estimate **to the bit** — including
+    // across empirical-CDF cache rebuilds, which are triggered lazily
+    // and must fire on the same schedule in both.
+    prop(60, |rng| {
+        let model = match rng.below(3) {
+            0 => SurvivalModel::Empirical,
+            1 => SurvivalModel::Geometric { q: 0.001 + rng.f64() * 0.5 },
+            _ => SurvivalModel::Exponential { lambda: 0.001 + rng.f64() * 0.2 },
+        };
+        let mut cached = NodeState::new(8, model);
+        let mut direct = NodeState::new_uncached(8, model);
+        let mut t = 0u64;
+        let mut thetas = 0u32;
+        for op in 0..rng.range(50, 400) {
+            t += rng.below(6) as u64;
+            match rng.below(10) {
+                // Visits dominate: mix of fresh ids, revisits, and reused
+                // slot indices under a new generation.
+                0..=5 => {
+                    let slot_idx = rng.below(24) as u32;
+                    let generation = rng.below(3) as u32;
+                    let id = WalkId::compose(slot_idx, generation);
+                    let a = cached.observe(t, id, (slot_idx % 8) as u16);
+                    let b = direct.observe(t, id, (slot_idx % 8) as u16);
+                    assert_eq!(a, b, "case op {op}: observe diverged");
+                }
+                // Out-of-band CDF growth (the engine only adds via
+                // observe, but the field is public — the memo must
+                // survive arbitrary insert schedules).
+                6 => {
+                    let v = 1 + rng.below(500) as u32;
+                    cached.return_cdf.add(v);
+                    direct.return_cdf.add(v);
+                }
+                7 => {
+                    cached.prune(t);
+                    direct.prune(t);
+                }
+                // θ̂ queries, sometimes repeated at the same t (memo
+                // replay) and sometimes far in the future (beyond-support
+                // fast path).
+                _ => {
+                    let jump = if rng.below(4) == 0 { rng.below(3000) as u64 } else { 0 };
+                    let visiting = WalkId::compose(rng.below(24) as u32, rng.below(3) as u32);
+                    for _ in 0..1 + rng.below(2) {
+                        let a = cached.theta(t + jump, visiting);
+                        let b = direct.theta(t + jump, visiting);
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "case op {op}: theta diverged ({a} vs {b}) at t={} model {model:?}",
+                            t + jump
+                        );
+                        thetas += 1;
+                    }
+                }
+            }
+        }
+        // Every case ends with one guaranteed estimate so a query-free
+        // random schedule still exercises the equivalence at least once.
+        let a = cached.theta(t + 1, WalkId(0));
+        let b = direct.theta(t + 1, WalkId(0));
+        assert_eq!(a.to_bits(), b.to_bits(), "final theta diverged ({a} vs {b}), {thetas} before");
+    });
+}
+
+#[test]
 fn prop_engine_z_trace_conserved_and_bounded() {
     use decafork::control::DecaforkPlus;
     use decafork::failures::Probabilistic;
