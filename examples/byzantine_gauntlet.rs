@@ -16,7 +16,12 @@ fn main() -> anyhow::Result<()> {
     ]);
     let base = ExperimentConfig {
         graph: GraphSpec::RandomRegular { n: 100, d: 8 },
-        params: SimParams::default(),
+        // DECAFORK_SHARDS>=2 reruns the gauntlet on the stream-mode
+        // sharded engine (same system, different sample paths).
+        params: SimParams {
+            shards: decafork::scenario::parse::shards_from_env(),
+            ..SimParams::default()
+        },
         control: ControlSpec::Decafork { epsilon: 2.0 },
         failures,
         horizon: 10_000,

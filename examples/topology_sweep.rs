@@ -40,7 +40,10 @@ fn main() -> anyhow::Result<()> {
 
         let cfg = ExperimentConfig {
             graph: graph.clone(),
-            params: SimParams::default(),
+            params: SimParams {
+                shards: decafork::scenario::parse::shards_from_env(),
+                ..Default::default()
+            },
             control: ControlSpec::Decafork { epsilon: eps },
             failures: FailureSpec::paper_bursts(),
             horizon: 10_000,

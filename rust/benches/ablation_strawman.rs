@@ -22,7 +22,11 @@ fn main() -> anyhow::Result<()> {
     let mut run = |label: String, control: ControlSpec| -> anyhow::Result<()> {
         let cfg = ExperimentConfig {
             graph: GraphSpec::RandomRegular { n: 100, d: 8 },
-            params: SimParams { max_walks: 512, ..Default::default() },
+            params: SimParams {
+                max_walks: 512,
+                shards: decafork::scenario::parse::shards_from_env(),
+                ..Default::default()
+            },
             control,
             failures: failures.clone(),
             horizon: 10_000,

@@ -35,7 +35,12 @@ fn main() -> anyhow::Result<()> {
     ] {
         let cfg = ExperimentConfig {
             graph: GraphSpec::RandomRegular { n: 100, d: 8 },
-            params: SimParams { survival: spec, control_start: warmup, ..Default::default() },
+            params: SimParams {
+                survival: spec,
+                control_start: warmup,
+                shards: decafork::scenario::parse::shards_from_env(),
+                ..Default::default()
+            },
             control: ControlSpec::Decafork { epsilon: 2.0 },
             failures: FailureSpec::paper_bursts(),
             horizon: 10_000,

@@ -37,7 +37,10 @@ fn main() -> anyhow::Result<()> {
     for (label, eps, eps2) in arms.drain(..) {
         let cfg = ExperimentConfig {
             graph: GraphSpec::RandomRegular { n: 100, d: 8 },
-            params: SimParams::default(),
+            params: SimParams {
+                shards: decafork::scenario::parse::shards_from_env(),
+                ..Default::default()
+            },
             control: ControlSpec::DecaforkPlus { epsilon: eps, epsilon2: eps2 },
             failures: FailureSpec::paper_bursts(),
             horizon: 10_000,

@@ -1,0 +1,133 @@
+//! Within-run sharding throughput: the stream-mode `ShardedEngine` at 1
+//! worker vs `DECAFORK_SHARDS_HI` (default 8) workers on the same
+//! scenario — the measurement ISSUE 3's acceptance bar (≥ 3× steps/sec
+//! at 8 shards on `scale_100k`) is taken from — plus the `scale_1m`
+//! completion probe (one million nodes, 1000-step horizon, absolute
+//! steps/sec).
+//!
+//! Before any clock is trusted the bench **asserts the two traces are
+//! bit-identical** (`Trace::bit_identical`: z, events, θ̂ bits, flags) —
+//! schedule invariance is the whole point; a "speedup" that moved one
+//! fork decision is a bug, not a result. Note both sides are stream
+//! mode: this measures what worker threads buy *within* the per-walk
+//! stream family, not stream-vs-shared-stream semantics (those are
+//! different trace families by design).
+//!
+//! Writes `BENCH_shard.json` (to the bench's working directory — the
+//! `rust/` package root under cargo — or to `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_PERF_STEPS` rescales the horizons
+//! ([`Scenario::rescale_to`]), `DECAFORK_SHARDS_HI` sets the high worker
+//! count, `DECAFORK_PERF_SKIP_1M=1` skips the million-node probe (CI
+//! smoke: the graph build alone is tens of seconds),
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the ≥ 3× gate to a report
+//! (CI smoke runs on 2-core runners where the bar is unreachable).
+
+use decafork::scenario::{presets, Scenario};
+use std::time::Instant;
+
+fn run_once(scenario: &Scenario, shards: usize) -> anyhow::Result<(f64, decafork::sim::Trace)> {
+    // Clock covers only the stepping: the graph build is identical setup
+    // work at every shard count and would bias short smoke runs.
+    let mut e = scenario.sharded_engine(0, shards)?;
+    let t0 = Instant::now();
+    e.run_to(scenario.horizon);
+    let dt = t0.elapsed().as_secs_f64();
+    let trace = e.into_trace();
+    // Rate over steps actually simulated — an extinct run stops early
+    // (the trace is only zero-padded from the first z = 0 on), and
+    // horizon/dt would flatter it.
+    let steps = trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1);
+    Ok((steps as f64 / dt, trace))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
+        .ok()
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .map(|s| s.max(100));
+    let hi_shards = std::env::var("DECAFORK_SHARDS_HI")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&s| s >= 2)
+        .unwrap_or(8);
+
+    let mut scale100k = presets::scale_100k();
+    let mut scale1m = presets::scale_1m();
+    if let Some(steps) = quick_steps {
+        scale100k.rescale_to(steps);
+        scale1m.rescale_to(steps.max(200));
+    }
+
+    println!("perf_shard: stream-mode engine, 1 vs {hi_shards} workers\n");
+    println!(
+        "scale_100k: {} | {} steps",
+        scale100k.label(),
+        scale100k.horizon
+    );
+    let (sps_1, trace_1) = run_once(&scale100k, 1)?;
+    println!("  1 worker             : {sps_1:>12.1} steps/s");
+    let (sps_hi, trace_hi) = run_once(&scale100k, hi_shards)?;
+    println!("  {hi_shards} workers            : {sps_hi:>12.1} steps/s");
+    assert!(
+        trace_1.bit_identical(&trace_hi),
+        "scale_100k: trace diverged between 1 and {hi_shards} workers — \
+         schedule invariance broken, perf numbers meaningless"
+    );
+    let speedup = sps_hi / sps_1;
+    println!("  speedup              : {speedup:>12.2}x  (acceptance bar: >= 3.0x)");
+    println!(
+        "  traces bit-identical : yes ({} events, final z = {})",
+        trace_1.events.len(),
+        trace_1.z.last().unwrap()
+    );
+
+    // The million-node completion probe (arena-scale memory + sharded
+    // control): the criterion is that the horizon completes at all, with
+    // the absolute rate recorded for the trajectory log.
+    let skip_1m = std::env::var("DECAFORK_PERF_SKIP_1M").is_ok();
+    let sps_1m = if skip_1m {
+        println!("\nscale_1m: skipped (DECAFORK_PERF_SKIP_1M)");
+        None
+    } else {
+        println!("\nscale_1m: {} | {} steps", scale1m.label(), scale1m.horizon);
+        let (sps, trace) = run_once(&scale1m, hi_shards)?;
+        anyhow::ensure!(
+            !trace.extinct,
+            "scale_1m went extinct before its {}-step horizon — the completion \
+             criterion is not met",
+            scale1m.horizon
+        );
+        println!(
+            "  {hi_shards} workers            : {sps:>12.1} steps/s (final z = {})",
+            trace.z.last().unwrap()
+        );
+        Some(sps)
+    };
+
+    let pass = speedup >= 3.0;
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_shard.json".into());
+    let sps_1m_json = sps_1m.map(|v| format!("{v:.1}")).unwrap_or_else(|| "null".into());
+    // Workload metadata comes from the presets (not hand-copied
+    // literals), and key names are fixed — the worker count is a value
+    // (`hi_workers`), so consumers keep parsing when DECAFORK_SHARDS_HI
+    // changes.
+    let json = format!(
+        "{{\n  \"bench\": \"perf_shard\",\n  \"mode\": \"stream (per-walk RNG streams), trace bit-identical across worker counts\",\n  \"hi_workers\": {hi_shards},\n  \"scale_100k\": {{\n    \"graph\": \"{}\",\n    \"z0\": {},\n    \"steps\": {},\n    \"steps_per_sec_1_worker\": {sps_1:.1},\n    \"steps_per_sec_hi_workers\": {sps_hi:.1},\n    \"speedup\": {speedup:.3}\n  }},\n  \"scale_1m\": {{\n    \"graph\": \"{}\",\n    \"z0\": {},\n    \"steps\": {},\n    \"steps_per_sec_hi_workers\": {sps_1m_json},\n    \"completed\": {}\n  }},\n  \"acceptance_min_speedup\": 3.0,\n  \"pass\": {pass}\n}}\n",
+        scale100k.graph.label(),
+        scale100k.params.z0,
+        scale100k.horizon,
+        scale1m.graph.label(),
+        scale1m.params.z0,
+        scale1m.horizon,
+        !skip_1m
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
+        anyhow::bail!("perf_shard below the 3.0x acceptance bar — see {out}");
+    }
+    Ok(())
+}

@@ -124,8 +124,14 @@ fn run_curve(label: &str, cfg: &Scenario, threads: usize) -> anyhow::Result<Curv
     Ok(Curve { label: label.to_string(), agg, traces })
 }
 
-fn base_cfg(runs: usize) -> Scenario {
-    presets::fig1_base(runs)
+/// `shards` selects the engine per replication (1 = shared-stream, the
+/// historical figure semantics; >= 2 = stream mode — statistically the
+/// same figures, different sample paths). It rides in `params.shards`,
+/// so every curve derived from the base config inherits it.
+fn base_cfg(runs: usize, shards: usize) -> Scenario {
+    let mut cfg = presets::fig1_base(runs);
+    cfg.params.shards = shards.max(1);
+    cfg
 }
 
 /// MISSINGPERSON ε_mp: the paper says "properly tuned"; the natural scale
@@ -138,8 +144,8 @@ const MP_EPS: u64 = 800;
 
 /// Fig. 1: MISSINGPERSON vs DECAFORK (ε=2) vs DECAFORK+ (3.25/5.75),
 /// bursts −5 @ 2000 and −6 @ 6000.
-pub fn fig1(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
-    let base = base_cfg(runs);
+pub fn fig1(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for (label, control) in [
         ("missingperson", ControlSpec::MissingPerson { eps_mp: MP_EPS }),
@@ -159,8 +165,8 @@ pub fn fig1(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
 }
 
 /// Fig. 2: bursts + per-step probabilistic failure p_f.
-pub fn fig2(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
-    let base = base_cfg(runs);
+pub fn fig2(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for p_f in [0.0002, 0.001] {
         let failures = FailureSpec::Composite(vec![
@@ -194,8 +200,8 @@ pub fn fig2(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
 /// arriving walk during its `Byz` phase `[1000, 5000)` (after the paper's
 /// required failure-free initialization), then abruptly turns honest
 /// (`No Byz`) — the hard switch DECAFORK overshoots on.
-pub fn fig3(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
-    let base = base_cfg(runs);
+pub fn fig3(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs, shards);
     let failures = FailureSpec::Composite(vec![
         FailureSpec::paper_bursts(),
         FailureSpec::ByzantineScheduled { node: 1, schedule: vec![(1000, true), (5000, false)] },
@@ -224,8 +230,8 @@ pub fn fig3(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
 /// reproduces its claim that smaller graphs react faster — smaller graphs
 /// have tighter return-time support, so they tolerate a more aggressive
 /// threshold without overshoot.
-pub fn fig4(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
-    let base = base_cfg(runs);
+pub fn fig4(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for (n, eps) in [(50usize, 2.1), (100, 2.0), (200, 1.85)] {
         let cfg = Scenario {
@@ -245,8 +251,8 @@ pub fn fig4(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
 }
 
 /// Fig. 5: the ε trade-off (reaction time vs overshoot), n = 100.
-pub fn fig5(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
-    let base = base_cfg(runs);
+pub fn fig5(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for eps in [1.5, 2.0, 2.5, 3.0, 3.5] {
         let cfg = Scenario {
@@ -265,8 +271,8 @@ pub fn fig5(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
 }
 
 /// Fig. 6: four graph families at n = 100.
-pub fn fig6(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
-    let base = base_cfg(runs);
+pub fn fig6(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+    let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for (label, graph, eps) in [
         ("8-regular", GraphSpec::RandomRegular { n: 100, d: 8 }, 2.0),
@@ -291,14 +297,14 @@ pub fn fig6(runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
 }
 
 /// Run a figure by id.
-pub fn by_id(id: u32, runs: usize, threads: usize) -> anyhow::Result<FigureResult> {
+pub fn by_id(id: u32, runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
     match id {
-        1 => fig1(runs, threads),
-        2 => fig2(runs, threads),
-        3 => fig3(runs, threads),
-        4 => fig4(runs, threads),
-        5 => fig5(runs, threads),
-        6 => fig6(runs, threads),
+        1 => fig1(runs, threads, shards),
+        2 => fig2(runs, threads, shards),
+        3 => fig3(runs, threads, shards),
+        4 => fig4(runs, threads, shards),
+        5 => fig5(runs, threads, shards),
+        6 => fig6(runs, threads, shards),
         other => anyhow::bail!("unknown figure id {other} (have 1..=6)"),
     }
 }
@@ -311,7 +317,7 @@ mod tests {
 
     #[test]
     fn by_id_rejects_unknown() {
-        assert!(by_id(7, 1, 1).is_err());
+        assert!(by_id(7, 1, 1, 1).is_err());
     }
 
     #[test]
@@ -319,7 +325,7 @@ mod tests {
         // 2 runs, tiny horizon via direct config manipulation is not
         // exposed; run the real fig1 at 1 run only in release-mode CI
         // (cargo test still completes in seconds at n=100, horizon 10k).
-        let f = fig1(1, 1).unwrap();
+        let f = fig1(1, 1, 1).unwrap();
         assert_eq!(f.curves.len(), 3);
         assert!(f.write_csv(&std::env::temp_dir().join("decafork_figtest").to_string_lossy()).is_ok());
         assert!(!f.summary().is_empty());

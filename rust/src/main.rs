@@ -37,7 +37,9 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
            --eps 2.0 --eps2 5.75 --eps-mp 600 --period 100
            --pf 0.0 --bursts 2000:5,6000:6 --byz-node -1
            --horizon 10000 --runs 10 --seed 57005 --csv results/sim.csv
+           --shards 1   (>=2: stream-mode sharded engine per replication)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
+           --shards 1
   train    --n 64 --d 8 --z0 4 --horizon 400 --burst 200:2 --eps 2.0
            --artifacts artifacts
   actors   --n 32 --d 4 --z0 6 --pf 0.002 --hops 200000 --eps 2.0
@@ -106,7 +108,7 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     let runs = args.get("runs", 10usize)?;
     let out = args.get_str("out", "results");
     let t0 = std::time::Instant::now();
-    let fig = figures::by_id(id, runs, args.get("threads", 0usize)?)?;
+    let fig = figures::by_id(id, runs, args.get("threads", 0usize)?, parse::shards(args)?)?;
     println!("{}", fig.plot(100, 18));
     println!("{}", fig.summary());
     let path = fig.write_csv(&out)?;

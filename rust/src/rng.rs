@@ -11,6 +11,27 @@
 //! per-run streams via [`Rng::split`] so runs are independent but stable
 //! under re-ordering/parallelism.
 
+/// Stream-derivation tags for the stream-mode (sharded) engine's
+/// randomness ownership model: instead of one engine-wide stream whose
+/// consumption order encodes the schedule, every random draw belongs to
+/// exactly one owner — a walk, a node, or the failure model — and each
+/// owner gets an independent child stream derived from the scenario's
+/// simulation stream via [`super::Rng::derive`]`(tag, index)`. Fork children
+/// split the *parent walk's* stream (tagged by the within-decision fork
+/// index), so a walk's entire draw sequence is a pure function of the
+/// scenario, never of hop-iteration order — the property the sharded
+/// engine's schedule invariance rests on (DESIGN.md §Per-walk streams).
+pub mod streams {
+    /// Per-walk streams: `derive(WALK, slot)` for the `Z0` originals.
+    pub const WALK: u64 = 0x77616c6b; // "walk"
+    /// Per-node streams: `derive(NODE, node)` for control decisions.
+    pub const NODE: u64 = 0x6e6f6465; // "node"
+    /// Model-level failure stream (bursts, Byzantine Markov flips).
+    pub const FAIL: u64 = 0x6661696c; // "fail"
+    /// Engine-construction draws (random start placement).
+    pub const INIT: u64 = 0x696e6974; // "init"
+}
+
 /// SplitMix64 step — used for seeding and stream splitting.
 #[inline]
 fn splitmix64(state: &mut u64) -> u64 {
@@ -54,6 +75,13 @@ impl Rng {
             s[0] = 1;
         }
         Rng { s }
+    }
+
+    /// Two-level split `self.split(tag).split(index)`: one named family
+    /// ([`streams`]), one member. The extra level keeps families with
+    /// colliding indices (walk 3, node 3) on unrelated streams.
+    pub fn derive(&self, tag: u64, index: u64) -> Rng {
+        self.split(tag).split(index)
     }
 
     /// Next raw 64-bit output.
@@ -203,6 +231,29 @@ mod tests {
         let mut c1b = root.split(0);
         assert_eq!(c1.next_u64(), c1b.next_u64());
         let same = (0..64).filter(|_| c1.next_u64() == c2.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn derive_is_stable_and_family_separated() {
+        let root = Rng::new(99);
+        // Stable: same (tag, index) → same stream.
+        let mut a = root.derive(streams::WALK, 3);
+        let mut b = root.derive(streams::WALK, 3);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        // Equivalent to the explicit two-level split.
+        let mut c = root.derive(streams::NODE, 7);
+        let mut d = root.split(streams::NODE).split(7);
+        for _ in 0..16 {
+            assert_eq!(c.next_u64(), d.next_u64());
+        }
+        // Family-separated: walk 3 and node 3 share an index but not a
+        // stream.
+        let mut w = root.derive(streams::WALK, 3);
+        let mut n = root.derive(streams::NODE, 3);
+        let same = (0..64).filter(|_| w.next_u64() == n.next_u64()).count();
         assert!(same < 4);
     }
 

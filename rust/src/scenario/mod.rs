@@ -40,6 +40,7 @@ use crate::graph::Graph;
 use crate::rng::Rng;
 use crate::sim::engine::{Engine, SimParams};
 use crate::sim::reference::ReferenceEngine;
+use crate::sim::sharded::ShardedEngine;
 
 /// A complete experiment: graph + engine params + control + failures +
 /// replication. (The historical name `ExperimentConfig` is kept as an
@@ -95,6 +96,23 @@ impl Scenario {
     /// Historical name for [`engine`](Self::engine).
     pub fn build_engine(&self, run: usize) -> anyhow::Result<Engine> {
         self.engine(run)
+    }
+
+    /// Build the stream-mode sharded engine for run `run` with `shards`
+    /// worker threads — identical graph and base RNG stream as
+    /// [`engine`](Self::engine), but randomness ownership is per-walk /
+    /// per-node (the engine derives its sub-streams from `srng`), so the
+    /// trace is a *different, schedule-invariant* sample of the same
+    /// system: bit-identical at every `shards >= 1`, not comparable to
+    /// the shared-stream engines. The worker count is an explicit
+    /// argument (not read from `params.shards`) so benches and the
+    /// invariance tests can run one scenario at several counts.
+    pub fn sharded_engine(&self, run: usize, shards: usize) -> anyhow::Result<ShardedEngine> {
+        let (mut grng, srng) = self.rngs(run);
+        let graph = Arc::new(self.graph.build(&mut grng)?);
+        let control = self.control.build_control(graph.n());
+        let failures = self.failures.build_failures();
+        Ok(ShardedEngine::new(graph, self.params.clone(), control, failures, srng, shards))
     }
 
     /// Build the frozen seed engine for the same run — identical graph
@@ -196,6 +214,27 @@ mod tests {
         let before = format!("{:?}", s.failures);
         s.rescale_to(1000);
         assert_eq!(format!("{:?}", s.failures), before);
+    }
+
+    #[test]
+    fn sharded_engine_invariant_and_shares_graph_stream() {
+        let mut cfg = presets::fig1_base(1);
+        cfg.graph = GraphSpec::RandomRegular { n: 24, d: 4 };
+        cfg.horizon = 200;
+        cfg.params.record_theta = true;
+        let run = |shards: usize| {
+            let mut e = cfg.sharded_engine(0, shards).unwrap();
+            e.run_to(200);
+            e.into_trace()
+        };
+        let base = run(1);
+        assert!(base.bit_identical(&run(4)), "stream-mode trace depends on worker count");
+        // Same per-run graph stream as the sequential engines.
+        let seq = cfg.engine(0).unwrap();
+        let sh = cfg.sharded_engine(0, 2).unwrap();
+        for i in 0..24 {
+            assert_eq!(seq.graph.neighbors(i), sh.graph.neighbors(i));
+        }
     }
 
     #[test]

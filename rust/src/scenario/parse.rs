@@ -89,6 +89,35 @@ pub fn survival(args: &Args) -> anyhow::Result<SurvivalSpec> {
     })
 }
 
+/// `--shards N`: stream-mode worker count. `1` (the default) keeps the
+/// shared-stream engine — existing invocations are byte-for-byte
+/// unchanged; `>= 2` switches the runner to the per-walk-stream
+/// [`ShardedEngine`](crate::sim::ShardedEngine), whose trace is
+/// bit-identical at any worker count but is a different sample family
+/// than shard count 1's shared-stream engine.
+pub fn shards(args: &Args) -> anyhow::Result<usize> {
+    let s = args.get("shards", 1usize)?;
+    anyhow::ensure!(s >= 1, "--shards must be >= 1 (got {s})");
+    Ok(s)
+}
+
+/// `DECAFORK_SHARDS` env override for binaries without flag plumbing
+/// (ablation benches, examples, the stream-golden test): same semantics
+/// as `--shards`, default 1 (shared-stream engine, results unchanged).
+///
+/// Panics on a present-but-invalid value instead of silently falling
+/// back to 1: a typo in CI's shard matrix must not quietly turn every
+/// matrix entry into a shards=1 run that tests nothing.
+pub fn shards_from_env() -> usize {
+    match std::env::var("DECAFORK_SHARDS") {
+        Err(_) => 1,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(s) if s >= 1 => s,
+            _ => panic!("DECAFORK_SHARDS={v} is invalid: need an integer >= 1"),
+        },
+    }
+}
+
 /// The full `simulate` scenario from the command line.
 pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
     Ok(Scenario {
@@ -98,6 +127,7 @@ pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
             record_theta: args.has("record-theta"),
             survival: survival(args)?,
             control_start: args.flags.get("warmup").map(|w| w.parse()).transpose()?,
+            shards: shards(args)?,
             ..Default::default()
         },
         control: control(args)?,
@@ -148,5 +178,13 @@ mod tests {
         let s = scenario(&a).unwrap();
         assert_eq!(s.failures, FailureSpec::paper_bursts());
         assert_eq!(s.control, ControlSpec::Decafork { epsilon: 2.0 });
+        assert_eq!(s.params.shards, 1, "default must stay on the shared-stream engine");
+    }
+
+    #[test]
+    fn shards_flag_parses_and_rejects_zero() {
+        let s = scenario(&args("simulate --shards 8")).unwrap();
+        assert_eq!(s.params.shards, 8);
+        assert!(scenario(&args("simulate --shards 0")).is_err());
     }
 }

@@ -1,6 +1,7 @@
 //! Named scenarios: the paper's figure setups, the perf workloads the
 //! engine and the control stack are benchmarked on (`perf_hot_loop`,
-//! `perf_control_*`, `scale_10k`), and the golden determinism-lock
+//! `perf_control_*`, `scale_10k`, and the stream-mode `scale_100k` /
+//! `scale_1m` sharding probes), and the golden determinism-lock
 //! quartet. Keeping them here means the CLI, the figure harness, the
 //! benches and the tests all run the *same* experiment when they say the
 //! same name.
@@ -161,6 +162,78 @@ pub fn scale_10k() -> Scenario {
     }
 }
 
+/// Stream-mode scale probe for `benches/perf_shard.rs`: 100k nodes,
+/// 8192 walks, DECAFORK+ — the workload the sharded engine's 1-vs-8
+/// worker speedup is measured on. Analytic-geometric survival
+/// (footnote 5: the empirical distribution may be replaced by an
+/// analytic form to speed up initialization — at this scale the mean
+/// return time is `E[R] = n = 100k` steps, far beyond any affordable
+/// horizon, so a warm empirical CDF is physically unreachable and the
+/// analytic family is the honest choice). Per-node θ̂ cost grows with
+/// the distinct walks each node has seen (~`Z/n` new per step), which is
+/// exactly the control-phase load the node-sharded workers divide.
+///
+/// Thresholds: under healthy stationarity θ̂ ≈ ½ + known·S̄; ε = Z0/4
+/// lets the cold-start phase fork mildly (known < 2048) and then go
+/// quiet, ε₂ high enough that termination stays rare — the bench wants
+/// sustained θ̂ evaluation with live fork/kill paths, not a fork storm
+/// (`max_walks` caps the worst case anyway).
+pub fn scale_100k() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 100_000, d: 8 },
+        params: SimParams {
+            z0: 8192,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(400),
+            max_walks: 16_384,
+            ..SimParams::default()
+        },
+        control: ControlSpec::DecaforkPlus { epsilon: 2048.0, epsilon2: 6000.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(800, 819), (1400, 819)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 2000,
+        runs: 1,
+        seed: 0xCAFE3,
+    }
+}
+
+/// The ROADMAP north-star probe: one million nodes, plain DECAFORK on
+/// the analytic-geometric family. The `perf_shard` acceptance criterion
+/// is simply that a 1000-step horizon *completes* (with steps/sec
+/// recorded) — the regime where within-run sharding is the only lever,
+/// since 50 sequential replications don't help when one replication is
+/// this big.
+///
+/// Z0 is kept at 1024 (not scaled with n) deliberately: per-node memory
+/// of `NodeState::slot_pos` grows with the largest walk-slot *index* a
+/// node ever observes (~4 B × peak walk count), so a dense walk
+/// population at 10⁶ nodes would cost tens of GB of index alone — see
+/// the ROADMAP open item on a compact per-node index. The probe's
+/// point is node-count scale, and 1024 walks over 10⁶ nodes is already
+/// the sparse-visit regime the Pac-Man-attack literature studies.
+pub fn scale_1m() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 1_000_000, d: 8 },
+        params: SimParams {
+            z0: 1024,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(300),
+            max_walks: 4096,
+            ..SimParams::default()
+        },
+        control: ControlSpec::Decafork { epsilon: 256.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(400, 102)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 1000,
+        runs: 1,
+        seed: 0xCAFE4,
+    }
+}
+
 /// The four seeded scenarios whose `Trace::z` vectors are the
 /// determinism lock (`tests/golden_traces.rs`): the arena engine must
 /// reproduce the frozen reference engine on all of them, byte for byte.
@@ -299,6 +372,26 @@ mod tests {
         // perf_control benches arena against reference on them.
         assert!(perf_control_geometric().reference_engine(0).is_ok());
         assert!(perf_control_empirical().reference_engine(0).is_ok());
+    }
+
+    #[test]
+    fn scale_presets_are_wired_for_stream_mode() {
+        // No graph build here: a 100k/1M-node random-regular sample is a
+        // bench-time cost, not a unit-test one. Lock the scenario shape
+        // the sharding bench and its acceptance criteria quote.
+        let s = scale_100k();
+        assert_eq!(s.graph, GraphSpec::RandomRegular { n: 100_000, d: 8 });
+        assert_eq!(s.params.z0, 8192);
+        assert!(s.params.control_start.is_some(), "auto warm-up would exceed the horizon");
+        let m = scale_1m();
+        assert_eq!(m.graph, GraphSpec::RandomRegular { n: 1_000_000, d: 8 });
+        assert_eq!(m.horizon, 1000);
+        assert!(m.params.control_start.is_some());
+        // Both must survive the benches' DECAFORK_PERF_STEPS rescale.
+        let mut r = scale_100k();
+        r.rescale_to(200);
+        assert_eq!(r.horizon, 200);
+        assert_eq!(r.params.control_start, Some(40));
     }
 
     #[test]

@@ -128,6 +128,14 @@ pub struct SimParams {
     /// ignored and the trace is flagged `capped` (guards flooding
     /// strawmen like PeriodicFork with tiny periods).
     pub max_walks: usize,
+    /// Engine-selection knob for the runner layer: `1` (default) keeps
+    /// the shared-stream arena [`Engine`]; `>= 2` selects the stream-mode
+    /// [`ShardedEngine`](crate::sim::sharded::ShardedEngine) with that
+    /// many workers. This [`Engine`] itself ignores the field. NOTE:
+    /// stream mode is a *different trace family* (per-walk RNG streams):
+    /// `1 → 2` changes results, while any two counts `>= 1` **within
+    /// stream mode** (`Scenario::sharded_engine`) are bit-identical.
+    pub shards: usize,
 }
 
 impl Default for SimParams {
@@ -140,6 +148,7 @@ impl Default for SimParams {
             control_start: None,
             prune_every: 256,
             max_walks: 4096,
+            shards: 1,
         }
     }
 }

@@ -69,6 +69,25 @@ impl Trace {
         self.z[from as usize..hi].iter().copied().min().unwrap_or(0)
     }
 
+    /// Bit-level trace equality: the population trace, the full event
+    /// log (times, nodes, walk ids, kinds), the θ̂ telemetry compared by
+    /// `f64::to_bits` (no epsilon — schedule invariance promises the
+    /// *identical* float, not a close one), and the outcome flags. This
+    /// is the assertion the sharded engine's shard-count invariance
+    /// tests and `perf_shard` are built on.
+    pub fn bit_identical(&self, other: &Trace) -> bool {
+        self.z == other.z
+            && self.events == other.events
+            && self.extinct == other.extinct
+            && self.capped == other.capped
+            && self.theta.len() == other.theta.len()
+            && self
+                .theta
+                .iter()
+                .zip(&other.theta)
+                .all(|(a, b)| a.0 == b.0 && a.1.to_bits() == b.1.to_bits())
+    }
+
     /// Mean population over the window `[from, to]`.
     pub fn mean_z(&self, from: u64, to: u64) -> f64 {
         let hi = (to as usize + 1).min(self.z.len());
@@ -188,6 +207,26 @@ mod tests {
         let (mean, unrec) = AggregateTrace::mean_recovery(&[a, b], 1, 10);
         assert_eq!(mean, Some(1.0));
         assert_eq!(unrec, 1);
+    }
+
+    #[test]
+    fn bit_identical_discriminates() {
+        let mut a = tr(vec![5, 5, 5]);
+        a.theta.push((1, 0.5));
+        let mut b = a.clone();
+        assert!(a.bit_identical(&b));
+        // A one-ulp θ̂ difference must be detected.
+        b.theta[0].1 = f64::from_bits(0.5f64.to_bits() + 1);
+        assert!(!a.bit_identical(&b));
+        b = a.clone();
+        b.events.push(Event { t: 1, node: 0, walk: 3, kind: EventKind::Fork });
+        assert!(!a.bit_identical(&b));
+        b = a.clone();
+        b.z[2] = 4;
+        assert!(!a.bit_identical(&b));
+        b = a.clone();
+        b.capped = true;
+        assert!(!a.bit_identical(&b));
     }
 
     #[test]

@@ -1,5 +1,7 @@
-//! Discrete-time multi-random-walk simulation: the arena engine, metrics,
-//! the multi-seed runner (mean ± std aggregation as in the paper's 50-run
+//! Discrete-time multi-random-walk simulation: the shared-stream arena
+//! engine, the stream-mode [`ShardedEngine`] (per-walk RNG streams,
+//! within-run parallelism, schedule-invariant traces), metrics, the
+//! multi-seed runner (mean ± std aggregation as in the paper's 50-run
 //! figures) and the frozen reference engine (determinism oracle / perf
 //! baseline). Experiment *description* lives in [`crate::scenario`];
 //! `sim::config` re-exports it for back-compat.
@@ -15,9 +17,11 @@ pub mod engine;
 pub mod metrics;
 pub mod reference;
 pub mod runner;
+pub mod sharded;
 
 pub use config::{ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
 pub use engine::{Engine, SimParams, StartPlacement, VisitHook};
 pub use metrics::{AggregateTrace, Event, EventKind, Trace};
 pub use reference::ReferenceEngine;
 pub use runner::run_many;
+pub use sharded::ShardedEngine;

@@ -1,6 +1,21 @@
 //! Multi-seed experiment runner: fans replications out over OS threads
 //! (no async runtime needed — runs are CPU-bound and independent) and
 //! aggregates traces into the mean ± std bands the paper plots.
+//!
+//! Engine selection: `cfg.params.shards == 1` (the default) runs each
+//! replication on the shared-stream arena [`Engine`]; `>= 2` runs it on
+//! the stream-mode [`ShardedEngine`](crate::sim::ShardedEngine) with
+//! that many workers per replication. Note the two knobs multiply:
+//! `threads` replications × `shards` workers each — callers driving big
+//! stream-mode scenarios usually want `threads = 1`.
+//!
+//! Results land in **pre-sized slots** indexed by run: each worker
+//! writes replication `i`'s outcome into slot `i` (uncontended — every
+//! slot is written exactly once), so ordering needs no post-hoc sort
+//! and a failure can never lose track of *which* replication failed —
+//! errors carry their run index as context.
+//!
+//! [`Engine`]: crate::sim::engine::Engine
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -8,10 +23,26 @@ use std::sync::Mutex;
 use crate::sim::config::ExperimentConfig;
 use crate::sim::metrics::{AggregateTrace, Trace};
 
+/// One replication, on whichever engine `cfg.params.shards` selects.
+fn run_one(cfg: &ExperimentConfig, run: usize) -> anyhow::Result<Trace> {
+    if cfg.params.shards > 1 {
+        let mut e = cfg.sharded_engine(run, cfg.params.shards)?;
+        e.run_to(cfg.horizon);
+        Ok(e.into_trace())
+    } else {
+        let mut e = cfg.build_engine(run)?;
+        e.run_to(cfg.horizon);
+        Ok(e.into_trace())
+    }
+}
+
 /// Run `cfg.runs` independent replications of the experiment, in parallel
 /// across up to `threads` OS threads (0 = available parallelism), and
 /// return all traces (ordered by run index) plus their aggregate.
-pub fn run_many(cfg: &ExperimentConfig, threads: usize) -> anyhow::Result<(Vec<Trace>, AggregateTrace)> {
+pub fn run_many(
+    cfg: &ExperimentConfig,
+    threads: usize,
+) -> anyhow::Result<(Vec<Trace>, AggregateTrace)> {
     let runs = cfg.runs;
     anyhow::ensure!(runs > 0, "need at least one run");
     let threads = if threads == 0 {
@@ -22,7 +53,11 @@ pub fn run_many(cfg: &ExperimentConfig, threads: usize) -> anyhow::Result<(Vec<T
     .min(runs);
 
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<(usize, anyhow::Result<Trace>)>> = Mutex::new(Vec::with_capacity(runs));
+    // One slot per replication. The per-slot mutex is never contended
+    // (exactly one writer per slot); it exists to make the disjoint
+    // writes safe without unsafe code.
+    type Slot = Mutex<Option<anyhow::Result<Trace>>>;
+    let slots: Vec<Slot> = (0..runs).map(|_| Mutex::new(None)).collect();
 
     std::thread::scope(|scope| {
         for _ in 0..threads {
@@ -31,20 +66,20 @@ pub fn run_many(cfg: &ExperimentConfig, threads: usize) -> anyhow::Result<(Vec<T
                 if run >= runs {
                     break;
                 }
-                let out = cfg.build_engine(run).map(|mut e| {
-                    e.run_to(cfg.horizon);
-                    e.into_trace()
-                });
-                results.lock().unwrap().push((run, out));
+                let out = run_one(cfg, run)
+                    .map_err(|e| e.context(format!("replication {run} (of {runs})")));
+                *slots[run].lock().unwrap() = Some(out);
             });
         }
     });
 
-    let mut collected = results.into_inner().unwrap();
-    collected.sort_by_key(|(run, _)| *run);
     let mut traces = Vec::with_capacity(runs);
-    for (_, r) in collected {
-        traces.push(r?);
+    for (run, slot) in slots.into_iter().enumerate() {
+        let out = slot
+            .into_inner()
+            .unwrap()
+            .unwrap_or_else(|| panic!("replication {run} was never executed"));
+        traces.push(out?);
     }
     let agg = AggregateTrace::from_traces(&traces);
     Ok((traces, agg))
@@ -94,5 +129,42 @@ mod tests {
             agg.mean[199],
             agg.mean[201]
         );
+    }
+
+    #[test]
+    fn errors_carry_the_run_index() {
+        // n*d odd → every replication's graph build fails; the surfaced
+        // error (the lowest run index) must say which replication it was.
+        let mut cfg = tiny_cfg(3);
+        cfg.graph = GraphSpec::RandomRegular { n: 5, d: 3 };
+        let err = run_many(&cfg, 2).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("replication 0"), "error lost its run index: {msg}");
+    }
+
+    #[test]
+    fn shards_field_dispatches_to_the_stream_engine() {
+        // shards >= 2 must route through the sharded engine — and the
+        // result must be invariant in both the worker count and the
+        // runner's thread count.
+        let mut cfg = tiny_cfg(2);
+        cfg.params.shards = 2;
+        let (t2, _) = run_many(&cfg, 1).unwrap();
+        let direct = {
+            let mut e = cfg.sharded_engine(0, 2).unwrap();
+            e.run_to(cfg.horizon);
+            e.into_trace()
+        };
+        assert!(t2[0].bit_identical(&direct), "runner dispatch diverged from direct build");
+        cfg.params.shards = 4;
+        let (t4, _) = run_many(&cfg, 2).unwrap();
+        for (a, b) in t2.iter().zip(t4.iter()) {
+            assert!(a.bit_identical(b), "stream-mode trace depends on worker count");
+        }
+        // ... and differs from the shared-stream family (different
+        // randomness ownership, same scenario).
+        cfg.params.shards = 1;
+        let (t1, _) = run_many(&cfg, 1).unwrap();
+        assert_ne!(t1[0].z, t2[0].z, "stream mode should be a distinct trace family");
     }
 }

@@ -1,0 +1,722 @@
+//! The **stream-mode sharded engine**: within-run parallelism built on
+//! per-walk RNG streams, with schedule-invariant determinism — the trace
+//! is bit-identical at every shard count (locked by
+//! `tests/shard_invariance.rs` and the pinned stream-mode golden family).
+//!
+//! ## Randomness ownership (DESIGN.md §Per-walk streams)
+//!
+//! The shared-stream [`Engine`](crate::sim::engine::Engine) draws every
+//! random number from one stream, so hop-iteration order *is* the trace:
+//! nothing can run concurrently without changing results. Here every
+//! draw belongs to exactly one owner, each with an independent stream
+//! derived from the scenario's simulation stream (`rng::streams` tags):
+//!
+//! * **walks** — hop draws and in-transit loss checks come from the
+//!   walk's own stream (original walk `k`: `base.derive(WALK, k)`; a
+//!   fork's child splits the *parent's* stream, tagged by the
+//!   within-decision fork index — the parent stream advances every step,
+//!   so children forked in different steps never collide);
+//! * **nodes** — control-decision draws come from the visited node's
+//!   stream (`base.derive(NODE, i)`);
+//! * **the failure model** — bursts and Byzantine Markov flips draw from
+//!   one model-level stream (`base.derive`-style `FAIL` split).
+//!
+//! A walk's draw sequence is then a pure function of the scenario, never
+//! of the order walks happen to be iterated — which is what makes the
+//! phases below safe to run on any number of worker threads.
+//!
+//! ## Step anatomy: two shard-parallel phases, two canonical barriers
+//!
+//! ```text
+//! pre-step failures (model stream, coordinator) → compact ─┐ barrier 1
+//!   hop phase   — dense walk columns split into contiguous │
+//!                 chunks; each worker hops its walks on    │
+//!                 their own streams, records hop deaths    │
+//!   [apply hop deaths in dense order]                      │
+//!   control phase — nodes split into contiguous ranges;    │
+//!                 each worker observes its nodes' arrivals │
+//!                 in dense (creation) order and runs       │
+//!                 control on per-node streams              │
+//! merge decisions sorted by deciding walk's dense index ───┘ barrier 2
+//!   (θ̂ telemetry, fork spawns + child streams, kills) → compact → Z_t
+//! ```
+//!
+//! Everything order-sensitive happens at the barriers, in **canonical
+//! (creation/dense) order**: hop deaths are applied in dense order (the
+//! contiguous chunks concatenate to exactly that), decisions are merged
+//! sorted by the deciding walk's dense index, and fork children are
+//! spawned — and observed at the forking node — in that same order, so
+//! arena ids, node-table first-seen order (the θ̂ float-sum order), the
+//! event log and the θ̂ telemetry are all identical at any shard count.
+//! Inside a phase nothing shared is touched: walk chunks are disjoint
+//! column ranges; node ranges own their `NodeState`s, their streams and
+//! their clone of the control algorithm (per-node control state like
+//! `PeriodicFork::next_fork` is node-indexed, so clones never disagree).
+//!
+//! ## What stream mode is *not*
+//!
+//! It is a different trace family from the shared-stream engine — same
+//! system, different (but equally valid) sample path — so it carries its
+//! own pinned golden family (`tests/stream_golden.rs`) instead of the
+//! arena-vs-reference lock. Two semantic deltas, both deliberate:
+//! fork children are observed by the forking node at the merge barrier
+//! (after the step's arrivals) rather than mid-loop, and `VisitHook`s
+//! are not supported (the learning layer runs on the sequential engine).
+//! Failure models must not mutate internal state in `on_hop`/`on_arrival`
+//! (none do; state transitions belong in `pre_step`, which runs once on
+//! the coordinator's master copy before workers clone it).
+
+use std::sync::Arc;
+
+use crate::control::{Control, VisitCtx};
+use crate::failures::Failures;
+use crate::graph::Graph;
+use crate::rng::{streams, Rng};
+use crate::sim::engine::{SimParams, StartPlacement};
+use crate::sim::metrics::{Event, EventKind, Trace};
+use crate::walks::{Lineage, NodeState, Walk, WalkArena, WalkId};
+
+/// One surviving walk's landing spot, queued for the control phase.
+#[derive(Debug, Clone, Copy)]
+struct Arrival {
+    /// Dense position in the arena (canonical order key).
+    dense: u32,
+    node: u32,
+    id: WalkId,
+    slot: u16,
+}
+
+/// A walk killed during the hop phase (in transit or on arrival).
+#[derive(Debug, Clone, Copy)]
+struct HopDeath {
+    dense: u32,
+    /// Where it died: the origin for in-transit losses, the destination
+    /// for Byzantine arrivals.
+    node: u32,
+}
+
+/// One node's control decision, tagged for the canonical merge.
+#[derive(Debug)]
+struct DecisionOut {
+    /// Dense position of the deciding (visiting) walk.
+    dense: u32,
+    node: u32,
+    walk: WalkId,
+    decision: crate::control::Decision,
+}
+
+/// The stream-mode engine. Construction mirrors [`Engine`]'s signature
+/// plus the worker count; `shards == 1` runs the identical phased
+/// semantics inline (no threads), so it is the reference point the
+/// invariance tests compare higher counts against.
+///
+/// [`Engine`]: crate::sim::engine::Engine
+pub struct ShardedEngine {
+    pub graph: Arc<Graph>,
+    pub params: SimParams,
+    shards: usize,
+    /// Contiguous node-range size per shard (static for the whole run —
+    /// results never depend on it, only thread assignment does).
+    nodes_per_shard: usize,
+    arena: WalkArena,
+    states: Vec<NodeState>,
+    /// Per-node control-decision streams.
+    node_rngs: Vec<Rng>,
+    /// One clone of the control algorithm per shard; per-node internal
+    /// state is node-indexed and shards own disjoint node ranges, so the
+    /// clones never diverge on state either of them reads.
+    controls: Vec<Control>,
+    /// Master failure model: `pre_step` runs here; hop-phase workers use
+    /// per-step clones (read-only by contract).
+    failures: Failures,
+    /// Model-level failure stream.
+    fail_rng: Rng,
+    t: u64,
+    trace: Trace,
+    control_start: u64,
+    // Per-shard scratch, reused across steps.
+    hop_deaths: Vec<Vec<HopDeath>>,
+    arrivals: Vec<Vec<Arrival>>,
+    decisions: Vec<Vec<DecisionOut>>,
+}
+
+impl ShardedEngine {
+    pub fn new(
+        graph: Arc<Graph>,
+        params: SimParams,
+        control: impl Into<Control>,
+        failures: impl Into<Failures>,
+        base: Rng,
+        shards: usize,
+    ) -> Self {
+        let shards = shards.max(1);
+        let n = graph.n();
+        let control = control.into();
+        let z0 = params.z0;
+
+        let mut init_rng = base.split(streams::INIT);
+        let fail_rng = base.split(streams::FAIL);
+        let walk_root = base.split(streams::WALK);
+        let node_root = base.split(streams::NODE);
+
+        let mut arena = WalkArena::with_streams(z0 as usize);
+        for slot in 0..z0 {
+            let at = match params.start {
+                StartPlacement::AtNode(v) => v,
+                StartPlacement::Random => init_rng.below(n) as u32,
+            };
+            arena.spawn_with_stream(
+                at,
+                0,
+                Lineage::Original { slot: slot as u16 },
+                walk_root.split(slot as u64),
+            );
+        }
+        // MISSINGPERSON is the only reader of the per-slot staleness
+        // table; for every other control family the Z0-sized column per
+        // node would be pure waste — at the million-node scale presets it
+        // would be gigabytes (`observe` already tolerates the empty
+        // table).
+        let mp_slots = if matches!(control, Control::MissingPerson(_)) { z0 as usize } else { 0 };
+        let states = (0..n)
+            .map(|i| NodeState::new(mp_slots, params.survival.resolve(&graph, i)))
+            .collect();
+        let node_rngs = (0..n).map(|i| node_root.split(i as u64)).collect();
+        let controls = vec![control; shards];
+        let nodes_per_shard = n.div_ceil(shards).max(1);
+        let control_start = params
+            .control_start
+            .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
+        let mut trace = Trace::default();
+        trace.z.push(z0);
+        ShardedEngine {
+            graph,
+            params,
+            shards,
+            nodes_per_shard,
+            arena,
+            states,
+            node_rngs,
+            controls,
+            failures: failures.into(),
+            fail_rng,
+            t: 0,
+            trace,
+            control_start,
+            hop_deaths: (0..shards).map(|_| Vec::new()).collect(),
+            arrivals: (0..shards).map(|_| Vec::new()).collect(),
+            decisions: (0..shards).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// The resolved control warm-up boundary.
+    pub fn control_start(&self) -> u64 {
+        self.control_start
+    }
+
+    /// Worker count this engine was built with.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Current time.
+    pub fn now(&self) -> u64 {
+        self.t
+    }
+
+    /// Number of active walks.
+    pub fn alive(&self) -> u32 {
+        self.arena.live()
+    }
+
+    /// The walk store (telemetry/tests).
+    pub fn arena(&self) -> &WalkArena {
+        &self.arena
+    }
+
+    /// Node states (telemetry/tests).
+    pub fn states(&self) -> &[NodeState] {
+        &self.states
+    }
+
+    /// Materialize every walk — live and retired (cold path).
+    pub fn snapshot(&self) -> Vec<Walk> {
+        self.arena.snapshot()
+    }
+
+    /// Advance one time step.
+    pub fn step(&mut self) {
+        self.t += 1;
+        let t = self.t;
+
+        // 1. External failure events from the model-level stream; the
+        //    dense id column is the alive roster, as in the sequential
+        //    engine.
+        let killed = self.failures.pre_step(t, self.arena.ids(), &mut self.fail_rng);
+        for id in killed {
+            if let Some(dense) = self.arena.resolve(id) {
+                let node = self.arena.position(dense);
+                kill_dense(&mut self.arena, &mut self.trace, dense, t, node, EventKind::Failure);
+            }
+        }
+        self.arena.compact();
+
+        // 2. Hop phase: contiguous chunks of the dense walk columns, one
+        //    worker each. Every draw comes from the walk's own stream,
+        //    so chunk boundaries cannot influence any value.
+        let len0 = self.arena.dense_len();
+        if len0 == 0 {
+            self.trace.z.push(0);
+            self.trace.extinct = true;
+            return;
+        }
+        let chunk = len0.div_ceil(self.shards).max(1);
+        {
+            let (ids, at, walk_rngs) = self.arena.hop_columns_mut();
+            let graph: &Graph = &self.graph;
+            let failures = &self.failures;
+            if self.shards == 1 {
+                hop_chunk(graph, failures, t, 0, ids, at, walk_rngs, &mut self.hop_deaths[0]);
+            } else {
+                std::thread::scope(|scope| {
+                    for (k, ((at_c, rng_c), deaths)) in at
+                        .chunks_mut(chunk)
+                        .zip(walk_rngs.chunks_mut(chunk))
+                        .zip(self.hop_deaths.iter_mut())
+                        .enumerate()
+                    {
+                        scope.spawn(move || {
+                            hop_chunk(graph, failures, t, k * chunk, ids, at_c, rng_c, deaths)
+                        });
+                    }
+                });
+            }
+        }
+        // Barrier: apply hop deaths in dense order. Chunks are contiguous
+        // and scanned in order, so per-shard lists concatenate to exactly
+        // the canonical order.
+        for deaths in &mut self.hop_deaths {
+            for hd in deaths.drain(..) {
+                kill_dense(
+                    &mut self.arena,
+                    &mut self.trace,
+                    hd.dense as usize,
+                    t,
+                    hd.node,
+                    EventKind::Failure,
+                );
+            }
+        }
+
+        // 3. Control phase: bucket survivors by owning node range (the
+        //    scan is in dense order, so each shard sees its nodes'
+        //    arrivals in canonical order), then run observe + control
+        //    shard-locally on per-node streams.
+        for bufs in &mut self.arrivals {
+            bufs.clear();
+        }
+        for i in 0..len0 {
+            if self.arena.is_tombstoned(i) {
+                continue;
+            }
+            let node = self.arena.position(i);
+            let shard = node as usize / self.nodes_per_shard;
+            self.arrivals[shard].push(Arrival {
+                dense: i as u32,
+                node,
+                id: self.arena.id_at(i),
+                slot: self.arena.lineage_at(i).slot(),
+            });
+        }
+        {
+            let control_start = self.control_start;
+            let z0 = self.params.z0;
+            let nps = self.nodes_per_shard;
+            if self.shards == 1 {
+                control_chunk(
+                    &mut self.states,
+                    &mut self.node_rngs,
+                    &mut self.controls[0],
+                    &self.arrivals[0],
+                    0,
+                    t,
+                    control_start,
+                    z0,
+                    &mut self.decisions[0],
+                );
+            } else {
+                std::thread::scope(|scope| {
+                    let mut states_rest: &mut [NodeState] = &mut self.states;
+                    let mut rngs_rest: &mut [Rng] = &mut self.node_rngs;
+                    for (k, (control, (arr, out))) in self
+                        .controls
+                        .iter_mut()
+                        .zip(self.arrivals.iter().zip(self.decisions.iter_mut()))
+                        .enumerate()
+                    {
+                        let take = nps.min(states_rest.len());
+                        if take == 0 {
+                            break;
+                        }
+                        let (st_c, st_rest) = states_rest.split_at_mut(take);
+                        states_rest = st_rest;
+                        let (rg_c, rg_rest) = rngs_rest.split_at_mut(take);
+                        rngs_rest = rg_rest;
+                        let base = (k * nps) as u32;
+                        scope.spawn(move || {
+                            control_chunk(st_c, rg_c, control, arr, base, t, control_start, z0, out)
+                        });
+                    }
+                });
+            }
+        }
+
+        // Barrier: merge decisions in canonical order — sorted by the
+        // deciding walk's dense index, which reproduces the sequential
+        // interleaving of the θ̂ telemetry, fork events and kills exactly,
+        // independent of which shard computed what.
+        let total: usize = self.decisions.iter().map(Vec::len).sum();
+        let mut merged: Vec<DecisionOut> = Vec::with_capacity(total);
+        for out in &mut self.decisions {
+            merged.append(out);
+        }
+        merged.sort_unstable_by_key(|d| d.dense);
+        for d in merged {
+            if self.params.record_theta {
+                if let Some(th) = d.decision.theta {
+                    self.trace.theta.push((t, th));
+                }
+            }
+            for (j, &fork_slot) in d.decision.forks.iter().enumerate() {
+                if self.arena.live() as usize >= self.params.max_walks {
+                    self.trace.capped = true;
+                    break;
+                }
+                // The child's stream splits off the parent's post-hop
+                // state; `j` separates siblings of one decision, the
+                // parent's per-step stream advance separates decisions.
+                let child_stream = self.arena.stream_at(d.dense as usize).split(j as u64);
+                let lineage =
+                    Lineage::Forked { parent: d.walk, by: d.node, at: t, slot: fork_slot };
+                let (child_id, _) = self.arena.spawn_with_stream(d.node, t, lineage, child_stream);
+                // The new walk is immediately visible to the forking node
+                // (footnote 7); in stream mode that visibility lands at
+                // the barrier, after the step's arrivals.
+                self.states[d.node as usize].observe(t, child_id, fork_slot);
+                self.trace.events.push(Event {
+                    t,
+                    node: d.node,
+                    walk: child_id.0,
+                    kind: EventKind::Fork,
+                });
+            }
+            if d.decision.terminate {
+                kill_dense(
+                    &mut self.arena,
+                    &mut self.trace,
+                    d.dense as usize,
+                    t,
+                    d.node,
+                    EventKind::ControlTermination,
+                );
+            }
+        }
+
+        // 4. Housekeeping. Prune is per-node deterministic work, so it
+        //    parallelizes over the same node ranges with no merge step.
+        if self.params.prune_every > 0 && t % self.params.prune_every == 0 {
+            if self.shards == 1 {
+                for s in &mut self.states {
+                    s.prune(t);
+                }
+            } else {
+                std::thread::scope(|scope| {
+                    for states_c in self.states.chunks_mut(self.nodes_per_shard) {
+                        scope.spawn(move || {
+                            for s in states_c {
+                                s.prune(t);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+        self.arena.compact();
+        self.trace.z.push(self.arena.live());
+        if self.arena.live() == 0 {
+            self.trace.extinct = true;
+        }
+    }
+
+    /// Run until `horizon` (inclusive), stopping early on extinction
+    /// (trace padded with zeros, as the sequential engine does).
+    pub fn run_to(&mut self, horizon: u64) {
+        while self.t < horizon {
+            if self.arena.live() == 0 {
+                self.trace.z.resize(horizon as usize + 1, 0);
+                self.trace.extinct = true;
+                self.t = horizon;
+                break;
+            }
+            self.step();
+        }
+    }
+
+    /// Consume the engine, returning its telemetry.
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+
+    /// Borrow telemetry.
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+}
+
+/// Retire the walk at dense position `dense`: trace event + graveyard
+/// move. Free function so barrier loops can hold disjoint field borrows.
+fn kill_dense(
+    arena: &mut WalkArena,
+    trace: &mut Trace,
+    dense: usize,
+    t: u64,
+    node: u32,
+    kind: EventKind,
+) {
+    let id = arena.id_at(dense);
+    trace.events.push(Event { t, node, walk: id.0, kind });
+    arena.retire(dense, t);
+}
+
+/// Hop-phase worker: advance each walk in the chunk on its own stream.
+/// `base` is the chunk's offset into the dense columns; `ids` is the full
+/// roster (read-only). The failure model is cloned per step — hop-time
+/// checks are read-only by contract, and `pre_step` already ran on the
+/// coordinator's master copy.
+#[allow(clippy::too_many_arguments)]
+fn hop_chunk(
+    graph: &Graph,
+    failures: &Failures,
+    t: u64,
+    base: usize,
+    ids: &[WalkId],
+    at: &mut [u32],
+    walk_rngs: &mut [Rng],
+    deaths: &mut Vec<HopDeath>,
+) {
+    let mut failures = failures.clone();
+    for j in 0..at.len() {
+        let dense = base + j;
+        let id = ids[dense];
+        let from = at[j];
+        let rng = &mut walk_rngs[j];
+        let to = graph.step(from as usize, rng) as u32;
+        // Loss in transit (e.g. the per-hop Bernoulli) draws from the
+        // walk's stream too — the check belongs to the walk's fate.
+        if failures.on_hop(t, id, from, to, rng) {
+            deaths.push(HopDeath { dense: dense as u32, node: from });
+            continue;
+        }
+        at[j] = to;
+        if failures.on_arrival(t, id, to, rng) {
+            deaths.push(HopDeath { dense: dense as u32, node: to });
+        }
+    }
+}
+
+/// Control-phase worker: the shard's arrivals are pre-bucketed in dense
+/// order; `observe` + the once-per-node-per-step control decision run
+/// exactly as in the sequential engine, with decision randomness drawn
+/// from the visited node's stream. `base` is the shard's first node id.
+#[allow(clippy::too_many_arguments)]
+fn control_chunk(
+    states: &mut [NodeState],
+    node_rngs: &mut [Rng],
+    control: &mut Control,
+    arrivals: &[Arrival],
+    base: u32,
+    t: u64,
+    control_start: u64,
+    z0: u32,
+    out: &mut Vec<DecisionOut>,
+) {
+    for a in arrivals {
+        let local = (a.node - base) as usize;
+        let state = &mut states[local];
+        state.observe(t, a.id, a.slot);
+        // Warm-up and the one-decision-per-node-per-step rule
+        // (footnote 6), exactly as in the sequential engine.
+        if t < control_start || state.last_control_step == Some(t) {
+            continue;
+        }
+        state.last_control_step = Some(t);
+        let decision = {
+            let mut ctx = VisitCtx {
+                t,
+                node: a.node,
+                walk: a.id,
+                slot: a.slot,
+                z0,
+                state,
+                rng: &mut node_rngs[local],
+            };
+            control.on_visit(&mut ctx)
+        };
+        if decision.theta.is_some() || !decision.forks.is_empty() || decision.terminate {
+            out.push(DecisionOut { dense: a.dense, node: a.node, walk: a.id, decision });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::{Decafork, NoControl};
+    use crate::failures::{Burst, NoFailures, Probabilistic};
+    use crate::graph::generators;
+
+    fn small_graph() -> Arc<Graph> {
+        Arc::new(generators::random_regular(30, 4, &mut Rng::new(7)).unwrap())
+    }
+
+    fn run(shards: usize, seed: u64) -> Trace {
+        let mut e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 8, record_theta: true, ..Default::default() },
+            Decafork::new(2.0),
+            Burst::new(vec![(100, 4), (300, 3)]),
+            Rng::new(seed),
+            shards,
+        );
+        e.run_to(600);
+        e.into_trace()
+    }
+
+    #[test]
+    fn population_constant_without_failures_or_control() {
+        let mut e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 5, ..Default::default() },
+            NoControl,
+            NoFailures,
+            Rng::new(1),
+            2,
+        );
+        e.run_to(300);
+        assert_eq!(e.alive(), 5);
+        assert!(e.trace().z.iter().all(|&z| z == 5));
+        assert!(e.trace().events.is_empty());
+    }
+
+    #[test]
+    fn trace_invariant_across_shard_counts() {
+        let base = run(1, 11);
+        for shards in [2, 3, 8] {
+            let other = run(shards, 11);
+            assert!(
+                base.bit_identical(&other),
+                "shards=1 vs {shards}: stream-mode trace diverged"
+            );
+        }
+        assert_ne!(run(1, 11).z, run(1, 12).z, "different seeds must differ");
+    }
+
+    #[test]
+    fn conservation_holds_under_churn() {
+        let mut e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 8, control_start: Some(50), max_walks: 64, ..Default::default() },
+            Decafork::new(2.0),
+            Probabilistic::new(0.01),
+            Rng::new(5),
+            4,
+        );
+        e.run_to(400);
+        let tr = e.trace();
+        let mut delta = vec![0i64; tr.z.len()];
+        for ev in &tr.events {
+            delta[ev.t as usize] += if ev.kind == EventKind::Fork { 1 } else { -1 };
+        }
+        for t in 1..tr.z.len() {
+            assert_eq!(
+                tr.z[t] as i64 - tr.z[t - 1] as i64,
+                delta[t],
+                "conservation violated at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn extinction_flagged_and_padded() {
+        let mut e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 3, ..Default::default() },
+            NoControl,
+            Probabilistic::new(0.5),
+            Rng::new(3),
+            2,
+        );
+        e.run_to(200);
+        assert!(e.trace().extinct);
+        assert_eq!(e.trace().z.len(), 201);
+        assert_eq!(*e.trace().z.last().unwrap(), 0);
+    }
+
+    #[test]
+    fn max_walks_cap_enforced() {
+        let mut e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 4, max_walks: 16, control_start: Some(0), ..Default::default() },
+            Decafork { epsilon: 100.0, p: Some(1.0) },
+            NoFailures,
+            Rng::new(7),
+            4,
+        );
+        e.run_to(100);
+        assert!(e.alive() <= 16);
+        assert!(e.trace().capped);
+    }
+
+    #[test]
+    fn forked_children_carry_lineage_and_wait_one_step() {
+        let mut e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 4, control_start: Some(0), max_walks: 64, ..Default::default() },
+            Decafork { epsilon: 50.0, p: Some(1.0) },
+            NoFailures,
+            Rng::new(6),
+            2,
+        );
+        for _ in 0..3 {
+            e.step();
+        }
+        assert!(e.alive() > 4);
+        for w in e.snapshot() {
+            if let Lineage::Forked { at, .. } = w.lineage {
+                assert!(at >= w.born);
+            }
+        }
+    }
+
+    #[test]
+    fn slot_tables_allocated_only_for_missingperson() {
+        let e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 6, ..Default::default() },
+            Decafork::new(2.0),
+            NoFailures,
+            Rng::new(9),
+            1,
+        );
+        assert!(e.states().iter().all(|s| s.slot_last_seen.is_empty()));
+        let e = ShardedEngine::new(
+            small_graph(),
+            SimParams { z0: 6, ..Default::default() },
+            crate::control::MissingPerson::new(100),
+            NoFailures,
+            Rng::new(9),
+            1,
+        );
+        assert!(e.states().iter().all(|s| s.slot_last_seen.len() == 6));
+    }
+}

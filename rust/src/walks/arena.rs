@@ -32,6 +32,7 @@
 //! at end of step), so dense indices are stable for the whole hop loop.
 
 use super::{Lineage, Walk, WalkId, WalkMut, WalkRef};
+use crate::rng::Rng;
 
 /// Sentinel for "this slot's walk is retired".
 const RETIRED: u32 = u32::MAX;
@@ -56,6 +57,11 @@ pub struct WalkArena {
     payload: Vec<Option<usize>>,
     /// Tombstones for walks retired since the last compaction.
     dead: Vec<bool>,
+    /// Per-walk RNG streams (stream-mode engines only; `None` for the
+    /// shared-stream engine). Parallel to the dense columns, compacted in
+    /// the same stable sweep; retired walks' streams are simply dropped —
+    /// the graveyard stores no randomness.
+    streams: Option<Vec<Rng>>,
     /// Sparse table indexed by `WalkId::index()`.
     slots: Vec<SlotMeta>,
     /// Reusable slot indices (retired walks' slots).
@@ -82,6 +88,20 @@ impl WalkArena {
             slots: Vec::with_capacity(n),
             ..Self::default()
         }
+    }
+
+    /// An arena with the per-walk stream column enabled (stream-mode
+    /// engines). Spawns must then go through
+    /// [`spawn_with_stream`](Self::spawn_with_stream) so the column stays
+    /// parallel to the dense columns.
+    pub fn with_streams(n: usize) -> Self {
+        WalkArena { streams: Some(Vec::with_capacity(n)), ..Self::with_capacity(n) }
+    }
+
+    /// Whether the per-walk stream column is enabled.
+    #[inline]
+    pub fn has_streams(&self) -> bool {
+        self.streams.is_some()
     }
 
     /// Number of live walks.
@@ -167,6 +187,27 @@ impl WalkArena {
     /// generation was bumped at retirement, so the new id never aliases
     /// the old one). Returns the id and the dense position.
     pub fn spawn(&mut self, at: u32, born: u64, lineage: Lineage) -> (WalkId, usize) {
+        debug_assert!(self.streams.is_none(), "stream-enabled arena: use spawn_with_stream");
+        self.spawn_inner(at, born, lineage)
+    }
+
+    /// Spawn a walk carrying its own RNG stream (stream-mode engines;
+    /// requires [`with_streams`](Self::with_streams)).
+    pub fn spawn_with_stream(
+        &mut self,
+        at: u32,
+        born: u64,
+        lineage: Lineage,
+        stream: Rng,
+    ) -> (WalkId, usize) {
+        self.streams
+            .as_mut()
+            .expect("spawn_with_stream on a stream-less arena")
+            .push(stream);
+        self.spawn_inner(at, born, lineage)
+    }
+
+    fn spawn_inner(&mut self, at: u32, born: u64, lineage: Lineage) -> (WalkId, usize) {
         let index = match self.free.pop() {
             Some(i) => i,
             None => {
@@ -187,6 +228,32 @@ impl WalkArena {
         self.dead.push(false);
         self.live += 1;
         (id, dense)
+    }
+
+    /// The RNG stream of the walk at dense position `i` (read-only; fork
+    /// children split from this state — `Rng::split` never advances the
+    /// parent).
+    #[inline]
+    pub fn stream_at(&self, i: usize) -> &Rng {
+        &self.streams.as_ref().expect("stream-less arena")[i]
+    }
+
+    /// Whether the dense entry `i` was retired since the last compaction
+    /// (mid-step tombstone).
+    #[inline]
+    pub fn is_tombstoned(&self, i: usize) -> bool {
+        self.dead[i]
+    }
+
+    /// Disjoint borrows of the columns the stream-mode hop phase needs:
+    /// the read-only id roster plus mutable position and per-walk stream
+    /// columns, all in creation order. Callers chunk the two mutable
+    /// slices into contiguous shard ranges. Only meaningful at a
+    /// compaction barrier (dense prefix all alive).
+    pub fn hop_columns_mut(&mut self) -> (&[WalkId], &mut [u32], &mut [Rng]) {
+        debug_assert_eq!(self.ids.len(), self.live as usize, "hop columns read between barriers");
+        let streams = self.streams.as_mut().expect("stream-less arena");
+        (&self.ids, &mut self.at, streams)
     }
 
     /// Dense position of a live walk, or `None` if the id is stale
@@ -252,6 +319,9 @@ impl WalkArena {
                 self.payload[w] = self.payload[r];
                 self.dead[w] = false;
                 self.slots[self.ids[w].index() as usize].dense = w as u32;
+                if let Some(streams) = &mut self.streams {
+                    streams.swap(w, r);
+                }
             }
             w += 1;
         }
@@ -261,6 +331,9 @@ impl WalkArena {
         self.lineage.truncate(w);
         self.payload.truncate(w);
         self.dead.truncate(w);
+        if let Some(streams) = &mut self.streams {
+            streams.truncate(w);
+        }
         debug_assert_eq!(w, self.live as usize);
     }
 
@@ -386,6 +459,33 @@ mod tests {
         assert_eq!(dead.died, Some(4));
         // Ancestry still resolvable through the graveyard.
         assert_eq!(crate::walks::lineage::root_slot(&snap, c), Some(0));
+    }
+
+    #[test]
+    fn stream_column_follows_walk_through_compaction() {
+        // Each walk's stream must stay glued to its walk across stable
+        // compaction — a misaligned stream column would silently hand one
+        // walk another's randomness and break schedule invariance.
+        let mut a = WalkArena::with_streams(4);
+        assert!(a.has_streams());
+        let ids: Vec<WalkId> = (0..4u16)
+            .map(|k| a.spawn_with_stream(k as u32, 0, orig(k), Rng::new(1000 + k as u64)).0)
+            .collect();
+        // Fingerprint each walk's stream by what a clone would draw next.
+        let finger = |a: &WalkArena, d: usize| a.stream_at(d).clone().next_u64();
+        let fp: Vec<u64> = (0..4).map(|d| finger(&a, d)).collect();
+        a.retire(a.resolve(ids[1]).unwrap(), 3);
+        a.compact();
+        let survivors = [ids[0], ids[2], ids[3]];
+        let expect = [fp[0], fp[2], fp[3]];
+        for (id, want) in survivors.iter().zip(expect) {
+            let d = a.resolve(*id).unwrap();
+            assert_eq!(finger(&a, d), want, "stream column misaligned after compaction");
+        }
+        let (roster, at, streams) = a.hop_columns_mut();
+        assert_eq!(roster.len(), 3);
+        assert_eq!(at.len(), 3);
+        assert_eq!(streams.len(), 3);
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //! ## Storage layout (see `DESIGN.md` §Walk arena)
 //!
 //! Live walks are stored in a [`WalkArena`]: a struct-of-arrays store
-//! whose dense columns (`at`, `born`, `lineage`, `payload`) hold **only
+//! whose dense columns (`at`, `born`, `lineage`, `payload`, and — for
+//! stream-mode engines — each walk's own `Rng` stream) hold **only
 //! live walks, in creation order**, so the engine's hot loop touches
 //! cache-contiguous data and never skips dead entries. Retired walks move
 //! to a cold `graveyard` that preserves the full [`Walk`] record for

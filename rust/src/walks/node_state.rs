@@ -89,6 +89,11 @@ pub struct NodeState {
     pub model: SurvivalModel,
     /// Per-slot last-seen table for MISSINGPERSON (indexed by original
     /// walk identity `ℓ ∈ [Z0]`); initialized to 0 per the algorithm.
+    /// Sized by the constructor's `z0` argument — engines running a
+    /// control family that never reads it pass 0 and the table stays
+    /// empty ([`observe`](Self::observe) tolerates that); at the
+    /// million-node scale presets an unconditional `Z0`-sized column per
+    /// node would be gigabytes of zeros.
     pub slot_last_seen: Vec<u64>,
     /// Step at which this node last executed a control decision; the paper
     /// (footnote 6) has a node process one visiting walk per time step.
@@ -466,6 +471,20 @@ mod tests {
         assert_eq!(s.known_walks(), 1);
         assert_eq!(s.last_seen_of(new), Some(60));
         assert_eq!(s.observe(310, new, 1), Some(250));
+    }
+
+    #[test]
+    fn observe_without_slot_table_records_returns_normally() {
+        // z0 = 0: no MISSINGPERSON slot table (the sharded engine's
+        // memory gate for non-MP controls). Return-time bookkeeping and
+        // θ̂ must be unaffected.
+        let mut s = NodeState::new(0, SurvivalModel::Empirical);
+        assert!(s.slot_last_seen.is_empty());
+        assert_eq!(s.observe(10, id(1), 3), None);
+        assert_eq!(s.observe(25, id(1), 3), Some(15));
+        assert!(s.slot_last_seen.is_empty(), "slot writes must be dropped, not panic");
+        assert_eq!(s.return_cdf.len(), 1);
+        assert!(s.knows(id(1)));
     }
 
     #[test]

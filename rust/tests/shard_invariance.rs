@@ -1,0 +1,125 @@
+//! Schedule invariance of the stream-mode sharded engine (ISSUE 3): the
+//! trace — `Trace::z`, the full event log, and the θ̂ telemetry, all
+//! compared at the bit level — must be **identical at every shard
+//! count**. Two layers:
+//!
+//! 1. the golden quartet driven through `ShardedEngine` at 1 / 2 / 8
+//!    workers (the scenarios already cover every failure surface and
+//!    every forking control family);
+//! 2. a seeded property test: randomized scenarios (graph family, Z0,
+//!    control, failure mix, horizon) at the deliberately awkward worker
+//!    counts {1, 2, 7, 16} — 7 exercises uneven node/walk ranges, 16
+//!    usually exceeds the walk count, so chunk-boundary bookkeeping is
+//!    stressed from both sides.
+//!
+//! No assertion here compares stream mode against the shared-stream
+//! engines: stream mode is its own trace family (per-walk randomness
+//! ownership), pinned separately by `tests/stream_golden.rs`.
+
+use decafork::rng::Rng;
+use decafork::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
+use decafork::sim::engine::SimParams;
+use decafork::sim::metrics::{EventKind, Trace};
+
+fn run_sharded(scenario: &Scenario, shards: usize) -> Trace {
+    let mut e = scenario.sharded_engine(0, shards).expect("scenario must build");
+    e.run_to(scenario.horizon);
+    e.into_trace()
+}
+
+#[test]
+fn golden_quartet_bit_identical_across_shard_counts() {
+    for (name, mut scenario) in presets::golden() {
+        // θ̂ telemetry on: invariance must hold for the float samples
+        // too, not just the integer population trace.
+        scenario.params.record_theta = true;
+        let base = run_sharded(&scenario, 1);
+        for shards in [2usize, 8] {
+            let other = run_sharded(&scenario, shards);
+            assert!(
+                base.bit_identical(&other),
+                "golden scenario '{name}': stream-mode trace diverged between \
+                 1 and {shards} shards"
+            );
+        }
+    }
+}
+
+/// Draw a randomized-but-buildable scenario from a seeded stream.
+fn random_scenario(rng: &mut Rng, case: u64) -> Scenario {
+    let n = 2 * (10 + rng.below(21)); // even 20..=60 (n*d must be even for any d)
+    let d = *rng.choose(&[4usize, 5, 6]);
+    let graph = match rng.below(3) {
+        0 => GraphSpec::RandomRegular { n, d },
+        1 => GraphSpec::Complete { n: 20 + rng.below(11) },
+        _ => GraphSpec::Ring { n: 20 + rng.below(21) },
+    };
+    let z0 = 4 + rng.below(9) as u32; // 4..=12
+    let control = match rng.below(5) {
+        0 => ControlSpec::Decafork { epsilon: 1.5 + rng.f64() },
+        1 => ControlSpec::DecaforkPlus { epsilon: 2.0, epsilon2: 5.0 },
+        2 => ControlSpec::MissingPerson { eps_mp: 100 + rng.below(200) as u64 },
+        3 => ControlSpec::Periodic { period: 40 + rng.below(80) as u64 },
+        _ => ControlSpec::None,
+    };
+    let mut parts = Vec::new();
+    if rng.bernoulli(0.7) {
+        parts.push(FailureSpec::Burst {
+            events: vec![(60 + rng.below(100) as u64, 1 + rng.below(3))],
+        });
+    }
+    if rng.bernoulli(0.7) {
+        parts.push(FailureSpec::Probabilistic { p_f: 0.001 + 0.009 * rng.f64() });
+    }
+    if rng.bernoulli(0.3) {
+        parts.push(FailureSpec::ByzantineScheduled {
+            node: rng.below(20) as u32,
+            schedule: vec![(80, true), (200, false)],
+        });
+    }
+    let failures = match parts.len() {
+        0 => FailureSpec::None,
+        1 => parts.pop().unwrap(),
+        _ => FailureSpec::Composite(parts),
+    };
+    Scenario {
+        graph,
+        params: SimParams {
+            z0,
+            control_start: Some(30 + rng.below(40) as u64),
+            max_walks: 256,
+            record_theta: true,
+            ..SimParams::default()
+        },
+        control,
+        failures,
+        horizon: 200 + rng.below(300) as u64,
+        runs: 1,
+        seed: 0x5EED_0000 ^ case,
+    }
+}
+
+#[test]
+fn randomized_scenarios_bit_identical_across_shard_counts() {
+    let mut rng = Rng::new(0x1517);
+    let mut total_forks = 0usize;
+    let mut total_failures = 0usize;
+    for case in 0..10u64 {
+        let scenario = random_scenario(&mut rng, case);
+        let base = run_sharded(&scenario, 1);
+        total_forks += base.count(EventKind::Fork);
+        total_failures += base.count(EventKind::Failure);
+        for shards in [2usize, 7, 16] {
+            let other = run_sharded(&scenario, shards);
+            assert!(
+                base.bit_identical(&other),
+                "case {case} ({}): trace diverged between 1 and {shards} shards",
+                scenario.label()
+            );
+        }
+    }
+    // The sweep as a whole must actually exercise the cross-effect merge
+    // paths — a fleet of do-nothing scenarios would prove nothing.
+    assert!(total_forks > 0, "no randomized case ever forked");
+    assert!(total_failures > 0, "no randomized case ever killed a walk");
+}

@@ -1,0 +1,71 @@
+//! The stream-mode golden family (ISSUE 3): pinned `Trace::z` files for
+//! the golden quartet driven through the per-walk-stream `ShardedEngine`.
+//!
+//! Stream mode is a *different trace family* from the shared-stream
+//! engines (randomness ownership moved from one engine-wide stream to
+//! per-walk / per-node streams), so it cannot share the arena-vs-
+//! reference oracle — its lock is the pin itself plus the shard-count
+//! invariance suite (`tests/shard_invariance.rs`).
+//!
+//! * `DECAFORK_SHARDS=k` runs the comparison at `k` workers (default 1).
+//!   Schedule invariance means the pinned file must match at **every**
+//!   `k` — CI's shard-matrix smoke step runs this test at 1, 2 and 8.
+//! * `DECAFORK_WRITE_GOLDEN=1` (re)records the pins. Like the
+//!   shared-stream pins, the files cannot be generated in the offline
+//!   authoring sandbox (no Rust toolchain); the CI `record golden
+//!   traces` step uploads them for the one-time commit. Until the files
+//!   exist, the invariance suite is the active lock.
+
+use decafork::scenario::presets;
+use std::path::PathBuf;
+
+fn golden_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(format!("stream_{name}.z.txt"))
+}
+
+fn encode(z: &[u32]) -> String {
+    z.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn stream_mode_traces_match_pinned_goldens() {
+    let shards = decafork::scenario::parse::shards_from_env();
+    for (name, scenario) in presets::golden() {
+        let trace = {
+            let mut e = scenario.sharded_engine(0, shards).unwrap();
+            e.run_to(scenario.horizon);
+            e.into_trace()
+        };
+        let path = golden_path(name);
+        if std::env::var("DECAFORK_WRITE_GOLDEN").is_ok() {
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, encode(&trace.z)).unwrap();
+            eprintln!("recorded stream-mode golden trace {}", path.display());
+        } else if path.exists() {
+            let want = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                encode(&trace.z),
+                want.trim_end(),
+                "stream golden '{name}' (shards={shards}): z-trace diverged from {}",
+                path.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn stream_golden_scenarios_are_nontrivial() {
+    // Mirror of the shared-stream guard: each stream-mode golden run
+    // must exercise forks AND failures, or the pin locks a dead system.
+    use decafork::sim::metrics::EventKind;
+    for (name, scenario) in presets::golden() {
+        let mut e = scenario.sharded_engine(0, 1).unwrap();
+        e.run_to(scenario.horizon);
+        let tr = e.trace();
+        assert!(!tr.extinct, "stream-mode '{name}' went extinct — useless as a lock");
+        assert!(tr.count(EventKind::Fork) > 0, "stream-mode '{name}' never forked");
+        assert!(tr.count(EventKind::Failure) > 0, "stream-mode '{name}' never failed a walk");
+    }
+}
