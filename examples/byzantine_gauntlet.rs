@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
         // DECAFORK_SHARDS>=2 reruns the gauntlet on the stream-mode
         // sharded engine (same system, different sample paths).
         params: SimParams {
-            shards: decafork::scenario::parse::shards_from_env(),
+            shards: decafork::scenario::parse::shards_from_env()?,
             ..SimParams::default()
         },
         control: ControlSpec::Decafork { epsilon: 2.0 },

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = ExperimentConfig {
             graph: graph.clone(),
             params: SimParams {
-                shards: decafork::scenario::parse::shards_from_env(),
+                shards: decafork::scenario::parse::shards_from_env()?,
                 ..Default::default()
             },
             control: ControlSpec::Decafork { epsilon: eps },

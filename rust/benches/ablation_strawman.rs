@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
             graph: GraphSpec::RandomRegular { n: 100, d: 8 },
             params: SimParams {
                 max_walks: 512,
-                shards: decafork::scenario::parse::shards_from_env(),
+                shards: decafork::scenario::parse::shards_from_env()?,
                 ..Default::default()
             },
             control,

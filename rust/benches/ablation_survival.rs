@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
             params: SimParams {
                 survival: spec,
                 control_start: warmup,
-                shards: decafork::scenario::parse::shards_from_env(),
+                shards: decafork::scenario::parse::shards_from_env()?,
                 ..Default::default()
             },
             control: ControlSpec::Decafork { epsilon: 2.0 },

@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = ExperimentConfig {
             graph: GraphSpec::RandomRegular { n: 100, d: 8 },
             params: SimParams {
-                shards: decafork::scenario::parse::shards_from_env(),
+                shards: decafork::scenario::parse::shards_from_env()?,
                 ..Default::default()
             },
             control: ControlSpec::DecaforkPlus { epsilon: eps, epsilon2: eps2 },

@@ -7,7 +7,12 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(10);
     let t0 = std::time::Instant::now();
-    let fig = decafork::figures::fig6(runs, 0, decafork::scenario::parse::shards_from_env())?;
+    let fig = decafork::figures::fig6(
+        runs,
+        0,
+        decafork::scenario::parse::shards_from_env()?,
+        decafork::sim::CoreBudget::from_env()?,
+    )?;
     println!("{}", fig.plot(100, 18));
     println!("{}", fig.summary());
     let path = fig.write_csv("results")?;

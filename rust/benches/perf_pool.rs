@@ -1,0 +1,150 @@
+//! Dispatch-overhead bench for the persistent worker pool (ISSUE 4):
+//! the stream-mode `ShardedEngine` run **pooled** (workers spawned once,
+//! parked between phases) vs **scoped** (the pre-pool behavior: one
+//! `std::thread::scope` spawn per chunk per phase) on the same scenario
+//! and worker count.
+//!
+//! Two workloads:
+//! * `perf_control_geometric` (1000 nodes, Z0 = 256) — the scale where
+//!   per-phase spawning used to make `--shards` *unprofitable*: the
+//!   acceptance bar (pooled ≥ 1.5× scoped) and the profitability probe
+//!   (pooled multi-worker vs 1-worker inline) both live here;
+//! * `scale_100k` — sanity that the pool does not regress the regime
+//!   where spawn cost was already noise (reported, not gated).
+//!
+//! Before any clock is trusted the bench **asserts bit-identical
+//! traces** across dispatch modes and worker counts — dispatch decides
+//! which thread runs a chunk, never what the chunk computes, so a
+//! "speedup" that moved one fork decision would be a bug, not a result.
+//!
+//! Writes `BENCH_pool.json` (or `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_PERF_STEPS` rescales horizons,
+//! `DECAFORK_SHARDS_HI` sets the worker count (default 8),
+//! `DECAFORK_PERF_SKIP_100K=1` skips the 100k-node workload (CI smoke:
+//! the graph build dominates the budget),
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the ≥ 1.5× gate to a report
+//! (2-core hosted runners cannot show an 8-worker dispatch win).
+
+use decafork::scenario::{presets, Scenario};
+use decafork::sim::{DispatchMode, Trace};
+use std::time::Instant;
+
+fn run_once(
+    scenario: &Scenario,
+    shards: usize,
+    dispatch: DispatchMode,
+) -> anyhow::Result<(f64, Trace)> {
+    // Clock covers only the stepping: graph build and pool construction
+    // are one-time setup (the pool's whole point is that its cost is
+    // paid once, not per step).
+    let mut e = scenario.sharded_engine_dispatch(0, shards, dispatch)?;
+    let t0 = Instant::now();
+    e.run_to(scenario.horizon);
+    let dt = t0.elapsed().as_secs_f64();
+    let trace = e.into_trace();
+    let steps = trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1);
+    Ok((steps as f64 / dt, trace))
+}
+
+struct Comparison {
+    sps_pooled: f64,
+    sps_scoped: f64,
+    pooled_vs_scoped: f64,
+}
+
+fn compare(
+    name: &str,
+    scenario: &Scenario,
+    workers: usize,
+) -> anyhow::Result<(Comparison, Trace)> {
+    println!("{name}: {} | {} steps | {workers} workers", scenario.label(), scenario.horizon);
+    let (sps_pooled, tr_pooled) = run_once(scenario, workers, DispatchMode::Pooled)?;
+    println!("  pooled dispatch      : {sps_pooled:>12.1} steps/s");
+    let (sps_scoped, tr_scoped) = run_once(scenario, workers, DispatchMode::Scoped)?;
+    println!("  scoped dispatch      : {sps_scoped:>12.1} steps/s");
+    assert!(
+        tr_pooled.bit_identical(&tr_scoped),
+        "{name}: trace diverged between pooled and scoped dispatch — \
+         perf numbers meaningless"
+    );
+    let pooled_vs_scoped = sps_pooled / sps_scoped;
+    println!("  pooled vs scoped     : {pooled_vs_scoped:>12.2}x");
+    println!(
+        "  traces bit-identical : yes ({} events, final z = {})",
+        tr_pooled.events.len(),
+        tr_pooled.z.last().unwrap()
+    );
+    Ok((Comparison { sps_pooled, sps_scoped, pooled_vs_scoped }, tr_pooled))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
+        .ok()
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .map(|s| s.max(100));
+    let workers = std::env::var("DECAFORK_SHARDS_HI")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&s| s >= 2)
+        .unwrap_or(8);
+
+    let mut control = presets::perf_control_geometric();
+    let mut s100k = presets::scale_100k();
+    if let Some(steps) = quick_steps {
+        control.rescale_to(steps);
+        s100k.rescale_to(steps);
+    }
+
+    println!("perf_pool: persistent pool vs per-phase scoped spawning\n");
+    let (small, tr_small) = compare("perf_control_geometric", &control, workers)?;
+    // Profitability: pooled multi-worker against the zero-thread inline
+    // path — the ROADMAP claim this bench exists to check is that with
+    // the spawn floor gone, `--shards` pays off at 1000-node scale too.
+    let (sps_one, tr_one) = run_once(&control, 1, DispatchMode::Pooled)?;
+    assert!(
+        tr_one.bit_identical(&tr_small),
+        "perf_control_geometric: trace diverged between 1 and {workers} workers"
+    );
+    let pooled_vs_one = small.sps_pooled / sps_one;
+    println!("  1 worker (inline)    : {sps_one:>12.1} steps/s");
+    println!("  pooled vs 1 worker   : {pooled_vs_one:>12.2}x  (profitability probe)\n");
+
+    let skip_100k = std::env::var("DECAFORK_PERF_SKIP_100K").is_ok();
+    let big = if skip_100k {
+        println!("scale_100k: skipped (DECAFORK_PERF_SKIP_100K)");
+        None
+    } else {
+        Some(compare("scale_100k", &s100k, workers)?.0)
+    };
+
+    let pass = small.pooled_vs_scoped >= 1.5;
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_pool.json".into());
+    let fmt_cmp = |c: &Comparison| {
+        format!(
+            "{{\n    \"steps_per_sec_pooled\": {:.1},\n    \"steps_per_sec_scoped\": {:.1},\n    \"pooled_vs_scoped\": {:.3}\n  }}",
+            c.sps_pooled, c.sps_scoped, c.pooled_vs_scoped
+        )
+    };
+    let big_json = match &big {
+        Some(c) => fmt_cmp(c),
+        None => "null".into(),
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"perf_pool\",\n  \"mode\": \"stream engine, pooled vs scoped dispatch, traces bit-identical\",\n  \"workers\": {workers},\n  \"perf_control_geometric\": {{\n    \"graph\": \"{}\",\n    \"z0\": {},\n    \"steps\": {},\n    \"steps_per_sec_pooled\": {:.1},\n    \"steps_per_sec_scoped\": {:.1},\n    \"steps_per_sec_1_worker\": {sps_one:.1},\n    \"pooled_vs_scoped\": {:.3},\n    \"pooled_vs_1_worker\": {pooled_vs_one:.3}\n  }},\n  \"scale_100k\": {big_json},\n  \"acceptance_min_pooled_vs_scoped\": 1.5,\n  \"pass\": {pass}\n}}\n",
+        control.graph.label(),
+        control.params.z0,
+        control.horizon,
+        small.sps_pooled,
+        small.sps_scoped,
+        small.pooled_vs_scoped,
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
+        anyhow::bail!("perf_pool below the 1.5x pooled-vs-scoped bar — see {out}");
+    }
+    Ok(())
+}

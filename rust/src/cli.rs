@@ -3,6 +3,20 @@
 
 use std::collections::HashMap;
 
+/// Shared validation for every "how many shards/cores" knob (`--shards`
+/// / `DECAFORK_SHARDS` / `--cores` / `DECAFORK_CORES`): a positive
+/// integer, with a clear error naming the knob for both the zero and the
+/// non-numeric case (no panic, no silent fallback — a typo'd value in a
+/// CI matrix must not quietly turn the whole matrix into 1-shard runs
+/// that test nothing).
+pub fn positive_count(knob: &str, v: &str) -> anyhow::Result<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(s) if s >= 1 => Ok(s),
+        Ok(_) => anyhow::bail!("{knob}={v} is invalid: must be >= 1"),
+        Err(_) => anyhow::bail!("{knob}={v} is invalid: need an integer >= 1"),
+    }
+}
+
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {

@@ -13,7 +13,7 @@
 use crate::report::{self, Table};
 use crate::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::sim::metrics::Trace;
-use crate::sim::{run_many, AggregateTrace};
+use crate::sim::{run_many_with_budget, AggregateTrace, CoreBudget};
 
 /// One curve: label + aggregate across runs (+ raw traces for derived
 /// statistics).
@@ -119,8 +119,13 @@ impl FigureResult {
     }
 }
 
-fn run_curve(label: &str, cfg: &Scenario, threads: usize) -> anyhow::Result<Curve> {
-    let (traces, agg) = run_many(cfg, threads)?;
+fn run_curve(
+    label: &str,
+    cfg: &Scenario,
+    threads: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<Curve> {
+    let (traces, agg) = run_many_with_budget(cfg, threads, cores)?;
     Ok(Curve { label: label.to_string(), agg, traces })
 }
 
@@ -144,7 +149,12 @@ const MP_EPS: u64 = 800;
 
 /// Fig. 1: MISSINGPERSON vs DECAFORK (ε=2) vs DECAFORK+ (3.25/5.75),
 /// bursts −5 @ 2000 and −6 @ 6000.
-pub fn fig1(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+pub fn fig1(
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for (label, control) in [
@@ -153,7 +163,7 @@ pub fn fig1(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
         ("decafork+(3.25/5.75)", ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 }),
     ] {
         let cfg = Scenario { control, ..base.clone() };
-        curves.push(run_curve(label, &cfg, threads)?);
+        curves.push(run_curve(label, &cfg, threads, cores)?);
     }
     Ok(FigureResult {
         name: "fig1",
@@ -165,7 +175,12 @@ pub fn fig1(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
 }
 
 /// Fig. 2: bursts + per-step probabilistic failure p_f.
-pub fn fig2(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+pub fn fig2(
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for p_f in [0.0002, 0.001] {
@@ -184,7 +199,7 @@ pub fn fig2(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
             ),
         ] {
             let cfg = Scenario { control, failures: failures.clone(), ..base.clone() };
-            curves.push(run_curve(&label, &cfg, threads)?);
+            curves.push(run_curve(&label, &cfg, threads, cores)?);
         }
     }
     Ok(FigureResult {
@@ -200,7 +215,12 @@ pub fn fig2(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
 /// arriving walk during its `Byz` phase `[1000, 5000)` (after the paper's
 /// required failure-free initialization), then abruptly turns honest
 /// (`No Byz`) — the hard switch DECAFORK overshoots on.
-pub fn fig3(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+pub fn fig3(
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs, shards);
     let failures = FailureSpec::Composite(vec![
         FailureSpec::paper_bursts(),
@@ -213,7 +233,7 @@ pub fn fig3(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
         ("decafork+(3.25/5.75)", ControlSpec::DecaforkPlus { epsilon: 3.25, epsilon2: 5.75 }),
     ] {
         let cfg = Scenario { control, failures: failures.clone(), ..base.clone() };
-        curves.push(run_curve(label, &cfg, threads)?);
+        curves.push(run_curve(label, &cfg, threads, cores)?);
     }
     Ok(FigureResult {
         name: "fig3",
@@ -230,7 +250,12 @@ pub fn fig3(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
 /// reproduces its claim that smaller graphs react faster — smaller graphs
 /// have tighter return-time support, so they tolerate a more aggressive
 /// threshold without overshoot.
-pub fn fig4(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+pub fn fig4(
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for (n, eps) in [(50usize, 2.1), (100, 2.0), (200, 1.85)] {
@@ -239,7 +264,7 @@ pub fn fig4(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
             control: ControlSpec::Decafork { epsilon: eps },
             ..base.clone()
         };
-        curves.push(run_curve(&format!("n={n} (e={eps})"), &cfg, threads)?);
+        curves.push(run_curve(&format!("n={n} (e={eps})"), &cfg, threads, cores)?);
     }
     Ok(FigureResult {
         name: "fig4",
@@ -251,7 +276,12 @@ pub fn fig4(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
 }
 
 /// Fig. 5: the ε trade-off (reaction time vs overshoot), n = 100.
-pub fn fig5(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+pub fn fig5(
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for eps in [1.5, 2.0, 2.5, 3.0, 3.5] {
@@ -259,7 +289,7 @@ pub fn fig5(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
             control: ControlSpec::Decafork { epsilon: eps },
             ..base.clone()
         };
-        curves.push(run_curve(&format!("e={eps}"), &cfg, threads)?);
+        curves.push(run_curve(&format!("e={eps}"), &cfg, threads, cores)?);
     }
     Ok(FigureResult {
         name: "fig5",
@@ -271,7 +301,12 @@ pub fn fig5(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
 }
 
 /// Fig. 6: four graph families at n = 100.
-pub fn fig6(runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+pub fn fig6(
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     let base = base_cfg(runs, shards);
     let mut curves = Vec::new();
     for (label, graph, eps) in [
@@ -285,7 +320,7 @@ pub fn fig6(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
             control: ControlSpec::Decafork { epsilon: eps },
             ..base.clone()
         };
-        curves.push(run_curve(label, &cfg, threads)?);
+        curves.push(run_curve(label, &cfg, threads, cores)?);
     }
     Ok(FigureResult {
         name: "fig6",
@@ -296,15 +331,22 @@ pub fn fig6(runs: usize, threads: usize, shards: usize) -> anyhow::Result<Figure
     })
 }
 
-/// Run a figure by id.
-pub fn by_id(id: u32, runs: usize, threads: usize, shards: usize) -> anyhow::Result<FigureResult> {
+/// Run a figure by id. `cores` is the replication × shard core budget
+/// (CLI `--cores` / `DECAFORK_CORES` / detected parallelism).
+pub fn by_id(
+    id: u32,
+    runs: usize,
+    threads: usize,
+    shards: usize,
+    cores: CoreBudget,
+) -> anyhow::Result<FigureResult> {
     match id {
-        1 => fig1(runs, threads, shards),
-        2 => fig2(runs, threads, shards),
-        3 => fig3(runs, threads, shards),
-        4 => fig4(runs, threads, shards),
-        5 => fig5(runs, threads, shards),
-        6 => fig6(runs, threads, shards),
+        1 => fig1(runs, threads, shards, cores),
+        2 => fig2(runs, threads, shards, cores),
+        3 => fig3(runs, threads, shards, cores),
+        4 => fig4(runs, threads, shards, cores),
+        5 => fig5(runs, threads, shards, cores),
+        6 => fig6(runs, threads, shards, cores),
         other => anyhow::bail!("unknown figure id {other} (have 1..=6)"),
     }
 }
@@ -317,7 +359,7 @@ mod tests {
 
     #[test]
     fn by_id_rejects_unknown() {
-        assert!(by_id(7, 1, 1, 1).is_err());
+        assert!(by_id(7, 1, 1, 1, CoreBudget::detect()).is_err());
     }
 
     #[test]
@@ -325,7 +367,7 @@ mod tests {
         // 2 runs, tiny horizon via direct config manipulation is not
         // exposed; run the real fig1 at 1 run only in release-mode CI
         // (cargo test still completes in seconds at n=100, horizon 10k).
-        let f = fig1(1, 1, 1).unwrap();
+        let f = fig1(1, 1, 1, CoreBudget::detect()).unwrap();
         assert_eq!(f.curves.len(), 3);
         assert!(f.write_csv(&std::env::temp_dir().join("decafork_figtest").to_string_lossy()).is_ok());
         assert!(!f.summary().is_empty());

@@ -24,7 +24,7 @@ use decafork::rng::Rng;
 use decafork::runtime::{default_artifacts_dir, Runtime, TrainStep};
 use decafork::scenario::parse;
 use decafork::sim::engine::SimParams;
-use decafork::sim::run_many;
+use decafork::sim::run_many_with_budget;
 use decafork::stats::irwin_hall::{design_epsilon, design_epsilon2};
 use decafork::theory::{growth_bound, overshoot_recursion, reaction_time_bound, Rates};
 use decafork::walks::SurvivalModel;
@@ -38,8 +38,10 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
            --pf 0.0 --bursts 2000:5,6000:6 --byz-node -1
            --horizon 10000 --runs 10 --seed 57005 --csv results/sim.csv
            --shards 1   (>=2: stream-mode sharded engine per replication)
+           --cores N    (total core budget split across runs x shards;
+                         default DECAFORK_CORES or detected parallelism)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
-           --shards 1
+           --shards 1 --cores N
   train    --n 64 --d 8 --z0 4 --horizon 400 --burst 200:2 --eps 2.0
            --artifacts artifacts
   actors   --n 32 --d 4 --z0 6 --pf 0.002 --hops 200000 --eps 2.0
@@ -74,8 +76,9 @@ fn run() -> anyhow::Result<()> {
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let cfg = parse::scenario(args)?;
+    let cores = parse::cores(args)?;
     let t0 = std::time::Instant::now();
-    let (_traces, agg) = run_many(&cfg, args.get("threads", 0usize)?)?;
+    let (_traces, agg) = run_many_with_budget(&cfg, args.get("threads", 0usize)?, cores)?;
     let dt = t0.elapsed();
     println!(
         "{} on {} | {} runs x {} steps in {:.2?}",
@@ -108,7 +111,13 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
     let runs = args.get("runs", 10usize)?;
     let out = args.get_str("out", "results");
     let t0 = std::time::Instant::now();
-    let fig = figures::by_id(id, runs, args.get("threads", 0usize)?, parse::shards(args)?)?;
+    let fig = figures::by_id(
+        id,
+        runs,
+        args.get("threads", 0usize)?,
+        parse::shards(args)?,
+        parse::cores(args)?,
+    )?;
     println!("{}", fig.plot(100, 18));
     println!("{}", fig.summary());
     let path = fig.write_csv(&out)?;

@@ -1,11 +1,16 @@
-//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! Process-level runtime services: the PJRT executor for the learning
+//! layer and the [`pool`] worker pool the sharded engine dispatches on.
+//!
+//! PJRT side: loads the AOT artifacts produced by `make artifacts`
 //! (HLO **text** — see DESIGN.md for why text, not serialized protos) and
 //! executes them on the CPU PJRT client. Python never runs here; the rust
 //! binary is self-contained once `artifacts/` exists.
 
 pub mod manifest;
+pub mod pool;
 
 pub use manifest::Manifest;
+pub use pool::WorkerPool;
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};

@@ -1,0 +1,394 @@
+//! A persistent, std-only worker pool for the sharded engine's phase
+//! dispatch (DESIGN.md §Worker pool).
+//!
+//! ## Why not `std::thread::scope` per phase
+//!
+//! The stream-mode [`ShardedEngine`](crate::sim::ShardedEngine) runs up
+//! to three shard-parallel phases per step (hop, control, prune). Scoped
+//! threads are correct but pay a full spawn+join per worker per phase —
+//! tens of microseconds each — which is noise at 100k-node step sizes
+//! and *dominant* at `perf_control` scale (1000 nodes), where the whole
+//! step is comparable to one spawn. A [`WorkerPool`] creates its OS
+//! threads **once** and parks them between dispatches, so a phase costs
+//! one condvar broadcast plus one completion wait instead of N spawns.
+//!
+//! ## Wake protocol (one reusable barrier, two condvars)
+//!
+//! ```text
+//! coordinator                         worker k
+//! ───────────                         ────────
+//! publish {tasks, epoch+1, remaining} wait until epoch != seen
+//! notify_all(work) ──────────────────▶ seen = epoch; take tasks[k]
+//! run tasks' first entry inline        run task (no lock held)
+//! wait until remaining == 0 ◀───────── remaining -= 1; if 0 notify(done)
+//! clear task slice; surface panics     park again on `work`
+//! ```
+//!
+//! The epoch counter is what makes the barrier *reusable*: a worker that
+//! slept through an entire dispatch (possible only when it had no task —
+//! the coordinator cannot advance the epoch while any **assigned** task
+//! is unfinished) simply sees a newer epoch next time it wakes. Workers
+//! never hold the state lock while running a task.
+//!
+//! ## Safety contract
+//!
+//! [`WorkerPool::run`] erases task lifetimes to hand borrowed closures
+//! to persistent threads (the same job `std::thread::scope` does with
+//! its lifetime brand). Soundness rests on two invariants, both local to
+//! this file:
+//!
+//! 1. `run` does **not return** until `remaining == 0`, i.e. every
+//!    published task has finished — so the erased borrows never outlive
+//!    the caller's frame;
+//! 2. each published slot is read by exactly one worker (slot `k` by
+//!    worker `k`), and the coordinator runs only the *split-off* first
+//!    task — so no `&mut` aliases.
+//!
+//! ## Shutdown-on-drop
+//!
+//! Dropping the pool sets the shutdown flag, wakes everyone and joins
+//! every worker thread: constructing and dropping engines in a loop
+//! leaks nothing (locked by
+//! `pool_lifecycle_does_not_leak_workers_or_change_traces` in
+//! `tests/shard_invariance.rs`). A task panic is caught on the worker,
+//! recorded, and re-raised on the coordinator once the dispatch
+//! completes — the pool itself stays usable (and droppable) afterwards.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A borrowed unit of work: run exactly once per dispatch, on exactly
+/// one thread. `FnMut` (not `FnOnce`) so a task slot can be re-armed by
+/// the caller across steps without reboxing.
+pub type Task<'a> = &'a mut (dyn FnMut() + Send);
+
+/// Lifetime-erased view of the caller's task slice. Only ever
+/// dereferenced between publish and the `remaining == 0` handshake (see
+/// the module-level safety contract).
+#[derive(Clone, Copy)]
+struct TaskSlice {
+    ptr: *mut (),
+    len: usize,
+}
+
+impl TaskSlice {
+    const EMPTY: TaskSlice = TaskSlice { ptr: std::ptr::null_mut(), len: 0 };
+}
+
+// SAFETY: the raw pointer is only dereferenced under the dispatch
+// protocol above (disjoint slots, coordinator blocked until done).
+unsafe impl Send for TaskSlice {}
+
+struct State {
+    /// Bumped once per dispatch; workers compare against their last-seen
+    /// value, which is what lets one Mutex+Condvar pair act as a barrier
+    /// that can be reused forever.
+    epoch: u64,
+    tasks: TaskSlice,
+    /// Published-but-unfinished task count for the current epoch.
+    remaining: usize,
+    /// A task panicked during the current epoch (re-raised by `run`).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between dispatches.
+    work: Condvar,
+    /// The coordinator parks here until `remaining == 0`.
+    done: Condvar,
+}
+
+/// Persistent worker pool: `workers` parked OS threads plus the calling
+/// thread, dispatched with [`run`](Self::run).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` parked threads (0 is allowed: every dispatch then
+    /// runs inline on the caller).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                tasks: TaskSlice::EMPTY,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|k| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("decafork-pool-{k}"))
+                    .spawn(move || worker_loop(&shared, k))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of pooled worker threads (the caller thread is extra).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every task to completion: `tasks[0]` on the calling thread,
+    /// `tasks[1..]` on the pooled workers (slot `k+1` on worker `k`).
+    /// Blocks until all tasks finished; panics if any task panicked or
+    /// if `tasks.len() - 1` exceeds the worker count.
+    ///
+    /// Takes `&mut self` deliberately: the safety contract assumes a
+    /// single dispatcher per pool (a second concurrent `run` could
+    /// overwrite the published task slice while a slow worker still
+    /// holds a pointer into the first), and exclusive access makes that
+    /// unrepresentable in safe code — at zero cost to the engine, which
+    /// owns its pool uniquely.
+    pub fn run(&mut self, tasks: &mut [Task<'_>]) {
+        let Some((first, rest)) = tasks.split_first_mut() else { return };
+        if rest.is_empty() || self.handles.is_empty() {
+            first();
+            for t in rest {
+                t();
+            }
+            return;
+        }
+        assert!(
+            rest.len() <= self.handles.len(),
+            "pool has {} workers but was handed {} worker tasks",
+            self.handles.len(),
+            rest.len()
+        );
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.tasks = TaskSlice { ptr: rest.as_mut_ptr() as *mut (), len: rest.len() };
+            st.remaining = rest.len();
+            st.panicked = false;
+            st.epoch += 1;
+        }
+        self.shared.work.notify_all();
+        // The caller's share of the phase overlaps the workers'.
+        let own = catch_unwind(AssertUnwindSafe(|| (*first)()));
+        let panicked = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done.wait(st).unwrap();
+            }
+            st.tasks = TaskSlice::EMPTY;
+            st.panicked
+        };
+        // Surface the caller-thread panic only after the barrier: the
+        // published borrows must be dead before `run`'s frame unwinds.
+        if let Err(payload) = own {
+            std::panic::resume_unwind(payload);
+        }
+        if panicked {
+            panic!("a pooled worker task panicked during dispatch");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, k: usize) {
+    let mut seen = 0u64;
+    loop {
+        let task: Option<&mut (dyn FnMut() + Send)> = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            if k < st.tasks.len {
+                // SAFETY: slot `k` of the published slice is read by
+                // this worker only, and the coordinator keeps the
+                // underlying borrows alive until `remaining == 0`.
+                let slot = unsafe { &mut *(st.tasks.ptr as *mut Task<'_>).add(k) };
+                Some(&mut **slot)
+            } else {
+                None
+            }
+        };
+        if let Some(f) = task {
+            let ok = catch_unwind(AssertUnwindSafe(f)).is_ok();
+            let mut st = shared.state.lock().unwrap();
+            if !ok {
+                st.panicked = true;
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done.notify_one();
+            }
+        }
+    }
+}
+
+/// The pre-pool dispatch: one scoped spawn per task, first task on the
+/// caller. Kept as the measured baseline of `benches/perf_pool.rs`
+/// (pooled-vs-scoped on identical task lists) — not used on any
+/// production path.
+pub fn run_scoped(tasks: &mut [Task<'_>]) {
+    let Some((first, rest)) = tasks.split_first_mut() else { return };
+    std::thread::scope(|scope| {
+        for t in rest.iter_mut() {
+            scope.spawn(move || (*t)());
+        }
+        first();
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Collect a closure set into the dispatchable task-slice form.
+    fn tasks_of<F: FnMut() + Send>(fs: &mut [F]) -> Vec<Task<'_>> {
+        fs.iter_mut().map(|f| f as Task<'_>).collect()
+    }
+
+    fn bump(n: &AtomicUsize) {
+        n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once_per_dispatch() {
+        let mut pool = WorkerPool::new(3);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for round in 1..=50usize {
+            let mut fs: Vec<_> = hits.iter().map(|h| move || bump(h)).collect();
+            pool.run(&mut tasks_of(&mut fs));
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), round);
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_mutate_disjoint_borrowed_chunks() {
+        let mut pool = WorkerPool::new(2);
+        let mut data = vec![0u64; 90];
+        {
+            let mut fs: Vec<_> = data
+                .chunks_mut(30)
+                .enumerate()
+                .map(|(k, chunk)| {
+                    move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = (k * 1000 + i) as u64;
+                        }
+                    }
+                })
+                .collect();
+            pool.run(&mut tasks_of(&mut fs));
+        }
+        for (k, chunk) in data.chunks(30).enumerate() {
+            for (i, &v) in chunk.iter().enumerate() {
+                assert_eq!(v, (k * 1000 + i) as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn fewer_tasks_than_workers_and_empty_dispatches() {
+        let mut pool = WorkerPool::new(4);
+        pool.run(&mut []); // no-op
+        let hit = AtomicUsize::new(0);
+        for len in [1usize, 2, 3] {
+            // 0..2 worker tasks; the remaining workers idle through the
+            // epoch and must stay dispatchable afterwards.
+            let mut fs: Vec<_> = (0..len).map(|_| || bump(&hit)).collect();
+            pool.run(&mut tasks_of(&mut fs));
+        }
+        assert_eq!(hit.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let mut pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 0);
+        let mut parts = [0u64; 3];
+        {
+            let mut fs: Vec<_> =
+                parts.iter_mut().enumerate().map(|(k, p)| move || *p = k as u64 + 1).collect();
+            pool.run(&mut tasks_of(&mut fs));
+        }
+        assert_eq!(parts.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn scoped_baseline_matches_pool_results() {
+        let pool = std::sync::Mutex::new(WorkerPool::new(3));
+        let run = |use_pool: bool| {
+            let mut out = vec![0u32; 40];
+            let mut fs: Vec<_> = out
+                .chunks_mut(10)
+                .enumerate()
+                .map(|(k, c)| move || c.iter_mut().for_each(|v| *v = k as u32))
+                .collect();
+            let mut ts = tasks_of(&mut fs);
+            if use_pool {
+                pool.lock().unwrap().run(&mut ts);
+            } else {
+                run_scoped(&mut ts);
+            }
+            out
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn worker_panic_is_reported_and_pool_survives() {
+        let mut pool = WorkerPool::new(2);
+        let blew_up = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut fs: Vec<Box<dyn FnMut() + Send>> = vec![
+                Box::new(|| {}),
+                Box::new(|| panic!("boom")),
+                Box::new(|| {}),
+            ];
+            let mut ts: Vec<Task<'_>> = fs.iter_mut().map(|f| &mut **f as Task<'_>).collect();
+            pool.run(&mut ts);
+        }))
+        .is_err();
+        assert!(blew_up, "worker panic must surface on the coordinator");
+        // ... and the pool still dispatches afterwards.
+        let count = AtomicUsize::new(0);
+        let mut fs: Vec<_> = (0..3).map(|_| || bump(&count)).collect();
+        pool.run(&mut tasks_of(&mut fs));
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn construct_drop_churn_joins_workers() {
+        // 60 pools × 2 workers: if Drop leaked threads this would leave
+        // 120 of them; the Linux-only roster check in
+        // tests/shard_invariance.rs asserts the count, here we just
+        // exercise the join path (a deadlocked Drop would hang the test).
+        for _ in 0..60 {
+            let mut pool = WorkerPool::new(2);
+            let mut fs: Vec<_> = (0..3).map(|_| || {}).collect();
+            pool.run(&mut tasks_of(&mut fs));
+        }
+    }
+}

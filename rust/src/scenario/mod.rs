@@ -40,7 +40,7 @@ use crate::graph::Graph;
 use crate::rng::Rng;
 use crate::sim::engine::{Engine, SimParams};
 use crate::sim::reference::ReferenceEngine;
-use crate::sim::sharded::ShardedEngine;
+use crate::sim::sharded::{DispatchMode, ShardedEngine};
 
 /// A complete experiment: graph + engine params + control + failures +
 /// replication. (The historical name `ExperimentConfig` is kept as an
@@ -108,11 +108,31 @@ impl Scenario {
     /// argument (not read from `params.shards`) so benches and the
     /// invariance tests can run one scenario at several counts.
     pub fn sharded_engine(&self, run: usize, shards: usize) -> anyhow::Result<ShardedEngine> {
+        self.sharded_engine_dispatch(run, shards, DispatchMode::Pooled)
+    }
+
+    /// [`sharded_engine`](Self::sharded_engine) with an explicit
+    /// [`DispatchMode`] — `Scoped` is the measured baseline of
+    /// `benches/perf_pool.rs`; traces are identical in both modes.
+    pub fn sharded_engine_dispatch(
+        &self,
+        run: usize,
+        shards: usize,
+        dispatch: DispatchMode,
+    ) -> anyhow::Result<ShardedEngine> {
         let (mut grng, srng) = self.rngs(run);
         let graph = Arc::new(self.graph.build(&mut grng)?);
         let control = self.control.build_control(graph.n());
         let failures = self.failures.build_failures();
-        Ok(ShardedEngine::new(graph, self.params.clone(), control, failures, srng, shards))
+        Ok(ShardedEngine::with_dispatch(
+            graph,
+            self.params.clone(),
+            control,
+            failures,
+            srng,
+            shards,
+            dispatch,
+        ))
     }
 
     /// Build the frozen seed engine for the same run — identical graph

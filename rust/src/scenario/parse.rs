@@ -89,6 +89,12 @@ pub fn survival(args: &Args) -> anyhow::Result<SurvivalSpec> {
     })
 }
 
+// The shared positive-integer knob validator lives in `cli` (a leaf
+// module both this layer and `sim::runner`'s `CoreBudget::from_env` can
+// reach); re-exported here because the shards/cores flag plumbing is
+// where callers look for it.
+pub use crate::cli::positive_count;
+
 /// `--shards N`: stream-mode worker count. `1` (the default) keeps the
 /// shared-stream engine — existing invocations are byte-for-byte
 /// unchanged; `>= 2` switches the runner to the per-walk-stream
@@ -96,25 +102,31 @@ pub fn survival(args: &Args) -> anyhow::Result<SurvivalSpec> {
 /// bit-identical at any worker count but is a different sample family
 /// than shard count 1's shared-stream engine.
 pub fn shards(args: &Args) -> anyhow::Result<usize> {
-    let s = args.get("shards", 1usize)?;
-    anyhow::ensure!(s >= 1, "--shards must be >= 1 (got {s})");
-    Ok(s)
+    match args.flags.get("shards") {
+        None => Ok(1),
+        Some(v) => positive_count("--shards", v),
+    }
 }
 
 /// `DECAFORK_SHARDS` env override for binaries without flag plumbing
 /// (ablation benches, examples, the stream-golden test): same semantics
 /// as `--shards`, default 1 (shared-stream engine, results unchanged).
-///
-/// Panics on a present-but-invalid value instead of silently falling
-/// back to 1: a typo in CI's shard matrix must not quietly turn every
-/// matrix entry into a shards=1 run that tests nothing.
-pub fn shards_from_env() -> usize {
+/// A present-but-invalid value (0, non-numeric) is an error.
+pub fn shards_from_env() -> anyhow::Result<usize> {
     match std::env::var("DECAFORK_SHARDS") {
-        Err(_) => 1,
-        Ok(v) => match v.parse::<usize>() {
-            Ok(s) if s >= 1 => s,
-            _ => panic!("DECAFORK_SHARDS={v} is invalid: need an integer >= 1"),
-        },
+        Err(_) => Ok(1),
+        Ok(v) => positive_count("DECAFORK_SHARDS", &v),
+    }
+}
+
+/// `--cores N`: the runner's [`CoreBudget`] — total cores split across
+/// replication threads × per-run stream workers
+/// ([`CoreBudget::plan`](crate::sim::CoreBudget::plan)). Falls back to
+/// `DECAFORK_CORES`, then to detected parallelism.
+pub fn cores(args: &Args) -> anyhow::Result<crate::sim::CoreBudget> {
+    match args.flags.get("cores") {
+        Some(v) => crate::sim::CoreBudget::new(positive_count("--cores", v)?),
+        None => crate::sim::CoreBudget::from_env(),
     }
 }
 
@@ -186,5 +198,33 @@ mod tests {
         let s = scenario(&args("simulate --shards 8")).unwrap();
         assert_eq!(s.params.shards, 8);
         assert!(scenario(&args("simulate --shards 0")).is_err());
+    }
+
+    #[test]
+    fn positive_count_rejects_zero_and_nonnumeric_with_named_knob() {
+        // The shared validator behind --shards / DECAFORK_SHARDS /
+        // --cores / DECAFORK_CORES: both failure paths must error (not
+        // panic, not fall back) and say which knob was wrong.
+        assert_eq!(positive_count("--shards", "8").unwrap(), 8);
+        assert_eq!(positive_count("DECAFORK_SHARDS", " 2 ").unwrap(), 2);
+        let zero = positive_count("DECAFORK_SHARDS", "0").unwrap_err().to_string();
+        assert!(zero.contains("DECAFORK_SHARDS") && zero.contains(">= 1"), "{zero}");
+        for bad in ["abc", "", "-3", "2.5", "1e3"] {
+            let err = positive_count("--shards", bad).unwrap_err().to_string();
+            assert!(err.contains("--shards"), "{err}");
+        }
+        // Flag plumbing routes through the same validator.
+        let err = shards(&args("simulate --shards nope")).unwrap_err().to_string();
+        assert!(err.contains("--shards"), "{err}");
+        assert_eq!(shards(&args("simulate")).unwrap(), 1);
+    }
+
+    #[test]
+    fn cores_flag_builds_a_budget() {
+        assert_eq!(cores(&args("simulate --cores 6")).unwrap().total(), 6);
+        assert!(cores(&args("simulate --cores 0")).is_err());
+        assert!(cores(&args("simulate --cores many")).is_err());
+        // No flag: env/detected fallback must still produce >= 1 core.
+        assert!(cores(&args("simulate")).unwrap().total() >= 1);
     }
 }

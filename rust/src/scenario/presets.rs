@@ -206,26 +206,29 @@ pub fn scale_100k() -> Scenario {
 /// since 50 sequential replications don't help when one replication is
 /// this big.
 ///
-/// Z0 is kept at 1024 (not scaled with n) deliberately: per-node memory
-/// of `NodeState::slot_pos` grows with the largest walk-slot *index* a
-/// node ever observes (~4 B × peak walk count), so a dense walk
-/// population at 10⁶ nodes would cost tens of GB of index alone — see
-/// the ROADMAP open item on a compact per-node index. The probe's
-/// point is node-count scale, and 1024 walks over 10⁶ nodes is already
-/// the sparse-visit regime the Pac-Man-attack literature studies.
+/// Z0 = 8192 is the **dense-population** setting the compact per-node
+/// walk index unlocked (ISSUE 4): the old direct `slot_pos` array cost
+/// every visited node ~4 B × the largest walk-slot index it ever
+/// observed, so a dense population at 10⁶ nodes priced out at tens of
+/// GB of index and the probe capped Z0 at 1024. The open-addressing
+/// index is sized by each node's own `|L_i(t)|`, so per-node memory no
+/// longer scales with the peak walk-slot index and the probe can run
+/// the multi-stream walk density the Pac-Man-attack literature studies
+/// on top of node-count scale. Thresholds follow the `scale_100k`
+/// design (ε = Z0/4 for a quiet post-cold-start regime; 10% burst).
 pub fn scale_1m() -> Scenario {
     Scenario {
         graph: GraphSpec::RandomRegular { n: 1_000_000, d: 8 },
         params: SimParams {
-            z0: 1024,
+            z0: 8192,
             survival: SurvivalSpec::AnalyticGeometric,
             control_start: Some(300),
-            max_walks: 4096,
+            max_walks: 16_384,
             ..SimParams::default()
         },
-        control: ControlSpec::Decafork { epsilon: 256.0 },
+        control: ControlSpec::Decafork { epsilon: 2048.0 },
         failures: FailureSpec::Composite(vec![
-            FailureSpec::Burst { events: vec![(400, 102)] },
+            FailureSpec::Burst { events: vec![(400, 819)] },
             FailureSpec::Probabilistic { p_f: 0.0005 },
         ]),
         horizon: 1000,
@@ -387,6 +390,9 @@ mod tests {
         assert_eq!(m.graph, GraphSpec::RandomRegular { n: 1_000_000, d: 8 });
         assert_eq!(m.horizon, 1000);
         assert!(m.params.control_start.is_some());
+        // The dense-population acceptance bar (ISSUE 4): the compact
+        // per-node index made walk density affordable at 10⁶ nodes.
+        assert!(m.params.z0 >= 8192, "scale_1m must keep a dense walk population");
         // Both must survive the benches' DECAFORK_PERF_STEPS rescale.
         let mut r = scale_100k();
         r.rescale_to(200);

@@ -23,5 +23,5 @@ pub use config::{ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
 pub use engine::{Engine, SimParams, StartPlacement, VisitHook};
 pub use metrics::{AggregateTrace, Event, EventKind, Trace};
 pub use reference::ReferenceEngine;
-pub use runner::run_many;
-pub use sharded::ShardedEngine;
+pub use runner::{run_many, run_many_with_budget, CoreBudget, RunPlan};
+pub use sharded::{DispatchMode, ShardedEngine};

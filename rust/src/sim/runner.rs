@@ -4,10 +4,22 @@
 //!
 //! Engine selection: `cfg.params.shards == 1` (the default) runs each
 //! replication on the shared-stream arena [`Engine`]; `>= 2` runs it on
-//! the stream-mode [`ShardedEngine`](crate::sim::ShardedEngine) with
-//! that many workers per replication. Note the two knobs multiply:
-//! `threads` replications × `shards` workers each — callers driving big
-//! stream-mode scenarios usually want `threads = 1`.
+//! the stream-mode [`ShardedEngine`](crate::sim::ShardedEngine).
+//!
+//! ## The core budget
+//!
+//! The two parallelism knobs — `threads` replications × `shards` workers
+//! per replication — multiply, and historically both were trusted
+//! independently: auto-threads with `shards = 8` on an 8-core box
+//! spawned 64 workers. A [`CoreBudget`] (CLI `--cores`, env
+//! `DECAFORK_CORES`, default = detected parallelism) now owns the split:
+//! [`CoreBudget::plan`] deterministically turns `(runs, threads, shards)`
+//! requests into `(threads, workers_per_run)` so the product never
+//! exceeds the budget. Shrinking the per-run worker count is *free* —
+//! stream-mode traces are bit-identical at every worker count — so the
+//! plan can trade shards for replication throughput without changing a
+//! single result bit; the `shards >= 2` request still selects the
+//! stream-mode trace *family* even when the plan hands a run one worker.
 //!
 //! Results land in **pre-sized slots** indexed by run: each worker
 //! writes replication `i`'s outcome into slot `i` (uncontended — every
@@ -23,10 +35,88 @@ use std::sync::Mutex;
 use crate::sim::config::ExperimentConfig;
 use crate::sim::metrics::{AggregateTrace, Trace};
 
-/// One replication, on whichever engine `cfg.params.shards` selects.
-fn run_one(cfg: &ExperimentConfig, run: usize) -> anyhow::Result<Trace> {
+/// A process-wide core budget for the runner's `threads × shards`
+/// product. Construction validates (`total >= 1`); the split itself is
+/// [`plan`](Self::plan).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoreBudget {
+    total: usize,
+}
+
+impl CoreBudget {
+    /// An explicit budget of `total` cores (rejects 0).
+    pub fn new(total: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(total >= 1, "core budget must be >= 1 (got {total})");
+        Ok(CoreBudget { total })
+    }
+
+    /// Detected available parallelism (the default budget).
+    pub fn detect() -> Self {
+        CoreBudget { total: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4) }
+    }
+
+    /// `DECAFORK_CORES` override, else [`detect`](Self::detect). A
+    /// present-but-invalid value (0, non-numeric) is an **error**, not a
+    /// silent fallback: a typo'd budget in a bench matrix must not
+    /// quietly oversubscribe or serialize the whole sweep. Validation is
+    /// the same [`positive_count`](crate::cli::positive_count) every
+    /// shards/cores knob goes through.
+    pub fn from_env() -> anyhow::Result<Self> {
+        match std::env::var("DECAFORK_CORES") {
+            Err(_) => Ok(Self::detect()),
+            Ok(v) => Self::new(crate::cli::positive_count("DECAFORK_CORES", &v)?),
+        }
+    }
+
+    /// The number of cores this budget may spend.
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Deterministically split the budget across `runs` replications of
+    /// a scenario requesting `shards` stream-mode workers each. The
+    /// resulting `threads × workers_per_run` product never exceeds the
+    /// budget (both knobs are *requests*; the budget is the constraint —
+    /// raise `--cores` to get more).
+    ///
+    /// * `threads == 0` (auto) resolves to `min(runs, total / shards)`
+    ///   (floored at 1) — the oversubscription fix: auto mode used to
+    ///   take the full parallelism for replications *and* multiply it by
+    ///   the per-run worker count.
+    /// * An explicit `threads` is honored up to the budget (capped at
+    ///   `min(runs, total)`); the leftover then bounds the per-run
+    ///   worker count: `workers = min(shards, total / threads)`, floored
+    ///   at 1. Worker counts are a pure perf knob (schedule-invariant
+    ///   traces), so none of this ever changes a result.
+    pub fn plan(&self, runs: usize, threads: usize, shards: usize) -> RunPlan {
+        let runs = runs.max(1);
+        let shards = shards.max(1);
+        let threads = if threads == 0 {
+            (self.total / shards).max(1).min(runs)
+        } else {
+            threads.min(runs).min(self.total)
+        };
+        let workers_per_run =
+            if shards == 1 { 1 } else { (self.total / threads).clamp(1, shards) };
+        RunPlan { threads, workers_per_run }
+    }
+}
+
+/// A resolved parallelism split: how many replication threads to run,
+/// and how many stream-mode workers each replication gets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunPlan {
+    pub threads: usize,
+    pub workers_per_run: usize,
+}
+
+/// One replication. `cfg.params.shards` selects the engine *family*
+/// (shared-stream vs stream-mode); `workers` — already budgeted by the
+/// caller — sets the stream engine's actual worker count, which cannot
+/// affect the trace.
+fn run_one(cfg: &ExperimentConfig, run: usize, workers: usize) -> anyhow::Result<Trace> {
     if cfg.params.shards > 1 {
-        let mut e = cfg.sharded_engine(run, cfg.params.shards)?;
+        let mut e = cfg.sharded_engine(run, workers)?;
         e.run_to(cfg.horizon);
         Ok(e.into_trace())
     } else {
@@ -36,21 +126,28 @@ fn run_one(cfg: &ExperimentConfig, run: usize) -> anyhow::Result<Trace> {
     }
 }
 
-/// Run `cfg.runs` independent replications of the experiment, in parallel
-/// across up to `threads` OS threads (0 = available parallelism), and
-/// return all traces (ordered by run index) plus their aggregate.
+/// Run `cfg.runs` independent replications in parallel across up to
+/// `threads` OS threads (0 = auto), budgeted by `DECAFORK_CORES` /
+/// detected parallelism, and return all traces (ordered by run index)
+/// plus their aggregate. See [`run_many_with_budget`] for an explicit
+/// budget (the CLI's `--cores`).
 pub fn run_many(
     cfg: &ExperimentConfig,
     threads: usize,
 ) -> anyhow::Result<(Vec<Trace>, AggregateTrace)> {
+    run_many_with_budget(cfg, threads, CoreBudget::from_env()?)
+}
+
+/// [`run_many`] with an explicit [`CoreBudget`] owning the
+/// `threads × workers-per-run` split.
+pub fn run_many_with_budget(
+    cfg: &ExperimentConfig,
+    threads: usize,
+    budget: CoreBudget,
+) -> anyhow::Result<(Vec<Trace>, AggregateTrace)> {
     let runs = cfg.runs;
     anyhow::ensure!(runs > 0, "need at least one run");
-    let threads = if threads == 0 {
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
-    } else {
-        threads
-    }
-    .min(runs);
+    let RunPlan { threads, workers_per_run } = budget.plan(runs, threads, cfg.params.shards);
 
     let next = AtomicUsize::new(0);
     // One slot per replication. The per-slot mutex is never contended
@@ -66,7 +163,7 @@ pub fn run_many(
                 if run >= runs {
                     break;
                 }
-                let out = run_one(cfg, run)
+                let out = run_one(cfg, run, workers_per_run)
                     .map_err(|e| e.context(format!("replication {run} (of {runs})")));
                 *slots[run].lock().unwrap() = Some(out);
             });
@@ -140,6 +237,55 @@ mod tests {
         let err = run_many(&cfg, 2).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("replication 0"), "error lost its run index: {msg}");
+    }
+
+    #[test]
+    fn core_budget_plan_is_deterministic_and_bounded() {
+        let b = CoreBudget::new(8).unwrap();
+        assert_eq!(b.total(), 8);
+        // Auto mode divides by shards instead of multiplying (the
+        // oversubscription fix): 8 cores / 4-shard runs = 2 threads.
+        assert_eq!(b.plan(50, 0, 4), RunPlan { threads: 2, workers_per_run: 4 });
+        // shards == 1: the whole budget goes to replications.
+        assert_eq!(b.plan(50, 0, 1), RunPlan { threads: 8, workers_per_run: 1 });
+        // Few runs never spawn idle replication threads.
+        assert_eq!(b.plan(3, 0, 1), RunPlan { threads: 3, workers_per_run: 1 });
+        // Explicit threads are honored; the leftover bounds the per-run
+        // worker count (worker counts are schedule-invariant, so this is
+        // free).
+        assert_eq!(b.plan(50, 8, 8), RunPlan { threads: 8, workers_per_run: 1 });
+        assert_eq!(b.plan(50, 2, 8), RunPlan { threads: 2, workers_per_run: 4 });
+        // Shard requests beyond the budget collapse to what fits.
+        assert_eq!(b.plan(4, 0, 16), RunPlan { threads: 1, workers_per_run: 8 });
+        // ... and so do explicit thread requests: 64 threads on an
+        // 8-core budget is the oversubscription this type exists to
+        // prevent, whichever knob asks for it.
+        assert_eq!(b.plan(64, 64, 1), RunPlan { threads: 8, workers_per_run: 1 });
+        // Auto mode's thread × worker product never exceeds the budget.
+        for runs in [1usize, 3, 17] {
+            for shards in [1usize, 2, 7, 64] {
+                let p = b.plan(runs, 0, shards);
+                assert!(
+                    p.threads * p.workers_per_run <= 8,
+                    "auto plan oversubscribed: runs={runs} shards={shards} -> {p:?}"
+                );
+                assert!(p.threads >= 1 && p.workers_per_run >= 1);
+            }
+        }
+        assert!(CoreBudget::new(0).is_err(), "a zero-core budget must be rejected");
+    }
+
+    #[test]
+    fn budgeted_runner_is_result_invariant() {
+        // A 1-core budget and a generous one must produce bit-identical
+        // traces — the plan only moves work between threads.
+        let mut cfg = tiny_cfg(4);
+        cfg.params.shards = 2;
+        let (a, _) = run_many_with_budget(&cfg, 0, CoreBudget::new(1).unwrap()).unwrap();
+        let (b, _) = run_many_with_budget(&cfg, 2, CoreBudget::new(8).unwrap()).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!(x.bit_identical(y), "core budget changed a stream-mode trace");
+        }
     }
 
     #[test]

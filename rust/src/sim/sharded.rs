@@ -53,6 +53,19 @@
 //! their clone of the control algorithm (per-node control state like
 //! `PeriodicFork::next_fork` is node-indexed, so clones never disagree).
 //!
+//! ## Thread model (DESIGN.md §Worker pool)
+//!
+//! Each parallel phase is a task list handed to a persistent
+//! [`WorkerPool`]: `shards − 1` threads spawned once at construction and
+//! parked between phases, with the coordinator running the first chunk
+//! of every phase itself — a step costs up to three pool wakes instead
+//! of three rounds of thread spawns, which is what makes `--shards`
+//! profitable at `perf_control` scale (1000 nodes) and not just at
+//! `scale_100k`. [`DispatchMode::Scoped`] keeps the old per-phase
+//! `std::thread::scope` spawning as the measured baseline of
+//! `benches/perf_pool.rs`. Dispatch never affects results: the trace is
+//! bit-identical across modes and worker counts alike.
+//!
 //! ## What stream mode is *not*
 //!
 //! It is a different trace family from the shared-stream engine — same
@@ -72,9 +85,28 @@ use crate::control::{Control, VisitCtx};
 use crate::failures::Failures;
 use crate::graph::Graph;
 use crate::rng::{streams, Rng};
+use crate::runtime::pool::{self, Task, WorkerPool};
 use crate::sim::engine::{SimParams, StartPlacement};
 use crate::sim::metrics::{Event, EventKind, Trace};
 use crate::walks::{Lineage, NodeState, Walk, WalkArena, WalkId};
+
+/// How the per-phase shard tasks reach their threads.
+///
+/// The trace is identical either way — dispatch only decides *which*
+/// thread runs a chunk, never what any chunk computes — which is what
+/// lets `benches/perf_pool.rs` assert bit-identity before clocking the
+/// two modes against each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Persistent [`WorkerPool`] (the default): `shards − 1` workers are
+    /// spawned once at engine construction and parked between phases, so
+    /// a phase costs one wake instead of a spawn per worker
+    /// (DESIGN.md §Worker pool).
+    Pooled,
+    /// One `std::thread::scope` spawn per chunk per phase — the pre-pool
+    /// behavior, kept as the bench baseline only.
+    Scoped,
+}
 
 /// One surviving walk's landing spot, queued for the control phase.
 #[derive(Debug, Clone, Copy)]
@@ -134,6 +166,12 @@ pub struct ShardedEngine {
     t: u64,
     trace: Trace,
     control_start: u64,
+    /// `shards − 1` parked workers in pooled mode with `shards >= 2`
+    /// (the coordinator thread runs the first chunk of every phase);
+    /// `None` for single-shard inline stepping and for scoped dispatch.
+    /// Dropped — and its threads joined — with the engine.
+    pool: Option<WorkerPool>,
+    dispatch: DispatchMode,
     // Per-shard scratch, reused across steps.
     hop_deaths: Vec<Vec<HopDeath>>,
     arrivals: Vec<Vec<Arrival>>,
@@ -141,6 +179,7 @@ pub struct ShardedEngine {
 }
 
 impl ShardedEngine {
+    /// Pooled-dispatch engine (the production default).
     pub fn new(
         graph: Arc<Graph>,
         params: SimParams,
@@ -148,6 +187,20 @@ impl ShardedEngine {
         failures: impl Into<Failures>,
         base: Rng,
         shards: usize,
+    ) -> Self {
+        Self::with_dispatch(graph, params, control, failures, base, shards, DispatchMode::Pooled)
+    }
+
+    /// Engine with an explicit [`DispatchMode`] — `Scoped` exists for
+    /// `benches/perf_pool.rs`' pooled-vs-scoped measurement.
+    pub fn with_dispatch(
+        graph: Arc<Graph>,
+        params: SimParams,
+        control: impl Into<Control>,
+        failures: impl Into<Failures>,
+        base: Rng,
+        shards: usize,
+        dispatch: DispatchMode,
     ) -> Self {
         let shards = shards.max(1);
         let n = graph.n();
@@ -189,6 +242,10 @@ impl ShardedEngine {
             .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
         let mut trace = Trace::default();
         trace.z.push(z0);
+        let pool = match dispatch {
+            DispatchMode::Pooled if shards > 1 => Some(WorkerPool::new(shards - 1)),
+            _ => None,
+        };
         ShardedEngine {
             graph,
             params,
@@ -203,6 +260,8 @@ impl ShardedEngine {
             t: 0,
             trace,
             control_start,
+            pool,
+            dispatch,
             hop_deaths: (0..shards).map(|_| Vec::new()).collect(),
             arrivals: (0..shards).map(|_| Vec::new()).collect(),
             decisions: (0..shards).map(|_| Vec::new()).collect(),
@@ -217,6 +276,17 @@ impl ShardedEngine {
     /// Worker count this engine was built with.
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// How phase tasks are dispatched to threads.
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch
+    }
+
+    /// Number of persistent pool threads this engine owns (0 in inline
+    /// or scoped mode) — lifecycle tests count these against the OS.
+    pub fn pooled_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, WorkerPool::workers)
     }
 
     /// Current time.
@@ -278,18 +348,16 @@ impl ShardedEngine {
             if self.shards == 1 {
                 hop_chunk(graph, failures, t, 0, ids, at, walk_rngs, &mut self.hop_deaths[0]);
             } else {
-                std::thread::scope(|scope| {
-                    for (k, ((at_c, rng_c), deaths)) in at
-                        .chunks_mut(chunk)
-                        .zip(walk_rngs.chunks_mut(chunk))
-                        .zip(self.hop_deaths.iter_mut())
-                        .enumerate()
-                    {
-                        scope.spawn(move || {
-                            hop_chunk(graph, failures, t, k * chunk, ids, at_c, rng_c, deaths)
-                        });
-                    }
-                });
+                let mut chunks: Vec<_> = at
+                    .chunks_mut(chunk)
+                    .zip(walk_rngs.chunks_mut(chunk))
+                    .zip(self.hop_deaths.iter_mut())
+                    .enumerate()
+                    .map(|(k, ((at_c, rng_c), deaths))| {
+                        move || hop_chunk(graph, failures, t, k * chunk, ids, at_c, rng_c, deaths)
+                    })
+                    .collect();
+                fan_out(self.pool.as_mut(), &mut collect_tasks(&mut chunks));
             }
         }
         // Barrier: apply hop deaths in dense order. Chunks are contiguous
@@ -345,29 +413,29 @@ impl ShardedEngine {
                     &mut self.decisions[0],
                 );
             } else {
-                std::thread::scope(|scope| {
-                    let mut states_rest: &mut [NodeState] = &mut self.states;
-                    let mut rngs_rest: &mut [Rng] = &mut self.node_rngs;
-                    for (k, (control, (arr, out))) in self
-                        .controls
-                        .iter_mut()
-                        .zip(self.arrivals.iter().zip(self.decisions.iter_mut()))
-                        .enumerate()
-                    {
-                        let take = nps.min(states_rest.len());
-                        if take == 0 {
-                            break;
-                        }
-                        let (st_c, st_rest) = states_rest.split_at_mut(take);
-                        states_rest = st_rest;
-                        let (rg_c, rg_rest) = rngs_rest.split_at_mut(take);
-                        rngs_rest = rg_rest;
-                        let base = (k * nps) as u32;
-                        scope.spawn(move || {
-                            control_chunk(st_c, rg_c, control, arr, base, t, control_start, z0, out)
-                        });
+                let mut ranges = Vec::with_capacity(self.shards);
+                let mut states_rest: &mut [NodeState] = &mut self.states;
+                let mut rngs_rest: &mut [Rng] = &mut self.node_rngs;
+                for (k, (control, (arr, out))) in self
+                    .controls
+                    .iter_mut()
+                    .zip(self.arrivals.iter().zip(self.decisions.iter_mut()))
+                    .enumerate()
+                {
+                    let take = nps.min(states_rest.len());
+                    if take == 0 {
+                        break;
                     }
-                });
+                    let (st_c, st_rest) = states_rest.split_at_mut(take);
+                    states_rest = st_rest;
+                    let (rg_c, rg_rest) = rngs_rest.split_at_mut(take);
+                    rngs_rest = rg_rest;
+                    let base = (k * nps) as u32;
+                    ranges.push(move || {
+                        control_chunk(st_c, rg_c, control, arr, base, t, control_start, z0, out)
+                    });
+                }
+                fan_out(self.pool.as_mut(), &mut collect_tasks(&mut ranges));
             }
         }
 
@@ -430,15 +498,18 @@ impl ShardedEngine {
                     s.prune(t);
                 }
             } else {
-                std::thread::scope(|scope| {
-                    for states_c in self.states.chunks_mut(self.nodes_per_shard) {
-                        scope.spawn(move || {
-                            for s in states_c {
+                let mut sweeps: Vec<_> = self
+                    .states
+                    .chunks_mut(self.nodes_per_shard)
+                    .map(|states_c| {
+                        move || {
+                            for s in states_c.iter_mut() {
                                 s.prune(t);
                             }
-                        });
-                    }
-                });
+                        }
+                    })
+                    .collect();
+                fan_out(self.pool.as_mut(), &mut collect_tasks(&mut sweeps));
             }
         }
         self.arena.compact();
@@ -470,6 +541,21 @@ impl ShardedEngine {
     /// Borrow telemetry.
     pub fn trace(&self) -> &Trace {
         &self.trace
+    }
+}
+
+/// Coerce a phase's chunk closures into the pool's task-slice form.
+fn collect_tasks<F: FnMut() + Send>(chunks: &mut [F]) -> Vec<Task<'_>> {
+    chunks.iter_mut().map(|c| c as Task<'_>).collect()
+}
+
+/// Dispatch one phase's tasks: wake the persistent pool, or fall back to
+/// per-call scoped spawning (bench baseline). Free function so callers
+/// can hold disjoint `&mut` field borrows in the tasks.
+fn fan_out(pool: Option<&mut WorkerPool>, tasks: &mut [Task<'_>]) {
+    match pool {
+        Some(p) => p.run(tasks),
+        None => pool::run_scoped(tasks),
     }
 }
 
@@ -619,6 +705,46 @@ mod tests {
             );
         }
         assert_ne!(run(1, 11).z, run(1, 12).z, "different seeds must differ");
+    }
+
+    #[test]
+    fn scoped_and_pooled_dispatch_bit_identical() {
+        let mk = |mode| {
+            let mut e = ShardedEngine::with_dispatch(
+                small_graph(),
+                SimParams { z0: 8, record_theta: true, ..Default::default() },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4), (300, 3)]),
+                Rng::new(11),
+                4,
+                mode,
+            );
+            e.run_to(600);
+            e.into_trace()
+        };
+        assert!(
+            mk(DispatchMode::Pooled).bit_identical(&mk(DispatchMode::Scoped)),
+            "dispatch mode changed the trace — the perf_pool comparison would be meaningless"
+        );
+    }
+
+    #[test]
+    fn pool_sizing_tracks_shards_and_mode() {
+        let mk = |shards, mode| {
+            ShardedEngine::with_dispatch(
+                small_graph(),
+                SimParams { z0: 4, ..Default::default() },
+                NoControl,
+                NoFailures,
+                Rng::new(1),
+                shards,
+                mode,
+            )
+        };
+        assert_eq!(mk(1, DispatchMode::Pooled).pooled_workers(), 0);
+        assert_eq!(mk(4, DispatchMode::Pooled).pooled_workers(), 3);
+        assert_eq!(mk(4, DispatchMode::Scoped).pooled_workers(), 0);
+        assert_eq!(mk(4, DispatchMode::Scoped).dispatch_mode(), DispatchMode::Scoped);
     }
 
     #[test]

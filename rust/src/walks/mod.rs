@@ -19,8 +19,9 @@
 //! reused by a fork in the same step without the two walks ever aliasing.
 //!
 //! Every node maintains a [`NodeState`]: the last-seen table `L_{i,k}`
-//! (struct-of-arrays `ids ∥ last` columns with an O(1) `slot_pos`
-//! index), the pooled empirical return-time distribution `R̂_i`, a
+//! (struct-of-arrays `ids ∥ last` columns with a compact O(1)
+//! open-addressing [`SlotIndex`]), the pooled empirical return-time
+//! distribution `R̂_i`, a
 //! memoised survival table `dt → S(dt)` (DESIGN.md §Survival cache),
 //! and the estimator `θ̂_i(t) = ½ + Σ_{ℓ≠k} S(t − L_{i,ℓ})` from
 //! Eq. (1).
@@ -28,9 +29,11 @@
 pub mod arena;
 pub mod lineage;
 pub mod node_state;
+pub mod slot_index;
 
 pub use arena::WalkArena;
 pub use node_state::{NodeState, SurvivalModel};
+pub use slot_index::SlotIndex;
 
 /// Unique walk identifier: a packed generational index. The low 32 bits
 /// are the walk's [`WalkArena`] slot index, the high 32 bits the slot's

@@ -29,6 +29,7 @@
 //! cached and direct paths equivalent end-to-end, and
 //! `benches/perf_control.rs` measures what the cache buys.
 
+use super::slot_index::SlotIndex;
 use super::WalkId;
 use crate::stats::fit::{exp_survival, geom_survival};
 use crate::stats::{EmpiricalCdf, SurvivalTable};
@@ -64,20 +65,26 @@ pub struct NodeState {
     /// `L_{i,k}` last-visit-time column, parallel to `ids`.
     last: Vec<u64>,
     /// `WalkId::index()` → position of that slot's **latest** walk in
-    /// `ids`/`last` (`u32::MAX` = none). Entries for earlier generations
-    /// of a reused slot stay in the columns (they still decay inside θ̂,
-    /// exactly like the seed's unique-id entries) but become unreachable
-    /// here — dead walks never visit again. All point lookups
+    /// `ids`/`last`. Entries for earlier generations of a reused slot
+    /// stay in the columns (they still decay inside θ̂, exactly like the
+    /// seed's unique-id entries) but become unreachable here — dead
+    /// walks never visit again. All point lookups
     /// ([`observe`](Self::observe), [`knows`](Self::knows),
     /// [`last_seen_of`](Self::last_seen_of)) resolve through this index,
-    /// so a superseded generation reads as *unknown* even while its entry
-    /// keeps decaying. Bounded by the peak *concurrent* population for
-    /// the arena engine's generational ids; sequential allocators
-    /// (reference engine, actor runtime) grow it with ids-ever-minted
-    /// instead — the seed's own O(history) footprint, acceptable for
-    /// those paths, and ids are assumed < 2³² (`WalkArena::spawn` asserts
-    /// the same bound on slot space).
-    slot_pos: Vec<u32>,
+    /// so a superseded generation reads as *unknown* even while its
+    /// entry keeps decaying.
+    ///
+    /// Storage is a compact open-addressing [`SlotIndex`] (lookup-only;
+    /// never iterated, so θ̂ order and bits cannot depend on it). The
+    /// direct `Vec<u32>` it replaced was sized by the largest slot index
+    /// the node ever observed — the global peak walk population, which
+    /// at `scale_1m` priced a dense population at tens of GB of index
+    /// and capped Z0 at 1024. This table is sized by the node's own
+    /// entry count `|L_i(t)|` instead, and
+    /// [`prune`](Self::prune) gives bucket memory back. Semantics are
+    /// locked against the old direct array by
+    /// `prop_compact_index_matches_direct_array`.
+    index: SlotIndex,
     /// Memoised `dt → S(dt)` backing cached θ̂ evaluation.
     table: SurvivalTable,
     /// Whether [`theta`](Self::theta) uses the memo (hot default) or the
@@ -119,7 +126,7 @@ impl NodeState {
         NodeState {
             ids: Vec::new(),
             last: Vec::new(),
-            slot_pos: Vec::new(),
+            index: SlotIndex::new(),
             table: SurvivalTable::new(),
             cached,
             return_cdf: EmpiricalCdf::new(),
@@ -141,19 +148,19 @@ impl NodeState {
 
     /// Record a visit of walk `id` (with MISSINGPERSON slot `slot`) at
     /// time `t`. Returns the return-time sample `t − L_{i,k}` if this is a
-    /// revisit. Updates both tables. O(1): the `slot_pos` index replaces
-    /// the seed's linear scan; behaviour (entries, order, samples) is
-    /// identical — a reused slot index with a different generation misses
-    /// the stored id and is treated as a brand-new walk, exactly as a
-    /// fresh unique id was.
+    /// revisit. Updates both tables. O(1) expected: the compact index
+    /// replaces the seed's linear scan; behaviour (entries, order,
+    /// samples) is identical — a reused slot index with a different
+    /// generation misses the stored id and is treated as a brand-new
+    /// walk, exactly as a fresh unique id was.
     pub fn observe(&mut self, t: u64, id: WalkId, slot: u16) -> Option<u32> {
-        let idx = id.index() as usize;
-        if idx >= self.slot_pos.len() {
-            self.slot_pos.resize(idx + 1, u32::MAX);
-        }
-        let pos = self.slot_pos[idx];
-        let sample = if pos != u32::MAX && self.ids[pos as usize] == id {
-            let last = &mut self.last[pos as usize];
+        let idx = id.index();
+        let hit = match self.index.get(idx) {
+            Some(pos) if self.ids[pos as usize] == id => Some(pos as usize),
+            _ => None,
+        };
+        let sample = if let Some(pos) = hit {
+            let last = &mut self.last[pos];
             let dt = (t - *last) as u32;
             *last = t;
             if dt > 0 {
@@ -163,7 +170,9 @@ impl NodeState {
                 None
             }
         } else {
-            self.slot_pos[idx] = self.ids.len() as u32;
+            // New walk, or a new generation superseding a dead one's
+            // pointer (its column entry stays and keeps decaying in θ̂).
+            self.index.set(idx, self.ids.len() as u32);
             self.ids.push(id);
             self.last.push(t);
             None
@@ -179,29 +188,36 @@ impl NodeState {
         self.ids.len()
     }
 
-    /// Position of `id` in the columns, resolved through the `slot_pos`
-    /// index: O(1), and superseded generations of a reused slot resolve
-    /// to `None` (they are unreachable to every walk that still exists —
-    /// the same semantics [`observe`](Self::observe) applies).
+    /// Position of `id` in the columns, resolved through the compact
+    /// index: O(1) expected, and superseded generations of a reused slot
+    /// resolve to `None` (they are unreachable to every walk that still
+    /// exists — the same semantics [`observe`](Self::observe) applies).
     #[inline]
     fn pos_of(&self, id: WalkId) -> Option<usize> {
-        let pos = *self.slot_pos.get(id.index() as usize)?;
-        if pos != u32::MAX && self.ids[pos as usize] == id {
+        let pos = self.index.get(id.index())?;
+        if self.ids[pos as usize] == id {
             Some(pos as usize)
         } else {
             None
         }
     }
 
-    /// Whether walk `id` has visited this node before. O(1) via
-    /// `slot_pos` (previously a linear scan over the whole history).
+    /// Whether walk `id` has visited this node before. O(1) expected via
+    /// the compact index (previously a linear scan over the history).
     pub fn knows(&self, id: WalkId) -> bool {
         self.pos_of(id).is_some()
     }
 
-    /// Last-seen time for a walk, if known. O(1) via `slot_pos`.
+    /// Last-seen time for a walk, if known. O(1) expected.
     pub fn last_seen_of(&self, id: WalkId) -> Option<u64> {
         self.pos_of(id).map(|p| self.last[p])
+    }
+
+    /// Bucket count of the compact lookup index — per-node index memory
+    /// in 8 B units. Tracks `|L_i(t)|`, not the global walk-slot space
+    /// (the `scale_1m` memory guarantee; see the memory unit tests).
+    pub fn index_footprint(&self) -> usize {
+        self.index.capacity()
     }
 
     /// Survival `S(dt)` under the configured model. Cold-path helper —
@@ -368,27 +384,32 @@ impl NodeState {
             SurvivalModel::Exponential { lambda } => (28.0 / lambda).ceil() as u64,
         };
         // Stable in-place sweep (the seed's `retain`, plus index fix-up
-        // in the same O(|L_i|) pass over both columns). `slot_pos`
-        // entries are only touched when they point at the entry being
-        // moved or dropped — an entry superseded by a later generation of
-        // its slot leaves the newer walk's index pointer alone.
+        // in the same O(|L_i|) pass over both columns). Index entries
+        // are only touched when they point at the entry being moved or
+        // dropped — an entry superseded by a later generation of its
+        // slot leaves the newer walk's index pointer alone (and owns no
+        // pointer of its own to remove).
         let mut w = 0usize;
         for r in 0..self.ids.len() {
             let (id, last) = (self.ids[r], self.last[r]);
-            let sp = &mut self.slot_pos[id.index() as usize];
+            let owns_pointer = self.index.get(id.index()) == Some(r as u32);
             if t.saturating_sub(last) <= horizon {
-                if *sp == r as u32 {
-                    *sp = w as u32;
+                if owns_pointer {
+                    self.index.set(id.index(), w as u32);
                 }
                 self.ids[w] = id;
                 self.last[w] = last;
                 w += 1;
-            } else if *sp == r as u32 {
-                *sp = u32::MAX;
+            } else if owns_pointer {
+                self.index.remove(id.index());
             }
         }
         self.ids.truncate(w);
         self.last.truncate(w);
+        // Bulk removals may leave the bucket array mostly vacant; give
+        // the memory back so a node's footprint tracks its current
+        // neighborhood of walks, not its historical peak.
+        self.index.maybe_shrink();
     }
 }
 
@@ -590,6 +611,158 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "step {step} t {t}");
             }
         }
+    }
+
+    /// The retired direct-array index, reimplemented verbatim as a test
+    /// oracle: `slot_pos[WalkId::index()]` → column position, `u32::MAX`
+    /// = none, sized by the largest slot index ever observed. Drives the
+    /// same public semantics `NodeState` must preserve.
+    struct DirectArrayModel {
+        ids: Vec<WalkId>,
+        last: Vec<u64>,
+        slot_pos: Vec<u32>,
+    }
+
+    impl DirectArrayModel {
+        fn new() -> Self {
+            DirectArrayModel { ids: Vec::new(), last: Vec::new(), slot_pos: Vec::new() }
+        }
+
+        fn observe(&mut self, t: u64, id: WalkId) -> Option<u32> {
+            let idx = id.index() as usize;
+            if idx >= self.slot_pos.len() {
+                self.slot_pos.resize(idx + 1, u32::MAX);
+            }
+            let pos = self.slot_pos[idx];
+            if pos != u32::MAX && self.ids[pos as usize] == id {
+                let dt = (t - self.last[pos as usize]) as u32;
+                self.last[pos as usize] = t;
+                (dt > 0).then_some(dt)
+            } else {
+                self.slot_pos[idx] = self.ids.len() as u32;
+                self.ids.push(id);
+                self.last.push(t);
+                None
+            }
+        }
+
+        fn pos_of(&self, id: WalkId) -> Option<usize> {
+            let pos = *self.slot_pos.get(id.index() as usize)?;
+            (pos != u32::MAX && self.ids[pos as usize] == id).then_some(pos as usize)
+        }
+
+        fn knows(&self, id: WalkId) -> bool {
+            self.pos_of(id).is_some()
+        }
+
+        fn last_seen_of(&self, id: WalkId) -> Option<u64> {
+            self.pos_of(id).map(|p| self.last[p])
+        }
+
+        /// The seed prune sweep with the fixed staleness horizon the
+        /// geometric model yields (so the oracle needs no CDF).
+        fn prune(&mut self, t: u64, horizon: u64) {
+            let mut w = 0usize;
+            for r in 0..self.ids.len() {
+                let (id, last) = (self.ids[r], self.last[r]);
+                let sp = &mut self.slot_pos[id.index() as usize];
+                if t.saturating_sub(last) <= horizon {
+                    if *sp == r as u32 {
+                        *sp = w as u32;
+                    }
+                    self.ids[w] = id;
+                    self.last[w] = last;
+                    w += 1;
+                } else if *sp == r as u32 {
+                    *sp = u32::MAX;
+                }
+            }
+            self.ids.truncate(w);
+            self.last.truncate(w);
+        }
+    }
+
+    #[test]
+    fn prop_compact_index_matches_direct_array() {
+        // Randomized observe / prune / supersede schedules (ISSUE 4):
+        // the compact open-addressing index must answer `observe` (the
+        // revisit/sample decision), `knows`, `last_seen_of` and
+        // first-seen positions identically to the old direct `slot_pos`
+        // array — including a superseded generation resolving to `None`
+        // while its column entry survives until pruned.
+        let q = 0.1f64;
+        let horizon = (28.0 / -(1.0 - q).ln()).ceil() as u64; // NodeState's own prune horizon
+        for case in 0..20u64 {
+            let mut rng = crate::rng::Rng::new(0xA11CE ^ case);
+            let mut state = NodeState::new(0, SurvivalModel::Geometric { q });
+            let mut model = DirectArrayModel::new();
+            let mut generation = vec![0u32; 24];
+            let mut t = 0u64;
+            for step in 0..600u64 {
+                t += rng.below(30) as u64;
+                let slot = rng.below(generation.len()) as u32;
+                match rng.below(12) {
+                    // Supersede: the slot's next generation takes over
+                    // its index pointer on first observation.
+                    0 => generation[slot as usize] += 1,
+                    1 => {
+                        state.prune(t);
+                        model.prune(t, horizon);
+                    }
+                    _ => {
+                        let id = WalkId::compose(slot, generation[slot as usize]);
+                        assert_eq!(
+                            state.observe(t, id, 0),
+                            model.observe(t, id),
+                            "case {case} step {step}: observe sample diverged"
+                        );
+                    }
+                }
+                // Query the full id space: live generations, superseded
+                // ones, and never-seen slots far beyond the index range.
+                for probe_slot in [slot, (slot + 7) % 24, 1_000_000 + slot] {
+                    let generation_now = generation.get(probe_slot as usize).copied().unwrap_or(9);
+                    for g in generation_now.saturating_sub(1)..=generation_now {
+                        let id = WalkId::compose(probe_slot, g);
+                        assert_eq!(state.knows(id), model.knows(id), "case {case} step {step}");
+                        assert_eq!(
+                            state.last_seen_of(id),
+                            model.last_seen_of(id),
+                            "case {case} step {step} id {id}"
+                        );
+                        assert_eq!(
+                            state.pos_of(id),
+                            model.pos_of(id),
+                            "case {case} step {step}: first-seen position diverged"
+                        );
+                    }
+                }
+                assert_eq!(state.known_walks(), model.ids.len(), "case {case} step {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn index_memory_tracks_entries_not_walk_slot_space() {
+        // The scale_1m unlock: a node that knows a handful of walks must
+        // not pay for the peak walk-slot index it happened to observe.
+        let mut s = NodeState::new(0, SurvivalModel::Geometric { q: 0.1 });
+        for k in 0..6u32 {
+            // Slot indices up to ~16M — the old direct array would have
+            // resized to 64 MB per node here.
+            s.observe(10 + k as u64, WalkId::compose((k + 1) * 2_800_000, 0), 0);
+        }
+        assert_eq!(s.known_walks(), 6);
+        assert!(
+            s.index_footprint() <= 16,
+            "index footprint {} buckets scales with slot space",
+            s.index_footprint()
+        );
+        // ... and prune hands bucket memory back.
+        s.return_cdf.add(5);
+        s.prune(1_000_000);
+        assert_eq!(s.known_walks(), 0);
+        assert_eq!(s.index_footprint(), 0, "pruned-empty index must release its buckets");
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! A compact open-addressing index `walk-slot → column position` for
+//! [`NodeState`](super::NodeState)'s last-seen table.
+//!
+//! ## Why not the direct array
+//!
+//! The previous `slot_pos: Vec<u32>` was indexed by `WalkId::index()`
+//! directly, so every visited node paid ~4 B × the **largest walk-slot
+//! index it ever observed** — the peak concurrent walk population, not
+//! the handful of walks that node actually knows. At `scale_1m`
+//! (10⁶ nodes) that footprint is what forced Z0 down to 1024: a dense
+//! population would have cost tens of gigabytes of mostly-`u32::MAX`
+//! entries. This table is sized by the node's **own** entry count
+//! (power-of-two buckets at ≤ 7/8 load), so per-node memory tracks
+//! `|L_i(t)|` and a million-node graph can carry a dense walk
+//! population.
+//!
+//! ## Why it cannot move a θ̂ bit
+//!
+//! The index is **lookup-only**: it is consulted for point queries
+//! (`observe`'s revisit check, `knows`, `last_seen_of`) and never
+//! iterated. The θ̂ float sum runs over the `ids ∥ last` columns in
+//! first-seen order exactly as before, `observe`'s append/update logic
+//! is unchanged, and the index stores the same `position` values the
+//! direct array stored — so every golden trace, stream golden, and
+//! cached-θ̂ equivalence lock passes unchanged (plus the dedicated
+//! `prop_compact_index_matches_direct_array` schedule test).
+//!
+//! Implementation: Fibonacci-hashed linear probing with backward-shift
+//! deletion (no tombstones — probe chains stay short under the
+//! `prune`-heavy churn this table lives in), quartering on
+//! [`maybe_shrink`](SlotIndex::maybe_shrink) so a node that once knew
+//! many walks gives the memory back after pruning.
+
+/// Bucket marker for "no key".
+const EMPTY: u32 = u32::MAX;
+/// Smallest non-empty bucket array.
+const MIN_CAP: usize = 8;
+
+/// Open-addressing map from a walk's arena slot index to its position in
+/// the node's `ids ∥ last` columns. Keys are `WalkId::index()` values
+/// (`< 2³² − 1`; the arena asserts the same bound on slot space).
+#[derive(Debug, Clone, Default)]
+pub struct SlotIndex {
+    /// Parallel bucket arrays (`keys[b] == EMPTY` ⇒ vacant).
+    keys: Vec<u32>,
+    vals: Vec<u32>,
+    len: usize,
+}
+
+impl SlotIndex {
+    /// An empty index. Allocates nothing until the first insert — most
+    /// nodes of a sparse-visit graph never see a walk.
+    pub fn new() -> Self {
+        SlotIndex::default()
+    }
+
+    /// Number of live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the index holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated bucket count — the index's memory footprint in units of
+    /// 8 B. Grows with this node's peak entry count, **not** with the
+    /// global walk-slot space (the whole point; asserted by the memory
+    /// tests).
+    pub fn capacity(&self) -> usize {
+        self.keys.len()
+    }
+
+    #[inline]
+    fn home(&self, key: u32) -> usize {
+        // Fibonacci hashing: multiply by ⌊2⁶⁴/φ⌋ and keep the top bits.
+        // Sequential slot indices (the common allocation pattern) spread
+        // instead of clustering one probe chain.
+        let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h >> 32) as usize & (self.keys.len() - 1)
+    }
+
+    /// Bucket holding `key`, if present.
+    #[inline]
+    fn find(&self, key: u32) -> Option<usize> {
+        if self.keys.is_empty() {
+            return None;
+        }
+        let mask = self.keys.len() - 1;
+        let mut b = self.home(key);
+        loop {
+            match self.keys[b] {
+                EMPTY => return None,
+                k if k == key => return Some(b),
+                _ => b = (b + 1) & mask,
+            }
+        }
+    }
+
+    /// The column position stored for `key`.
+    #[inline]
+    pub fn get(&self, key: u32) -> Option<u32> {
+        self.find(key).map(|b| self.vals[b])
+    }
+
+    /// Insert `key → val`, overwriting any existing mapping (that is how
+    /// a reused arena slot supersedes its dead predecessor's pointer).
+    pub fn set(&mut self, key: u32, val: u32) {
+        debug_assert_ne!(key, EMPTY, "u32::MAX is the vacancy marker, not a valid slot");
+        if let Some(b) = self.find(key) {
+            self.vals[b] = val;
+            return;
+        }
+        // Grow before inserting when the next entry would pass 7/8 load.
+        if self.keys.len() * 7 < (self.len + 1) * 8 {
+            self.rehash((self.keys.len() * 2).max(MIN_CAP));
+        }
+        let mask = self.keys.len() - 1;
+        let mut b = self.home(key);
+        while self.keys[b] != EMPTY {
+            b = (b + 1) & mask;
+        }
+        self.keys[b] = key;
+        self.vals[b] = val;
+        self.len += 1;
+    }
+
+    /// Remove `key` (no-op when absent), repairing the probe chain by
+    /// backward shifting so lookups never need tombstones.
+    pub fn remove(&mut self, key: u32) {
+        let Some(mut hole) = self.find(key) else { return };
+        let mask = self.keys.len() - 1;
+        let mut b = hole;
+        loop {
+            b = (b + 1) & mask;
+            if self.keys[b] == EMPTY {
+                break;
+            }
+            // An entry may move into the hole iff the hole lies within
+            // its probe chain, i.e. cyclically between its home bucket
+            // and its current bucket.
+            let home = self.home(self.keys[b]);
+            if (b.wrapping_sub(home) & mask) >= (b.wrapping_sub(hole) & mask) {
+                self.keys[hole] = self.keys[b];
+                self.vals[hole] = self.vals[b];
+                hole = b;
+            }
+        }
+        self.keys[hole] = EMPTY;
+        self.len -= 1;
+    }
+
+    /// Release bucket memory no longer justified by the entry count
+    /// (called after `prune`'s bulk removals): quarter-occupancy or
+    /// emptiness shrinks the table, so a node's index tracks its
+    /// *current* neighborhood of walks, not its historical peak.
+    pub fn maybe_shrink(&mut self) {
+        if self.len == 0 {
+            self.keys = Vec::new();
+            self.vals = Vec::new();
+            return;
+        }
+        let mut target = self.keys.len();
+        while target > MIN_CAP && self.len * 4 < target {
+            target /= 2;
+        }
+        if target < self.keys.len() {
+            self.rehash(target);
+        }
+    }
+
+    fn rehash(&mut self, new_cap: usize) {
+        debug_assert!(new_cap.is_power_of_two() && self.len * 8 <= new_cap * 7);
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY; new_cap]);
+        let old_vals = std::mem::take(&mut self.vals);
+        self.vals = vec![0; new_cap];
+        let mask = new_cap - 1;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k == EMPTY {
+                continue;
+            }
+            let mut b = self.home(k);
+            while self.keys[b] != EMPTY {
+                b = (b + 1) & mask;
+            }
+            self.keys[b] = k;
+            self.vals[b] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use std::collections::HashMap;
+
+    #[test]
+    fn empty_allocates_nothing_and_answers_none() {
+        let idx = SlotIndex::new();
+        assert_eq!(idx.capacity(), 0);
+        assert!(idx.is_empty());
+        assert_eq!(idx.get(0), None);
+        assert_eq!(idx.get(u32::MAX - 1), None);
+    }
+
+    #[test]
+    fn set_get_overwrite_remove() {
+        let mut idx = SlotIndex::new();
+        idx.set(3, 10);
+        idx.set(900_000_000, 11); // far-apart keys share nothing
+        assert_eq!(idx.get(3), Some(10));
+        assert_eq!(idx.get(900_000_000), Some(11));
+        idx.set(3, 99); // supersede
+        assert_eq!(idx.get(3), Some(99));
+        assert_eq!(idx.len(), 2);
+        idx.remove(3);
+        assert_eq!(idx.get(3), None);
+        assert_eq!(idx.get(900_000_000), Some(11));
+        idx.remove(3); // absent: no-op
+        assert_eq!(idx.len(), 1);
+    }
+
+    #[test]
+    fn capacity_tracks_entries_not_key_magnitude() {
+        // The direct array this replaces would have been ~16 MB here;
+        // the index must stay at the MIN_CAP floor for a handful of
+        // huge-valued keys.
+        let mut idx = SlotIndex::new();
+        for k in 0..5u32 {
+            idx.set(4_000_000 * (k + 1), k);
+        }
+        assert_eq!(idx.len(), 5);
+        assert!(idx.capacity() <= 16, "capacity {} scales with key magnitude", idx.capacity());
+        for k in 0..5u32 {
+            assert_eq!(idx.get(4_000_000 * (k + 1)), Some(k));
+        }
+    }
+
+    #[test]
+    fn shrink_returns_memory_after_bulk_removal() {
+        let mut idx = SlotIndex::new();
+        for k in 0..4096u32 {
+            idx.set(k, k);
+        }
+        let peak = idx.capacity();
+        for k in 0..4090u32 {
+            idx.remove(k);
+        }
+        idx.maybe_shrink();
+        assert!(idx.capacity() < peak / 64, "{} vs peak {peak}", idx.capacity());
+        for k in 4090..4096u32 {
+            assert_eq!(idx.get(k), Some(k), "survivor lost in shrink");
+        }
+        for k in 0..4090u32 {
+            assert_eq!(idx.get(k), None);
+        }
+        // Emptying gives everything back.
+        for k in 4090..4096u32 {
+            idx.remove(k);
+        }
+        idx.maybe_shrink();
+        assert_eq!(idx.capacity(), 0);
+    }
+
+    #[test]
+    fn randomized_ops_match_std_hashmap() {
+        // 20k mixed operations against HashMap<u32, u32> as the oracle,
+        // with a key universe small enough to force collisions, chain
+        // wraparound and backward-shift repairs constantly.
+        let mut rng = Rng::new(0xD1CE);
+        let mut idx = SlotIndex::new();
+        let mut model: HashMap<u32, u32> = HashMap::new();
+        for op in 0..20_000u32 {
+            let key = rng.below(512) as u32;
+            match rng.below(10) {
+                0..=5 => {
+                    idx.set(key, op);
+                    model.insert(key, op);
+                }
+                6..=7 => {
+                    idx.remove(key);
+                    model.remove(&key);
+                }
+                8 => {
+                    assert_eq!(idx.get(key), model.get(&key).copied(), "op {op} key {key}");
+                }
+                _ => {
+                    idx.maybe_shrink();
+                    assert_eq!(idx.len(), model.len());
+                }
+            }
+        }
+        assert_eq!(idx.len(), model.len());
+        for (k, v) in &model {
+            assert_eq!(idx.get(*k), Some(*v), "final sweep key {k}");
+        }
+        for k in 0..512u32 {
+            if !model.contains_key(&k) {
+                assert_eq!(idx.get(k), None, "ghost key {k}");
+            }
+        }
+    }
+}

@@ -99,6 +99,42 @@ fn random_scenario(rng: &mut Rng, case: u64) -> Scenario {
     }
 }
 
+/// OS thread count of this test process (Linux; `None` elsewhere).
+fn os_thread_count() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status.lines().find_map(|l| l.strip_prefix("Threads:"))?.trim().parse().ok()
+}
+
+#[test]
+fn pool_lifecycle_does_not_leak_workers_or_change_traces() {
+    // Every ShardedEngine now owns a persistent worker pool; building
+    // and dropping engines in a loop must (a) keep producing the same
+    // bits and (b) join its workers on drop instead of leaking them.
+    let mut rng = Rng::new(0xBEEF);
+    let scenario = random_scenario(&mut rng, 99);
+    let base = run_sharded(&scenario, 4);
+    let before = os_thread_count();
+    for round in 0..15 {
+        let other = run_sharded(&scenario, 4);
+        assert!(base.bit_identical(&other), "round {round}: engine churn changed the trace");
+    }
+    // Construct-without-stepping churn exercises the drop path alone.
+    for _ in 0..25 {
+        let e = scenario.sharded_engine(0, 4).expect("scenario must build");
+        assert_eq!(e.pooled_workers(), 3, "pooled engine must own shards - 1 workers");
+        drop(e);
+    }
+    if let (Some(b), Some(a)) = (before, os_thread_count()) {
+        // 40 dropped engines × 3 workers = 120 leaked threads if Drop
+        // failed to join. The slack absorbs sibling tests running
+        // concurrently in this process (cargo's default parallel test
+        // runner): the worst-case transient is a 16-shard pooled engine
+        // (15 workers) plus an 8-shard one (7) plus scoped spawns — keep
+        // the bound well above that, well below a real leak.
+        assert!(a < b + 60, "worker threads leaked across engine drops: {b} -> {a}");
+    }
+}
+
 #[test]
 fn randomized_scenarios_bit_identical_across_shard_counts() {
     let mut rng = Rng::new(0x1517);

@@ -31,7 +31,7 @@ fn encode(z: &[u32]) -> String {
 
 #[test]
 fn stream_mode_traces_match_pinned_goldens() {
-    let shards = decafork::scenario::parse::shards_from_env();
+    let shards = decafork::scenario::parse::shards_from_env().expect("DECAFORK_SHARDS");
     for (name, scenario) in presets::golden() {
         let trace = {
             let mut e = scenario.sharded_engine(0, shards).unwrap();
