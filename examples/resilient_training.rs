@@ -12,7 +12,7 @@
 use decafork::control::{Decafork, NoControl};
 use decafork::failures::Burst;
 use decafork::graph::generators;
-use decafork::learning::{ShardedCorpus, TrainingRun};
+use decafork::learning::{PjrtOp, ShardedCorpus, TrainingRun};
 use decafork::report::ascii_plot;
 use decafork::rng::Rng;
 use decafork::runtime::{artifacts_present, default_artifacts_dir, Runtime, TrainStep};
@@ -41,7 +41,8 @@ fn run_arm(
         Rng::new(23),
     );
     let t0 = std::time::Instant::now();
-    let summary = TrainingRun::execute(&mut engine, train, corpus, HORIZON, 99)?;
+    let op = PjrtOp::new(train)?;
+    let summary = TrainingRun::execute(&mut engine, &op, corpus, HORIZON, 99)?;
     println!(
         "[{label}] {} SGD steps in {:.1?}; survivors {}; loss {:.3} -> {:.3}",
         summary.steps,

@@ -1,0 +1,154 @@
+//! Sharded-vs-shared-stream **trainer** bench (ISSUE 5): RW-SGD on the
+//! `learn_10k` workload (10k nodes, 512 model-carrying walks, pure-Rust
+//! bigram operator — no artifacts needed), comparing
+//!
+//! * the shared-stream `Engine` + `TrainerHook` path (the only way to
+//!   train before the ShardHook protocol existed), against
+//! * the sharded trainer at `DECAFORK_SHARDS_HI` workers (default 8).
+//!
+//! Before any clock is trusted the bench **hard-asserts the shards = 1
+//! loss digest**: the sharded trainer at 1 worker and at the high count
+//! must produce bit-identical loss streams and simulation traces — a
+//! "speedup" that moved one SGD result would be a bug, not a result.
+//! (The shared-stream path is a different trace family — per-walk vs
+//! shared randomness — so it is compared on wall-clock only.)
+//!
+//! Writes `BENCH_learn.json` (or `$DECAFORK_BENCH_OUT`). Bar: sharded
+//! ≥ 2× shared-stream steps/s.
+//!
+//! Env knobs: `DECAFORK_PERF_STEPS` rescales the horizon,
+//! `DECAFORK_SHARDS_HI` sets the high worker count,
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the 2× gate to a report
+//! (2-core hosted runners cannot show an 8-worker win).
+
+use std::sync::Arc;
+
+use decafork::learning::{
+    presets, train_sharded, ShardedTrainOptions, TrainingRun, TrainingSummary,
+};
+use std::time::Instant;
+
+const SEED: u64 = 0x5EED_1EA4;
+
+fn run_sharded(
+    spec: &presets::LearnSpec,
+    op: &decafork::learning::BigramOp,
+    corpus: &Arc<decafork::learning::ShardedCorpus>,
+    workers: usize,
+) -> anyhow::Result<(f64, TrainingSummary)> {
+    // Every arm is clocked end-to-end including its own engine/graph
+    // build (the corpus is shared setup); the shared-stream baseline
+    // below is timed the same way, so the ratio compares like with
+    // like.
+    let t0 = Instant::now();
+    let summary = train_sharded(
+        &spec.scenario,
+        0,
+        op,
+        Arc::clone(corpus),
+        &ShardedTrainOptions {
+            workers,
+            horizon: spec.scenario.horizon,
+            seed: SEED,
+            merge_period: spec.merge_period,
+        },
+    )?;
+    let dt = t0.elapsed().as_secs_f64();
+    Ok((spec.scenario.horizon as f64 / dt, summary))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
+        .ok()
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .map(|s| s.max(100));
+    let workers = std::env::var("DECAFORK_SHARDS_HI")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&s| s >= 2)
+        .unwrap_or(8);
+
+    let mut spec = presets::learn_10k();
+    if let Some(steps) = quick_steps {
+        spec.scenario.rescale_to(steps);
+    }
+    let op = spec.op();
+    println!(
+        "perf_learn: RW-SGD on {} | {} steps | bigram op {} params, batch {}x{}\n",
+        spec.scenario.label(),
+        spec.scenario.horizon,
+        spec.vocab * spec.vocab,
+        spec.batch,
+        spec.seq + 1
+    );
+    let corpus = Arc::new(spec.corpus());
+
+    // Determinism gate first: 1 worker vs the high count, bit-identical
+    // loss digest and trace, BEFORE any clock is quoted.
+    let (sps_one, sum_one) = run_sharded(&spec, &op, &corpus, 1)?;
+    println!("  sharded, 1 worker    : {sps_one:>10.2} steps/s  ({} SGD steps)", sum_one.steps);
+    let (sps_hi, sum_hi) = run_sharded(&spec, &op, &corpus, workers)?;
+    println!(
+        "  sharded, {workers} workers   : {sps_hi:>10.2} steps/s  ({} SGD steps)",
+        sum_hi.steps
+    );
+    assert!(
+        sum_one.trace.bit_identical(&sum_hi.trace),
+        "simulation trace diverged between 1 and {workers} workers — perf numbers meaningless"
+    );
+    assert_eq!(
+        sum_one.loss_digest(),
+        sum_hi.loss_digest(),
+        "loss digest diverged between 1 and {workers} workers — perf numbers meaningless"
+    );
+    println!(
+        "  digest check         : OK (0x{:016x}, {} losses, traces bit-identical)",
+        sum_one.loss_digest(),
+        sum_one.losses.len()
+    );
+
+    // Shared-stream baseline: the pre-subsystem way to train. Different
+    // trace family (shared randomness), so wall-clock only — timed
+    // end-to-end including its engine build, like the sharded arms.
+    let t0 = Instant::now();
+    let mut engine = spec.scenario.engine(0)?;
+    let sum_seq = TrainingRun::execute(
+        &mut engine,
+        &op,
+        Arc::clone(&corpus),
+        spec.scenario.horizon,
+        SEED,
+    )?;
+    let dt = t0.elapsed().as_secs_f64();
+    let sps_shared = spec.scenario.horizon as f64 / dt;
+    println!(
+        "  shared-stream engine : {sps_shared:>10.2} steps/s  ({} SGD steps)",
+        sum_seq.steps
+    );
+
+    let speedup = sps_hi / sps_shared;
+    let vs_one = sps_hi / sps_one;
+    println!("\n  sharded vs shared-stream : {speedup:>6.2}x  (bar: >= 2.0x)");
+    println!("  sharded {workers}w vs 1w        : {vs_one:>6.2}x");
+
+    let pass = speedup >= 2.0;
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_learn.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"perf_learn\",\n  \"mode\": \"RW-SGD, sharded trainer vs shared-stream trainer, bigram op; shards=1 loss digest asserted bit-identical before clocking\",\n  \"workload\": \"{}\",\n  \"graph\": \"{}\",\n  \"z0\": {},\n  \"steps\": {},\n  \"workers\": {workers},\n  \"loss_digest\": \"0x{:016x}\",\n  \"sgd_steps_sharded\": {},\n  \"sgd_steps_shared_stream\": {},\n  \"steps_per_sec_sharded_1_worker\": {sps_one:.2},\n  \"steps_per_sec_sharded\": {sps_hi:.2},\n  \"steps_per_sec_shared_stream\": {sps_shared:.2},\n  \"sharded_vs_shared_stream\": {speedup:.3},\n  \"sharded_vs_1_worker\": {vs_one:.3},\n  \"acceptance_min_speedup\": 2.0,\n  \"pass\": {pass}\n}}\n",
+        spec.name,
+        spec.scenario.graph.label(),
+        spec.scenario.params.z0,
+        spec.scenario.horizon,
+        sum_one.loss_digest(),
+        sum_hi.steps,
+        sum_seq.steps,
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
+        anyhow::bail!("perf_learn below the 2x sharded-vs-shared-stream bar — see {out}");
+    }
+    Ok(())
+}

@@ -1,12 +1,33 @@
 //! The paper's motivating application: decentralized learning where the
 //! walk token *is* the model. Every node holds a shard of the corpus; a
-//! visiting walk runs one SGD step on the visited node's data through the
-//! AOT-compiled JAX/Pallas train-step executable ([`crate::runtime`]),
-//! then moves on. Forks duplicate the model, so a surviving lineage keeps
-//! the training progress — resilience in the learning sense.
+//! visiting walk runs one SGD step on the visited node's data — through
+//! the AOT-compiled JAX/Pallas train-step executable ([`crate::runtime`])
+//! or the pure-Rust [`BigramOp`] — then moves on. Forks duplicate the
+//! model, so a surviving lineage keeps the training progress —
+//! resilience in the learning sense.
+//!
+//! Two execution paths, one [`TrainOp`] operator abstraction:
+//!
+//! * [`rwsgd`] — the shared-stream [`Engine`](crate::sim::Engine) +
+//!   [`VisitHook`](crate::sim::VisitHook) path (sequential visits);
+//! * [`sharded`] — RW-SGD on the stream-mode
+//!   [`ShardedEngine`](crate::sim::ShardedEngine) via the per-shard
+//!   [`ShardHook`](crate::sim::ShardHook) protocol: shard-parallel SGD
+//!   with a deterministic barrier merge, bit-identical at every worker
+//!   count (`learn_10k`/`learn_100k` presets, `benches/perf_learn.rs`).
+//!
+//! [`TrainingRun::execute_budgeted`] is the front door: it picks the
+//! path and plans worker counts through the session
+//! [`CoreBudget`](crate::sim::CoreBudget).
 
 pub mod corpus;
+pub mod ops;
+pub mod presets;
 pub mod rwsgd;
+pub mod sharded;
 
 pub use corpus::ShardedCorpus;
-pub use rwsgd::{TrainerHook, TrainingRun, TrainingSummary};
+pub use ops::{init_params, validate_corpus, BigramOp, PjrtOp, TrainOp};
+pub use presets::LearnSpec;
+pub use rwsgd::{TrainOptions, TrainerHook, TrainingRun, TrainingSummary};
+pub use sharded::{loss_digest, train_sharded, ShardedTrainOptions, ShardedTrainer};

@@ -1,0 +1,289 @@
+//! Train-step operators: the one-visit SGD computation the walk engines
+//! drive, abstracted behind [`TrainOp`] so the same trainer code runs on
+//!
+//! * the AOT-compiled JAX/Pallas executable ([`PjrtOp`], production —
+//!   needs `make artifacts` and a real PJRT plugin), and
+//! * a pure-Rust bigram language model ([`BigramOp`]) that needs nothing
+//!   but the crate — the operator the determinism tests, the CI learn
+//!   smoke and `benches/perf_learn.rs` run on, since a toolchain-only
+//!   environment has no PJRT.
+//!
+//! The contract every operator must honor for the sharded trainer's
+//! schedule invariance: [`TrainOp::step`] is a **pure function** of
+//! `(params, tokens)` — same inputs, bit-identical outputs, no interior
+//! state, no randomness. `Sync` is a supertrait because shard replicas
+//! evaluate the operator concurrently (read-only) during the parallel
+//! control phase.
+
+use crate::rng::Rng;
+use crate::runtime::TrainStep;
+
+/// One SGD step: `(params, token batch) → (new params, mean loss)`.
+///
+/// `tokens` is a flattened row-major `(batch, seq+1)` matrix of token
+/// ids — `seq` inputs plus the next-token targets, exactly the layout
+/// [`ShardedCorpus::sample_batch`](crate::learning::ShardedCorpus::sample_batch)
+/// produces.
+pub trait TrainOp: Sync {
+    /// Parameter vector length.
+    fn param_count(&self) -> usize;
+    /// Rows per batch.
+    fn batch(&self) -> usize;
+    /// Input sequence length (the token matrix has `seq + 1` columns).
+    fn seq(&self) -> usize;
+    /// Scale of the uniform init ([`init_params`] draws from
+    /// `±init_scale`).
+    fn init_scale(&self) -> f32 {
+        0.02
+    }
+    /// Run one SGD step. Must be a pure function of its inputs.
+    fn step(&self, params: &[f32], tokens: &[i32]) -> anyhow::Result<(Vec<f32>, f32)>;
+}
+
+/// The deterministic initial parameter vector every walk's model starts
+/// from (paper footnote 4: all `Z0` walks are created by one node, as if
+/// from one init). Identical to the scheme the shared-stream
+/// `TrainingRun` has always used, so seeds stay comparable.
+pub fn init_params<O: TrainOp + ?Sized>(op: &O, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0x494E4954);
+    let scale = op.init_scale();
+    (0..op.param_count()).map(|_| (rng.f64() as f32 - 0.5) * 2.0 * scale).collect()
+}
+
+/// Check that `corpus` can feed `op`-shaped batches for a graph of
+/// `n_nodes` nodes — shared by both trainer entry points so a
+/// misconfiguration fails on the coordinator with a clear message
+/// instead of tripping `sample_batch`'s assert inside a worker thread.
+pub fn validate_corpus<O: TrainOp + ?Sized>(
+    op: &O,
+    corpus: &crate::learning::corpus::ShardedCorpus,
+    n_nodes: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        corpus.n_nodes() >= n_nodes,
+        "corpus has {} shards but the graph has {n_nodes} nodes",
+        corpus.n_nodes()
+    );
+    anyhow::ensure!(
+        corpus.shard(0).len() > op.seq() + 1,
+        "corpus shards ({} tokens) are too small for seq {} batch windows",
+        corpus.shard(0).len(),
+        op.seq()
+    );
+    Ok(())
+}
+
+/// The production operator: the `(params f32[P], tokens i32[B,T]) →
+/// (new_params, loss)` executable lowered from `python/compile/model.py`,
+/// executed through PJRT. Shapes and hyperparameters are read from the
+/// artifact manifest once, at construction, so the hot path is
+/// `Result`-free.
+pub struct PjrtOp<'a> {
+    train: &'a TrainStep,
+    params: usize,
+    batch: usize,
+    seq: usize,
+    init_scale: f32,
+}
+
+impl<'a> PjrtOp<'a> {
+    pub fn new(train: &'a TrainStep) -> anyhow::Result<Self> {
+        Ok(PjrtOp {
+            params: train.param_count()?,
+            batch: train.manifest.get_usize("batch")?,
+            seq: train.manifest.get_usize("seq")?,
+            init_scale: train.manifest.get_f64("init_scale").unwrap_or(0.02) as f32,
+            train,
+        })
+    }
+}
+
+impl TrainOp for PjrtOp<'_> {
+    fn param_count(&self) -> usize {
+        self.params
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn init_scale(&self) -> f32 {
+        self.init_scale
+    }
+    fn step(&self, params: &[f32], tokens: &[i32]) -> anyhow::Result<(Vec<f32>, f32)> {
+        self.train.step(params, tokens)
+    }
+}
+
+/// A pure-Rust bigram language model: parameters are a `vocab × vocab`
+/// logit matrix (row = current token, column = next token), trained by
+/// online softmax cross-entropy SGD over the batch's consecutive pairs.
+///
+/// Deliberately simple — the walk/fork/merge machinery is what the
+/// sharded trainer exercises, not model capacity — but genuinely
+/// learnable on the Markov [`ShardedCorpus`]: the bigram table *is* the
+/// corpus's generative model, so the loss drops from `≈ ln(vocab)`
+/// toward the corpus's bigram entropy. Every float operation runs in a
+/// fixed order, so `step` is bit-deterministic.
+///
+/// [`ShardedCorpus`]: crate::learning::ShardedCorpus
+#[derive(Debug, Clone)]
+pub struct BigramOp {
+    pub vocab: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f32,
+}
+
+impl BigramOp {
+    pub fn new(vocab: usize, batch: usize, seq: usize, lr: f32) -> Self {
+        assert!(vocab >= 2 && batch >= 1 && seq >= 1);
+        assert!(lr > 0.0);
+        BigramOp { vocab, batch, seq, lr }
+    }
+}
+
+impl TrainOp for BigramOp {
+    fn param_count(&self) -> usize {
+        self.vocab * self.vocab
+    }
+    fn batch(&self) -> usize {
+        self.batch
+    }
+    fn seq(&self) -> usize {
+        self.seq
+    }
+    fn init_scale(&self) -> f32 {
+        0.02
+    }
+
+    fn step(&self, params: &[f32], tokens: &[i32]) -> anyhow::Result<(Vec<f32>, f32)> {
+        let v = self.vocab;
+        anyhow::ensure!(
+            params.len() == v * v,
+            "param vector must be vocab^2 = {}, got {}",
+            v * v,
+            params.len()
+        );
+        let t1 = self.seq + 1;
+        anyhow::ensure!(
+            tokens.len() == self.batch * t1,
+            "token batch must be {}x{t1}, got {}",
+            self.batch,
+            tokens.len()
+        );
+        let mut p = params.to_vec();
+        let mut exps = vec![0f32; v];
+        let mut loss_sum = 0f64;
+        let mut pairs = 0usize;
+        for row in tokens.chunks_exact(t1) {
+            for w in row.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                anyhow::ensure!(
+                    (0..v as i32).contains(&a) && (0..v as i32).contains(&b),
+                    "token ({a}, {b}) outside vocab {v}"
+                );
+                let (a, b) = (a as usize, b as usize);
+                let base = a * v;
+                let logits = &p[base..base + v];
+                // Max-shifted softmax for numerical stability.
+                let mut m = f32::NEG_INFINITY;
+                for &x in logits {
+                    if x > m {
+                        m = x;
+                    }
+                }
+                let mut z = 0f32;
+                for (e, &x) in exps.iter_mut().zip(logits) {
+                    *e = (x - m).exp();
+                    z += *e;
+                }
+                loss_sum += (z.ln() + m - logits[b]) as f64;
+                pairs += 1;
+                // Online SGD on the current-token row: grad = p̂ − onehot.
+                let inv = 1.0 / z;
+                for (c, &e) in exps.iter().enumerate() {
+                    let grad = e * inv - if c == b { 1.0 } else { 0.0 };
+                    p[base + c] -= self.lr * grad;
+                }
+            }
+        }
+        anyhow::ensure!(pairs > 0, "empty token batch");
+        Ok((p, (loss_sum / pairs as f64) as f32))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learning::ShardedCorpus;
+
+    fn op() -> BigramOp {
+        BigramOp::new(16, 4, 8, 0.3)
+    }
+
+    #[test]
+    fn bigram_learns_the_markov_corpus() {
+        let op = op();
+        let corpus = ShardedCorpus::markov(1, 20_000, 16, 5);
+        let mut rng = Rng::new(3);
+        let mut p = init_params(&op, 7);
+        let (_, first) = op
+            .step(&p, &corpus.sample_batch(0, op.batch(), op.seq(), &mut rng.clone()))
+            .unwrap();
+        assert!(
+            (first - (16f32).ln()).abs() < 0.3,
+            "near-uniform init should cost ≈ ln(vocab): {first}"
+        );
+        let mut last = first;
+        for _ in 0..400 {
+            let tokens = corpus.sample_batch(0, op.batch(), op.seq(), &mut rng);
+            let (np, l) = op.step(&p, &tokens).unwrap();
+            p = np;
+            last = l;
+        }
+        assert!(last < 0.75 * first, "no learning progress: {first} -> {last}");
+        // Not degenerate either: bounded below by the corpus entropy.
+        assert!(last > 0.2, "suspiciously low loss {last}");
+    }
+
+    #[test]
+    fn bigram_step_is_bit_deterministic() {
+        let op = op();
+        let corpus = ShardedCorpus::markov(1, 2000, 16, 9);
+        let mut rng = Rng::new(4);
+        let tokens = corpus.sample_batch(0, op.batch(), op.seq(), &mut rng);
+        let p = init_params(&op, 11);
+        let (p1, l1) = op.step(&p, &tokens).unwrap();
+        let (p2, l2) = op.step(&p, &tokens).unwrap();
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert!(p1.iter().zip(&p2).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // And the params actually moved.
+        assert!(p1.iter().zip(&p).any(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn bigram_rejects_bad_shapes_and_tokens() {
+        let op = op();
+        let p = vec![0.0; op.param_count()];
+        assert!(op.step(&p, &[0; 3]).is_err(), "wrong batch shape must error");
+        assert!(op.step(&p[..5], &vec![0; 4 * 9]).is_err(), "wrong param len must error");
+        let mut bad = vec![0i32; 4 * 9];
+        bad[7] = 16; // == vocab, out of range
+        assert!(op.step(&p, &bad).is_err(), "out-of-vocab token must error");
+        bad[7] = -1;
+        assert!(op.step(&p, &bad).is_err(), "negative token must error");
+    }
+
+    #[test]
+    fn init_params_deterministic_and_scaled() {
+        let op = op();
+        let a = init_params(&op, 42);
+        let b = init_params(&op, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 256);
+        assert!(a.iter().all(|x| x.abs() <= 0.02));
+        assert_ne!(a, init_params(&op, 43));
+    }
+}

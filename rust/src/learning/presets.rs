@@ -1,0 +1,153 @@
+//! Named training workloads: a simulation [`Scenario`] (graph, control,
+//! failures — from `scenario::presets`) bundled with the learning-side
+//! knobs a run needs (corpus size, vocab, batch shape, learning rate,
+//! merge period). One name, one workload — the CLI (`train --preset`),
+//! `benches/perf_learn.rs`, the shard-invariance tests and CI's learn
+//! smoke all resolve the same spec.
+
+use crate::learning::corpus::ShardedCorpus;
+use crate::learning::ops::BigramOp;
+use crate::scenario::{presets, Scenario};
+
+/// A complete training workload description.
+#[derive(Debug, Clone)]
+pub struct LearnSpec {
+    pub name: &'static str,
+    pub scenario: Scenario,
+    /// Tokens generated per node shard (must exceed `seq + 1`).
+    pub tokens_per_node: usize,
+    pub vocab: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f32,
+    /// Default barrier parameter-merge period (0 = never; the CLI's
+    /// `--merge-every` overrides it).
+    pub merge_period: u64,
+}
+
+impl LearnSpec {
+    /// Node count of the scenario's graph spec.
+    pub fn n_nodes(&self) -> usize {
+        self.scenario.graph.nodes()
+    }
+
+    /// Generate the workload's corpus (deterministic in the scenario
+    /// seed; one shard per graph node).
+    pub fn corpus(&self) -> ShardedCorpus {
+        ShardedCorpus::markov(
+            self.n_nodes(),
+            self.tokens_per_node,
+            self.vocab,
+            self.scenario.seed ^ 0xC0FFEE,
+        )
+    }
+
+    /// The pure-Rust train operator for this workload.
+    pub fn op(&self) -> BigramOp {
+        BigramOp::new(self.vocab, self.batch, self.seq, self.lr)
+    }
+}
+
+/// Resolve a preset by name (`learn_tiny`, `learn_10k`, `learn_100k`).
+pub fn by_name(name: &str) -> Option<LearnSpec> {
+    match name {
+        "learn_tiny" => Some(learn_tiny()),
+        "learn_10k" => Some(learn_10k()),
+        "learn_100k" => Some(learn_100k()),
+        _ => None,
+    }
+}
+
+/// Smoke-sized workload: 64 nodes, 8 walks, one burst. Small enough for
+/// a unit test, big enough that forks, deaths and payload handoff all
+/// fire. CI's learn-smoke step runs it at shards 1 and 4 and diffs the
+/// loss digest.
+pub fn learn_tiny() -> LearnSpec {
+    LearnSpec {
+        name: "learn_tiny",
+        scenario: presets::learn_tiny_scenario(),
+        tokens_per_node: 512,
+        vocab: 16,
+        batch: 4,
+        seq: 8,
+        lr: 0.3,
+        merge_period: 50,
+    }
+}
+
+/// The `perf_learn` workload: 10k nodes / 512 walks (see
+/// `scenario::presets::learn_10k` for the simulation-side tuning). The
+/// bigram batch (16 × 32 pairs over a 64-symbol vocab) makes the SGD
+/// work dominate the simulation step — the regime where sharding the
+/// control phase pays.
+pub fn learn_10k() -> LearnSpec {
+    LearnSpec {
+        name: "learn_10k",
+        scenario: presets::learn_10k(),
+        tokens_per_node: 2048,
+        vocab: 64,
+        batch: 16,
+        seq: 32,
+        lr: 0.1,
+        merge_period: 100,
+    }
+}
+
+/// Training at `scale_100k` size: 100k nodes / 4096 model-carrying
+/// walks. Tokens per node are kept small (256 ≈ 100 MB of corpus total)
+/// — per-node data scarcity is the realistic regime at this scale, and
+/// each node still holds far more than one batch window.
+pub fn learn_100k() -> LearnSpec {
+    LearnSpec {
+        name: "learn_100k",
+        scenario: presets::learn_100k(),
+        tokens_per_node: 256,
+        vocab: 64,
+        batch: 16,
+        seq: 32,
+        lr: 0.1,
+        merge_period: 100,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learning::ops::TrainOp;
+
+    #[test]
+    fn presets_resolve_by_name_and_are_consistent() {
+        for name in ["learn_tiny", "learn_10k", "learn_100k"] {
+            let spec = by_name(name).unwrap();
+            assert_eq!(spec.name, name);
+            assert!(
+                spec.tokens_per_node > spec.seq + 1,
+                "{name}: corpus shards too small for the batch window"
+            );
+            assert!(spec.vocab >= 4);
+            assert_eq!(spec.op().param_count(), spec.vocab * spec.vocab);
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn tiny_corpus_builds_and_matches_graph() {
+        let spec = learn_tiny();
+        let corpus = spec.corpus();
+        assert_eq!(corpus.n_nodes(), spec.n_nodes());
+        assert_eq!(corpus.vocab, spec.vocab);
+        // Deterministic in the scenario seed.
+        assert_eq!(corpus.shard(3), spec.corpus().shard(3));
+    }
+
+    #[test]
+    fn scale_specs_stay_affordable() {
+        // learn_100k's corpus must not regress into the GB regime: the
+        // whole point of tokens_per_node = 256 is ~100 MB total.
+        let spec = learn_100k();
+        let bytes = spec.n_nodes() * spec.tokens_per_node * std::mem::size_of::<i32>();
+        assert!(bytes <= 128 << 20, "learn_100k corpus ballooned to {bytes} bytes");
+        assert!(spec.n_nodes() == 100_000);
+        assert_eq!(learn_10k().n_nodes(), 10_000);
+    }
+}

@@ -9,19 +9,22 @@
 use std::sync::Arc;
 
 use crate::learning::corpus::ShardedCorpus;
+use crate::learning::ops::{init_params, TrainOp};
 use crate::rng::Rng;
-use crate::runtime::TrainStep;
 use crate::sim::engine::{Engine, VisitHook};
 use crate::sim::metrics::Trace;
+use crate::sim::CoreBudget;
 use crate::walks::{Walk, WalkMut, WalkRef};
 
-/// Per-visit training hook.
-pub struct TrainerHook<'a> {
-    train: &'a TrainStep,
+/// Per-visit training hook, generic over the train operator (the PJRT
+/// executable in production, the pure-Rust [`BigramOp`] in tests and
+/// benches).
+///
+/// [`BigramOp`]: crate::learning::ops::BigramOp
+pub struct TrainerHook<'a, O: TrainOp> {
+    op: &'a O,
     corpus: Arc<ShardedCorpus>,
     rng: Rng,
-    batch: usize,
-    seq: usize,
     /// Model store: payload index → parameter vector.
     params: Vec<Option<Vec<f32>>>,
     /// (t, walk id, loss) per executed step.
@@ -40,23 +43,19 @@ pub struct TrainerHook<'a> {
     pub merges: usize,
 }
 
-impl<'a> TrainerHook<'a> {
-    pub fn new(train: &'a TrainStep, corpus: Arc<ShardedCorpus>, seed: u64) -> anyhow::Result<Self> {
-        let batch = train.manifest.get_usize("batch")?;
-        let seq = train.manifest.get_usize("seq")?;
-        Ok(TrainerHook {
-            train,
+impl<'a, O: TrainOp> TrainerHook<'a, O> {
+    pub fn new(op: &'a O, corpus: Arc<ShardedCorpus>, seed: u64) -> Self {
+        TrainerHook {
+            op,
             corpus,
             rng: Rng::new(seed),
-            batch,
-            seq,
             params: Vec::new(),
             losses: Vec::new(),
             steps: 0,
             merge_on_meet: false,
             walk_pos: std::collections::HashMap::new(),
             merges: 0,
-        })
+        }
     }
 
     /// Enable gossip-on-meet parameter averaging.
@@ -85,7 +84,7 @@ impl<'a> TrainerHook<'a> {
     }
 }
 
-impl VisitHook for TrainerHook<'_> {
+impl<O: TrainOp> VisitHook for TrainerHook<'_, O> {
     fn on_visit(&mut self, t: u64, node: u32, walk: WalkMut<'_>) {
         let Some(idx) = *walk.payload else { return };
         // Gossip-on-meet: average with any co-located model first (the
@@ -120,10 +119,10 @@ impl VisitHook for TrainerHook<'_> {
             self.walk_pos.insert(walk.id.0, (node, idx));
         }
         let Some(p) = self.params[idx].take() else { return };
-        let tokens = self
-            .corpus
-            .sample_batch(node as usize, self.batch, self.seq, &mut self.rng);
-        match self.train.step(&p, &tokens) {
+        let tokens =
+            self.corpus
+                .sample_batch(node as usize, self.op.batch(), self.op.seq(), &mut self.rng);
+        match self.op.step(&p, &tokens) {
             Ok((new_p, loss)) => {
                 self.params[idx] = Some(new_p);
                 self.losses.push((t, walk.id.0, loss));
@@ -169,10 +168,86 @@ pub struct TrainingSummary {
     pub first_loss: f32,
     pub last_loss_mean: f32,
     pub survivors: usize,
-    /// Gossip-on-meet merges performed (0 unless enabled).
+    /// Model-mixing rounds: gossip-on-meet merges on the shared-stream
+    /// path, barrier parameter-merge rounds on the sharded path (0 when
+    /// the respective extension is off).
     pub merges: usize,
     /// Lineage summary of the final walk forest.
     pub lineage: String,
+}
+
+impl TrainingSummary {
+    /// Assemble a summary from a finished run's raw outputs, deriving
+    /// the loss statistics (first loss, mean of the last 20) in one
+    /// place for both trainer paths.
+    pub fn from_parts(
+        trace: Trace,
+        losses: Vec<(u64, u64, f32)>,
+        steps: usize,
+        merges: usize,
+        survivors: usize,
+        lineage: String,
+    ) -> Self {
+        let first_loss = losses.first().map(|&(_, _, l)| l).unwrap_or(f32::NAN);
+        let tail = losses.len().saturating_sub(20);
+        let last_loss_mean = if losses.is_empty() {
+            f32::NAN
+        } else {
+            losses[tail..].iter().map(|&(_, _, l)| l).sum::<f32>() / (losses.len() - tail) as f32
+        };
+        TrainingSummary {
+            trace,
+            losses,
+            steps,
+            first_loss,
+            last_loss_mean,
+            survivors,
+            merges,
+            lineage,
+        }
+    }
+
+    /// FNV digest of the canonical loss stream
+    /// ([`loss_digest`](crate::learning::sharded::loss_digest)) — what
+    /// the shard-invariance gates compare.
+    pub fn loss_digest(&self) -> u64 {
+        crate::learning::sharded::loss_digest(&self.losses)
+    }
+}
+
+/// How a [`TrainingRun`] is executed: which engine family, how many
+/// stream workers, and under which core budget. Horizon and seed are
+/// *not* options — [`TrainingRun::execute_budgeted`] always takes them
+/// from the scenario, so the two can never drift apart.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// `false` = the shared-stream [`Engine`] (the historical path);
+    /// `true` = the stream-mode sharded trainer
+    /// ([`learning::sharded`](crate::learning::sharded)) — a different
+    /// trace family whose results are invariant in the worker count.
+    pub stream: bool,
+    /// Requested stream workers (a request, like `run_many`'s knobs —
+    /// the budget decides what is actually spawned).
+    pub shards: usize,
+    /// The core budget that plans the actual worker count
+    /// ([`planned_workers`](Self::planned_workers)), exactly as
+    /// `run_many` budgets replications × shards. Training runs stopped
+    /// bypassing the ISSUE 4 budgeting here.
+    pub budget: CoreBudget,
+    /// Sharded path: barrier parameter-merge period (0 = never).
+    pub merge_period: u64,
+    /// Shared-stream path: gossip-on-meet parameter averaging.
+    pub merge_on_meet: bool,
+}
+
+impl TrainOptions {
+    /// The stream-worker count the budget actually grants
+    /// (`plan(1 run, 1 thread, shards)`) — the single source both the
+    /// CLI's announcement and the execution path read, so what is
+    /// printed is what is spawned.
+    pub fn planned_workers(&self) -> usize {
+        self.budget.plan(1, 1, self.shards.max(1)).workers_per_run
+    }
 }
 
 /// End-to-end training run: wires an [`Engine`] to a [`TrainerHook`],
@@ -180,63 +255,98 @@ pub struct TrainingSummary {
 pub struct TrainingRun;
 
 impl TrainingRun {
-    pub fn execute(
+    pub fn execute<O: TrainOp>(
         engine: &mut Engine,
-        train: &TrainStep,
+        op: &O,
         corpus: Arc<ShardedCorpus>,
         horizon: u64,
         seed: u64,
     ) -> anyhow::Result<TrainingSummary> {
-        Self::execute_opts(engine, train, corpus, horizon, seed, false)
+        Self::execute_opts(engine, op, corpus, horizon, seed, false)
     }
 
     /// `execute` with the gossip-on-meet extension toggled.
-    #[allow(clippy::too_many_arguments)]
-    pub fn execute_opts(
+    pub fn execute_opts<O: TrainOp>(
         engine: &mut Engine,
-        train: &TrainStep,
+        op: &O,
         corpus: Arc<ShardedCorpus>,
         horizon: u64,
         seed: u64,
         merge_on_meet: bool,
     ) -> anyhow::Result<TrainingSummary> {
-        let pcount = train.param_count()?;
-        let mut hook = TrainerHook::new(train, corpus, seed)?;
+        crate::learning::ops::validate_corpus(op, &corpus, engine.graph.n())?;
+        let mut hook = TrainerHook::new(op, corpus, seed);
         if merge_on_meet {
             hook = hook.with_merge();
         }
         // All Z0 walks start from the same (deterministic) init, as if one
         // node created them (paper footnote 4).
-        let mut init_rng = Rng::new(seed ^ 0x494E4954);
-        let scale = train.manifest.get_f64("init_scale").unwrap_or(0.02);
-        let init: Vec<f32> = (0..pcount)
-            .map(|_| (init_rng.f64() as f32 - 0.5) * 2.0 * scale as f32)
-            .collect();
+        let init = init_params(op, seed);
         for payload in engine.payloads_mut() {
             // Allocate one payload per initial walk.
             *payload = Some(hook.alloc(init.clone()));
         }
         engine.run_to_with(horizon, &mut hook);
-        let trace = engine.trace().clone();
-        let first_loss = hook.losses.first().map(|&(_, _, l)| l).unwrap_or(f32::NAN);
-        let tail = hook.losses.len().saturating_sub(20);
-        let last_loss_mean = if hook.losses.is_empty() {
-            f32::NAN
+        Ok(TrainingSummary::from_parts(
+            engine.trace().clone(),
+            std::mem::take(&mut hook.losses),
+            hook.steps,
+            hook.merges,
+            engine.alive() as usize,
+            crate::walks::lineage::lineage_summary(&engine.snapshot()),
+        ))
+    }
+
+    /// The budgeted entry point every `train` surface routes through
+    /// (ISSUE 5 satellite): builds the engine itself from the scenario
+    /// (which also supplies the horizon and the seed) and plans the
+    /// stream-worker count through the [`CoreBudget`] —
+    /// [`TrainOptions::planned_workers`] caps workers at the budget, so
+    /// a `--shards 64` request on an 8-core box spawns 8 workers, not
+    /// 64, and (stream-mode invariance) produces the identical result
+    /// either way.
+    pub fn execute_budgeted<O: TrainOp>(
+        scenario: &crate::scenario::Scenario,
+        run: usize,
+        op: &O,
+        corpus: Arc<ShardedCorpus>,
+        opts: &TrainOptions,
+    ) -> anyhow::Result<TrainingSummary> {
+        // Options that belong to the other path are a misconfiguration
+        // for any caller, not just the CLI: reject instead of silently
+        // ignoring them.
+        anyhow::ensure!(
+            opts.stream || opts.merge_period == 0,
+            "merge_period is a sharded-trainer option (set stream: true)"
+        );
+        anyhow::ensure!(
+            !(opts.stream && opts.merge_on_meet),
+            "merge_on_meet (gossip-on-meet) is a shared-stream option (set stream: false)"
+        );
+        if opts.stream {
+            crate::learning::sharded::train_sharded(
+                scenario,
+                run,
+                op,
+                corpus,
+                &crate::learning::sharded::ShardedTrainOptions {
+                    workers: opts.planned_workers(),
+                    horizon: scenario.horizon,
+                    seed: scenario.seed,
+                    merge_period: opts.merge_period,
+                },
+            )
         } else {
-            hook.losses[tail..].iter().map(|&(_, _, l)| l).sum::<f32>()
-                / (hook.losses.len() - tail) as f32
-        };
-        let survivors = engine.alive() as usize;
-        Ok(TrainingSummary {
-            trace,
-            losses: hook.losses.clone(),
-            steps: hook.steps,
-            first_loss,
-            last_loss_mean,
-            survivors,
-            merges: hook.merges,
-            lineage: crate::walks::lineage::lineage_summary(&engine.snapshot()),
-        })
+            let mut engine = scenario.engine(run)?;
+            Self::execute_opts(
+                &mut engine,
+                op,
+                corpus,
+                scenario.horizon,
+                scenario.seed,
+                opts.merge_on_meet,
+            )
+        }
     }
 }
 

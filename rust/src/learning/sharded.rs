@@ -1,0 +1,404 @@
+//! RW-SGD on the stream-mode [`ShardedEngine`]: the learning layer's
+//! [`ShardHook`] implementation, which is what finally lets the paper's
+//! motivating application — token-carries-model decentralized training —
+//! run at the `scale_100k`-class sizes the sharded engine simulates.
+//!
+//! ## How the trainer maps onto the hook protocol
+//!
+//! * **Models ride walks** exactly as in the shared-stream
+//!   [`TrainerHook`](crate::learning::TrainerHook): `params[idx]` is the
+//!   model of the walk whose payload slot holds `idx`; forks clone it,
+//!   deaths free it.
+//! * **Visits are shard-parallel.** During the control phase, shard `k`'s
+//!   [`TrainerShard`] replica handles the arrivals at its node range:
+//!   it samples a batch from the visited node's corpus shard on the
+//!   node's own learning stream (`rng::streams::LEARN` — per-node
+//!   ownership is what makes the sample sequence independent of call
+//!   interleaving), runs the [`TrainOp`] on the walk's current model
+//!   (read-only through the shared hook), and queues the result as a
+//!   **delta** `(dense, walk, new params, loss)`. Every walk arrives at
+//!   exactly one node per step, so no model is read by two shards.
+//! * **Deltas merge at the barrier.** [`ShardHook::merge`] combines the
+//!   replicas' deltas sorted by the visiting walk's dense index — the
+//!   canonical order — before the engine applies fork decisions, so a
+//!   forking parent hands its child the *post-visit* model and the loss
+//!   stream `losses` is bit-identical at every shard count
+//!   (`tests/learning_sharded.rs` locks shards 1/2/8).
+//! * **Periodic parameter merge** (`merge_period`): every that many
+//!   steps, at the end-of-step barrier, all live models are averaged in
+//!   dense order — the decentralized consensus step the multi-stream
+//!   RW-learning literature (Gholami & Seferoglu 2024; Ayache et al.)
+//!   alternates with local SGD. Fixed-order f32 summation keeps the
+//!   average bit-identical across shard counts. `0` disables it.
+//!
+//! The trainer never touches simulation state (the hook protocol gives
+//! it no handle to do so), so attaching it cannot move a single trace
+//! bit: θ̂ telemetry, both golden families and the frozen reference are
+//! untouched by construction.
+
+use std::sync::Arc;
+
+use crate::learning::corpus::ShardedCorpus;
+use crate::learning::ops::{init_params, TrainOp};
+use crate::learning::rwsgd::TrainingSummary;
+use crate::rng::{streams, Rng};
+use crate::scenario::Scenario;
+use crate::sim::shard_hook::{ShardHook, ShardVisit};
+use crate::walks::{Walk, WalkArena, WalkId, WalkMut, WalkRef};
+
+/// FNV-1a digest of a canonical loss stream — the compact fingerprint
+/// the shard-invariance tests, `benches/perf_learn.rs` and CI's learn
+/// smoke compare. Folds every `(t, walk id, loss bits)` triple, so two
+/// digests agree iff the streams are bit-identical and equally ordered.
+pub fn loss_digest(losses: &[(u64, u64, f32)]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |x: u64| {
+        for byte in x.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for &(t, walk, loss) in losses {
+        mix(t);
+        mix(walk);
+        mix(loss.to_bits() as u64);
+    }
+    h
+}
+
+/// A queued visit result: computed in the parallel phase, applied at the
+/// barrier in dense order.
+struct VisitDelta {
+    /// Dense position of the visiting walk — the canonical merge key.
+    dense: u32,
+    walk: u64,
+    node: u32,
+    /// Payload (model) index the result belongs to.
+    idx: usize,
+    result: anyhow::Result<(Vec<f32>, f32)>,
+}
+
+/// Per-shard replica: the node-range's learning streams plus this step's
+/// delta queue. Everything here is shard-local; the shared model store
+/// lives in the [`ShardedTrainer`] and is read-only during phases.
+pub struct TrainerShard {
+    /// One learning stream per owned node (indexed by the engine's
+    /// shard-local node index), derived per *node id* — the same stream
+    /// regardless of how many shards the run uses.
+    node_rngs: Vec<Rng>,
+    deltas: Vec<VisitDelta>,
+}
+
+/// The sharded RW-SGD trainer. See the module docs for the data flow;
+/// drive it with [`ShardedEngine::run_to_with`] or the
+/// [`train_sharded`] entry point.
+///
+/// [`ShardedEngine::run_to_with`]: crate::sim::sharded::ShardedEngine::run_to_with
+pub struct ShardedTrainer<'a, O: TrainOp> {
+    op: &'a O,
+    corpus: Arc<ShardedCorpus>,
+    /// Root of the per-node learning streams (`derive(LEARN, node)`).
+    learn_root: Rng,
+    /// Average all live models every this many steps (0 = never).
+    merge_period: u64,
+    /// Model store: payload index → parameter vector.
+    params: Vec<Option<Vec<f32>>>,
+    /// (t, walk id, loss) per executed step, in canonical order.
+    pub losses: Vec<(u64, u64, f32)>,
+    /// Total SGD steps executed.
+    pub steps: usize,
+    /// Parameter-merge rounds performed at the barrier.
+    pub merge_rounds: usize,
+}
+
+impl<'a, O: TrainOp> ShardedTrainer<'a, O> {
+    pub fn new(op: &'a O, corpus: Arc<ShardedCorpus>, seed: u64) -> Self {
+        ShardedTrainer {
+            op,
+            corpus,
+            learn_root: Rng::new(seed),
+            merge_period: 0,
+            params: Vec::new(),
+            losses: Vec::new(),
+            steps: 0,
+            merge_rounds: 0,
+        }
+    }
+
+    /// Enable the periodic barrier parameter merge (`every >= 1` steps).
+    pub fn with_merge_period(mut self, every: u64) -> Self {
+        self.merge_period = every;
+        self
+    }
+
+    /// Allocate a payload slot holding `init` parameters.
+    pub fn alloc(&mut self, init: Vec<f32>) -> usize {
+        self.params.push(Some(init));
+        self.params.len() - 1
+    }
+
+    /// Read a payload's parameters.
+    pub fn get(&self, idx: usize) -> Option<&Vec<f32>> {
+        self.params.get(idx).and_then(|p| p.as_ref())
+    }
+
+    /// Digest of the canonical loss stream ([`loss_digest`]).
+    pub fn digest(&self) -> u64 {
+        loss_digest(&self.losses)
+    }
+}
+
+impl<O: TrainOp> ShardHook for ShardedTrainer<'_, O> {
+    type Replica = TrainerShard;
+
+    fn replicas(
+        &mut self,
+        shards: usize,
+        nodes_per_shard: usize,
+        n_nodes: usize,
+    ) -> Vec<TrainerShard> {
+        (0..shards)
+            .map(|k| {
+                let lo = (k * nodes_per_shard).min(n_nodes);
+                let hi = ((k + 1) * nodes_per_shard).min(n_nodes);
+                TrainerShard {
+                    node_rngs: (lo..hi)
+                        .map(|i| self.learn_root.derive(streams::LEARN, i as u64))
+                        .collect(),
+                    deltas: Vec::new(),
+                }
+            })
+            .collect()
+    }
+
+    fn on_shard_visit(&self, rep: &mut TrainerShard, _t: u64, visit: &ShardVisit) {
+        let Some(idx) = visit.payload else { return };
+        let Some(p) = self.params.get(idx).and_then(|p| p.as_ref()) else { return };
+        let tokens = self.corpus.sample_batch(
+            visit.node as usize,
+            self.op.batch(),
+            self.op.seq(),
+            &mut rep.node_rngs[visit.local as usize],
+        );
+        rep.deltas.push(VisitDelta {
+            dense: visit.dense,
+            walk: visit.walk.0,
+            node: visit.node,
+            idx,
+            result: self.op.step(p, &tokens),
+        });
+    }
+
+    fn merge(&mut self, t: u64, replicas: &mut [TrainerShard]) -> anyhow::Result<()> {
+        let total: usize = replicas.iter().map(|r| r.deltas.len()).sum();
+        if total == 0 {
+            return Ok(());
+        }
+        let mut merged = Vec::with_capacity(total);
+        for r in replicas.iter_mut() {
+            merged.append(&mut r.deltas);
+        }
+        // Dense indices are unique within a step (each walk visits one
+        // node once), so this total order is exactly the shards = 1
+        // processing order.
+        merged.sort_unstable_by_key(|d| d.dense);
+        for d in merged {
+            let (new_p, loss) = d.result.map_err(|e| {
+                e.context(format!(
+                    "train step failed at t={t} node={} walk={}",
+                    d.node,
+                    WalkId(d.walk)
+                ))
+            })?;
+            self.params[d.idx] = Some(new_p);
+            self.losses.push((t, d.walk, loss));
+            self.steps += 1;
+        }
+        Ok(())
+    }
+
+    fn on_fork(&mut self, _t: u64, parent: WalkRef, child: WalkMut<'_>) {
+        // The child inherits a copy of the parent's *post-visit* model
+        // (merge ran first) — the walk-payload handoff the paper's
+        // resilience story depends on.
+        if let Some(pidx) = parent.payload {
+            if let Some(p) = self.params[pidx].clone() {
+                self.params.push(Some(p));
+                *child.payload = Some(self.params.len() - 1);
+            }
+        }
+    }
+
+    fn on_death(&mut self, _t: u64, walk: &Walk) {
+        if let Some(idx) = walk.payload {
+            // The paper's "complete loss of information held by the RW".
+            self.params[idx] = None;
+        }
+    }
+
+    fn end_step(&mut self, t: u64, arena: &WalkArena) -> anyhow::Result<()> {
+        if self.merge_period == 0 || t % self.merge_period != 0 {
+            return Ok(());
+        }
+        // Average every live model, iterating walks in dense (creation)
+        // order — the fixed summation order that keeps the result
+        // bit-identical at every shard count.
+        let mut idxs = Vec::new();
+        for i in 0..arena.dense_len() {
+            if let Some(idx) = arena.payload_at(i) {
+                if self.params[idx].is_some() {
+                    idxs.push(idx);
+                }
+            }
+        }
+        if idxs.len() < 2 {
+            return Ok(());
+        }
+        let plen = self.op.param_count();
+        let mut acc = vec![0f32; plen];
+        for &idx in &idxs {
+            let p = self.params[idx].as_ref().expect("filtered to Some above");
+            anyhow::ensure!(
+                p.len() == plen,
+                "model {idx} has {} params, op expects {plen}",
+                p.len()
+            );
+            for (a, &x) in acc.iter_mut().zip(p) {
+                *a += x;
+            }
+        }
+        let inv = 1.0 / idxs.len() as f32;
+        for a in &mut acc {
+            *a *= inv;
+        }
+        // Write the average in place: every target is an already-sized
+        // buffer (ensured above), so no per-model reallocation.
+        for &idx in &idxs {
+            self.params[idx].as_mut().expect("filtered to Some above").copy_from_slice(&acc);
+        }
+        self.merge_rounds += 1;
+        Ok(())
+    }
+}
+
+/// Options for [`train_sharded`]. `workers` is the engine's actual
+/// thread count — already planned through
+/// [`CoreBudget`](crate::sim::CoreBudget) by budgeted callers
+/// ([`TrainingRun::execute_budgeted`](crate::learning::TrainingRun::execute_budgeted))
+/// — and, like everywhere in stream mode, cannot affect any result bit.
+#[derive(Debug, Clone)]
+pub struct ShardedTrainOptions {
+    pub workers: usize,
+    pub horizon: u64,
+    pub seed: u64,
+    /// Barrier parameter-merge period (0 = never).
+    pub merge_period: u64,
+}
+
+/// End-to-end sharded training run: builds the scenario's stream-mode
+/// engine with `opts.workers` threads, seeds one model per initial walk,
+/// runs to the horizon through the hook protocol and summarizes.
+pub fn train_sharded<O: TrainOp>(
+    scenario: &Scenario,
+    run: usize,
+    op: &O,
+    corpus: Arc<ShardedCorpus>,
+    opts: &ShardedTrainOptions,
+) -> anyhow::Result<TrainingSummary> {
+    // Validate against the spec'd node count before paying for the
+    // graph build — at learn_100k scale that build is seconds of work a
+    // misconfigured corpus should not waste.
+    crate::learning::ops::validate_corpus(op, &corpus, scenario.graph.nodes())?;
+    let mut engine = scenario.sharded_engine(run, opts.workers)?;
+    let mut trainer =
+        ShardedTrainer::new(op, corpus, opts.seed).with_merge_period(opts.merge_period);
+    let init = init_params(op, opts.seed);
+    for payload in engine.payloads_mut() {
+        *payload = Some(trainer.alloc(init.clone()));
+    }
+    engine.run_to_with(opts.horizon, &mut trainer)?;
+    Ok(TrainingSummary::from_parts(
+        engine.trace().clone(),
+        std::mem::take(&mut trainer.losses),
+        trainer.steps,
+        trainer.merge_rounds,
+        engine.alive() as usize,
+        crate::walks::lineage::lineage_summary(&engine.snapshot()),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learning::presets;
+
+    #[test]
+    fn trainer_learns_on_the_tiny_preset() {
+        let spec = presets::learn_tiny();
+        let op = spec.op();
+        let corpus = Arc::new(spec.corpus());
+        let s = train_sharded(
+            &spec.scenario,
+            0,
+            &op,
+            corpus,
+            &ShardedTrainOptions {
+                workers: 2,
+                horizon: spec.scenario.horizon,
+                seed: 7,
+                merge_period: 0,
+            },
+        )
+        .unwrap();
+        assert!(s.steps > 200, "too few SGD steps: {}", s.steps);
+        assert!(s.survivors >= 1);
+        assert!(
+            s.last_loss_mean < s.first_loss,
+            "no learning progress: {} -> {}",
+            s.first_loss,
+            s.last_loss_mean
+        );
+        assert!(s.lineage.contains("living walks"), "{}", s.lineage);
+    }
+
+    #[test]
+    fn periodic_merge_equalizes_live_models() {
+        // With merge_period = 1 the barrier averages after every step, so
+        // at the end every live model is bit-identical.
+        let spec = presets::learn_tiny();
+        let op = spec.op();
+        let corpus = Arc::new(spec.corpus());
+        let mut engine = spec.scenario.sharded_engine(0, 3).unwrap();
+        let mut trainer = ShardedTrainer::new(&op, corpus, 5).with_merge_period(1);
+        let init = init_params(&op, 5);
+        for payload in engine.payloads_mut() {
+            *payload = Some(trainer.alloc(init.clone()));
+        }
+        engine.run_to_with(spec.scenario.horizon, &mut trainer).unwrap();
+        assert!(trainer.merge_rounds > 0, "merge never fired");
+        let snap = engine.snapshot();
+        let live: Vec<&Vec<f32>> = snap
+            .iter()
+            .filter(|w| w.alive)
+            .filter_map(|w| w.payload.and_then(|i| trainer.get(i)))
+            .collect();
+        assert!(live.len() >= 2, "need at least two live models to check the merge");
+        for p in &live[1..] {
+            assert!(
+                live[0].iter().zip(p.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "live models diverged despite a per-step parameter merge"
+            );
+        }
+    }
+
+    #[test]
+    fn digest_discriminates_and_matches_equal_streams() {
+        let a = vec![(1u64, 0u64, 0.5f32), (2, 1, 0.25)];
+        let mut b = a.clone();
+        assert_eq!(loss_digest(&a), loss_digest(&b));
+        b[1].2 = f32::from_bits(b[1].2.to_bits() + 1);
+        assert_ne!(loss_digest(&a), loss_digest(&b), "one-ulp loss change must change the digest");
+        let swapped = vec![a[1], a[0]];
+        assert_ne!(loss_digest(&a), loss_digest(&swapped), "order must matter");
+    }
+}

@@ -16,13 +16,14 @@ use std::time::Duration;
 use decafork::cli::Args;
 use decafork::control::{Decafork, DecaforkPlus, MissingPerson, NoControl};
 use decafork::coordinator::ActorRuntime;
-use decafork::failures::Burst;
 use decafork::graph::generators;
-use decafork::learning::{ShardedCorpus, TrainingRun};
+use decafork::learning::{
+    presets as learn_presets, LearnSpec, PjrtOp, TrainOp, TrainOptions, TrainingRun,
+};
 use decafork::report::{ascii_plot, Table};
 use decafork::rng::Rng;
 use decafork::runtime::{default_artifacts_dir, Runtime, TrainStep};
-use decafork::scenario::parse;
+use decafork::scenario::{parse, ControlSpec, FailureSpec, GraphSpec, Scenario};
 use decafork::sim::engine::SimParams;
 use decafork::sim::run_many_with_budget;
 use decafork::stats::irwin_hall::{design_epsilon, design_epsilon2};
@@ -42,8 +43,16 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
                          default DECAFORK_CORES or detected parallelism)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
            --shards 1 --cores N
-  train    --n 64 --d 8 --z0 4 --horizon 400 --burst 200:2 --eps 2.0
-           --artifacts artifacts
+  train    --preset learn_tiny|learn_10k|learn_100k  (or --n 64 --d 8
+           --z0 4 --horizon 400 --burst 200:2 --eps 2.0 --vocab 32
+           --batch 8 --seq 16 --lr 0.1 --tokens 4096)
+           --local      (pure-Rust bigram operator; no artifacts needed)
+           --artifacts artifacts   (default: PJRT executable via
+                                    `make artifacts`)
+           --shards N   (flag present: sharded trainer on the stream-mode
+                         engine; results invariant in N)
+           --cores M    --merge-every K   --merge (gossip-on-meet,
+                         shared-stream path only)
   actors   --n 32 --d 4 --z0 6 --pf 0.002 --hops 200000 --eps 2.0
   theory   --z0 10 --d 5 --eps 2.0 --n 100
   design   --z0 10 --delta 1e-4
@@ -126,54 +135,141 @@ fn cmd_figure(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
-    let artifacts = std::path::PathBuf::from(
-        args.get_str("artifacts", &default_artifacts_dir().to_string_lossy()),
+    // Workload: a named preset (`learning::presets`) or the historical
+    // flag-built scenario.
+    let mut spec = match args.flags.get("preset") {
+        Some(name) => learn_presets::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown preset '{name}' (try learn_tiny, learn_10k, learn_100k)")
+        })?,
+        None => {
+            let bursts = parse::bursts(&args.get_str("burst", "200:2"))?;
+            LearnSpec {
+                name: "custom",
+                scenario: Scenario {
+                    graph: GraphSpec::RandomRegular {
+                        n: args.get("n", 64usize)?,
+                        d: args.get("d", 8usize)?,
+                    },
+                    params: SimParams { z0: args.get("z0", 4u32)?, ..Default::default() },
+                    control: ControlSpec::Decafork { epsilon: args.get("eps", 2.0f64)? },
+                    failures: if bursts.is_empty() {
+                        FailureSpec::None
+                    } else {
+                        FailureSpec::Burst { events: bursts }
+                    },
+                    horizon: 400,
+                    runs: 1,
+                    seed: 7,
+                },
+                tokens_per_node: args.get("tokens", 4096usize)?,
+                vocab: args.get("vocab", 32usize)?,
+                batch: args.get("batch", 8usize)?,
+                seq: args.get("seq", 16usize)?,
+                lr: args.get("lr", 0.1f32)?,
+                merge_period: 0,
+            }
+        }
+    };
+    spec.scenario.horizon = args.get("horizon", spec.scenario.horizon)?;
+    spec.scenario.seed = args.get("seed", spec.scenario.seed)?;
+    let stream = args.flags.get("shards").is_some();
+    // Knobs that belong to the *other* path are a misconfiguration, not
+    // something to ignore silently: a user asking for consensus merging
+    // must not get a merge-free run that looks successful.
+    anyhow::ensure!(
+        stream || args.flags.get("merge-every").is_none(),
+        "--merge-every is a sharded-trainer knob; add --shards N (the preset's \
+         merge period only applies to sharded runs)"
     );
     anyhow::ensure!(
-        decafork::runtime::artifacts_present(&artifacts),
-        "no artifacts at {} — run `make artifacts` first",
-        artifacts.display()
+        !(stream && args.has("merge")),
+        "--merge (gossip-on-meet) is a shared-stream extension; drop --shards or --merge"
     );
-    let n = args.get("n", 64usize)?;
-    let d = args.get("d", 8usize)?;
-    let z0 = args.get("z0", 4u32)?;
-    let horizon = args.get("horizon", 400u64)?;
-    let seed = args.get("seed", 7u64)?;
-    let eps = args.get("eps", 2.0f64)?;
-    let bursts = parse::bursts(&args.get_str("burst", "200:2"))?;
+    // All train entry points route through the CoreBudget (ISSUE 5
+    // satellite): `--shards` is a request, the budget decides what is
+    // actually spawned — and stream-mode invariance makes the plan free.
+    let opts = TrainOptions {
+        stream,
+        shards: parse::shards(args)?,
+        budget: parse::cores(args)?,
+        merge_period: {
+            // Always run the validator (it rejects a valueless
+            // `--merge-every`); the preset default applies only to
+            // sharded runs, and only when the flag is genuinely absent.
+            let explicit = parse::merge_every(args)?;
+            if args.flags.contains_key("merge-every") {
+                explicit
+            } else if stream {
+                spec.merge_period
+            } else {
+                0
+            }
+        },
+        merge_on_meet: args.has("merge"),
+    };
 
-    let rt = Runtime::cpu()?;
-    let train = TrainStep::load(&rt, &artifacts)?;
-    println!(
-        "model: {} params, batch {}x{} tokens, lr {}",
-        train.param_count()?,
-        train.manifest.get_usize("batch")?,
-        train.manifest.get_usize("seq")? + 1,
-        train.manifest.get_f64("lr")?
-    );
-    let corpus = Arc::new(ShardedCorpus::markov(
-        n,
-        4096,
-        train.manifest.get_usize("vocab")?,
-        seed ^ 0xC0FFEE,
-    ));
-    let graph = Arc::new(generators::random_regular(n, d, &mut Rng::new(seed))?);
-    let mut engine = decafork::sim::engine::Engine::new(
-        graph,
-        SimParams { z0, ..Default::default() },
-        Decafork::new(eps),
-        Burst::new(bursts),
-        Rng::new(seed),
-    );
+    if args.has("local") {
+        // Pure-Rust bigram operator: no artifacts, no PJRT — the path CI
+        // and toolchain-only machines can always run.
+        let op = spec.op();
+        println!(
+            "operator: local bigram | {} params (vocab {}), batch {}x{}, lr {}",
+            op.param_count(),
+            spec.vocab,
+            op.batch(),
+            op.seq() + 1,
+            spec.lr
+        );
+        run_train(&spec, &op, &opts)
+    } else {
+        let artifacts = std::path::PathBuf::from(
+            args.get_str("artifacts", &default_artifacts_dir().to_string_lossy()),
+        );
+        anyhow::ensure!(
+            decafork::runtime::artifacts_present(&artifacts),
+            "no artifacts at {} — run `make artifacts` first (or pass --local \
+             for the pure-Rust operator)",
+            artifacts.display()
+        );
+        let rt = Runtime::cpu()?;
+        let train = TrainStep::load(&rt, &artifacts)?;
+        // The corpus must speak the compiled model's vocabulary.
+        spec.vocab = train.manifest.get_usize("vocab")?;
+        let op = PjrtOp::new(&train)?;
+        println!(
+            "operator: PJRT | {} params, batch {}x{} tokens, lr {}",
+            op.param_count(),
+            op.batch(),
+            op.seq() + 1,
+            train.manifest.get_f64("lr")?
+        );
+        run_train(&spec, &op, &opts)
+    }
+}
+
+/// Shared tail of `cmd_train`, generic over the operator.
+fn run_train<O: TrainOp>(spec: &LearnSpec, op: &O, opts: &TrainOptions) -> anyhow::Result<()> {
+    let corpus = Arc::new(spec.corpus());
+    if opts.stream {
+        println!(
+            "workload {}: {} | sharded trainer, {} workers (requested {}, budget {}), \
+             merge every {}",
+            spec.name,
+            spec.scenario.label(),
+            opts.planned_workers(),
+            opts.shards,
+            opts.budget.total(),
+            if opts.merge_period == 0 {
+                "never".into()
+            } else {
+                format!("{} steps", opts.merge_period)
+            },
+        );
+    } else {
+        println!("workload {}: {} | shared-stream trainer", spec.name, spec.scenario.label());
+    }
     let t0 = std::time::Instant::now();
-    let summary = TrainingRun::execute_opts(
-        &mut engine,
-        &train,
-        corpus,
-        horizon,
-        seed,
-        args.has("merge"),
-    )?;
+    let summary = TrainingRun::execute_budgeted(&spec.scenario, 0, op, corpus, opts)?;
     println!(
         "ran {} SGD steps across walks in {:.2?}; survivors: {}; merges: {}",
         summary.steps,
@@ -183,6 +279,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     println!("lineage: {}", summary.lineage);
     println!("loss: first {:.4} -> last-20-mean {:.4}", summary.first_loss, summary.last_loss_mean);
+    // The canonical loss-stream fingerprint CI's learn smoke diffs
+    // across shard counts (sharded runs are bit-identical at any worker
+    // count; shared-stream runs are their own family).
+    println!("loss_digest=0x{:016x}", summary.loss_digest());
     let curve: Vec<f64> = summary
         .losses
         .chunks(8.max(summary.losses.len() / 64))

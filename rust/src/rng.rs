@@ -30,6 +30,11 @@ pub mod streams {
     pub const FAIL: u64 = 0x6661696c; // "fail"
     /// Engine-construction draws (random start placement).
     pub const INIT: u64 = 0x696e6974; // "init"
+    /// Per-node learning streams: `derive(LEARN, node)` for batch
+    /// sampling in the sharded trainer. A node's batches are a pure
+    /// function of its own stream, so visit processing can be sharded
+    /// without the sample sequence depending on call interleaving.
+    pub const LEARN: u64 = 0x6c6561726e; // "learn"
 }
 
 /// SplitMix64 step — used for seeding and stream splitting.

@@ -102,6 +102,11 @@ pub use crate::cli::positive_count;
 /// bit-identical at any worker count but is a different sample family
 /// than shard count 1's shared-stream engine.
 pub fn shards(args: &Args) -> anyhow::Result<usize> {
+    // A valueless `--shards` (last arg, or followed by another flag)
+    // parses as a switch; treating it as "default 1" would silently run
+    // the shared-stream engine — a different trace family — so it is an
+    // error, like every other invalid value for this knob.
+    anyhow::ensure!(!args.has("shards"), "--shards needs a value (e.g. --shards 4)");
     match args.flags.get("shards") {
         None => Ok(1),
         Some(v) => positive_count("--shards", v),
@@ -124,9 +129,23 @@ pub fn shards_from_env() -> anyhow::Result<usize> {
 /// ([`CoreBudget::plan`](crate::sim::CoreBudget::plan)). Falls back to
 /// `DECAFORK_CORES`, then to detected parallelism.
 pub fn cores(args: &Args) -> anyhow::Result<crate::sim::CoreBudget> {
+    anyhow::ensure!(!args.has("cores"), "--cores needs a value (e.g. --cores 8)");
     match args.flags.get("cores") {
         Some(v) => crate::sim::CoreBudget::new(positive_count("--cores", v)?),
         None => crate::sim::CoreBudget::from_env(),
+    }
+}
+
+/// `--merge-every K`: the sharded trainer's barrier parameter-merge
+/// period. Absent = 0 = never merge; a present value goes through the
+/// same [`positive_count`] validation as every shards/cores knob (`0`
+/// and non-numeric error with the knob named — "merge every 0 steps" is
+/// a typo, not a request).
+pub fn merge_every(args: &Args) -> anyhow::Result<u64> {
+    anyhow::ensure!(!args.has("merge-every"), "--merge-every needs a value (in steps)");
+    match args.flags.get("merge-every") {
+        None => Ok(0),
+        Some(v) => Ok(positive_count("--merge-every", v)? as u64),
     }
 }
 
@@ -217,6 +236,36 @@ mod tests {
         let err = shards(&args("simulate --shards nope")).unwrap_err().to_string();
         assert!(err.contains("--shards"), "{err}");
         assert_eq!(shards(&args("simulate")).unwrap(), 1);
+    }
+
+    #[test]
+    fn merge_every_validates_like_the_other_knobs() {
+        assert_eq!(merge_every(&args("train")).unwrap(), 0, "absent = merging off");
+        assert_eq!(merge_every(&args("train --merge-every 50")).unwrap(), 50);
+        for bad in ["0", "abc", "-2"] {
+            let err = merge_every(&args(&format!("train --merge-every {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--merge-every"), "knob not named: {err}");
+        }
+    }
+
+    #[test]
+    fn valueless_knobs_error_instead_of_falling_back() {
+        // `--shards` parsed as a trailing switch must not silently mean
+        // "shards = 1" (that selects a different trace family); same for
+        // the other count knobs.
+        for (parse_err, cmd, knob) in [
+            (shards(&args("simulate --shards")).unwrap_err().to_string(), "simulate", "--shards"),
+            (
+                merge_every(&args("train --merge-every --local")).unwrap_err().to_string(),
+                "train",
+                "--merge-every",
+            ),
+            (cores(&args("simulate --cores")).unwrap_err().to_string(), "simulate", "--cores"),
+        ] {
+            assert!(parse_err.contains(knob), "{cmd}: knob not named: {parse_err}");
+        }
     }
 
     #[test]

@@ -237,6 +237,86 @@ pub fn scale_1m() -> Scenario {
     }
 }
 
+/// Simulation side of the `learn_tiny` training workload
+/// (`learning::presets` adds the corpus/operator knobs): 64 nodes,
+/// 8 walks, one burst plus a light probabilistic drip so the trainer's
+/// fork-handoff and death paths both fire within a unit-test budget.
+pub fn learn_tiny_scenario() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 64, d: 8 },
+        params: SimParams {
+            z0: 8,
+            control_start: Some(100),
+            max_walks: 32,
+            ..SimParams::default()
+        },
+        control: ControlSpec::Decafork { epsilon: 2.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(150, 3)] },
+            FailureSpec::Probabilistic { p_f: 0.001 },
+        ]),
+        horizon: 400,
+        runs: 1,
+        seed: 0x1EA0,
+    }
+}
+
+/// Simulation side of the `learn_10k` training workload — the
+/// `benches/perf_learn.rs` scale: 10k nodes, 512 model-carrying walks,
+/// DECAFORK+ on the analytic-geometric family (E[R] = n = 10k steps, so
+/// as at `scale_100k` a warm empirical CDF is unreachable within any
+/// training horizon and the analytic form is the honest choice).
+/// Thresholds follow the scale-preset design rule: ε = Z0/4 lets the
+/// cold start fork mildly then go quiet; ε₂ high enough that
+/// termination stays rare. One 10% burst mid-run exercises recovery
+/// forking — i.e. model handoff — under load.
+pub fn learn_10k() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 10_000, d: 8 },
+        params: SimParams {
+            z0: 512,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(300),
+            max_walks: 1024,
+            ..SimParams::default()
+        },
+        control: ControlSpec::DecaforkPlus { epsilon: 128.0, epsilon2: 400.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(500, 51)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 1000,
+        runs: 1,
+        seed: 0x1EA1,
+    }
+}
+
+/// Simulation side of the `learn_100k` training workload: the
+/// `scale_100k` node count with a 4096-walk model-carrying population
+/// (16 KB of parameters per walk at the bigram operator's vocab — the
+/// walk density is capped by model memory, not by the index, at this
+/// scale). Same threshold design as `learn_10k`.
+pub fn learn_100k() -> Scenario {
+    Scenario {
+        graph: GraphSpec::RandomRegular { n: 100_000, d: 8 },
+        params: SimParams {
+            z0: 4096,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(200),
+            max_walks: 8192,
+            ..SimParams::default()
+        },
+        control: ControlSpec::DecaforkPlus { epsilon: 1024.0, epsilon2: 3000.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(400, 410)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 600,
+        runs: 1,
+        seed: 0x1EA2,
+    }
+}
+
 /// The four seeded scenarios whose `Trace::z` vectors are the
 /// determinism lock (`tests/golden_traces.rs`): the arena engine must
 /// reproduce the frozen reference engine on all of them, byte for byte.
@@ -398,6 +478,26 @@ mod tests {
         r.rescale_to(200);
         assert_eq!(r.horizon, 200);
         assert_eq!(r.params.control_start, Some(40));
+    }
+
+    #[test]
+    fn learn_presets_are_wired_for_stream_mode() {
+        // Shape lock for the training workloads (graph builds for the
+        // 10k/100k sizes are bench-time costs, not unit-test ones; the
+        // tiny one builds for real).
+        assert!(learn_tiny_scenario().sharded_engine(0, 2).is_ok());
+        let s = learn_10k();
+        assert_eq!(s.graph, GraphSpec::RandomRegular { n: 10_000, d: 8 });
+        assert_eq!(s.params.z0, 512);
+        assert!(s.params.control_start.is_some(), "auto warm-up would exceed the horizon");
+        let b = learn_100k();
+        assert_eq!(b.graph, GraphSpec::RandomRegular { n: 100_000, d: 8 });
+        assert!(b.params.control_start.is_some());
+        // Both must survive the benches' DECAFORK_PERF_STEPS rescale.
+        let mut r = learn_10k();
+        r.rescale_to(200);
+        assert_eq!(r.horizon, 200);
+        assert_eq!(r.params.control_start, Some(60));
     }
 
     #[test]

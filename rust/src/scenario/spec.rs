@@ -46,6 +46,18 @@ impl GraphSpec {
             GraphSpec::Torus { w, h } => format!("torus({w}x{h})"),
         }
     }
+
+    /// Node count of the graph this spec builds (without building it).
+    pub fn nodes(&self) -> usize {
+        match *self {
+            GraphSpec::RandomRegular { n, .. }
+            | GraphSpec::ErdosRenyi { n, .. }
+            | GraphSpec::Complete { n }
+            | GraphSpec::PowerLaw { n, .. }
+            | GraphSpec::Ring { n } => n,
+            GraphSpec::Torus { w, h } => w * h,
+        }
+    }
 }
 
 /// Which control algorithm to run.

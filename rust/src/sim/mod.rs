@@ -17,6 +17,7 @@ pub mod engine;
 pub mod metrics;
 pub mod reference;
 pub mod runner;
+pub mod shard_hook;
 pub mod sharded;
 
 pub use config::{ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
@@ -24,4 +25,5 @@ pub use engine::{Engine, SimParams, StartPlacement, VisitHook};
 pub use metrics::{AggregateTrace, Event, EventKind, Trace};
 pub use reference::ReferenceEngine;
 pub use runner::{run_many, run_many_with_budget, CoreBudget, RunPlan};
+pub use shard_hook::{NoShardHook, ShardHook, ShardVisit};
 pub use sharded::{DispatchMode, ShardedEngine};

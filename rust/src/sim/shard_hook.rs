@@ -1,0 +1,316 @@
+//! The **per-shard hook protocol** for the stream-mode
+//! [`ShardedEngine`](crate::sim::sharded::ShardedEngine): how application
+//! layers (the learning stack) observe walk lifecycle events when the
+//! simulation runs across worker threads — without ever touching the
+//! trace or the schedule invariance the engine promises.
+//!
+//! ## Why the shared-stream [`VisitHook`] cannot ride the sharded engine
+//!
+//! [`VisitHook`](crate::sim::engine::VisitHook) hands every visit a
+//! `&mut` view of one central hook object, which only works because the
+//! shared-stream engine processes visits one at a time. The sharded
+//! engine's control phase runs node ranges on parallel workers; a single
+//! `&mut` hook would either serialize the phase (defeating the sharding)
+//! or data-race. This module splits the hook into the same shape the
+//! engine itself uses (DESIGN.md §Sharded learning):
+//!
+//! * **replicas** — per-shard worker state ([`ShardHook::Replica`]), one
+//!   per shard, owned mutably by that shard's task for the duration of a
+//!   parallel phase. A replica sees *its* node range's visits, in dense
+//!   (canonical) order within the shard, and records side effects as
+//!   **deltas** local to itself;
+//! * **the hook** — the shared application state, visible read-only
+//!   (`&self`) to every replica during parallel phases and mutably to the
+//!   coordinator at the barriers.
+//!
+//! ## The barrier merge
+//!
+//! At the end-of-step barrier the coordinator calls
+//! [`merge`](ShardHook::merge) with every replica: the hook combines the
+//! per-replica deltas **sorted by the deciding walk's dense index** —
+//! exactly how the engine already merges fork/termination decisions — so
+//! the hook's observable state (e.g. a loss stream) is bit-identical at
+//! every shard count. `merge` runs *before* the step's fork decisions are
+//! applied, so [`on_fork`](ShardHook::on_fork) always sees parent state
+//! that includes the parent's same-step visit (mirroring the sequential
+//! engine, where a walk's visit work precedes its fork decision).
+//!
+//! Coordinator-side callbacks ([`on_fork`](ShardHook::on_fork),
+//! [`on_death`](ShardHook::on_death), [`end_step`](ShardHook::end_step))
+//! take `&mut self` and fire in canonical order by construction — the
+//! engine only ever kills and forks at barriers, in dense order.
+//!
+//! ## Contract (what keeps shard-count invariance intact)
+//!
+//! 1. A replica must derive everything it computes from shard-local
+//!    state, the read-only hook, and per-owner randomness (per-node /
+//!    per-walk streams) — never from a stream shared across shards.
+//! 2. Per-visit deltas must be merged in dense-index order at the
+//!    barrier; the hook must not act on them earlier.
+//! 3. Hooks may mutate **payload slots only** (via
+//!    [`on_fork`](ShardHook::on_fork)'s [`WalkMut`]); the simulation
+//!    state — RNG streams, node tables, the trace — is out of reach by
+//!    construction, which is why attaching a hook can never change the
+//!    z-trace, the event log, or a single θ̂ bit (locked by tests here
+//!    and in `tests/learning_sharded.rs`).
+
+use crate::walks::{Walk, WalkArena, WalkId, WalkMut, WalkRef};
+
+/// A visit as seen by a shard replica during the control phase: the
+/// arriving walk's identity plus its dense position (the canonical merge
+/// key) and payload index. By-value and `Copy` — replicas own nothing of
+/// the arena.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardVisit {
+    /// Dense (creation-order) position of the walk this step — the
+    /// canonical ordering key every barrier merge sorts by.
+    pub dense: u32,
+    /// The visited node (owned by the replica's shard).
+    pub node: u32,
+    /// Index of `node` within the replica's shard range (`node` minus
+    /// the shard's first node id) — computed by the engine so replicas
+    /// indexing per-node state never re-derive the range formula.
+    pub local: u32,
+    pub walk: WalkId,
+    /// Lineage slot label of the visiting walk.
+    pub slot: u16,
+    /// The walk's application payload index, if any.
+    pub payload: Option<usize>,
+}
+
+/// Application hook for the sharded engine. See the module docs for the
+/// replica/merge model; all coordinator-side methods default to no-ops so
+/// implementors opt in. `Self::ACTIVE = false` (the [`NoShardHook`]
+/// marker) compiles every hook call site out of the step entirely — the
+/// plain `step()` path is byte-for-byte the pre-hook engine.
+pub trait ShardHook {
+    /// Per-shard worker state. Owned mutably by one shard's task during
+    /// parallel phases; handed back to the hook at the barrier.
+    type Replica: Send;
+
+    /// Whether this hook does anything at all. The engine's hot loop
+    /// tests this `const` so the no-hook path monomorphizes to the exact
+    /// pre-hook code (no payload copies into arrival buckets, no calls).
+    const ACTIVE: bool = true;
+
+    /// Build one replica per shard. `nodes_per_shard` is the engine's
+    /// static contiguous node-range size: shard `k` owns nodes
+    /// `[k·nodes_per_shard, min((k+1)·nodes_per_shard, n_nodes))`.
+    /// Called once per run by
+    /// [`run_to_with`](crate::sim::sharded::ShardedEngine::run_to_with);
+    /// replica state persists across steps.
+    fn replicas(
+        &mut self,
+        shards: usize,
+        nodes_per_shard: usize,
+        n_nodes: usize,
+    ) -> Vec<Self::Replica>;
+
+    /// **Parallel.** A walk arrived at a node owned by `replica`'s shard
+    /// (after the node recorded the visit, before control runs —
+    /// mirroring `VisitHook::on_visit`). Visits arrive in dense order
+    /// *within the shard*; cross-shard order is undefined, which is why
+    /// observable effects must be deferred to [`merge`](Self::merge).
+    fn on_shard_visit(&self, replica: &mut Self::Replica, t: u64, visit: &ShardVisit);
+
+    /// **Coordinator, end-of-step barrier.** Combine the step's replica
+    /// deltas in canonical (dense-index) order. Runs before this step's
+    /// fork spawns and control kills are applied.
+    fn merge(&mut self, _t: u64, _replicas: &mut [Self::Replica]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// **Coordinator.** `child` was just forked from `parent` at the
+    /// barrier (canonical order); duplicate any payload. The payload slot
+    /// is the only mutable simulation state a hook can reach.
+    fn on_fork(&mut self, _t: u64, _parent: WalkRef, _child: WalkMut<'_>) {}
+
+    /// **Coordinator.** A walk died (pre-step failure, hop loss, or
+    /// control termination — all applied at barriers in dense order).
+    fn on_death(&mut self, _t: u64, _walk: &Walk) {}
+
+    /// **Coordinator.** The step is fully applied and the arena
+    /// compacted (every dense entry is a live walk, in creation order).
+    /// The hook for cross-walk work — e.g. the trainer's periodic
+    /// parameter merge — whose float arithmetic must iterate in this
+    /// canonical order to stay bit-identical across shard counts.
+    fn end_step(&mut self, _t: u64, _arena: &WalkArena) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// The inert hook: `ACTIVE = false` compiles every hook touchpoint out
+/// of [`ShardedEngine::step`](crate::sim::sharded::ShardedEngine::step).
+pub struct NoShardHook;
+
+impl ShardHook for NoShardHook {
+    type Replica = ();
+    const ACTIVE: bool = false;
+
+    fn replicas(&mut self, shards: usize, _nodes_per_shard: usize, _n_nodes: usize) -> Vec<()> {
+        // A Vec of zero-sized units never allocates.
+        (0..shards).map(|_| ()).collect()
+    }
+
+    fn on_shard_visit(&self, _replica: &mut (), _t: u64, _visit: &ShardVisit) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::Decafork;
+    use crate::failures::Burst;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+    use crate::sim::engine::SimParams;
+    use crate::sim::metrics::{EventKind, Trace};
+    use crate::sim::sharded::ShardedEngine;
+    use std::sync::Arc;
+
+    /// A hook that mirrors the learning layer's bookkeeping shape with
+    /// plain integers: every visit's (t, dense, node, walk) is a delta,
+    /// merged canonically; forks clone a per-walk counter payload;
+    /// deaths free it. Used to lock (a) shard-count invariance of the
+    /// merged stream and (b) zero trace perturbation.
+    struct Recorder {
+        payloads: Vec<Option<u64>>,
+        merged: Vec<(u64, u32, u32, u64)>,
+        forks: usize,
+        deaths: usize,
+        end_steps: u64,
+    }
+
+    struct RecorderShard {
+        base: u32,
+        deltas: Vec<(u64, u32, u32, u64)>,
+    }
+
+    impl Recorder {
+        fn new() -> Self {
+            Recorder { payloads: Vec::new(), merged: Vec::new(), forks: 0, deaths: 0, end_steps: 0 }
+        }
+    }
+
+    impl ShardHook for Recorder {
+        type Replica = RecorderShard;
+
+        fn replicas(&mut self, shards: usize, nps: usize, n: usize) -> Vec<RecorderShard> {
+            (0..shards)
+                .map(|k| RecorderShard { base: ((k * nps).min(n)) as u32, deltas: Vec::new() })
+                .collect()
+        }
+
+        fn on_shard_visit(&self, rep: &mut RecorderShard, t: u64, v: &ShardVisit) {
+            assert!(v.node >= rep.base, "visit routed to the wrong shard");
+            assert_eq!(v.node - rep.base, v.local, "engine-provided local index disagrees");
+            rep.deltas.push((t, v.dense, v.node, v.walk.0));
+        }
+
+        fn merge(&mut self, _t: u64, replicas: &mut [RecorderShard]) -> anyhow::Result<()> {
+            let mut all: Vec<_> = Vec::new();
+            for r in replicas.iter_mut() {
+                all.append(&mut r.deltas);
+            }
+            all.sort_unstable_by_key(|d| d.1);
+            self.merged.extend(all);
+            Ok(())
+        }
+
+        fn on_fork(&mut self, _t: u64, parent: WalkRef, child: WalkMut<'_>) {
+            self.forks += 1;
+            if let Some(p) = parent.payload.and_then(|i| self.payloads[i]) {
+                self.payloads.push(Some(p + 1));
+                *child.payload = Some(self.payloads.len() - 1);
+            }
+        }
+
+        fn on_death(&mut self, _t: u64, walk: &Walk) {
+            self.deaths += 1;
+            if let Some(i) = walk.payload {
+                self.payloads[i] = None;
+            }
+        }
+
+        fn end_step(&mut self, _t: u64, arena: &WalkArena) -> anyhow::Result<()> {
+            self.end_steps += 1;
+            // Post-compact: every dense entry must be live.
+            for i in 0..arena.dense_len() {
+                assert!(!arena.is_tombstoned(i));
+            }
+            Ok(())
+        }
+    }
+
+    fn engine(shards: usize) -> ShardedEngine {
+        let graph = Arc::new(generators::random_regular(40, 4, &mut Rng::new(7)).unwrap());
+        ShardedEngine::new(
+            graph,
+            SimParams { z0: 8, control_start: Some(60), max_walks: 64, ..Default::default() },
+            Decafork::new(2.0),
+            Burst::new(vec![(100, 3), (220, 2)]),
+            Rng::new(11),
+            shards,
+        )
+    }
+
+    fn run_recorded(shards: usize) -> (Trace, Recorder) {
+        let mut e = engine(shards);
+        let mut hook = Recorder::new();
+        // Seed a payload per initial walk (as the trainer does).
+        for (k, payload) in e.payloads_mut().enumerate() {
+            *payload = Some(k);
+        }
+        for _ in 0..8 {
+            hook.payloads.push(Some(0));
+        }
+        e.run_to_with(300, &mut hook).unwrap();
+        (e.into_trace(), hook)
+    }
+
+    #[test]
+    fn hook_does_not_perturb_the_trace() {
+        let mut plain = engine(2);
+        plain.run_to(300);
+        let (hooked, _) = run_recorded(2);
+        assert!(
+            plain.into_trace().bit_identical(&hooked),
+            "attaching a ShardHook changed the simulation trace"
+        );
+    }
+
+    #[test]
+    fn merged_visit_stream_is_shard_count_invariant() {
+        let (tr1, h1) = run_recorded(1);
+        for shards in [2usize, 3, 8] {
+            let (tr, h) = run_recorded(shards);
+            assert!(tr1.bit_identical(&tr), "trace diverged at {shards} shards");
+            assert_eq!(
+                h1.merged, h.merged,
+                "canonical merged visit stream diverged at {shards} shards"
+            );
+            assert_eq!((h1.forks, h1.deaths), (h.forks, h.deaths));
+        }
+        assert!(!h1.merged.is_empty(), "no visits recorded — the hook never ran");
+    }
+
+    #[test]
+    fn hook_sees_every_fork_and_death_and_step() {
+        let (tr, h) = run_recorded(4);
+        assert_eq!(h.forks, tr.count(EventKind::Fork));
+        assert_eq!(
+            h.deaths,
+            tr.count(EventKind::Failure) + tr.count(EventKind::ControlTermination)
+        );
+        assert_eq!(h.end_steps, tr.horizon());
+        // Payload lifecycle: every fork with a live parent payload minted
+        // a new slot (8 originals + one per fork).
+        assert_eq!(h.payloads.len(), 8 + h.forks);
+    }
+
+    #[test]
+    fn noop_hook_replicas_match_shards() {
+        let mut h = NoShardHook;
+        assert_eq!(h.replicas(5, 10, 40).len(), 5);
+        assert!(!NoShardHook::ACTIVE);
+    }
+}

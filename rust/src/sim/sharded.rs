@@ -73,8 +73,16 @@
 //! own pinned golden family (`tests/stream_golden.rs`) instead of the
 //! arena-vs-reference lock. Two semantic deltas, both deliberate:
 //! fork children are observed by the forking node at the merge barrier
-//! (after the step's arrivals) rather than mid-loop, and `VisitHook`s
-//! are not supported (the learning layer runs on the sequential engine).
+//! (after the step's arrivals) rather than mid-loop, and the
+//! shared-stream `VisitHook` is replaced by the per-shard
+//! [`ShardHook`] protocol (`sim::shard_hook`): each shard owns a hook
+//! replica that sees its node range's visits during the parallel control
+//! phase, and replica deltas merge at the end-of-step barrier in
+//! canonical dense-index order — exactly how fork decisions already
+//! merge — so hooked runs (RW-SGD via `learning::sharded`) stay
+//! bit-identical at every shard count. `step()` runs the inert
+//! [`NoShardHook`], whose `ACTIVE = false` const compiles every hook
+//! touchpoint out of the loop.
 //! Failure models must not mutate internal state in `on_hop`/`on_arrival`
 //! (none do; state transitions belong in `pre_step`, which runs once on
 //! the coordinator's master copy before workers clone it).
@@ -88,6 +96,7 @@ use crate::rng::{streams, Rng};
 use crate::runtime::pool::{self, Task, WorkerPool};
 use crate::sim::engine::{SimParams, StartPlacement};
 use crate::sim::metrics::{Event, EventKind, Trace};
+use crate::sim::shard_hook::{NoShardHook, ShardHook, ShardVisit};
 use crate::walks::{Lineage, NodeState, Walk, WalkArena, WalkId};
 
 /// How the per-phase shard tasks reach their threads.
@@ -109,6 +118,9 @@ pub enum DispatchMode {
 }
 
 /// One surviving walk's landing spot, queued for the control phase.
+/// Payload indices for hooked runs travel in a *side* buffer
+/// (`arrival_payloads`, filled only when `H::ACTIVE`), so the plain
+/// `step()` path keeps the pre-hook arrival layout and cache density.
 #[derive(Debug, Clone, Copy)]
 struct Arrival {
     /// Dense position in the arena (canonical order key).
@@ -175,6 +187,11 @@ pub struct ShardedEngine {
     // Per-shard scratch, reused across steps.
     hop_deaths: Vec<Vec<HopDeath>>,
     arrivals: Vec<Vec<Arrival>>,
+    /// Parallel to `arrivals`, populated only on hooked steps
+    /// (`H::ACTIVE`): the arriving walk's payload index for the hook's
+    /// visit view. Stays empty — zero writes, zero reads — on the plain
+    /// path.
+    arrival_payloads: Vec<Vec<Option<usize>>>,
     decisions: Vec<Vec<DecisionOut>>,
 }
 
@@ -264,6 +281,7 @@ impl ShardedEngine {
             dispatch,
             hop_deaths: (0..shards).map(|_| Vec::new()).collect(),
             arrivals: (0..shards).map(|_| Vec::new()).collect(),
+            arrival_payloads: (0..shards).map(|_| Vec::new()).collect(),
             decisions: (0..shards).map(|_| Vec::new()).collect(),
         }
     }
@@ -314,8 +332,42 @@ impl ShardedEngine {
         self.arena.snapshot()
     }
 
-    /// Advance one time step.
+    /// Mutable access to the live walks' payload slots, in creation
+    /// order — used by application layers to seed payloads before the
+    /// run (e.g. one model per initial walk). Mirrors
+    /// [`Engine::payloads_mut`](crate::sim::engine::Engine::payloads_mut).
+    pub fn payloads_mut(&mut self) -> impl Iterator<Item = &mut Option<usize>> {
+        self.arena.payloads_mut()
+    }
+
+    /// Advance one time step (no application hook — the inert
+    /// [`NoShardHook`] compiles every hook touchpoint out, so this is
+    /// byte-for-byte the pre-hook engine).
     pub fn step(&mut self) {
+        let mut hook = NoShardHook;
+        let mut replicas = hook.replicas(self.shards, self.nodes_per_shard, self.graph.n());
+        self.step_hooked(&mut hook, &mut replicas).expect("NoShardHook cannot fail");
+    }
+
+    /// Advance one time step with a [`ShardHook`]: per-shard replicas see
+    /// their node range's visits during the parallel control phase, and
+    /// the hook's coordinator-side callbacks (delta merge, fork payload
+    /// handoff, deaths, end-of-step) fire at the barriers in canonical
+    /// dense order. `replicas` must be the slice built by
+    /// [`ShardHook::replicas`] for this engine's shard count.
+    pub fn step_hooked<H: ShardHook + Sync>(
+        &mut self,
+        hook: &mut H,
+        replicas: &mut [H::Replica],
+    ) -> anyhow::Result<()> {
+        // A short replica slice would silently drop whole shards from
+        // the control phase (zip truncation) — reject it outright.
+        anyhow::ensure!(
+            replicas.len() == self.shards,
+            "step_hooked needs one replica per shard ({} replicas for {} shards)",
+            replicas.len(),
+            self.shards
+        );
         self.t += 1;
         let t = self.t;
 
@@ -326,7 +378,15 @@ impl ShardedEngine {
         for id in killed {
             if let Some(dense) = self.arena.resolve(id) {
                 let node = self.arena.position(dense);
-                kill_dense(&mut self.arena, &mut self.trace, dense, t, node, EventKind::Failure);
+                kill_dense(
+                    &mut self.arena,
+                    &mut self.trace,
+                    dense,
+                    t,
+                    node,
+                    EventKind::Failure,
+                    hook,
+                );
             }
         }
         self.arena.compact();
@@ -338,7 +398,7 @@ impl ShardedEngine {
         if len0 == 0 {
             self.trace.z.push(0);
             self.trace.extinct = true;
-            return;
+            return Ok(());
         }
         let chunk = len0.div_ceil(self.shards).max(1);
         {
@@ -372,6 +432,7 @@ impl ShardedEngine {
                     t,
                     hd.node,
                     EventKind::Failure,
+                    hook,
                 );
             }
         }
@@ -382,6 +443,11 @@ impl ShardedEngine {
         //    shard-locally on per-node streams.
         for bufs in &mut self.arrivals {
             bufs.clear();
+        }
+        if H::ACTIVE {
+            for bufs in &mut self.arrival_payloads {
+                bufs.clear();
+            }
         }
         for i in 0..len0 {
             if self.arena.is_tombstoned(i) {
@@ -395,31 +461,46 @@ impl ShardedEngine {
                 id: self.arena.id_at(i),
                 slot: self.arena.lineage_at(i).slot(),
             });
+            if H::ACTIVE {
+                self.arrival_payloads[shard].push(self.arena.payload_at(i));
+            }
         }
         {
             let control_start = self.control_start;
             let z0 = self.params.z0;
             let nps = self.nodes_per_shard;
+            // Shared (read-only) view of the hook for the parallel phase;
+            // replicas are the only hook state a worker may mutate.
+            let hook_ref: &H = &*hook;
             if self.shards == 1 {
                 control_chunk(
                     &mut self.states,
                     &mut self.node_rngs,
                     &mut self.controls[0],
                     &self.arrivals[0],
+                    &self.arrival_payloads[0],
                     0,
                     t,
                     control_start,
                     z0,
                     &mut self.decisions[0],
+                    hook_ref,
+                    &mut replicas[0],
                 );
             } else {
                 let mut ranges = Vec::with_capacity(self.shards);
                 let mut states_rest: &mut [NodeState] = &mut self.states;
                 let mut rngs_rest: &mut [Rng] = &mut self.node_rngs;
-                for (k, (control, (arr, out))) in self
+                for (k, ((control, ((arr, pay), out)), rep)) in self
                     .controls
                     .iter_mut()
-                    .zip(self.arrivals.iter().zip(self.decisions.iter_mut()))
+                    .zip(
+                        self.arrivals
+                            .iter()
+                            .zip(self.arrival_payloads.iter())
+                            .zip(self.decisions.iter_mut()),
+                    )
+                    .zip(replicas.iter_mut())
                     .enumerate()
                 {
                     let take = nps.min(states_rest.len());
@@ -432,11 +513,34 @@ impl ShardedEngine {
                     rngs_rest = rg_rest;
                     let base = (k * nps) as u32;
                     ranges.push(move || {
-                        control_chunk(st_c, rg_c, control, arr, base, t, control_start, z0, out)
+                        control_chunk(
+                            st_c,
+                            rg_c,
+                            control,
+                            arr,
+                            pay,
+                            base,
+                            t,
+                            control_start,
+                            z0,
+                            out,
+                            hook_ref,
+                            rep,
+                        )
                     });
                 }
                 fan_out(self.pool.as_mut(), &mut collect_tasks(&mut ranges));
             }
+        }
+
+        // Barrier: the hook's replica deltas merge first (canonical
+        // dense-index order, enforced by the hook per the ShardHook
+        // contract), so fork payload handoff below sees parent state
+        // that already includes this step's visits — mirroring the
+        // sequential engine, where a walk's visit work precedes its own
+        // fork decision.
+        if H::ACTIVE {
+            hook.merge(t, replicas)?;
         }
 
         // Barrier: merge decisions in canonical order — sorted by the
@@ -466,7 +570,13 @@ impl ShardedEngine {
                 let child_stream = self.arena.stream_at(d.dense as usize).split(j as u64);
                 let lineage =
                     Lineage::Forked { parent: d.walk, by: d.node, at: t, slot: fork_slot };
-                let (child_id, _) = self.arena.spawn_with_stream(d.node, t, lineage, child_stream);
+                let parent =
+                    if H::ACTIVE { Some(self.arena.walk_ref(d.dense as usize)) } else { None };
+                let (child_id, child_dense) =
+                    self.arena.spawn_with_stream(d.node, t, lineage, child_stream);
+                if let Some(parent) = parent {
+                    hook.on_fork(t, parent, self.arena.walk_mut(child_dense));
+                }
                 // The new walk is immediately visible to the forking node
                 // (footnote 7); in stream mode that visibility lands at
                 // the barrier, after the step's arrivals.
@@ -486,6 +596,7 @@ impl ShardedEngine {
                     t,
                     d.node,
                     EventKind::ControlTermination,
+                    hook,
                 );
             }
         }
@@ -513,15 +624,42 @@ impl ShardedEngine {
             }
         }
         self.arena.compact();
+        // The step is fully applied and the arena dense-compacted: the
+        // hook's cross-walk barrier work (e.g. the trainer's periodic
+        // parameter merge) iterates live walks in canonical order here.
+        if H::ACTIVE {
+            hook.end_step(t, &self.arena)?;
+        }
         self.trace.z.push(self.arena.live());
         if self.arena.live() == 0 {
             self.trace.extinct = true;
         }
+        Ok(())
     }
 
     /// Run until `horizon` (inclusive), stopping early on extinction
     /// (trace padded with zeros, as the sequential engine does).
     pub fn run_to(&mut self, horizon: u64) {
+        self.run_to_with(horizon, &mut NoShardHook).expect("NoShardHook cannot fail");
+    }
+
+    /// [`run_to`](Self::run_to) with a [`ShardHook`]: builds one hook
+    /// replica per shard (replica state persists across steps) and runs
+    /// every step through [`step_hooked`](Self::step_hooked). Mirrors
+    /// `Engine::run_to_with`; errors surface from the hook's barrier
+    /// callbacks (e.g. a failing train step).
+    pub fn run_to_with<H: ShardHook + Sync>(
+        &mut self,
+        horizon: u64,
+        hook: &mut H,
+    ) -> anyhow::Result<()> {
+        let mut replicas = hook.replicas(self.shards, self.nodes_per_shard, self.graph.n());
+        anyhow::ensure!(
+            replicas.len() == self.shards,
+            "hook built {} replicas for {} shards",
+            replicas.len(),
+            self.shards
+        );
         while self.t < horizon {
             if self.arena.live() == 0 {
                 self.trace.z.resize(horizon as usize + 1, 0);
@@ -529,8 +667,9 @@ impl ShardedEngine {
                 self.t = horizon;
                 break;
             }
-            self.step();
+            self.step_hooked(hook, &mut replicas)?;
         }
+        Ok(())
     }
 
     /// Consume the engine, returning its telemetry.
@@ -560,18 +699,25 @@ fn fan_out(pool: Option<&mut WorkerPool>, tasks: &mut [Task<'_>]) {
 }
 
 /// Retire the walk at dense position `dense`: trace event + graveyard
-/// move. Free function so barrier loops can hold disjoint field borrows.
-fn kill_dense(
+/// move + death hook (compiled out for [`NoShardHook`]). Free function so
+/// barrier loops can hold disjoint field borrows. Only ever called at
+/// barriers, in canonical dense order — which is what makes the hook's
+/// death stream shard-count invariant.
+fn kill_dense<H: ShardHook>(
     arena: &mut WalkArena,
     trace: &mut Trace,
     dense: usize,
     t: u64,
     node: u32,
     kind: EventKind,
+    hook: &mut H,
 ) {
     let id = arena.id_at(dense);
     trace.events.push(Event { t, node, walk: id.0, kind });
-    arena.retire(dense, t);
+    let dead = arena.retire(dense, t);
+    if H::ACTIVE {
+        hook.on_death(t, dead);
+    }
 }
 
 /// Hop-phase worker: advance each walk in the chunk on its own stream.
@@ -614,22 +760,43 @@ fn hop_chunk(
 /// order; `observe` + the once-per-node-per-step control decision run
 /// exactly as in the sequential engine, with decision randomness drawn
 /// from the visited node's stream. `base` is the shard's first node id.
+/// The hook replica sees each arrival between `observe` and the control
+/// decision — the same slot `VisitHook::on_visit` occupies in the
+/// shared-stream engine; `payloads` is the arrival-parallel payload
+/// side buffer (empty, and never read, when `H::ACTIVE` is false).
 #[allow(clippy::too_many_arguments)]
-fn control_chunk(
+fn control_chunk<H: ShardHook>(
     states: &mut [NodeState],
     node_rngs: &mut [Rng],
     control: &mut Control,
     arrivals: &[Arrival],
+    payloads: &[Option<usize>],
     base: u32,
     t: u64,
     control_start: u64,
     z0: u32,
     out: &mut Vec<DecisionOut>,
+    hook: &H,
+    replica: &mut H::Replica,
 ) {
-    for a in arrivals {
+    for (j, a) in arrivals.iter().enumerate() {
         let local = (a.node - base) as usize;
         let state = &mut states[local];
         state.observe(t, a.id, a.slot);
+        if H::ACTIVE {
+            hook.on_shard_visit(
+                replica,
+                t,
+                &ShardVisit {
+                    dense: a.dense,
+                    node: a.node,
+                    local: local as u32,
+                    walk: a.id,
+                    slot: a.slot,
+                    payload: payloads[j],
+                },
+            );
+        }
         // Warm-up and the one-decision-per-node-per-step rule
         // (footnote 6), exactly as in the sequential engine.
         if t < control_start || state.last_control_step == Some(t) {

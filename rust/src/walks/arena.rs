@@ -152,6 +152,12 @@ impl WalkArena {
         self.born[i]
     }
 
+    /// Application payload index of the walk at dense position `i`.
+    #[inline]
+    pub fn payload_at(&self, i: usize) -> Option<usize> {
+        self.payload[i]
+    }
+
     /// By-value view of the live walk at dense position `i`.
     #[inline]
     pub fn walk_ref(&self, i: usize) -> WalkRef {

@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use decafork::learning::{ShardedCorpus, TrainingRun};
+use decafork::learning::{PjrtOp, ShardedCorpus, TrainingRun};
 use decafork::rng::Rng;
 use decafork::runtime::{artifacts_present, default_artifacts_dir, Runtime, TrainStep};
 
@@ -143,7 +143,8 @@ fn end_to_end_training_with_failures_and_decafork() {
         decafork::failures::Burst::new(vec![(110, 1)]),
         Rng::new(6),
     );
-    let summary = TrainingRun::execute(&mut engine, &ts, corpus, 220, 7).unwrap();
+    let op = PjrtOp::new(&ts).unwrap();
+    let summary = TrainingRun::execute(&mut engine, &op, corpus, 220, 7).unwrap();
     assert!(summary.steps > 100, "too few SGD steps: {}", summary.steps);
     assert!(summary.survivors >= 1, "no surviving walk");
     assert!(
@@ -185,8 +186,9 @@ fn gossip_on_meet_merges_models() {
         decafork::failures::NoFailures,
         Rng::new(13),
     );
+    let op = PjrtOp::new(&ts).unwrap();
     let summary =
-        TrainingRun::execute_opts(&mut engine, &ts, corpus, 120, 17, true).unwrap();
+        TrainingRun::execute_opts(&mut engine, &op, corpus, 120, 17, true).unwrap();
     assert!(summary.merges > 0, "no meetings on a complete graph in 120 steps?");
     assert!(summary.last_loss_mean < summary.first_loss);
     assert_eq!(summary.survivors, 4);
