@@ -1,0 +1,201 @@
+//! Topology-layer throughput (ISSUE 6): the pool-parallel CSR builder
+//! against the single-threaded validating `from_edges` it replaced on
+//! the generator hot path, the implicit backend's O(1) memory budget,
+//! and the `scale_10m` completion probe.
+//!
+//! Before any clock is trusted the bench **asserts output equality**:
+//! the parallel builder's CSR must match the sequential one
+//! neighbor-for-neighbor at 10⁶ nodes, the parallel connectivity check
+//! must agree with the sequential BFS, and the implicit backend must be
+//! bit-identical to its materialization (degrees, neighbor lists, and a
+//! 50k-draw `step` stream) — a "speedup" that moved one byte is a bug,
+//! not a result.
+//!
+//! Acceptance bars (gated on `DECAFORK_PERF_NO_ENFORCE` like every
+//! bench): parallel build ≥ 4× the validating sequential build at 10⁶
+//! nodes; implicit topology ≤ 1 KB resident regardless of n (asserted
+//! hard — memory is deterministic, no machine excuse); `scale_10m`
+//! completes its horizon on the implicit backend.
+//!
+//! Writes `BENCH_graph.json` (or `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_GRAPH_N` shrinks the build-benchmark node count
+//! (CI smoke), `DECAFORK_GRAPH_WORKERS` sets the pool size (default 7
+//! workers = 8 lanes), `DECAFORK_PERF_STEPS` rescales the 10m probe's
+//! horizon, `DECAFORK_PERF_SKIP_10M=1` skips the probe (the engine's
+//! per-node state is ~1 GB at 10⁷ nodes), `DECAFORK_PERF_NO_ENFORCE=1`
+//! downgrades the speedup gate to a report.
+
+use decafork::graph::{build, Graph, ImplicitTopology};
+use decafork::rng::Rng;
+use decafork::runtime::WorkerPool;
+use std::time::Instant;
+
+/// Best-of-3 wall time for a build closure (builds are one-shot, so a
+/// min over a few reps is the stable statistic).
+fn clock<T>(mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut best = f64::INFINITY;
+    let mut out = None;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let v = f();
+        best = best.min(t0.elapsed().as_secs_f64());
+        out = Some(v);
+    }
+    (best, out.unwrap())
+}
+
+fn assert_same_graph(a: &Graph, b: &Graph, what: &str) {
+    assert_eq!(a.n(), b.n(), "{what}: node count");
+    assert_eq!(a.m(), b.m(), "{what}: edge count");
+    for i in 0..a.n() {
+        assert_eq!(a.neighbors(i).to_vec(), b.neighbors(i), "{what}: neighbors of {i}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let n_build = std::env::var("DECAFORK_GRAPH_N")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(50_000))
+        .unwrap_or(1_000_000);
+    let workers = std::env::var("DECAFORK_GRAPH_WORKERS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&w| w >= 1)
+        .unwrap_or(7);
+    let mut pool = WorkerPool::new(workers);
+
+    // ---- Parallel CSR assembly vs the sequential paths ----
+    // Deterministic 8-regular edge list (4·n edges) from the circulant
+    // family, so every run on every machine builds the same graph.
+    let edges = ImplicitTopology::ring_lattice(n_build, 8)?.edge_list();
+    println!(
+        "perf_graph: CSR assembly at n = {n_build} ({} edges), {} lanes\n",
+        edges.len(),
+        workers + 1
+    );
+
+    let (t_validating, g_seq) = clock(|| Graph::from_edges(n_build, &edges).unwrap());
+    println!("  from_edges (validating) : {:>8.1} ms", t_validating * 1e3);
+    let (t_trusted, g_trusted) = clock(|| Graph::from_edges_trusted(n_build, &edges));
+    println!("  from_edges_trusted      : {:>8.1} ms", t_trusted * 1e3);
+    let (t_parallel, g_par) = clock(|| build::from_edges_parallel(n_build, &edges, &mut pool));
+    println!("  from_edges_parallel     : {:>8.1} ms", t_parallel * 1e3);
+    assert_same_graph(&g_seq, &g_trusted, "trusted vs validating");
+    assert_same_graph(&g_seq, &g_par, "parallel vs validating");
+    let speedup = t_validating / t_parallel;
+    let trusted_ratio = t_trusted / t_parallel;
+    println!("  speedup vs validating   : {speedup:>8.2}x  (acceptance bar: >= 4.0x)");
+    println!("  speedup vs trusted      : {trusted_ratio:>8.2}x");
+
+    let (t_bfs_seq, conn_seq) = clock(|| g_seq.is_connected());
+    let (t_bfs_par, conn_par) = clock(|| build::is_connected_parallel(&g_par, &mut pool));
+    assert_eq!(conn_seq, conn_par, "connectivity answers diverged");
+    assert!(conn_seq, "ring lattice must be connected");
+    println!(
+        "  is_connected seq/par    : {:>8.1} / {:.1} ms (agree: {conn_seq})",
+        t_bfs_seq * 1e3,
+        t_bfs_par * 1e3
+    );
+
+    // ---- Implicit backend: memory budget + bit-compat + hop rate ----
+    // Budget asserted at 10⁸ nodes: the whole topology must fit in 1 KB
+    // no matter how large n gets (that is the point of the backend).
+    let huge = Graph::from_implicit(ImplicitTopology::small_world(
+        100_000_000,
+        8,
+        &mut Rng::new(0xCAFE6),
+    )?);
+    let mem = huge.memory_bytes();
+    let mem_per_node = mem as f64 / huge.n() as f64;
+    println!("\n  implicit @ 10^8 nodes   : {mem} B total ({mem_per_node:.2e} B/node)");
+    assert!(mem <= 1024, "implicit topology must stay O(1) memory, got {mem} B");
+
+    // Bit-compat oracle at a materializable size: same neighbors, and a
+    // 50k-hop step stream that is draw-for-draw identical.
+    let imp = Graph::from_implicit(ImplicitTopology::small_world(100_000, 8, &mut Rng::new(7))?);
+    let mat = imp.materialize();
+    assert_same_graph(&mat, &imp, "implicit vs materialized");
+    {
+        let (mut ra, mut rb) = (Rng::new(99), Rng::new(99));
+        let (mut pa, mut pb) = (0usize, 0usize);
+        for _ in 0..50_000 {
+            pa = imp.step(pa, &mut ra);
+            pb = mat.step(pb, &mut rb);
+            assert_eq!(pa, pb, "implicit step stream diverged from CSR");
+        }
+    }
+    let hops = 2_000_000u64;
+    let (t_imp_hops, _) = clock(|| {
+        let mut rng = Rng::new(3);
+        let mut pos = 0usize;
+        for _ in 0..hops {
+            pos = huge.step(pos, &mut rng);
+        }
+        pos
+    });
+    let implicit_hops_per_sec = hops as f64 / t_imp_hops;
+    println!("  implicit step @ 10^8    : {implicit_hops_per_sec:>12.0} hops/s");
+
+    // ---- scale_10m completion probe (implicit backend end-to-end) ----
+    let skip_10m = std::env::var("DECAFORK_PERF_SKIP_10M").is_ok();
+    let mut scale10m = decafork::scenario::presets::scale_10m();
+    if let Some(steps) = std::env::var("DECAFORK_PERF_STEPS")
+        .ok()
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .map(|s| s.max(100))
+    {
+        scale10m.rescale_to(steps);
+    }
+    let sps_10m = if skip_10m {
+        println!("\nscale_10m: skipped (DECAFORK_PERF_SKIP_10M)");
+        None
+    } else {
+        println!("\nscale_10m: {} | {} steps", scale10m.label(), scale10m.horizon);
+        let mut e = scale10m.sharded_engine(0, workers + 1)?;
+        assert!(e.graph.is_implicit(), "scale_10m must run on the implicit backend");
+        let t0 = Instant::now();
+        e.run_to(scale10m.horizon);
+        let dt = t0.elapsed().as_secs_f64();
+        let trace = e.into_trace();
+        anyhow::ensure!(
+            !trace.extinct,
+            "scale_10m went extinct before its {}-step horizon — the completion \
+             criterion is not met",
+            scale10m.horizon
+        );
+        let steps = trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1);
+        let sps = steps as f64 / dt;
+        println!(
+            "  {} workers            : {sps:>12.1} steps/s (final z = {})",
+            workers + 1,
+            trace.z.last().unwrap()
+        );
+        Some(sps)
+    };
+
+    let pass = speedup >= 4.0;
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_graph.json".into());
+    let sps_10m_json = sps_10m.map(|v| format!("{v:.1}")).unwrap_or_else(|| "null".into());
+    let json = format!(
+        "{{\n  \"bench\": \"perf_graph\",\n  \"mode\": \"parallel CSR assembly + implicit topology backend, outputs asserted identical\",\n  \"lanes\": {},\n  \"build\": {{\n    \"n\": {n_build},\n    \"edges\": {},\n    \"from_edges_ms\": {:.1},\n    \"from_edges_trusted_ms\": {:.1},\n    \"from_edges_parallel_ms\": {:.1},\n    \"speedup_vs_validating\": {speedup:.3},\n    \"speedup_vs_trusted\": {trusted_ratio:.3}\n  }},\n  \"implicit\": {{\n    \"n\": 100000000,\n    \"memory_bytes_total\": {mem},\n    \"memory_bytes_per_node\": {mem_per_node:.3e},\n    \"hops_per_sec\": {implicit_hops_per_sec:.0}\n  }},\n  \"scale_10m\": {{\n    \"graph\": \"{}\",\n    \"z0\": {},\n    \"steps\": {},\n    \"steps_per_sec\": {sps_10m_json},\n    \"completed\": {}\n  }},\n  \"acceptance_min_speedup\": 4.0,\n  \"pass\": {pass}\n}}\n",
+        workers + 1,
+        edges.len(),
+        t_validating * 1e3,
+        t_trusted * 1e3,
+        t_parallel * 1e3,
+        scale10m.graph.label(),
+        scale10m.params.z0,
+        scale10m.horizon,
+        !skip_10m
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
+        anyhow::bail!("perf_graph below the 4.0x parallel-build bar — see {out}");
+    }
+    Ok(())
+}

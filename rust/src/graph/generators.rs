@@ -1,12 +1,19 @@
 //! Graph generators for the families evaluated in the paper (Fig. 1–6):
 //! random d-regular (the main testbed), Erdős–Rényi, complete and
 //! power-law (Barabási–Albert), plus deterministic ring/torus used in
-//! tests. All randomized generators retry until the sample is connected —
-//! the paper assumes connectivity (Sec. II) and applies the algorithms per
-//! component otherwise.
+//! tests and the implicit circulant families for the 10⁷–10⁸-node
+//! presets. All randomized generators retry until the sample is
+//! connected — the paper assumes connectivity (Sec. II) and applies the
+//! algorithms per component otherwise.
+//!
+//! Generator output is simple by construction, so the materializing
+//! families build through [`Graph::from_edges_trusted`] (debug builds
+//! still validate); [`Graph::from_edges`] remains the validating entry
+//! point for untrusted edge lists.
 
-use super::Graph;
+use super::{build, implicit::ImplicitTopology, Graph};
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 
 /// Complete graph `K_n`.
 pub fn complete(n: usize) -> Graph {
@@ -16,14 +23,14 @@ pub fn complete(n: usize) -> Graph {
             edges.push((a, b));
         }
     }
-    Graph::from_edges(n, &edges).expect("complete graph is simple")
+    Graph::from_edges_trusted(n, &edges)
 }
 
 /// Cycle graph `C_n` (n >= 3).
 pub fn ring(n: usize) -> Graph {
     assert!(n >= 3);
     let edges: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, (i + 1) % n as u32)).collect();
-    Graph::from_edges(n, &edges).expect("ring is simple")
+    Graph::from_edges_trusted(n, &edges)
 }
 
 /// 2-D torus grid `w x h` (4-regular when w,h >= 3).
@@ -37,7 +44,23 @@ pub fn grid_torus(w: usize, h: usize) -> Graph {
             edges.push((idx(x, y), idx(x, (y + 1) % h)));
         }
     }
-    Graph::from_edges(w * h, &edges).expect("torus is simple")
+    Graph::from_edges_trusted(w * h, &edges)
+}
+
+/// Implicit ring lattice `C_n({1..d/2})` — the d-regular circulant on the
+/// implicit backend: zero stored edges, O(1) memory. Offset 1 is always
+/// in the set, so the family is connected for every n.
+pub fn implicit_ring(n: usize, d: usize) -> anyhow::Result<Graph> {
+    Ok(Graph::from_implicit(ImplicitTopology::ring_lattice(n, d)?))
+}
+
+/// Implicit degree-preserving small world: `d/4`-ish of the ring
+/// lattice's offsets are replaced by seed-derived long-range chords
+/// (see `implicit.rs` for why exact Watts–Strogatz rewiring cannot be
+/// derived locally). Local offset 1 is always kept, so connectivity
+/// holds for every n and seed.
+pub fn implicit_small_world(n: usize, d: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
+    Ok(Graph::from_implicit(ImplicitTopology::small_world(n, d, rng)?))
 }
 
 /// Erdős–Rényi `G(n, p)`, resampled until connected (up to `max_tries`).
@@ -55,12 +78,21 @@ pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> anyhow::Result<Graph> {
                 }
             }
         }
-        let g = Graph::from_edges(n, &edges)?;
+        let g = Graph::from_edges_trusted(n, &edges);
         if g.is_connected() {
             return Ok(g);
         }
     }
     anyhow::bail!("no connected G({n},{p}) sample in {max_tries} tries — p too small?")
+}
+
+/// Default ER edge probability for [`by_name`]: 8 expected neighbors,
+/// floored at `1.5·ln n / n` for connectivity, capped at 1.0 **last** so
+/// the result is always a valid probability (flooring after the cap
+/// could push p above 1.0 and make `erdos_renyi` reject its own
+/// default).
+pub fn er_default_p(n: usize) -> f64 {
+    (8.0 / n as f64).max(1.5 * (n as f64).ln() / n as f64).min(1.0)
 }
 
 /// Random d-regular graph via the progressive pairing model: shuffle the
@@ -71,14 +103,49 @@ pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> anyhow::Result<Graph> {
 /// until connected. This is the paper's main testbed (8-regular,
 /// n ∈ {50, 100, 200}).
 pub fn random_regular(n: usize, d: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
+    random_regular_impl(n, d, rng, None)
+}
+
+/// [`random_regular`] with CSR assembly and the connectivity check run
+/// on the pool (`build::from_edges_parallel` / `is_connected_parallel`).
+/// Consumes the RNG stream identically to the sequential form — only
+/// `try_pairing` draws — and both build paths are output-identical, so
+/// the sampled graph is **bit-for-bit the same** at any worker count
+/// (locked by `tests/graph_backend.rs`).
+pub fn random_regular_pooled(
+    n: usize,
+    d: usize,
+    rng: &mut Rng,
+    pool: &mut WorkerPool,
+) -> anyhow::Result<Graph> {
+    random_regular_impl(n, d, rng, Some(pool))
+}
+
+fn random_regular_impl(
+    n: usize,
+    d: usize,
+    rng: &mut Rng,
+    mut pool: Option<&mut WorkerPool>,
+) -> anyhow::Result<Graph> {
     anyhow::ensure!(n * d % 2 == 0, "n*d must be even");
     anyhow::ensure!(d < n, "degree must be < n");
     anyhow::ensure!(d >= 1, "degree must be >= 1");
     let max_tries = 500;
     for _ in 0..max_tries {
         if let Some(edges) = try_pairing(n, d, rng) {
-            let g = Graph::from_edges(n, &edges)?;
-            if g.is_connected() {
+            let (g, connected) = match pool.as_deref_mut() {
+                Some(pool) => {
+                    let g = build::from_edges_parallel(n, &edges, pool);
+                    let ok = build::is_connected_parallel(&g, pool);
+                    (g, ok)
+                }
+                None => {
+                    let g = Graph::from_edges_trusted(n, &edges);
+                    let ok = g.is_connected();
+                    (g, ok)
+                }
+            };
+            if connected {
                 return Ok(g);
             }
         }
@@ -141,18 +208,19 @@ pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng) -> anyhow::Result<Grap
             targets.push(t);
         }
     }
-    let g = Graph::from_edges(n, &edges)?;
+    let g = Graph::from_edges_trusted(n, &edges);
     debug_assert!(g.is_connected(), "BA graphs are connected by construction");
     Ok(g)
 }
 
-/// The four topology families from Fig. 6, by name. `seed` controls the
-/// randomized families.
+/// The topology families by name: the four from Fig. 6 plus ring/torus
+/// and the implicit circulant families. `seed` controls the randomized
+/// families.
 pub fn by_name(name: &str, n: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
     match name {
         "regular" => random_regular(n, 8, rng),
         "complete" => Ok(complete(n)),
-        "erdos-renyi" | "er" => erdos_renyi(n, (8.0 / n as f64).min(1.0).max(1.5 * (n as f64).ln() / n as f64), rng),
+        "erdos-renyi" | "er" => erdos_renyi(n, er_default_p(n), rng),
         "power-law" | "ba" => barabasi_albert(n, 4, rng),
         "ring" => Ok(ring(n)),
         "torus" => {
@@ -160,6 +228,8 @@ pub fn by_name(name: &str, n: usize, rng: &mut Rng) -> anyhow::Result<Graph> {
             anyhow::ensure!(w * w == n, "torus needs square n");
             Ok(grid_torus(w, w))
         }
+        "implicit-regular" | "implicit-ring" => implicit_ring(n, 8),
+        "implicit-smallworld" | "smallworld" => implicit_small_world(n, 8, rng),
         other => anyhow::bail!("unknown graph family '{other}'"),
     }
 }
@@ -192,6 +262,30 @@ mod tests {
     }
 
     #[test]
+    fn implicit_families_regular_connected_zero_edge_storage() {
+        let g = implicit_ring(500, 8).unwrap();
+        assert!(g.is_implicit());
+        assert_eq!(g.m(), 2000);
+        assert!((0..500).all(|i| g.degree(i) == 8));
+        assert!(g.is_connected());
+        let mut rng = Rng::new(11);
+        let sw = implicit_small_world(500, 8, &mut rng).unwrap();
+        assert!(sw.is_implicit());
+        assert!((0..500).all(|i| sw.degree(i) == 8));
+        assert!(sw.is_connected());
+        assert!(sw.memory_bytes() < 1024);
+    }
+
+    #[test]
+    fn implicit_small_world_deterministic_under_seed() {
+        let a = implicit_small_world(400, 8, &mut Rng::new(21)).unwrap();
+        let b = implicit_small_world(400, 8, &mut Rng::new(21)).unwrap();
+        for i in 0..400 {
+            assert_eq!(a.neighbors(i).to_vec(), b.neighbors(i));
+        }
+    }
+
+    #[test]
     fn random_regular_is_regular_and_connected() {
         let mut rng = Rng::new(1);
         for &(n, d) in &[(20, 3), (50, 8), (100, 8)] {
@@ -210,11 +304,38 @@ mod tests {
     }
 
     #[test]
+    fn random_regular_pooled_matches_sequential() {
+        // Below PARALLEL_MIN_EDGES this exercises the fallback plumbing;
+        // the above-threshold bit-identity oracle lives in
+        // tests/graph_backend.rs.
+        let mut pool = WorkerPool::new(3);
+        let seq = random_regular(200, 8, &mut Rng::new(31)).unwrap();
+        let par = random_regular_pooled(200, 8, &mut Rng::new(31), &mut pool).unwrap();
+        assert_eq!(seq.m(), par.m());
+        for i in 0..200 {
+            assert_eq!(seq.neighbors(i), par.neighbors(i));
+        }
+    }
+
+    #[test]
     fn erdos_renyi_connected() {
         let mut rng = Rng::new(3);
         let g = erdos_renyi(60, 0.15, &mut rng).unwrap();
         assert!(g.is_connected());
         assert_eq!(g.n(), 60);
+    }
+
+    #[test]
+    fn er_default_p_is_a_probability_for_all_n() {
+        // The old clamp order (`.min(1.0).max(floor)`) applied the
+        // connectivity floor after the cap; the fixed order must yield a
+        // valid probability and respect the floor for every small n.
+        for n in 5..200usize {
+            let p = er_default_p(n);
+            assert!((0.0..=1.0).contains(&p), "n={n}: p={p} out of range");
+            let floor = 1.5 * (n as f64).ln() / n as f64;
+            assert!(p >= floor.min(1.0), "n={n}: p={p} below connectivity floor {floor}");
+        }
     }
 
     #[test]
@@ -233,7 +354,7 @@ mod tests {
     #[test]
     fn by_name_families() {
         let mut rng = Rng::new(5);
-        for name in ["regular", "complete", "er", "ba"] {
+        for name in ["regular", "complete", "er", "ba", "implicit-ring", "smallworld"] {
             let g = by_name(name, 64, &mut rng).unwrap();
             assert!(g.is_connected(), "{name} not connected");
         }

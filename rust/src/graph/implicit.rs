@@ -1,0 +1,404 @@
+//! The implicit topology backend: circulant graph families whose
+//! neighbor sets are **derived on demand** from `(parameters, node)` —
+//! zero stored edges, O(1) memory per node — so graph size stops being
+//! a memory axis at all (DESIGN.md §Topology backends).
+//!
+//! ## The family
+//!
+//! A circulant graph `C_n(S)` connects node `i` to `(i ± s) mod n` for
+//! every offset `s ∈ S`, with `S ⊂ {1, …, ⌊(n−1)/2⌋}` distinct. Under
+//! that offset bound every node has exactly `2|S|` **distinct**
+//! neighbors and no self-loops: `s ≢ 0 (mod n)` rules out loops,
+//! `s + s′ < n` rules out `i − s ≡ i + s′` collisions, and the offsets
+//! being distinct rules out the rest. (`s = n/2` is deliberately
+//! forbidden — it would contribute a single neighbor instead of two and
+//! break the uniform-degree invariant the shared Lemire threshold
+//! relies on.) Two sub-families are exposed through
+//! [`generators`](super::generators):
+//!
+//! * **shifted ring** (`ring_lattice`): `S = {1, …, d/2}` — the
+//!   d-regular ring lattice, the deterministic skeleton of the
+//!   Watts–Strogatz construction;
+//! * **small world** (`small_world`): `S = {1, …} ∪ {seed-derived long
+//!   chords}` — a degree-preserving Newman–Watts-flavored small world.
+//!   Exact Watts–Strogatz *rewiring* cannot be derived locally: whether
+//!   some far node rewired one of its edges **onto** `i` is not a
+//!   function of `(seed, i)`, so any zero-storage backend would have to
+//!   scan all n nodes per query. Random *chord offsets* keep the
+//!   small-world diameter collapse (long-range shortcuts at every
+//!   node) while staying a pure local function — and keep the graph
+//!   regular, which the paper's return-time analysis prefers anyway.
+//!
+//! Connectivity is `gcd(n, S) = 1`; both exposed families include
+//! offset 1 and are therefore always connected. [`ImplicitTopology::new`]
+//! accepts disconnected offset sets on purpose (`C_10({2})` is two
+//! 5-cycles) so `Graph::is_connected` has something real to detect on
+//! this backend.
+//!
+//! ## Bit-compatibility with the CSR backend
+//!
+//! `materialize()`d into CSR, a circulant must be indistinguishable
+//! from the implicit original: same degrees, same sorted neighbor
+//! lists, same Lemire threshold, and — the part the determinism locks
+//! care about — the same `step` RNG consumption. `step` here runs the
+//! identical accept/reject loop against the (single, shared) threshold
+//! and then selects the j-th neighbor **in sorted order**, exactly
+//! where the CSR backend's sorted adjacency slice would put it. For
+//! interior nodes (`span ≤ i < n − span`, i.e. no modular wraparound)
+//! the sorted order is the closed form
+//! `[i−s_k, …, i−s_1, i+s_1, …, i+s_k]`, so selection is O(1); the
+//! `2·span` boundary nodes fill a stack buffer and sort it. The
+//! equivalence is locked by `tests/graph_backend.rs`.
+
+use crate::rng::Rng;
+
+/// Hard cap on the implicit backend's degree: neighbor derivation uses
+/// fixed-size stack buffers (no allocation on the `step` hot path), and
+/// the scale presets live at d = 8 — a 64-degree circulant is already
+/// outside anything the walk analysis targets.
+pub const MAX_IMPLICIT_DEGREE: usize = 64;
+
+/// A circulant topology `C_n(S)`, stored as its offset set only:
+/// `size_of::<Self>() + 4·|S|` bytes regardless of `n`.
+#[derive(Debug, Clone)]
+pub struct ImplicitTopology {
+    n: usize,
+    /// Sorted distinct half-offsets, each in `1..=(n−1)/2`.
+    half_offsets: Box<[u32]>,
+    /// `half_offsets.last()` — nodes within `span` of either end wrap.
+    span: usize,
+    /// `2·|half_offsets|`, identical at every node.
+    degree: usize,
+    /// The shared Lemire rejection threshold `deg.wrapping_neg() % deg`
+    /// (per-node in the CSR backend; one value suffices here because
+    /// the degree is uniform).
+    step_threshold: u64,
+    /// Family tag for labels/diagnostics ("ring-lattice", "small-world").
+    family: &'static str,
+}
+
+impl ImplicitTopology {
+    /// Circulant `C_n(S)` from an explicit offset set. Offsets must be
+    /// distinct and in `1..=(n−1)/2`; the resulting degree `2|S|` must
+    /// stay within [`MAX_IMPLICIT_DEGREE`]. Connectivity is *not*
+    /// required (`gcd(n, S) > 1` builds a disconnected circulant, which
+    /// `Graph::is_connected` then reports).
+    pub fn new(n: usize, mut half_offsets: Vec<u32>, family: &'static str) -> anyhow::Result<Self> {
+        anyhow::ensure!(n >= 3, "implicit topology needs n >= 3, got {n}");
+        anyhow::ensure!(!half_offsets.is_empty(), "implicit topology needs at least one offset");
+        let before = half_offsets.len();
+        half_offsets.sort_unstable();
+        half_offsets.dedup();
+        anyhow::ensure!(half_offsets.len() == before, "duplicate circulant offset");
+        let max_off = (n - 1) / 2;
+        let (lo, hi) = (half_offsets[0], *half_offsets.last().unwrap());
+        anyhow::ensure!(
+            lo >= 1 && (hi as usize) <= max_off,
+            "circulant offsets must lie in 1..={max_off} for n = {n} (got {lo}..={hi})"
+        );
+        let degree = 2 * half_offsets.len();
+        anyhow::ensure!(
+            degree <= MAX_IMPLICIT_DEGREE,
+            "implicit degree {degree} exceeds the stack-buffer cap {MAX_IMPLICIT_DEGREE}"
+        );
+        let d = degree as u64;
+        Ok(ImplicitTopology {
+            n,
+            span: hi as usize,
+            half_offsets: half_offsets.into_boxed_slice(),
+            degree,
+            step_threshold: d.wrapping_neg() % d,
+            family,
+        })
+    }
+
+    /// The d-regular ring lattice: `S = {1, …, d/2}`. Always connected
+    /// (offset 1 is a Hamiltonian cycle).
+    pub fn ring_lattice(n: usize, d: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(d >= 2 && d % 2 == 0, "ring lattice degree must be even and >= 2, got {d}");
+        anyhow::ensure!(
+            d / 2 <= (n.max(1) - 1) / 2,
+            "ring lattice d = {d} needs n >= {}, got {n}",
+            d + 2
+        );
+        Self::new(n, (1..=(d / 2) as u32).collect(), "ring-lattice")
+    }
+
+    /// Degree-preserving small world: half the offset budget is the
+    /// local band `{1, …}`, half is seed-derived long chords drawn
+    /// uniformly from the remaining range (see the module docs for why
+    /// this — and not true Watts–Strogatz rewiring — is the family a
+    /// zero-storage backend can serve). Always connected (offset 1 is
+    /// in the local band). Deterministic in the `rng` state, matching
+    /// the other randomized generators.
+    pub fn small_world(n: usize, d: usize, rng: &mut Rng) -> anyhow::Result<Self> {
+        anyhow::ensure!(d >= 4 && d % 2 == 0, "small world degree must be even and >= 4, got {d}");
+        let half = d / 2;
+        let chords = half / 2;
+        let locals = half - chords;
+        let max_off = (n.max(1) - 1) / 2;
+        anyhow::ensure!(
+            max_off >= locals + chords,
+            "small world d = {d} needs n >= {}, got {n}",
+            2 * (locals + chords) + 1
+        );
+        let mut offsets: Vec<u32> = (1..=locals as u32).collect();
+        while offsets.len() < half {
+            // Rejection-sample distinct chords beyond the local band;
+            // `chords ≤ 16`, so the linear contains-scan is cheaper
+            // than any set structure.
+            let c = (locals + 1 + rng.below(max_off - locals)) as u32;
+            if !offsets.contains(&c) {
+                offsets.push(c);
+            }
+        }
+        Self::new(n, offsets, "small-world")
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Undirected edge count `n·|S|` (every offset contributes one edge
+    /// per node).
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.n * self.half_offsets.len()
+    }
+
+    /// Uniform degree `2|S|`.
+    #[inline]
+    pub fn degree(&self) -> usize {
+        self.degree
+    }
+
+    /// The offset set `S` (sorted).
+    #[inline]
+    pub fn half_offsets(&self) -> &[u32] {
+        &self.half_offsets
+    }
+
+    /// Family tag ("ring-lattice" / "small-world" / caller-supplied).
+    #[inline]
+    pub fn family(&self) -> &'static str {
+        self.family
+    }
+
+    /// Derived memory footprint — the O(1)-per-node claim in numbers.
+    #[inline]
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.half_offsets.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Write node `i`'s neighbors into `buf` in sorted order; returns
+    /// the degree. `buf` is caller stack space — no allocation, no
+    /// shared state — which is what the hop loop and the parallel BFS
+    /// use from many threads at once.
+    #[inline]
+    pub(super) fn fill_sorted(&self, i: usize, buf: &mut [u32; MAX_IMPLICIT_DEGREE]) -> usize {
+        let k = self.half_offsets.len();
+        if i >= self.span && i + self.span < self.n {
+            // Interior: no wraparound, so `i−s` descends as `s` ascends
+            // and every `i−s` precedes every `i+s` — sorted by
+            // construction.
+            for (j, &s) in self.half_offsets.iter().enumerate() {
+                buf[k - 1 - j] = (i - s as usize) as u32;
+                buf[k + j] = (i + s as usize) as u32;
+            }
+        } else {
+            for (j, &s) in self.half_offsets.iter().enumerate() {
+                let s = s as usize;
+                buf[2 * j] = ((i + s) % self.n) as u32;
+                buf[2 * j + 1] = ((i + self.n - s) % self.n) as u32;
+            }
+            buf[..2 * k].sort_unstable();
+        }
+        2 * k
+    }
+
+    /// The j-th neighbor of `i` in sorted order — the exact element a
+    /// materialized CSR's sorted adjacency slice holds at rank `j`.
+    #[inline]
+    fn neighbor_sorted(&self, i: usize, j: usize) -> usize {
+        let k = self.half_offsets.len();
+        if i >= self.span && i + self.span < self.n {
+            if j < k {
+                i - self.half_offsets[k - 1 - j] as usize
+            } else {
+                i + self.half_offsets[j - k] as usize
+            }
+        } else {
+            let mut buf = [0u32; MAX_IMPLICIT_DEGREE];
+            let d = self.fill_sorted(i, &mut buf);
+            debug_assert!(j < d);
+            buf[j] as usize
+        }
+    }
+
+    /// One uniform-neighbor step — the same Lemire accept/reject loop
+    /// as the CSR backend against the same threshold value, then rank
+    /// selection in sorted order: RNG consumption and the chosen
+    /// neighbor are bit-identical to stepping on `materialize()`d CSR
+    /// (locked by `tests/graph_backend.rs`).
+    #[inline]
+    pub fn step(&self, i: usize, rng: &mut Rng) -> usize {
+        let deg = self.degree as u64;
+        let threshold = self.step_threshold;
+        loop {
+            let x = rng.next_u64();
+            let m = (x as u128).wrapping_mul(deg as u128);
+            if (m as u64) >= threshold {
+                return self.neighbor_sorted(i, (m >> 64) as usize);
+            }
+        }
+    }
+
+    /// The per-thread scratch serving `Graph::neighbors`'s `&[u32]`
+    /// signature on a backend that stores no edges. The returned slice
+    /// is valid until the **same thread's next** implicit-backend
+    /// `neighbors` call (any implicit graph — the scratch is shared per
+    /// thread); see the contract on [`Graph::neighbors`](super::Graph::neighbors).
+    pub(super) fn scratch_neighbors(&self, i: usize) -> &[u32] {
+        use std::cell::UnsafeCell;
+        thread_local! {
+            static SCRATCH: UnsafeCell<Vec<u32>> = const { UnsafeCell::new(Vec::new()) };
+        }
+        let mut buf = [0u32; MAX_IMPLICIT_DEGREE];
+        let d = self.fill_sorted(i, &mut buf);
+        SCRATCH.with(|cell| {
+            // SAFETY: the scratch is thread-local and the &mut borrow is
+            // confined to this non-reentrant function body, so no two
+            // live &mut aliases exist. The returned shared slice points
+            // into the scratch's heap buffer; the next call on this
+            // thread overwrites (and may reallocate) it — exactly the
+            // documented validity window.
+            let scratch = unsafe { &mut *cell.get() };
+            scratch.clear();
+            scratch.extend_from_slice(&buf[..d]);
+            unsafe { std::slice::from_raw_parts(scratch.as_ptr(), scratch.len()) }
+        })
+    }
+
+    /// The full undirected edge list `{(i, (i+s) mod n)}` — each edge
+    /// exactly once (the mirror `(i, i−s)` would need an offset `n−s`,
+    /// which the `≤ (n−1)/2` bound excludes). This is what
+    /// `Graph::materialize` feeds to the CSR builder.
+    pub fn edge_list(&self) -> Vec<(u32, u32)> {
+        let mut edges = Vec::with_capacity(self.m());
+        for i in 0..self.n {
+            for &s in self.half_offsets.iter() {
+                edges.push((i as u32, ((i + s as usize) % self.n) as u32));
+            }
+        }
+        edges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_validates_offsets() {
+        assert!(ImplicitTopology::new(10, vec![1, 2], "t").is_ok());
+        assert!(ImplicitTopology::new(10, vec![], "t").is_err(), "empty offset set");
+        assert!(ImplicitTopology::new(10, vec![0], "t").is_err(), "offset 0 is a self-loop");
+        assert!(ImplicitTopology::new(10, vec![5], "t").is_err(), "n/2 breaks uniform degree");
+        assert!(ImplicitTopology::new(10, vec![1, 1], "t").is_err(), "duplicate offset");
+        assert!(ImplicitTopology::new(2, vec![1], "t").is_err(), "n too small");
+        let too_many: Vec<u32> = (1..=(MAX_IMPLICIT_DEGREE / 2 + 1) as u32).collect();
+        assert!(ImplicitTopology::new(1000, too_many, "t").is_err(), "degree cap");
+    }
+
+    #[test]
+    fn ring_lattice_shape() {
+        let t = ImplicitTopology::ring_lattice(11, 6).unwrap();
+        assert_eq!(t.n(), 11);
+        assert_eq!(t.degree(), 6);
+        assert_eq!(t.m(), 33);
+        assert_eq!(t.half_offsets(), &[1, 2, 3]);
+        assert!(ImplicitTopology::ring_lattice(6, 6).is_err(), "d/2 > (n-1)/2");
+        assert!(ImplicitTopology::ring_lattice(10, 3).is_err(), "odd degree");
+    }
+
+    #[test]
+    fn neighbors_distinct_and_symmetric() {
+        // Interior and wraparound nodes alike: 2|S| distinct neighbors,
+        // none equal to the node, and j ∈ N(i) ⟺ i ∈ N(j).
+        let t = ImplicitTopology::new(17, vec![1, 4, 7], "t").unwrap();
+        let nbrs = |i: usize| {
+            let mut buf = [0u32; MAX_IMPLICIT_DEGREE];
+            let d = t.fill_sorted(i, &mut buf);
+            buf[..d].to_vec()
+        };
+        for i in 0..17 {
+            let ns = nbrs(i);
+            assert_eq!(ns.len(), 6);
+            let mut dedup = ns.clone();
+            dedup.dedup();
+            assert_eq!(dedup, ns, "unsorted or duplicate neighbors at {i}: {ns:?}");
+            assert!(!ns.contains(&(i as u32)), "self-loop at {i}");
+            for &v in &ns {
+                assert!(nbrs(v as usize).contains(&(i as u32)), "asymmetry {i}↔{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn interior_fast_path_matches_boundary_path() {
+        // Force every node through the sort-based derivation and compare
+        // with fill_sorted's own (fast-path-for-interior) answer.
+        let t = ImplicitTopology::new(40, vec![2, 5, 9], "t").unwrap();
+        for i in 0..40 {
+            let mut fast = [0u32; MAX_IMPLICIT_DEGREE];
+            let d = t.fill_sorted(i, &mut fast);
+            let mut slow: Vec<u32> = t
+                .half_offsets()
+                .iter()
+                .flat_map(|&s| {
+                    [((i + s as usize) % 40) as u32, ((i + 40 - s as usize) % 40) as u32]
+                })
+                .collect();
+            slow.sort_unstable();
+            assert_eq!(&fast[..d], slow.as_slice(), "node {i}");
+            // Rank selection agrees with the sorted list.
+            for (j, &v) in slow.iter().enumerate() {
+                assert_eq!(t.neighbor_sorted(i, j), v as usize, "rank {j} at node {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn small_world_deterministic_and_regular() {
+        let a = ImplicitTopology::small_world(1001, 8, &mut Rng::new(9)).unwrap();
+        let b = ImplicitTopology::small_world(1001, 8, &mut Rng::new(9)).unwrap();
+        assert_eq!(a.half_offsets(), b.half_offsets());
+        assert_eq!(a.degree(), 8);
+        assert_eq!(a.half_offsets()[0], 1, "local band keeps connectivity");
+        assert_eq!(a.half_offsets().len(), 4);
+        let c = ImplicitTopology::small_world(1001, 8, &mut Rng::new(10)).unwrap();
+        assert_ne!(a.half_offsets(), c.half_offsets(), "seed must matter");
+    }
+
+    #[test]
+    fn memory_is_independent_of_n() {
+        let small = ImplicitTopology::ring_lattice(100, 8).unwrap();
+        let huge = ImplicitTopology::ring_lattice(100_000_000, 8).unwrap();
+        assert_eq!(small.memory_bytes(), huge.memory_bytes());
+        assert!(huge.memory_bytes() < 1024, "got {}", huge.memory_bytes());
+    }
+
+    #[test]
+    fn edge_list_covers_each_edge_once() {
+        let t = ImplicitTopology::new(12, vec![1, 3], "t").unwrap();
+        let edges = t.edge_list();
+        assert_eq!(edges.len(), t.m());
+        let mut keys: Vec<(u32, u32)> =
+            edges.iter().map(|&(a, b)| if a < b { (a, b) } else { (b, a) }).collect();
+        keys.sort_unstable();
+        let before = keys.len();
+        keys.dedup();
+        assert_eq!(keys.len(), before, "duplicate undirected edge");
+    }
+}

@@ -1,29 +1,30 @@
-//! Graph substrate: compressed-sparse-row undirected graphs, the generator
-//! families used in the paper's experiments (random d-regular,
-//! Erdős–Rényi, complete, power-law) plus ring/torus for tests, and
-//! structural properties (connectivity, degrees, stationary distribution,
-//! analytic mean return times).
+//! Graph substrate: the two-backend topology layer (materialized CSR +
+//! implicit circulant families), the generator families used in the
+//! paper's experiments (random d-regular, Erdős–Rényi, complete,
+//! power-law) plus ring/torus for tests, pool-parallel construction
+//! (`build`), and structural properties (connectivity, degrees,
+//! stationary distribution, analytic mean return times).
 
+pub mod build;
 pub mod generators;
+pub mod implicit;
 pub mod properties;
 
-pub use generators::{barabasi_albert, complete, erdos_renyi, grid_torus, random_regular, ring};
+pub use build::{from_edges_parallel, is_connected_parallel};
+pub use generators::{
+    barabasi_albert, complete, er_default_p, erdos_renyi, grid_torus, implicit_ring,
+    implicit_small_world, random_regular, random_regular_pooled, ring,
+};
+pub use implicit::{ImplicitTopology, MAX_IMPLICIT_DEGREE};
 
 use crate::rng::Rng;
 
-/// Undirected graph in CSR form. Nodes are `0..n`; `neighbors(i)` is the
-/// adjacency list of `i`. The representation is immutable after
-/// construction — the simulator never rewires the topology mid-run.
-///
-/// Construction also precomputes per-node sampling strata for the hop
-/// loop: the Lemire rejection threshold `(2⁶⁴ − deg) mod deg` for each
-/// node, so [`step`](Self::step) draws a uniform neighbor with zero
-/// integer divisions per hop while consuming the RNG stream **bit-for-bit
-/// identically** to `rng.below(deg)` (the determinism lock in
-/// `tests/golden_traces.rs` depends on that equivalence — an alias table
-/// would be division-free too but would change the draw sequence).
+/// The materialized backend: undirected graph in CSR form with the
+/// per-node Lemire threshold column. ~`8 + 8 + 4·deg` bytes per node —
+/// exact and family-agnostic, but both the footprint and the build walk
+/// every edge.
 #[derive(Debug, Clone)]
-pub struct Graph {
+struct Csr {
     offsets: Vec<usize>,
     adj: Vec<u32>,
     /// Per-node Lemire rejection threshold `deg.wrapping_neg() % deg`
@@ -31,23 +32,12 @@ pub struct Graph {
     step_threshold: Vec<u64>,
 }
 
-impl Graph {
-    /// Build from an undirected edge list. Self-loops and duplicate edges
-    /// are rejected: the paper's walks are simple random walks on simple
-    /// graphs.
-    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> anyhow::Result<Self> {
-        let mut seen = std::collections::HashSet::with_capacity(edges.len());
-        for &(a, b) in edges {
-            anyhow::ensure!((a as usize) < n && (b as usize) < n, "edge ({a},{b}) out of range");
-            anyhow::ensure!(a != b, "self-loop at {a}");
-            let key = if a < b { (a, b) } else { (b, a) };
-            anyhow::ensure!(seen.insert(key), "duplicate edge ({a},{b})");
-        }
-        let mut deg = vec![0usize; n];
-        for &(a, b) in edges {
-            deg[a as usize] += 1;
-            deg[b as usize] += 1;
-        }
+impl Csr {
+    /// Assemble from a pre-counted degree vector (the validation /
+    /// trust decision already happened at the caller): offsets scan,
+    /// scatter, per-node sort, thresholds. `build::from_edges_parallel`
+    /// is the chunked pool twin of this exact layout.
+    fn assemble(n: usize, edges: &[(u32, u32)], deg: Vec<usize>) -> Self {
         let mut offsets = Vec::with_capacity(n + 1);
         offsets.push(0usize);
         for d in &deg {
@@ -62,62 +52,31 @@ impl Graph {
             cursor[b as usize] += 1;
         }
         // Sort each adjacency list for deterministic iteration order.
-        let g = {
-            let step_threshold = deg
-                .iter()
-                .map(|&d| {
-                    let d = d as u64;
-                    if d == 0 {
-                        0
-                    } else {
-                        d.wrapping_neg() % d
-                    }
-                })
-                .collect();
-            let mut g = Graph { offsets, adj, step_threshold };
-            for i in 0..n {
-                let (lo, hi) = (g.offsets[i], g.offsets[i + 1]);
-                g.adj[lo..hi].sort_unstable();
-            }
-            g
-        };
-        Ok(g)
+        for i in 0..n {
+            let (lo, hi) = (offsets[i], offsets[i + 1]);
+            adj[lo..hi].sort_unstable();
+        }
+        let step_threshold = deg
+            .iter()
+            .map(|&d| {
+                let d = d as u64;
+                if d == 0 {
+                    0
+                } else {
+                    d.wrapping_neg() % d
+                }
+            })
+            .collect();
+        Csr { offsets, adj, step_threshold }
     }
 
-    /// Number of nodes.
     #[inline]
-    pub fn n(&self) -> usize {
-        self.offsets.len() - 1
-    }
-
-    /// Number of undirected edges.
-    #[inline]
-    pub fn m(&self) -> usize {
-        self.adj.len() / 2
-    }
-
-    /// Degree of node `i`.
-    #[inline]
-    pub fn degree(&self, i: usize) -> usize {
-        self.offsets[i + 1] - self.offsets[i]
-    }
-
-    /// Adjacency list of node `i`.
-    #[inline]
-    pub fn neighbors(&self, i: usize) -> &[u32] {
+    fn neighbors(&self, i: usize) -> &[u32] {
         &self.adj[self.offsets[i]..self.offsets[i + 1]]
     }
 
-    /// One step of a simple random walk from `i`: uniform neighbor.
-    ///
-    /// Division-free: Lemire's multiply-shift with the per-node rejection
-    /// threshold precomputed at construction. `rng.below(n)` accepts a
-    /// draw iff `lo ≥ n` or `lo ≥ (2⁶⁴ − n) mod n`; since the threshold
-    /// is `< n`, both collapse to the single precomputed comparison, so
-    /// this consumes the identical RNG stream (asserted by
-    /// `step_matches_rng_below_stream` below).
     #[inline]
-    pub fn step(&self, i: usize, rng: &mut Rng) -> usize {
+    fn step(&self, i: usize, rng: &mut Rng) -> usize {
         // Indexing through the per-node slice keeps the seed's
         // release-mode backstop: an isolated node (deg = 0) panics on
         // the empty slice instead of silently reading a neighbor of
@@ -134,9 +93,240 @@ impl Graph {
             }
         }
     }
+}
 
-    /// Whether the graph is connected (BFS from node 0). Empty graphs are
-    /// considered connected.
+/// Which representation serves a [`Graph`]'s queries.
+#[derive(Debug, Clone)]
+enum Backend {
+    Csr(Csr),
+    Implicit(ImplicitTopology),
+}
+
+/// Undirected graph behind one API and two backends. Nodes are `0..n`;
+/// `neighbors(i)` is the sorted adjacency list of `i`. The
+/// representation is immutable after construction — the simulator never
+/// rewires the topology mid-run.
+///
+/// * **CSR** (every `from_edges*` constructor, every materializing
+///   generator): stored offsets/adjacency/threshold columns, exactly
+///   the pre-backend layout — same bytes, same `step` Lemire path, same
+///   RNG consumption, so both pinned golden families are untouched.
+/// * **Implicit** ([`Graph::from_implicit`], the `implicit_*`
+///   generators): circulant families whose neighbor sets are computed
+///   on demand from the offset parameters — O(1) memory per node, the
+///   backend the `scale_10m`/`scale_100m` presets run on. `step`
+///   consumes the RNG stream bit-identically to the CSR the topology
+///   would materialize to (`tests/graph_backend.rs` locks this).
+///
+/// Construction also precomputes per-node sampling strata for the hop
+/// loop: the Lemire rejection threshold `(2⁶⁴ − deg) mod deg` for each
+/// node, so [`step`](Self::step) draws a uniform neighbor with zero
+/// integer divisions per hop while consuming the RNG stream **bit-for-bit
+/// identically** to `rng.below(deg)` (the determinism lock in
+/// `tests/golden_traces.rs` depends on that equivalence — an alias table
+/// would be division-free too but would change the draw sequence).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    backend: Backend,
+}
+
+impl Graph {
+    /// Build from an undirected edge list, **validating** it: self-loops,
+    /// duplicate edges and out-of-range endpoints are rejected (the
+    /// paper's walks are simple random walks on simple graphs). One pass
+    /// folds validation into the degree count; this is the entry point
+    /// for untrusted input. Generator-internal output goes through
+    /// [`from_edges_trusted`](Self::from_edges_trusted) /
+    /// [`build::from_edges_parallel`] instead.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> anyhow::Result<Self> {
+        let mut seen = std::collections::HashSet::with_capacity(edges.len());
+        let mut deg = vec![0usize; n];
+        for &(a, b) in edges {
+            anyhow::ensure!((a as usize) < n && (b as usize) < n, "edge ({a},{b}) out of range");
+            anyhow::ensure!(a != b, "self-loop at {a}");
+            let key = if a < b { (a, b) } else { (b, a) };
+            anyhow::ensure!(seen.insert(key), "duplicate edge ({a},{b})");
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        Ok(Graph { backend: Backend::Csr(Csr::assemble(n, edges, deg)) })
+    }
+
+    /// [`from_edges`](Self::from_edges) minus the O(m) HashSet pass, for
+    /// edge lists that are simple **by construction** (generator
+    /// output). Debug builds still run the full validation; release
+    /// builds trust the caller.
+    pub fn from_edges_trusted(n: usize, edges: &[(u32, u32)]) -> Self {
+        #[cfg(debug_assertions)]
+        Self::debug_validate_simple(n, edges);
+        let mut deg = vec![0usize; n];
+        for &(a, b) in edges {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        Graph { backend: Backend::Csr(Csr::assemble(n, edges, deg)) }
+    }
+
+    /// The trusted-path debug backstop: panics on any violation of the
+    /// simple-graph contract.
+    #[cfg(debug_assertions)]
+    pub(crate) fn debug_validate_simple(n: usize, edges: &[(u32, u32)]) {
+        let mut seen = std::collections::HashSet::with_capacity(edges.len());
+        for &(a, b) in edges {
+            assert!((a as usize) < n && (b as usize) < n, "trusted edge ({a},{b}) out of range");
+            assert!(a != b, "trusted self-loop at {a}");
+            let key = if a < b { (a, b) } else { (b, a) };
+            assert!(seen.insert(key), "trusted duplicate edge ({a},{b})");
+        }
+    }
+
+    /// Wrap an implicit topology — zero stored edges, O(1) memory per
+    /// node, every `Graph` method answered by on-demand derivation.
+    pub fn from_implicit(topology: ImplicitTopology) -> Self {
+        Graph { backend: Backend::Implicit(topology) }
+    }
+
+    /// Internal CSR constructor for [`build::from_edges_parallel`].
+    fn from_csr(csr: Csr) -> Self {
+        Graph { backend: Backend::Csr(csr) }
+    }
+
+    /// Whether queries are served by on-demand derivation (no stored
+    /// edges) rather than materialized CSR columns.
+    #[inline]
+    pub fn is_implicit(&self) -> bool {
+        matches!(self.backend, Backend::Implicit(_))
+    }
+
+    /// Backend tag for reports and bench JSON.
+    #[inline]
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Csr(_) => "csr",
+            Backend::Implicit(_) => "implicit",
+        }
+    }
+
+    /// The implicit topology behind this graph, if that is the backend.
+    #[inline]
+    pub fn implicit(&self) -> Option<&ImplicitTopology> {
+        match &self.backend {
+            Backend::Csr(_) => None,
+            Backend::Implicit(t) => Some(t),
+        }
+    }
+
+    /// Resident bytes of the topology representation (the stored CSR
+    /// columns, or the implicit backend's O(1) parameter block). The
+    /// `perf_graph` memory-per-node budget is asserted on this.
+    pub fn memory_bytes(&self) -> usize {
+        match &self.backend {
+            Backend::Csr(c) => {
+                c.offsets.len() * std::mem::size_of::<usize>()
+                    + c.adj.len() * std::mem::size_of::<u32>()
+                    + c.step_threshold.len() * std::mem::size_of::<u64>()
+            }
+            Backend::Implicit(t) => t.memory_bytes(),
+        }
+    }
+
+    /// Materialize into the CSR backend: bit-identical neighbor sets,
+    /// degrees, thresholds and `step` RNG streams (the invariance lock
+    /// in `tests/graph_backend.rs`). A CSR graph clones.
+    pub fn materialize(&self) -> Graph {
+        match &self.backend {
+            Backend::Csr(_) => self.clone(),
+            Backend::Implicit(t) => Graph::from_edges_trusted(t.n(), &t.edge_list()),
+        }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn n(&self) -> usize {
+        match &self.backend {
+            Backend::Csr(c) => c.offsets.len() - 1,
+            Backend::Implicit(t) => t.n(),
+        }
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        match &self.backend {
+            Backend::Csr(c) => c.adj.len() / 2,
+            Backend::Implicit(t) => t.m(),
+        }
+    }
+
+    /// Degree of node `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        match &self.backend {
+            Backend::Csr(c) => c.offsets[i + 1] - c.offsets[i],
+            Backend::Implicit(t) => t.degree(),
+        }
+    }
+
+    /// Sorted adjacency list of node `i`.
+    ///
+    /// **Scratch contract** (implicit backend): the returned slice
+    /// lives in a small per-thread scratch buffer and stays valid only
+    /// until the same thread's next implicit-backend `neighbors` call
+    /// (on any graph — the scratch is shared per thread). Iterating one
+    /// node's slice before asking for the next — what every call site
+    /// in the engines, controls and properties does — is always fine;
+    /// code holding two nodes' lists at once must copy the first
+    /// (`.to_vec()`) or use [`neighbors_into`](Self::neighbors_into)
+    /// with its own buffers. On the CSR backend the slice borrows the
+    /// graph itself and has no such constraint.
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        match &self.backend {
+            Backend::Csr(c) => c.neighbors(i),
+            Backend::Implicit(t) => t.scratch_neighbors(i),
+        }
+    }
+
+    /// Copy node `i`'s sorted adjacency list into `out` (cleared
+    /// first). The scratch-free form of [`neighbors`](Self::neighbors):
+    /// callers own the buffer, so many threads can query concurrently
+    /// and hold many nodes' lists at once on either backend.
+    #[inline]
+    pub fn neighbors_into(&self, i: usize, out: &mut Vec<u32>) {
+        out.clear();
+        match &self.backend {
+            Backend::Csr(c) => out.extend_from_slice(c.neighbors(i)),
+            Backend::Implicit(t) => {
+                let mut buf = [0u32; MAX_IMPLICIT_DEGREE];
+                let d = t.fill_sorted(i, &mut buf);
+                out.extend_from_slice(&buf[..d]);
+            }
+        }
+    }
+
+    /// One step of a simple random walk from `i`: uniform neighbor.
+    ///
+    /// Division-free: Lemire's multiply-shift with the per-node rejection
+    /// threshold precomputed at construction. `rng.below(n)` accepts a
+    /// draw iff `lo ≥ n` or `lo ≥ (2⁶⁴ − n) mod n`; since the threshold
+    /// is `< n`, both collapse to the single precomputed comparison, so
+    /// this consumes the identical RNG stream (asserted by
+    /// `step_matches_rng_below_stream` below). The implicit backend runs
+    /// the same loop against its shared threshold and selects by sorted
+    /// rank — bit-identical draws *and* destinations versus the
+    /// materialized CSR (`tests/graph_backend.rs`).
+    #[inline]
+    pub fn step(&self, i: usize, rng: &mut Rng) -> usize {
+        match &self.backend {
+            Backend::Csr(c) => c.step(i, rng),
+            Backend::Implicit(t) => t.step(i, rng),
+        }
+    }
+
+    /// Whether the graph is connected (BFS from node 0, on-demand
+    /// neighbor derivation on the implicit backend). Empty graphs are
+    /// considered connected. `build::is_connected_parallel` is the
+    /// pool-parallel form for generator-scale graphs.
     pub fn is_connected(&self) -> bool {
         let n = self.n();
         if n == 0 {
@@ -144,11 +334,13 @@ impl Graph {
         }
         let mut seen = vec![false; n];
         let mut queue = std::collections::VecDeque::new();
+        let mut nbrs = Vec::new();
         seen[0] = true;
         queue.push_back(0usize);
         let mut count = 1;
         while let Some(u) = queue.pop_front() {
-            for &v in self.neighbors(u) {
+            self.neighbors_into(u, &mut nbrs);
+            for &v in &nbrs {
                 if !seen[v as usize] {
                     seen[v as usize] = true;
                     count += 1;
@@ -164,10 +356,12 @@ impl Graph {
         let n = self.n();
         let mut dist = vec![usize::MAX; n];
         let mut queue = std::collections::VecDeque::new();
+        let mut nbrs = Vec::new();
         dist[src] = 0;
         queue.push_back(src);
         while let Some(u) = queue.pop_front() {
-            for &v in self.neighbors(u) {
+            self.neighbors_into(u, &mut nbrs);
+            for &v in &nbrs {
                 let v = v as usize;
                 if dist[v] == usize::MAX {
                     dist[v] = dist[u] + 1;
@@ -207,6 +401,8 @@ mod tests {
         assert_eq!(g.degree(0), 2);
         assert_eq!(g.neighbors(0), &[1, 3]);
         assert!(g.is_connected());
+        assert!(!g.is_implicit());
+        assert_eq!(g.backend_name(), "csr");
     }
 
     #[test]
@@ -214,6 +410,32 @@ mod tests {
         assert!(Graph::from_edges(3, &[(0, 0)]).is_err());
         assert!(Graph::from_edges(3, &[(0, 1), (1, 0)]).is_err());
         assert!(Graph::from_edges(2, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn trusted_matches_validating_constructor() {
+        let edges = [(0u32, 1u32), (1, 2), (2, 3), (3, 0), (0, 2)];
+        let a = Graph::from_edges(4, &edges).unwrap();
+        let b = Graph::from_edges_trusted(4, &edges);
+        assert_eq!(a.m(), b.m());
+        for i in 0..4 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+        // Bit-identical step streams (same thresholds by construction).
+        let (mut ra, mut rb) = (Rng::new(3), Rng::new(3));
+        let (mut pa, mut pb) = (0usize, 0usize);
+        for _ in 0..2000 {
+            pa = a.step(pa, &mut ra);
+            pb = b.step(pb, &mut rb);
+            assert_eq!(pa, pb);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "trusted duplicate edge")]
+    #[cfg(debug_assertions)]
+    fn trusted_path_still_panics_in_debug_builds() {
+        let _ = Graph::from_edges_trusted(3, &[(0, 1), (1, 0)]);
     }
 
     #[test]
@@ -226,6 +448,60 @@ mod tests {
     fn bfs_distances_line() {
         let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
         assert_eq!(g.bfs_distances(0), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn neighbors_into_matches_neighbors_on_both_backends() {
+        let csr = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (3, 4)]).unwrap();
+        let imp = Graph::from_implicit(ImplicitTopology::ring_lattice(9, 4).unwrap());
+        let mut buf = Vec::new();
+        for g in [&csr, &imp] {
+            for i in 0..g.n() {
+                g.neighbors_into(i, &mut buf);
+                assert_eq!(buf.as_slice(), g.neighbors(i));
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_backend_dispatches_through_graph_api() {
+        // C_n({1}) is the plain ring — compare against the materializing
+        // ring generator on every API surface.
+        let imp = Graph::from_implicit(ImplicitTopology::new(10, vec![1], "ring").unwrap());
+        let csr = generators::ring(10);
+        assert!(imp.is_implicit());
+        assert_eq!(imp.backend_name(), "implicit");
+        assert_eq!((imp.n(), imp.m()), (csr.n(), csr.m()));
+        for i in 0..10 {
+            assert_eq!(imp.degree(i), csr.degree(i));
+            assert_eq!(imp.neighbors(i).to_vec(), csr.neighbors(i));
+            assert_eq!(imp.bfs_distances(i), csr.bfs_distances(i));
+            assert!((imp.stationary(i) - csr.stationary(i)).abs() < 1e-15);
+        }
+        assert!(imp.is_connected());
+        // Disconnected circulant: C_10({2}) is two 5-cycles.
+        let two = Graph::from_implicit(ImplicitTopology::new(10, vec![2], "t").unwrap());
+        assert!(!two.is_connected());
+        assert_eq!(two.bfs_distances(0)[1], usize::MAX);
+    }
+
+    #[test]
+    fn memory_bytes_o1_for_implicit_linear_for_csr() {
+        let imp = Graph::from_implicit(ImplicitTopology::ring_lattice(1_000_000, 8).unwrap());
+        assert!(imp.memory_bytes() < 1024, "implicit: {}", imp.memory_bytes());
+        let csr = imp.materialize();
+        // 8 B offsets + 8 B threshold + 4·8 B adjacency per node.
+        assert!(csr.memory_bytes() > 1_000_000 * 40, "csr: {}", csr.memory_bytes());
+    }
+
+    #[test]
+    fn materialize_is_identity_on_csr() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]).unwrap();
+        let m = g.materialize();
+        assert_eq!(m.backend_name(), "csr");
+        for i in 0..4 {
+            assert_eq!(g.neighbors(i), m.neighbors(i));
+        }
     }
 
     #[test]

@@ -34,6 +34,9 @@ use decafork::{figures, theory};
 const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> [flags]
 
   simulate --graph regular|er|complete|ba --n 100 --d 8 --z0 10
+           --topology implicit-ring|implicit-smallworld|<any --graph value>
+                        (implicit-*: zero-edge-storage backend, works at
+                         --n 10000000 and beyond)
            --control decafork|decafork+|missingperson|periodic|none
            --eps 2.0 --eps2 5.75 --eps-mp 600 --period 100
            --pf 0.0 --bursts 2000:5,6000:6 --byz-node -1
@@ -56,7 +59,7 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
   actors   --n 32 --d 4 --z0 6 --pf 0.002 --hops 200000 --eps 2.0
   theory   --z0 10 --d 5 --eps 2.0 --n 100
   design   --z0 10 --delta 1e-4
-  info     --graph regular --n 100 --d 8
+  info     --graph regular --n 100 --d 8   (--topology works here too)
 ";
 
 fn main() {

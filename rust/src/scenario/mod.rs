@@ -38,6 +38,7 @@ use std::sync::Arc;
 
 use crate::graph::Graph;
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 use crate::sim::engine::{Engine, SimParams};
 use crate::sim::reference::ReferenceEngine;
 use crate::sim::sharded::{DispatchMode, ShardedEngine};
@@ -121,10 +122,20 @@ impl Scenario {
         dispatch: DispatchMode,
     ) -> anyhow::Result<ShardedEngine> {
         let (mut grng, srng) = self.rngs(run);
-        let graph = Arc::new(self.graph.build(&mut grng)?);
+        // Spawn the engine's worker pool first and lend it to graph
+        // construction, so families with a parallel build path
+        // (`random_regular` at preset scale) assemble their CSR on the
+        // same threads the run will step on. Graph bytes and RNG
+        // consumption are pool-invariant, so this changes build *time*
+        // only — never the trace.
+        let mut pool = match dispatch {
+            DispatchMode::Pooled if shards > 1 => Some(WorkerPool::new(shards - 1)),
+            _ => None,
+        };
+        let graph = Arc::new(self.graph.build_pooled(&mut grng, pool.as_mut())?);
         let control = self.control.build_control(graph.n());
         let failures = self.failures.build_failures();
-        Ok(ShardedEngine::with_dispatch(
+        Ok(ShardedEngine::with_pool(
             graph,
             self.params.clone(),
             control,
@@ -132,6 +143,7 @@ impl Scenario {
             srng,
             shards,
             dispatch,
+            pool,
         ))
     }
 
@@ -255,6 +267,25 @@ mod tests {
         for i in 0..24 {
             assert_eq!(seq.graph.neighbors(i), sh.graph.neighbors(i));
         }
+    }
+
+    #[test]
+    fn sharded_engine_invariant_on_implicit_topology() {
+        // The stream-mode engine never materializes the graph: hop and
+        // control phases derive neighbors on demand through the same
+        // `Graph` API, and shard invariance must hold there too.
+        let mut cfg = presets::fig1_base(1);
+        cfg.graph = GraphSpec::ImplicitSmallWorld { n: 300, d: 8 };
+        cfg.horizon = 150;
+        cfg.params.record_theta = true;
+        let run = |shards: usize| {
+            let mut e = cfg.sharded_engine(0, shards).unwrap();
+            assert!(e.graph.is_implicit());
+            e.run_to(150);
+            e.into_trace()
+        };
+        let base = run(1);
+        assert!(base.bit_identical(&run(4)), "implicit-backend trace depends on worker count");
     }
 
     #[test]

@@ -5,15 +5,37 @@ use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::cli::Args;
 use crate::sim::engine::{SimParams, SurvivalSpec};
 
-/// `--graph regular|er|complete|ba|ring` plus its family flags.
+/// `--graph regular|er|complete|ba|ring` plus its family flags, and
+/// `--topology` — the same knob under the name the implicit families
+/// introduced (every `--graph` value works there too, plus
+/// `implicit-ring`/`implicit-smallworld`). Giving both is an error
+/// rather than a precedence rule.
 pub fn graph(args: &Args) -> anyhow::Result<GraphSpec> {
     let n = args.get("n", 100usize)?;
-    Ok(match args.get_str("graph", "regular").as_str() {
+    anyhow::ensure!(
+        !args.has("topology"),
+        "--topology needs a value (e.g. --topology implicit-smallworld)"
+    );
+    anyhow::ensure!(
+        !(args.flags.contains_key("graph") && args.flags.contains_key("topology")),
+        "--graph and --topology are the same knob — give one"
+    );
+    let family = match args.flags.get("topology") {
+        Some(t) => t.clone(),
+        None => args.get_str("graph", "regular"),
+    };
+    Ok(match family.as_str() {
         "regular" => GraphSpec::RandomRegular { n, d: args.get("d", 8usize)? },
         "er" | "erdos-renyi" => GraphSpec::ErdosRenyi { n, p: args.get("p", 0.08f64)? },
         "complete" => GraphSpec::Complete { n },
         "ba" | "power-law" => GraphSpec::PowerLaw { n, m: args.get("m", 4usize)? },
         "ring" => GraphSpec::Ring { n },
+        "implicit-ring" | "implicit-regular" => {
+            GraphSpec::ImplicitRegular { n, d: args.get("d", 8usize)? }
+        }
+        "implicit-smallworld" | "smallworld" => {
+            GraphSpec::ImplicitSmallWorld { n, d: args.get("d", 8usize)? }
+        }
         other => anyhow::bail!("unknown graph '{other}'"),
     })
 }
@@ -210,6 +232,23 @@ mod tests {
         assert_eq!(s.failures, FailureSpec::paper_bursts());
         assert_eq!(s.control, ControlSpec::Decafork { epsilon: 2.0 });
         assert_eq!(s.params.shards, 1, "default must stay on the shared-stream engine");
+    }
+
+    #[test]
+    fn topology_knob_selects_implicit_families() {
+        let s = scenario(&args("simulate --topology implicit-smallworld --n 4096 --d 8")).unwrap();
+        assert_eq!(s.graph, GraphSpec::ImplicitSmallWorld { n: 4096, d: 8 });
+        let r = graph(&args("simulate --topology implicit-ring --n 64 --d 4")).unwrap();
+        assert_eq!(r, GraphSpec::ImplicitRegular { n: 64, d: 4 });
+        // --topology accepts the materializing families too…
+        let g = graph(&args("simulate --topology ring --n 12")).unwrap();
+        assert_eq!(g, GraphSpec::Ring { n: 12 });
+        // …valueless and both-knobs forms are errors, not fallbacks.
+        let e = graph(&args("simulate --topology")).unwrap_err().to_string();
+        assert!(e.contains("--topology"), "{e}");
+        let e = graph(&args("simulate --graph ring --topology ring")).unwrap_err().to_string();
+        assert!(e.contains("same knob"), "{e}");
+        assert!(graph(&args("simulate --topology nope")).is_err());
     }
 
     #[test]

@@ -237,6 +237,71 @@ pub fn scale_1m() -> Scenario {
     }
 }
 
+/// The first implicit-backend scale probe: 10⁷ nodes on the
+/// degree-preserving small world, plain DECAFORK on the
+/// analytic-geometric family. The materialized CSR at this size would
+/// cost ~0.5 GB and minutes of single-threaded pairing; the implicit
+/// circulant family needs a few dozen bytes *total* for the topology and
+/// builds in microseconds, so what this probe actually prices is the
+/// engine's O(n) per-node state (`NodeState` + node streams, ~100 B/node
+/// ≈ 1 GB here) and the walk columns — exactly the scaling frontier
+/// ROADMAP names next. `benches/perf_graph.rs` runs it end-to-end
+/// (gated by `DECAFORK_PERF_SKIP_10M`); the acceptance bar is
+/// completion with steps/sec recorded, as for `scale_1m`.
+///
+/// Thresholds follow the scale-preset design rule (ε = Z0/4, 10%
+/// burst, p_f = 5e-4, explicit `control_start` well inside the
+/// horizon); Z0 doubles over `scale_1m` to keep the walk population
+/// dense relative to the failure volume at the shorter horizon.
+pub fn scale_10m() -> Scenario {
+    Scenario {
+        graph: GraphSpec::ImplicitSmallWorld { n: 10_000_000, d: 8 },
+        params: SimParams {
+            z0: 16_384,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(150),
+            max_walks: 32_768,
+            ..SimParams::default()
+        },
+        control: ControlSpec::Decafork { epsilon: 4096.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(200, 1638)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 500,
+        runs: 1,
+        seed: 0xCAFE5,
+    }
+}
+
+/// The 10⁸-node shape: same design as [`scale_10m`] one order up. The
+/// topology is still O(1) memory, but the engine's per-node state is
+/// ~10 GB at this n — beyond the default CI box, so this preset is a
+/// **shape-locked target**, not a bench gate: `perf_graph` asserts the
+/// implicit topology itself (build + memory + step sampling) at 10⁸
+/// while the full engine probe stays manual until the per-node state
+/// becomes sparse (ROADMAP).
+pub fn scale_100m() -> Scenario {
+    Scenario {
+        graph: GraphSpec::ImplicitSmallWorld { n: 100_000_000, d: 8 },
+        params: SimParams {
+            z0: 32_768,
+            survival: SurvivalSpec::AnalyticGeometric,
+            control_start: Some(80),
+            max_walks: 65_536,
+            ..SimParams::default()
+        },
+        control: ControlSpec::Decafork { epsilon: 8192.0 },
+        failures: FailureSpec::Composite(vec![
+            FailureSpec::Burst { events: vec![(100, 3276)] },
+            FailureSpec::Probabilistic { p_f: 0.0005 },
+        ]),
+        horizon: 250,
+        runs: 1,
+        seed: 0xCAFE6,
+    }
+}
+
 /// Simulation side of the `learn_tiny` training workload
 /// (`learning::presets` adds the corpus/operator knobs): 64 nodes,
 /// 8 walks, one burst plus a light probabilistic drip so the trainer's
@@ -478,6 +543,35 @@ mod tests {
         r.rescale_to(200);
         assert_eq!(r.horizon, 200);
         assert_eq!(r.params.control_start, Some(40));
+    }
+
+    #[test]
+    fn implicit_scale_presets_are_wired() {
+        // Shape lock for the 10⁷/10⁸ probes. Building the graph here is
+        // actually cheap (implicit backend — microseconds, O(1) bytes),
+        // so unlike scale_1m we can afford to construct the topology and
+        // check it; only the engine's O(n) node state is bench-time.
+        for (name, s, n) in
+            [("scale_10m", scale_10m(), 10_000_000), ("scale_100m", scale_100m(), 100_000_000)]
+        {
+            assert_eq!(s.graph, GraphSpec::ImplicitSmallWorld { n, d: 8 }, "{name}");
+            assert!(s.params.control_start.is_some(), "{name}: auto warm-up exceeds horizon");
+            assert!(
+                matches!(s.params.survival, SurvivalSpec::AnalyticGeometric),
+                "{name}: empirical CDF unreachable at E[R] = n"
+            );
+            let g = s.build_graph(0).unwrap();
+            assert!(g.is_implicit(), "{name}");
+            assert_eq!(g.n(), n, "{name}");
+            assert_eq!(g.degree(0), 8, "{name}");
+            assert!(g.memory_bytes() < 1024, "{name}: topology must stay O(1) memory");
+        }
+        assert!(scale_10m().params.z0 >= 16_384, "dense walk population at 10⁷");
+        // The 10m probe must survive the bench's quick-mode rescale.
+        let mut r = scale_10m();
+        r.rescale_to(100);
+        assert_eq!(r.horizon, 100);
+        assert_eq!(r.params.control_start, Some(30));
     }
 
     #[test]

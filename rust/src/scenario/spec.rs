@@ -12,6 +12,7 @@ use crate::failures::{
 };
 use crate::graph::{generators, Graph};
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 
 /// Which graph to build.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,17 +23,40 @@ pub enum GraphSpec {
     PowerLaw { n: usize, m: usize },
     Ring { n: usize },
     Torus { w: usize, h: usize },
+    /// d-regular circulant ring lattice on the implicit backend (zero
+    /// stored edges — the 10⁷⁺-node families).
+    ImplicitRegular { n: usize, d: usize },
+    /// Degree-preserving small world on the implicit backend.
+    ImplicitSmallWorld { n: usize, d: usize },
 }
 
 impl GraphSpec {
     pub fn build(&self, rng: &mut Rng) -> anyhow::Result<Graph> {
+        self.build_pooled(rng, None)
+    }
+
+    /// [`build`](Self::build) with an optional worker pool: families
+    /// with a parallel construction path (currently `RandomRegular`)
+    /// use it for CSR assembly and the connectivity check; all others
+    /// ignore it. Graph-RNG consumption and the built graph are
+    /// identical with or without a pool.
+    pub fn build_pooled(
+        &self,
+        rng: &mut Rng,
+        pool: Option<&mut WorkerPool>,
+    ) -> anyhow::Result<Graph> {
         match *self {
-            GraphSpec::RandomRegular { n, d } => generators::random_regular(n, d, rng),
+            GraphSpec::RandomRegular { n, d } => match pool {
+                Some(pool) => generators::random_regular_pooled(n, d, rng, pool),
+                None => generators::random_regular(n, d, rng),
+            },
             GraphSpec::ErdosRenyi { n, p } => generators::erdos_renyi(n, p, rng),
             GraphSpec::Complete { n } => Ok(generators::complete(n)),
             GraphSpec::PowerLaw { n, m } => generators::barabasi_albert(n, m, rng),
             GraphSpec::Ring { n } => Ok(generators::ring(n)),
             GraphSpec::Torus { w, h } => Ok(generators::grid_torus(w, h)),
+            GraphSpec::ImplicitRegular { n, d } => generators::implicit_ring(n, d),
+            GraphSpec::ImplicitSmallWorld { n, d } => generators::implicit_small_world(n, d, rng),
         }
     }
 
@@ -44,6 +68,8 @@ impl GraphSpec {
             GraphSpec::PowerLaw { n, m } => format!("power-law(n={n},m={m})"),
             GraphSpec::Ring { n } => format!("ring(n={n})"),
             GraphSpec::Torus { w, h } => format!("torus({w}x{h})"),
+            GraphSpec::ImplicitRegular { n, d } => format!("implicit-{d}-ring(n={n})"),
+            GraphSpec::ImplicitSmallWorld { n, d } => format!("implicit-smallworld(n={n},d={d})"),
         }
     }
 
@@ -54,7 +80,9 @@ impl GraphSpec {
             | GraphSpec::ErdosRenyi { n, .. }
             | GraphSpec::Complete { n }
             | GraphSpec::PowerLaw { n, .. }
-            | GraphSpec::Ring { n } => n,
+            | GraphSpec::Ring { n }
+            | GraphSpec::ImplicitRegular { n, .. }
+            | GraphSpec::ImplicitSmallWorld { n, .. } => n,
             GraphSpec::Torus { w, h } => w * h,
         }
     }
@@ -178,9 +206,38 @@ mod tests {
             GraphSpec::Torus { w: 4, h: 4 },
             GraphSpec::ErdosRenyi { n: 30, p: 0.3 },
             GraphSpec::PowerLaw { n: 30, m: 3 },
+            GraphSpec::ImplicitRegular { n: 40, d: 8 },
+            GraphSpec::ImplicitSmallWorld { n: 40, d: 8 },
         ] {
             let g = spec.build(&mut rng).unwrap();
             assert!(g.is_connected(), "{}", spec.label());
+            assert_eq!(g.n(), spec.nodes(), "{}", spec.label());
+        }
+    }
+
+    #[test]
+    fn implicit_specs_use_implicit_backend() {
+        let mut rng = Rng::new(2);
+        for spec in [
+            GraphSpec::ImplicitRegular { n: 100, d: 8 },
+            GraphSpec::ImplicitSmallWorld { n: 100, d: 8 },
+        ] {
+            let g = spec.build(&mut rng).unwrap();
+            assert!(g.is_implicit(), "{}", spec.label());
+            assert!((0..100).all(|i| g.degree(i) == 8), "{}", spec.label());
+        }
+        assert_eq!(GraphSpec::ImplicitRegular { n: 100, d: 8 }.label(), "implicit-8-ring(n=100)");
+    }
+
+    #[test]
+    fn build_pooled_matches_build() {
+        // Same RNG stream, same graph, pool or not.
+        let spec = GraphSpec::RandomRegular { n: 60, d: 6 };
+        let a = spec.build(&mut Rng::new(7)).unwrap();
+        let mut pool = WorkerPool::new(2);
+        let b = spec.build_pooled(&mut Rng::new(7), Some(&mut pool)).unwrap();
+        for i in 0..60 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
         }
     }
 

@@ -219,6 +219,30 @@ impl ShardedEngine {
         shards: usize,
         dispatch: DispatchMode,
     ) -> Self {
+        Self::with_pool(graph, params, control, failures, base, shards, dispatch, None)
+    }
+
+    /// [`with_dispatch`](Self::with_dispatch) that can adopt an existing
+    /// [`WorkerPool`] — e.g. the one that just built the graph
+    /// (`Scenario::sharded_engine_dispatch` hands its construction pool
+    /// over), so a run spawns its threads once instead of once per
+    /// subsystem. The pool is adopted only when its worker count matches
+    /// what this dispatch/shard combination would have spawned
+    /// (`shards − 1` in pooled mode); otherwise it is dropped here and
+    /// the engine builds its own, keeping thread accounting
+    /// (`pooled_workers`) and phase chunking identical to the
+    /// non-adopting constructors. Results never depend on pool identity.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_pool(
+        graph: Arc<Graph>,
+        params: SimParams,
+        control: impl Into<Control>,
+        failures: impl Into<Failures>,
+        base: Rng,
+        shards: usize,
+        dispatch: DispatchMode,
+        adopt: Option<WorkerPool>,
+    ) -> Self {
         let shards = shards.max(1);
         let n = graph.n();
         let control = control.into();
@@ -260,7 +284,10 @@ impl ShardedEngine {
         let mut trace = Trace::default();
         trace.z.push(z0);
         let pool = match dispatch {
-            DispatchMode::Pooled if shards > 1 => Some(WorkerPool::new(shards - 1)),
+            DispatchMode::Pooled if shards > 1 => Some(match adopt {
+                Some(p) if p.workers() == shards - 1 => p,
+                _ => WorkerPool::new(shards - 1),
+            }),
             _ => None,
         };
         ShardedEngine {

@@ -1,0 +1,177 @@
+//! The topology-backend invariance locks (ISSUE 6): the implicit
+//! circulant backend must be **bit-identical** to the CSR it
+//! materializes to — degrees, sorted neighbor lists, and the `step`
+//! RNG-draw sequence — and the pool-parallel CSR builder must reproduce
+//! the sequential validating builder neighbor-for-neighbor at every
+//! worker count. These are the guarantees that let `scale_10m` run on
+//! zero stored edges while both pinned golden families stay untouched
+//! on the CSR backend.
+
+use decafork::graph::{build, generators, Graph, ImplicitTopology};
+use decafork::rng::Rng;
+use decafork::runtime::WorkerPool;
+
+/// Copy the implicit side's list before touching the other graph — the
+/// implicit `neighbors` slice lives in per-thread scratch.
+fn neighbors_owned(g: &Graph, i: usize) -> Vec<u32> {
+    g.neighbors(i).to_vec()
+}
+
+#[test]
+fn implicit_matches_materialized_oracle() {
+    // Randomized families: ring lattices and small worlds across sizes
+    // and degrees; every one must materialize to an identical CSR.
+    for case in 0u64..12 {
+        let mut rng = Rng::new(0x0B5E55ED ^ case);
+        let n = 50 + rng.below(400);
+        let d = [4usize, 6, 8][rng.below(3)];
+        let imp = if case % 2 == 0 {
+            Graph::from_implicit(ImplicitTopology::ring_lattice(n, d).unwrap())
+        } else {
+            Graph::from_implicit(ImplicitTopology::small_world(n, d, &mut rng).unwrap())
+        };
+        let mat = imp.materialize();
+        assert!(!mat.is_implicit());
+        assert_eq!((imp.n(), imp.m()), (mat.n(), mat.m()), "case {case}");
+        for i in 0..n {
+            assert_eq!(imp.degree(i), d, "case {case}, node {i}");
+            assert_eq!(neighbors_owned(&imp, i), mat.neighbors(i), "case {case}, node {i}");
+        }
+        // 50k step draws bit-for-bit, and the RNG streams must stay in
+        // lockstep (same number of Lemire rejections — i.e. identical
+        // thresholds — not just same destinations).
+        let (mut ra, mut rb) = (Rng::new(case ^ 0xF00D), Rng::new(case ^ 0xF00D));
+        let (mut pa, mut pb) = (0usize, 0usize);
+        for hop in 0..50_000 {
+            pa = imp.step(pa, &mut ra);
+            pb = mat.step(pb, &mut rb);
+            assert_eq!(pa, pb, "case {case}: destinations diverged at hop {hop}");
+        }
+        assert_eq!(ra.next_u64(), rb.next_u64(), "case {case}: rng streams diverged");
+    }
+}
+
+#[test]
+fn implicit_step_matches_rng_below_stream() {
+    // The implicit sampler must consume the stream exactly like
+    // `nbrs[rng.below(deg)]` — the same equivalence the CSR backend
+    // locks in its module tests.
+    let g = Graph::from_implicit(ImplicitTopology::small_world(300, 8, &mut Rng::new(5)).unwrap());
+    let mut ra = Rng::new(0xFEED);
+    let mut rb = ra.clone();
+    let (mut pa, mut pb) = (0usize, 0usize);
+    for _ in 0..50_000 {
+        pa = g.step(pa, &mut ra);
+        let nbrs = neighbors_owned(&g, pb);
+        pb = nbrs[rb.below(nbrs.len())] as usize;
+        assert_eq!(pa, pb);
+        assert_eq!(ra.next_u64(), rb.next_u64(), "rng streams diverged");
+    }
+}
+
+#[test]
+fn implicit_bfs_and_connectivity() {
+    // Plain ring C_n({1}): distances have a closed form.
+    let ring = Graph::from_implicit(ImplicitTopology::new(31, vec![1], "ring").unwrap());
+    let dist = ring.bfs_distances(4);
+    for (j, &dj) in dist.iter().enumerate() {
+        let around = (j as i64 - 4).rem_euclid(31) as usize;
+        assert_eq!(dj, around.min(31 - around), "node {j}");
+    }
+    assert!(ring.is_connected());
+    // C_10({2}) splits into two 5-cycles: implicit BFS must see it.
+    let split = Graph::from_implicit(ImplicitTopology::new(10, vec![2], "split").unwrap());
+    assert!(!split.is_connected());
+    let d0 = split.bfs_distances(0);
+    assert_eq!(d0[1], usize::MAX);
+    assert_eq!(d0[4], 2);
+    // And the generic oracle: implicit BFS == materialized BFS.
+    let sw = Graph::from_implicit(ImplicitTopology::small_world(257, 8, &mut Rng::new(9)).unwrap());
+    let mat = sw.materialize();
+    assert_eq!(sw.is_connected(), mat.is_connected());
+    for src in [0usize, 13, 256] {
+        assert_eq!(sw.bfs_distances(src), mat.bfs_distances(src), "src {src}");
+    }
+}
+
+/// Deterministic irregular edge list big enough to cross
+/// `PARALLEL_MIN_EDGES`: a ring for connectivity plus seeded random
+/// chords (deduped, self-loop-free).
+fn irregular_edges(n: usize, chords: usize, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = Rng::new(seed);
+    let mut seen = std::collections::HashSet::new();
+    let mut edges = Vec::new();
+    for i in 0..n as u32 {
+        let j = (i + 1) % n as u32;
+        seen.insert((i.min(j), i.max(j)));
+        edges.push((i, j));
+    }
+    while edges.len() < n + chords {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b && seen.insert((a.min(b), a.max(b))) {
+            edges.push((a, b));
+        }
+    }
+    edges
+}
+
+#[test]
+fn parallel_builder_matches_sequential_at_any_worker_count() {
+    // Two shapes above the 2^16-edge threshold: a uniform-degree
+    // circulant and an irregular ring+chords list (degree skew exercises
+    // the per-chunk write-base arithmetic).
+    let regular = ImplicitTopology::ring_lattice(20_000, 8).unwrap().edge_list();
+    let irregular = irregular_edges(30_000, 60_000, 0xC0FFEE);
+    for (name, n, edges) in [("regular", 20_000, &regular), ("irregular", 30_000, &irregular)] {
+        assert!(edges.len() >= build::PARALLEL_MIN_EDGES, "{name}: below parallel threshold");
+        let seq = Graph::from_edges(n, edges).unwrap();
+        for workers in [1usize, 2, 5] {
+            let mut pool = WorkerPool::new(workers);
+            let par = build::from_edges_parallel(n, edges, &mut pool);
+            assert_eq!(seq.m(), par.m(), "{name} @ {workers} workers");
+            for i in 0..n {
+                assert_eq!(seq.neighbors(i), par.neighbors(i), "{name} @ {workers}, node {i}");
+            }
+            // Identical step streams too (thresholds byte-equal).
+            let (mut ra, mut rb) = (Rng::new(workers as u64), Rng::new(workers as u64));
+            let (mut pa, mut pb) = (0usize, 0usize);
+            for _ in 0..5_000 {
+                pa = seq.step(pa, &mut ra);
+                pb = par.step(pb, &mut rb);
+                assert_eq!(pa, pb, "{name} @ {workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_connectivity_matches_sequential() {
+    let mut pool = WorkerPool::new(3);
+    // Connected, above the 2^15-node threshold, on both backends.
+    let imp = Graph::from_implicit(ImplicitTopology::ring_lattice(40_000, 8).unwrap());
+    assert!(build::is_connected_parallel(&imp, &mut pool));
+    let csr = imp.materialize();
+    assert!(build::is_connected_parallel(&csr, &mut pool));
+    // Disconnected at scale: two disjoint 20k-node rings.
+    let mut edges: Vec<(u32, u32)> = (0..20_000u32).map(|i| (i, (i + 1) % 20_000)).collect();
+    edges.extend((0..20_000u32).map(|i| (20_000 + i, 20_000 + (i + 1) % 20_000)));
+    let split = Graph::from_edges_trusted(40_000, &edges);
+    assert!(!split.is_connected());
+    assert!(!build::is_connected_parallel(&split, &mut pool));
+}
+
+#[test]
+fn random_regular_pooled_is_bit_identical_above_threshold() {
+    // 20k nodes × d=8 → 80k edges per pairing attempt: the pooled path
+    // really assembles in parallel here, and must sample the *same*
+    // graph (identical RNG consumption, identical CSR bytes).
+    let n = 20_000;
+    let seq = generators::random_regular(n, 8, &mut Rng::new(0xAB)).unwrap();
+    let mut pool = WorkerPool::new(3);
+    let par = generators::random_regular_pooled(n, 8, &mut Rng::new(0xAB), &mut pool).unwrap();
+    assert_eq!(seq.m(), par.m());
+    for i in 0..n {
+        assert_eq!(seq.neighbors(i), par.neighbors(i), "node {i}");
+    }
+}
