@@ -22,9 +22,12 @@
 //! Env knobs: `DECAFORK_GRAPH_N` shrinks the build-benchmark node count
 //! (CI smoke), `DECAFORK_GRAPH_WORKERS` sets the pool size (default 7
 //! workers = 8 lanes), `DECAFORK_PERF_STEPS` rescales the 10m probe's
-//! horizon, `DECAFORK_PERF_SKIP_10M=1` skips the probe (the engine's
-//! per-node state is ~1 GB at 10⁷ nodes), `DECAFORK_PERF_NO_ENFORCE=1`
-//! downgrades the speedup gate to a report.
+//! horizon, `DECAFORK_NODE_STATE=dense|lazy` selects the probe's
+//! node-state store (default lazy — O(visited) state instead of ~1 GB
+//! of dense columns; the two modes are bit-identical, see
+//! `benches/perf_state.rs`), `DECAFORK_PERF_SKIP_10M=1` skips the
+//! probe, `DECAFORK_PERF_NO_ENFORCE=1` downgrades the speedup gate to
+//! a report.
 
 use decafork::graph::{build, Graph, ImplicitTopology};
 use decafork::rng::Rng;
@@ -141,6 +144,9 @@ fn main() -> anyhow::Result<()> {
     // ---- scale_10m completion probe (implicit backend end-to-end) ----
     let skip_10m = std::env::var("DECAFORK_PERF_SKIP_10M").is_ok();
     let mut scale10m = decafork::scenario::presets::scale_10m();
+    // ISSUE 7: honor the benches' node-state mirror (default lazy —
+    // O(visited) state instead of ~1 GB of dense columns at 10^7).
+    scale10m.params.node_state = decafork::scenario::parse::node_state_from_env()?;
     if let Some(steps) = std::env::var("DECAFORK_PERF_STEPS")
         .ok()
         .map(|s| s.parse::<u64>())

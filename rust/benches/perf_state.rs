@@ -1,0 +1,221 @@
+//! Node-state storage bench (ISSUE 7): proves the lazy sparse store is
+//! O(visited) — not O(n) — in memory and housekeeping, without moving a
+//! single bit of the trace.
+//!
+//! Three legs:
+//!
+//! 1. **scale_1m dense vs lazy** (short horizon, so the visited set is a
+//!    genuinely sparse fraction of the graph — at the preset's full
+//!    1000-step horizon coupon-collecting visits nearly every node and
+//!    the comparison would measure nothing). Before any clock or byte is
+//!    trusted the leg **asserts `Trace::bit_identical`** between the two
+//!    modes — z, the full event log, flags, and every θ̂ float at the
+//!    bit level. A "memory win" that moved a bit is a bug, not a result.
+//!    Acceptance bar: lazy resident state ≤ ½ the dense columns.
+//! 2. **scale_10m no-regression report**: the 10⁷-node probe in both
+//!    modes, steps/s side by side (report only — the win at 10⁷ is the
+//!    ~1 GB of dense state that lazy never allocates).
+//! 3. **scale_100m completion probe**: the 10⁸-node preset end-to-end in
+//!    lazy mode — the run the dense columns priced out entirely (~10 GB
+//!    before the first step). Asserts completion, visited ≪ n (hard:
+//!    the visited count is deterministic), and resident state under the
+//!    memory budget.
+//!
+//! Writes `BENCH_state.json` (or `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_STATE_N` shrinks leg 1's node count (CI smoke),
+//! `DECAFORK_STATE_STEPS_1M` overrides leg 1's sparse horizon (default
+//! 40), `DECAFORK_PERF_STEPS` rescales the 10m/100m probes,
+//! `DECAFORK_PERF_SKIP_10M=1` / `DECAFORK_PERF_SKIP_100M=1` skip the
+//! big probes (CI runners), `DECAFORK_STATE_MEM_BUDGET` sets the 100m
+//! resident-byte budget (default 6 GiB), `DECAFORK_STATE_WORKERS` sets
+//! the shard-worker count (default 7 workers = 8 shards), and
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the memory bars to reports
+//! (the bit-identical assert is **never** downgraded).
+
+use decafork::scenario::{presets, GraphSpec, Scenario};
+use decafork::walks::NodeStateMode;
+use std::time::Instant;
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
+}
+
+struct Run {
+    secs: f64,
+    visited: usize,
+    state_bytes: usize,
+    trace: decafork::sim::metrics::Trace,
+}
+
+/// Build, run to the horizon, and measure one scenario/mode/shards cell.
+fn run_cell(scenario: &Scenario, mode: NodeStateMode, shards: usize) -> anyhow::Result<Run> {
+    let mut s = scenario.clone();
+    s.params.node_state = mode;
+    let mut e = s.sharded_engine(0, shards)?;
+    let t0 = Instant::now();
+    e.run_to(s.horizon);
+    let secs = t0.elapsed().as_secs_f64();
+    let visited = e.states().visited_count();
+    let state_bytes = e.states().memory_bytes();
+    Ok(Run { secs, visited, state_bytes, trace: e.into_trace() })
+}
+
+fn steps_per_sec(r: &Run) -> f64 {
+    let steps = r.trace.z.iter().position(|&z| z == 0).unwrap_or(r.trace.z.len() - 1).max(1);
+    steps as f64 / r.secs
+}
+
+fn main() -> anyhow::Result<()> {
+    let no_enforce = std::env::var("DECAFORK_PERF_NO_ENFORCE").is_ok();
+    let workers =
+        env_u64("DECAFORK_STATE_WORKERS").map(|w| (w as usize).max(1)).unwrap_or(7);
+    let shards = workers + 1;
+
+    // ---- Leg 1: dense vs lazy at scale_1m, sparse-regime horizon ----
+    let mut m1 = presets::scale_1m();
+    m1.params.record_theta = true; // θ̂ floats must match bit-for-bit too
+    let n1 = env_u64("DECAFORK_STATE_N").map(|n| (n as usize).max(10_000)).unwrap_or(1_000_000);
+    if n1 != 1_000_000 {
+        m1.graph = GraphSpec::RandomRegular { n: n1, d: 8 };
+    }
+    m1.rescale_to(env_u64("DECAFORK_STATE_STEPS_1M").map(|s| s.max(10)).unwrap_or(40));
+    println!("perf_state leg 1: {} | {} steps | {shards} shards", m1.label(), m1.horizon);
+
+    let dense = run_cell(&m1, NodeStateMode::Dense, shards)?;
+    let lazy = run_cell(&m1, NodeStateMode::Lazy, shards)?;
+
+    // The oracle comes before the clock: identical bits or no result.
+    assert!(
+        dense.trace.bit_identical(&lazy.trace),
+        "lazy store diverged from dense at scale_1m — storage must be invisible to the trace"
+    );
+    assert!(!dense.trace.theta.is_empty(), "leg 1 recorded no θ̂ — the oracle would be vacuous");
+    assert!(
+        lazy.visited < dense.visited,
+        "lazy must materialize strictly fewer states than the dense column (got {} vs {})",
+        lazy.visited,
+        dense.visited
+    );
+    let visited_frac = lazy.visited as f64 / n1 as f64;
+    let mem_ratio = lazy.state_bytes as f64 / dense.state_bytes as f64;
+    println!("  bit-identical           : yes ({} θ̂ samples compared)", dense.trace.theta.len());
+    println!("  dense state             : {:>12} B ({} states)", dense.state_bytes, dense.visited);
+    println!(
+        "  lazy state              : {:>12} B ({} states, {:.1}% of nodes visited)",
+        lazy.state_bytes,
+        lazy.visited,
+        visited_frac * 100.0
+    );
+    println!("  lazy / dense memory     : {mem_ratio:>8.3}  (acceptance bar: <= 0.5)");
+    println!(
+        "  steps/s dense / lazy    : {:>8.1} / {:.1}",
+        steps_per_sec(&dense),
+        steps_per_sec(&lazy)
+    );
+    let leg1_pass = mem_ratio <= 0.5;
+
+    // ---- Leg 2: scale_10m no-regression report (both modes) ----
+    let skip_10m = std::env::var("DECAFORK_PERF_SKIP_10M").is_ok();
+    let mut m10 = presets::scale_10m();
+    if let Some(steps) = env_u64("DECAFORK_PERF_STEPS") {
+        m10.rescale_to(steps.max(100));
+    }
+    let leg2 = if skip_10m {
+        println!("\nscale_10m: skipped (DECAFORK_PERF_SKIP_10M)");
+        None
+    } else {
+        println!("\nperf_state leg 2: {} | {} steps", m10.label(), m10.horizon);
+        let d = run_cell(&m10, NodeStateMode::Dense, shards)?;
+        let l = run_cell(&m10, NodeStateMode::Lazy, shards)?;
+        assert!(
+            d.trace.bit_identical(&l.trace),
+            "lazy store diverged from dense at scale_10m"
+        );
+        anyhow::ensure!(!l.trace.extinct, "scale_10m went extinct before its horizon");
+        let (sd, sl) = (steps_per_sec(&d), steps_per_sec(&l));
+        println!("  steps/s dense / lazy    : {sd:>8.1} / {sl:.1} ({:.2}x)", sl / sd);
+        println!(
+            "  state bytes dense / lazy: {} / {} ({} of 10^7 nodes visited)",
+            d.state_bytes, l.state_bytes, l.visited
+        );
+        Some((d, l))
+    };
+
+    // ---- Leg 3: scale_100m completion probe under a memory budget ----
+    let skip_100m = std::env::var("DECAFORK_PERF_SKIP_100M").is_ok();
+    let mem_budget =
+        env_u64("DECAFORK_STATE_MEM_BUDGET").unwrap_or(6 * 1024 * 1024 * 1024) as usize;
+    let mut m100 = presets::scale_100m();
+    if let Some(steps) = env_u64("DECAFORK_PERF_STEPS") {
+        m100.rescale_to(steps.max(50));
+    }
+    let leg3 = if skip_100m {
+        println!("\nscale_100m: skipped (DECAFORK_PERF_SKIP_100M)");
+        None
+    } else {
+        println!("\nperf_state leg 3: {} | {} steps", m100.label(), m100.horizon);
+        let l = run_cell(&m100, NodeStateMode::Lazy, shards)?;
+        anyhow::ensure!(!l.trace.extinct, "scale_100m went extinct before its horizon");
+        let n = 100_000_000usize;
+        // Deterministic: at most z·T ≪ n/4 nodes can ever be visited.
+        assert!(
+            l.visited < n / 4,
+            "scale_100m visited {} of {n} nodes — the O(visited) premise failed",
+            l.visited
+        );
+        println!(
+            "  completed               : {:>8.1} steps/s, final z = {}",
+            steps_per_sec(&l),
+            l.trace.z.last().unwrap()
+        );
+        println!(
+            "  resident state          : {:>12} B for {} visited nodes (budget {} B)",
+            l.state_bytes, l.visited, mem_budget
+        );
+        Some(l)
+    };
+    let leg3_pass = leg3.as_ref().map(|l| l.state_bytes <= mem_budget).unwrap_or(true);
+
+    let pass = leg1_pass && leg3_pass;
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_state.json".into());
+    let leg2_json = match &leg2 {
+        None => "null".to_string(),
+        Some((d, l)) => format!(
+            "{{\n    \"steps\": {},\n    \"steps_per_sec_dense\": {:.1},\n    \"steps_per_sec_lazy\": {:.1},\n    \"state_bytes_dense\": {},\n    \"state_bytes_lazy\": {},\n    \"visited_lazy\": {}\n  }}",
+            m10.horizon,
+            steps_per_sec(d),
+            steps_per_sec(l),
+            d.state_bytes,
+            l.state_bytes,
+            l.visited
+        ),
+    };
+    let leg3_json = match &leg3 {
+        None => "null".to_string(),
+        Some(l) => format!(
+            "{{\n    \"steps\": {},\n    \"steps_per_sec\": {:.1},\n    \"state_bytes\": {},\n    \"visited\": {},\n    \"mem_budget_bytes\": {mem_budget},\n    \"under_budget\": {leg3_pass}\n  }}",
+            m100.horizon,
+            steps_per_sec(l),
+            l.state_bytes,
+            l.visited
+        ),
+    };
+    let json = format!(
+        "{{\n  \"bench\": \"perf_state\",\n  \"mode\": \"lazy sparse node store vs dense columns, traces asserted bit-identical\",\n  \"shards\": {shards},\n  \"scale_1m\": {{\n    \"n\": {n1},\n    \"steps\": {},\n    \"bit_identical\": true,\n    \"theta_samples_compared\": {},\n    \"state_bytes_dense\": {},\n    \"state_bytes_lazy\": {},\n    \"visited_lazy\": {},\n    \"visited_fraction\": {visited_frac:.4},\n    \"memory_ratio_lazy_over_dense\": {mem_ratio:.4},\n    \"steps_per_sec_dense\": {:.1},\n    \"steps_per_sec_lazy\": {:.1}\n  }},\n  \"scale_10m\": {leg2_json},\n  \"scale_100m\": {leg3_json},\n  \"acceptance_max_memory_ratio\": 0.5,\n  \"pass\": {pass}\n}}\n",
+        m1.horizon,
+        dense.trace.theta.len(),
+        dense.state_bytes,
+        lazy.state_bytes,
+        lazy.visited,
+        steps_per_sec(&dense),
+        steps_per_sec(&lazy),
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    if !pass && !no_enforce {
+        anyhow::bail!("perf_state memory bars not met (ratio {mem_ratio:.3} / budget) — see {out}");
+    }
+    Ok(())
+}

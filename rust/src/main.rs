@@ -44,6 +44,9 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
            --shards 1   (>=2: stream-mode sharded engine per replication)
            --cores N    (total core budget split across runs x shards;
                          default DECAFORK_CORES or detected parallelism)
+           --node-state dense|lazy   (per-node state storage; default
+                         lazy = allocate on first visit, O(visited)
+                         memory — bit-identical to dense at any scale)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
            --shards 1 --cores N
   train    --preset learn_tiny|learn_10k|learn_100k  (or --n 64 --d 8

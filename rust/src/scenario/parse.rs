@@ -4,6 +4,7 @@
 use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::cli::Args;
 use crate::sim::engine::{SimParams, SurvivalSpec};
+use crate::walks::NodeStateMode;
 
 /// `--graph regular|er|complete|ba|ring` plus its family flags, and
 /// `--topology` — the same knob under the name the implicit families
@@ -146,6 +147,44 @@ pub fn shards_from_env() -> anyhow::Result<usize> {
     }
 }
 
+/// `--node-state dense|lazy`: how engines store per-node estimator
+/// state. `lazy` (the default, also when the flag is absent)
+/// materializes a node's state on first visit — O(visited) memory and
+/// housekeeping, the mode that makes `scale_100m` runnable; `dense`
+/// keeps the eager O(n) columns as the A/B oracle `perf_state` and the
+/// lazy-vs-dense golden matrix compare against. Results are
+/// bit-identical either way (DESIGN.md §Lazy node store), so unlike
+/// `--shards` this knob can never select a different trace family —
+/// but a valueless or unknown value is still an error, not a fallback.
+pub fn node_state(args: &Args) -> anyhow::Result<NodeStateMode> {
+    anyhow::ensure!(!args.has("node-state"), "--node-state needs a value (dense or lazy)");
+    match args.flags.get("node-state") {
+        None => Ok(NodeStateMode::Lazy),
+        Some(v) => node_state_value("--node-state", v),
+    }
+}
+
+/// Shared value validation for `--node-state` / `DECAFORK_NODE_STATE`:
+/// errors name the knob, like [`positive_count`] does for the count
+/// knobs.
+fn node_state_value(knob: &str, v: &str) -> anyhow::Result<NodeStateMode> {
+    match v.trim() {
+        "lazy" => Ok(NodeStateMode::Lazy),
+        "dense" => Ok(NodeStateMode::Dense),
+        other => anyhow::bail!("{knob} must be 'dense' or 'lazy', got '{other}'"),
+    }
+}
+
+/// `DECAFORK_NODE_STATE` env mirror for binaries without flag plumbing
+/// (benches, the golden tests' lazy-vs-dense CI matrix): same semantics
+/// as `--node-state`, absent = lazy, present-but-invalid = error.
+pub fn node_state_from_env() -> anyhow::Result<NodeStateMode> {
+    match std::env::var("DECAFORK_NODE_STATE") {
+        Err(_) => Ok(NodeStateMode::Lazy),
+        Ok(v) => node_state_value("DECAFORK_NODE_STATE", &v),
+    }
+}
+
 /// `--cores N`: the runner's [`CoreBudget`] — total cores split across
 /// replication threads × per-run stream workers
 /// ([`CoreBudget::plan`](crate::sim::CoreBudget::plan)). Falls back to
@@ -181,6 +220,7 @@ pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
             survival: survival(args)?,
             control_start: args.flags.get("warmup").map(|w| w.parse()).transpose()?,
             shards: shards(args)?,
+            node_state: node_state(args)?,
             ..Default::default()
         },
         control: control(args)?,
@@ -305,6 +345,47 @@ mod tests {
         ] {
             assert!(parse_err.contains(knob), "{cmd}: knob not named: {parse_err}");
         }
+    }
+
+    #[test]
+    fn node_state_knob_validates_and_defaults_lazy() {
+        // Absent = lazy (the O(visited) default), explicit values parse,
+        // and both failure modes — valueless switch and unknown value —
+        // error with the knob named instead of falling back.
+        assert_eq!(node_state(&args("simulate")).unwrap(), NodeStateMode::Lazy);
+        assert_eq!(node_state(&args("simulate --node-state lazy")).unwrap(), NodeStateMode::Lazy);
+        assert_eq!(node_state(&args("simulate --node-state dense")).unwrap(), NodeStateMode::Dense);
+        let e = node_state(&args("simulate --node-state")).unwrap_err().to_string();
+        assert!(e.contains("--node-state"), "valueless: knob not named: {e}");
+        let e = node_state(&args("simulate --node-state --record-theta"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--node-state"), "switch-before-flag: knob not named: {e}");
+        for bad in ["sparse", "eager", "0", ""] {
+            let e = node_state(&args(&format!("simulate --node-state {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("--node-state"), "'{bad}': knob not named: {e}");
+        }
+        // Full scenario plumbing.
+        let s = scenario(&args("simulate --node-state dense")).unwrap();
+        assert_eq!(s.params.node_state, NodeStateMode::Dense);
+        let s = scenario(&args("simulate")).unwrap();
+        assert_eq!(s.params.node_state, NodeStateMode::Lazy, "default must be the lazy store");
+    }
+
+    #[test]
+    fn node_state_env_mirror_validates_values() {
+        // Value validation only — the absent-variable default is covered
+        // by the knob test above (reading the live process env here
+        // would race other tests).
+        assert_eq!(node_state_value("DECAFORK_NODE_STATE", "lazy").unwrap(), NodeStateMode::Lazy);
+        assert_eq!(
+            node_state_value("DECAFORK_NODE_STATE", " dense ").unwrap(),
+            NodeStateMode::Dense
+        );
+        let e = node_state_value("DECAFORK_NODE_STATE", "both").unwrap_err().to_string();
+        assert!(e.contains("DECAFORK_NODE_STATE"), "env var not named: {e}");
     }
 
     #[test]

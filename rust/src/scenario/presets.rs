@@ -274,13 +274,17 @@ pub fn scale_10m() -> Scenario {
     }
 }
 
-/// The 10⁸-node shape: same design as [`scale_10m`] one order up. The
-/// topology is still O(1) memory, but the engine's per-node state is
-/// ~10 GB at this n — beyond the default CI box, so this preset is a
-/// **shape-locked target**, not a bench gate: `perf_graph` asserts the
-/// implicit topology itself (build + memory + step sampling) at 10⁸
-/// while the full engine probe stays manual until the per-node state
-/// becomes sparse (ROADMAP).
+/// The 10⁸-node preset: same design as [`scale_10m`] one order up —
+/// and **runnable**, not just a shape lock, since the lazy node store
+/// landed. The topology is O(1) memory (implicit small world) and the
+/// engine's per-node state is O(visited): with Z0 = 32768 walks over a
+/// 250-step horizon at most ~8M of the 10⁸ nodes are ever visited, so
+/// the state footprint is a few GB where the old dense columns needed
+/// ~10 GB before the first step. `benches/perf_state.rs` runs this
+/// preset end-to-end under an explicit memory budget (the `scale_100m`
+/// completion probe, `DECAFORK_PERF_SKIP_100M` to skip on small
+/// machines); `perf_graph` continues to assert the topology side at
+/// 10⁸.
 pub fn scale_100m() -> Scenario {
     Scenario {
         graph: GraphSpec::ImplicitSmallWorld { n: 100_000_000, d: 8 },
@@ -572,6 +576,23 @@ mod tests {
         r.rescale_to(100);
         assert_eq!(r.horizon, 100);
         assert_eq!(r.params.control_start, Some(30));
+        // What makes scale_100m *runnable* (ISSUE 7): the default lazy
+        // store caps engine state at O(visited) = O(Z0 · horizon) ≪ n.
+        let h = scale_100m();
+        assert_eq!(
+            h.params.node_state,
+            crate::walks::NodeStateMode::Lazy,
+            "scale_100m needs the lazy store — dense would allocate ~10 GB up front"
+        );
+        assert!(
+            (h.params.max_walks as u64) * h.horizon < 100_000_000 / 4,
+            "visited bound must stay far below n for the O(visited) bet to pay"
+        );
+        // …and it must survive the bench's quick-mode rescale too.
+        let mut r = scale_100m();
+        r.rescale_to(50);
+        assert_eq!(r.horizon, 50);
+        assert_eq!(r.params.control_start, Some(16));
     }
 
     #[test]

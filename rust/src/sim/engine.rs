@@ -36,7 +36,9 @@ use crate::failures::Failures;
 use crate::graph::Graph;
 use crate::rng::Rng;
 use crate::sim::metrics::{Event, EventKind, Trace};
-use crate::walks::{Lineage, NodeState, SurvivalModel, Walk, WalkArena, WalkMut, WalkRef};
+use crate::walks::{
+    Lineage, NodeStateMode, NodeStore, StatesView, SurvivalModel, Walk, WalkArena, WalkMut, WalkRef,
+};
 
 /// Where the initial `Z0` walks start.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -136,6 +138,14 @@ pub struct SimParams {
     /// `1 → 2` changes results, while any two counts `>= 1` **within
     /// stream mode** (`Scenario::sharded_engine`) are bit-identical.
     pub shards: usize,
+    /// Node-state storage (`--node-state` / `DECAFORK_NODE_STATE`):
+    /// `Lazy` (default) materializes a node's estimator state on first
+    /// visit — O(visited) memory and prune sweeps, the mode that makes
+    /// `scale_100m` runnable; `Dense` keeps the eager O(n) columns as
+    /// the A/B oracle. Bit-identical by construction (DESIGN.md §Lazy
+    /// node store), locked by `prop_lazy_store_bit_identical_to_dense`
+    /// and both golden families.
+    pub node_state: NodeStateMode,
 }
 
 impl Default for SimParams {
@@ -149,6 +159,7 @@ impl Default for SimParams {
             prune_every: 256,
             max_walks: 4096,
             shards: 1,
+            node_state: NodeStateMode::Lazy,
         }
     }
 }
@@ -160,7 +171,7 @@ pub struct Engine {
     pub graph: Arc<Graph>,
     pub params: SimParams,
     arena: WalkArena,
-    states: Vec<NodeState>,
+    states: NodeStore,
     control: Control,
     failures: Failures,
     rng: Rng,
@@ -191,10 +202,19 @@ impl Engine {
         // Cached θ̂: per-node SurvivalTable memo — bit-identical to the
         // reference engine's direct evaluation (golden-trace lock), but
         // each survival term is an indexed load instead of an exp/CDF
-        // division (`benches/perf_control.rs` measures the gap).
-        let states = (0..n)
-            .map(|i| NodeState::new(z0 as usize, params.survival.resolve(&graph, i)))
-            .collect();
+        // division (`benches/perf_control.rs` measures the gap). The
+        // store materializes each state lazily on first visit by
+        // default (no per-node streams here — decisions draw from the
+        // single shared engine stream, so `node_root` is `None`).
+        let states = NodeStore::new(
+            params.node_state,
+            graph.clone(),
+            0,
+            n as u32,
+            z0 as usize,
+            params.survival,
+            None,
+        );
         let mut trace = Trace::default();
         trace.z.push(z0);
         let control_start = params
@@ -240,9 +260,11 @@ impl Engine {
         self.arena.snapshot()
     }
 
-    /// Node states (telemetry/tests).
-    pub fn states(&self) -> &[NodeState] {
-        &self.states
+    /// Node states (telemetry/tests): a visited-aware view — in the
+    /// default lazy mode only visited nodes carry state, so there is no
+    /// dense slice to hand out.
+    pub fn states(&self) -> StatesView<'_> {
+        StatesView::single(&self.states)
     }
 
     /// Mutable access to the live walks' payload slots, in creation
@@ -312,19 +334,21 @@ impl Engine {
                 continue;
             }
 
-            // 2c. The node records the visit (return-time sample).
+            // 2c. The node records the visit (return-time sample). First
+            //     visit of a lazily-stored node materializes its state
+            //     here — a pure construction, so no RNG draw moves.
             let slot = self.arena.lineage_at(i).slot();
-            self.states[to as usize].observe(t, wid, slot);
+            self.states.state_mut(to).observe(t, wid, slot);
 
             // 2d. Application work (e.g. one SGD step on the payload).
             hook.on_visit(t, to, self.arena.walk_mut(i));
 
             // 2e. Control decision — not during warm-up, and at most one
             //     per node per step (footnote 6).
-            if t < self.control_start || self.states[to as usize].last_control_step == Some(t) {
+            if t < self.control_start || self.states.state_mut(to).last_control_step == Some(t) {
                 continue;
             }
-            self.states[to as usize].last_control_step = Some(t);
+            self.states.state_mut(to).last_control_step = Some(t);
             let decision = {
                 let mut ctx = VisitCtx {
                     t,
@@ -332,7 +356,7 @@ impl Engine {
                     walk: wid,
                     slot,
                     z0: self.params.z0,
-                    state: &mut self.states[to as usize],
+                    state: self.states.state_mut(to),
                     rng: &mut self.rng,
                 };
                 self.control.on_visit(&mut ctx)
@@ -355,7 +379,7 @@ impl Engine {
                     // The new walk is immediately visible to the forking
                     // node (it "leaves the forking node" next step,
                     // footnote 7).
-                    self.states[to as usize].observe(t, child_id, fork_slot);
+                    self.states.state_mut(to).observe(t, child_id, fork_slot);
                     self.trace.events.push(Event {
                         t,
                         node: to,
@@ -369,11 +393,11 @@ impl Engine {
             }
         }
 
-        // 3. Housekeeping.
+        // 3. Housekeeping. The sweep walks the store's materialized
+        //    column only — O(visited) in lazy mode, and exact: a state
+        //    that was never materialized holds nothing to prune.
         if self.params.prune_every > 0 && t % self.params.prune_every == 0 {
-            for s in &mut self.states {
-                s.prune(t);
-            }
+            self.states.prune(t);
         }
         self.arena.compact();
         self.trace.z.push(self.arena.live());
@@ -561,6 +585,54 @@ mod tests {
         e.run_to(100);
         assert!(e.alive() <= 16);
         assert!(e.trace().capped);
+    }
+
+    #[test]
+    fn lazy_and_dense_node_state_bit_identical() {
+        // The shared-stream arm of the lazy-store contract: state
+        // construction is pure and draws nothing from the engine
+        // stream, so deferring it to first visit cannot move a bit —
+        // θ̂ samples included. (The stream-mode arm, with churn and
+        // randomized prune schedules, is
+        // `prop_lazy_store_bit_identical_to_dense`.)
+        let run = |mode| {
+            let mut e = Engine::new(
+                small_graph(),
+                SimParams {
+                    z0: 8,
+                    record_theta: true,
+                    prune_every: 32,
+                    node_state: mode,
+                    ..Default::default()
+                },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4), (300, 3)]),
+                Rng::new(0x1A2B),
+            );
+            e.run_to(600);
+            e.into_trace()
+        };
+        let dense = run(NodeStateMode::Dense);
+        let lazy = run(NodeStateMode::Lazy);
+        assert!(dense.bit_identical(&lazy), "lazy store diverged from dense oracle");
+        assert!(!dense.theta.is_empty(), "no θ̂ samples — comparison is vacuous");
+    }
+
+    #[test]
+    fn lazy_store_materializes_only_visited_nodes() {
+        let mut e = Engine::new(
+            small_graph(),
+            SimParams { z0: 3, ..Default::default() },
+            NoControl,
+            NoFailures,
+            Rng::new(41),
+        );
+        assert_eq!(e.states().visited_count(), 0, "no visits before the first step");
+        e.run_to(5);
+        let v = e.states().visited_count();
+        assert!(v > 0, "steps must materialize state");
+        assert!(v < 30, "3 walks × 5 hops cannot have covered all 30 nodes");
+        assert!(e.states().iter().all(|(_, s)| s.known_walks() > 0));
     }
 
     #[test]

@@ -49,9 +49,11 @@
 //! arena ids, node-table first-seen order (the θ̂ float-sum order), the
 //! event log and the θ̂ telemetry are all identical at any shard count.
 //! Inside a phase nothing shared is touched: walk chunks are disjoint
-//! column ranges; node ranges own their `NodeState`s, their streams and
-//! their clone of the control algorithm (per-node control state like
-//! `PeriodicFork::next_fork` is node-indexed, so clones never disagree).
+//! column ranges; each shard owns a [`NodeStore`] holding its node
+//! range's states and streams (materialized lazily on first visit —
+//! DESIGN.md §Lazy node store) and its clone of the control algorithm
+//! (per-node control state like `PeriodicFork::next_fork` is
+//! node-indexed, so clones never disagree).
 //!
 //! ## Thread model (DESIGN.md §Worker pool)
 //!
@@ -97,7 +99,7 @@ use crate::runtime::pool::{self, Task, WorkerPool};
 use crate::sim::engine::{SimParams, StartPlacement};
 use crate::sim::metrics::{Event, EventKind, Trace};
 use crate::sim::shard_hook::{NoShardHook, ShardHook, ShardVisit};
-use crate::walks::{Lineage, NodeState, Walk, WalkArena, WalkId};
+use crate::walks::{Lineage, NodeStore, StatesView, Walk, WalkArena, WalkId};
 
 /// How the per-phase shard tasks reach their threads.
 ///
@@ -163,9 +165,14 @@ pub struct ShardedEngine {
     /// results never depend on it, only thread assignment does).
     nodes_per_shard: usize,
     arena: WalkArena,
-    states: Vec<NodeState>,
-    /// Per-node control-decision streams.
-    node_rngs: Vec<Rng>,
+    /// One [`NodeStore`] per shard, each owning a contiguous node range
+    /// of `nodes_per_shard` nodes (trailing stores may be shorter or
+    /// empty): the node's estimator state *and* its control-decision
+    /// stream, both materialized on first visit in the default lazy
+    /// mode (DESIGN.md §Lazy node store). Replaces the former dense
+    /// `states` + `node_rngs` columns, making per-shard memory and
+    /// housekeeping O(visited ∩ shard) instead of O(n / shards).
+    stores: Vec<NodeStore>,
     /// One clone of the control algorithm per shard; per-node internal
     /// state is node-indexed and shards own disjoint node ranges, so the
     /// clones never diverge on state either of them reads.
@@ -272,12 +279,29 @@ impl ShardedEngine {
         // would be gigabytes (`observe` already tolerates the empty
         // table).
         let mp_slots = if matches!(control, Control::MissingPerson(_)) { z0 as usize } else { 0 };
-        let states = (0..n)
-            .map(|i| NodeState::new(mp_slots, params.survival.resolve(&graph, i)))
-            .collect();
-        let node_rngs = (0..n).map(|i| node_root.split(i as u64)).collect();
         let controls = vec![control; shards];
         let nodes_per_shard = n.div_ceil(shards).max(1);
+        // One store per shard over its contiguous node range. Every
+        // store hands lazily-materialized nodes a stream split from the
+        // same `node_root` by *global* node id, so the partition is
+        // invisible to every decision draw — and eager (dense-mode)
+        // construction, done per-range here, is element-for-element the
+        // `(0..n)` columns this replaced.
+        let stores: Vec<NodeStore> = (0..shards)
+            .map(|k| {
+                let base = (k * nodes_per_shard).min(n);
+                let len = nodes_per_shard.min(n - base);
+                NodeStore::new(
+                    params.node_state,
+                    graph.clone(),
+                    base as u32,
+                    len as u32,
+                    mp_slots,
+                    params.survival,
+                    Some(node_root.clone()),
+                )
+            })
+            .collect();
         let control_start = params
             .control_start
             .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
@@ -296,8 +320,7 @@ impl ShardedEngine {
             shards,
             nodes_per_shard,
             arena,
-            states,
-            node_rngs,
+            stores,
             controls,
             failures: failures.into(),
             fail_rng,
@@ -349,9 +372,12 @@ impl ShardedEngine {
         &self.arena
     }
 
-    /// Node states (telemetry/tests).
-    pub fn states(&self) -> &[NodeState] {
-        &self.states
+    /// Node states (telemetry/tests): a visited-aware view over the
+    /// per-shard stores — `(node, &state)` pairs in shard order, then
+    /// first-visit order within a shard, plus `visited_count()` and the
+    /// `memory_bytes()` accounting `benches/perf_state.rs` gates on.
+    pub fn states(&self) -> StatesView<'_> {
+        StatesView::new(&self.stores)
     }
 
     /// Materialize every walk — live and retired (cold path).
@@ -495,18 +521,15 @@ impl ShardedEngine {
         {
             let control_start = self.control_start;
             let z0 = self.params.z0;
-            let nps = self.nodes_per_shard;
             // Shared (read-only) view of the hook for the parallel phase;
             // replicas are the only hook state a worker may mutate.
             let hook_ref: &H = &*hook;
             if self.shards == 1 {
                 control_chunk(
-                    &mut self.states,
-                    &mut self.node_rngs,
+                    &mut self.stores[0],
                     &mut self.controls[0],
                     &self.arrivals[0],
                     &self.arrival_payloads[0],
-                    0,
                     t,
                     control_start,
                     z0,
@@ -515,12 +538,13 @@ impl ShardedEngine {
                     &mut replicas[0],
                 );
             } else {
-                let mut ranges = Vec::with_capacity(self.shards);
-                let mut states_rest: &mut [NodeState] = &mut self.states;
-                let mut rngs_rest: &mut [Rng] = &mut self.node_rngs;
-                for (k, ((control, ((arr, pay), out)), rep)) in self
-                    .controls
+                // One task per shard: each store already owns its node
+                // range (no split_at_mut carving needed), and a store
+                // whose arrival bucket is empty costs one no-op closure.
+                let mut ranges: Vec<_> = self
+                    .stores
                     .iter_mut()
+                    .zip(self.controls.iter_mut())
                     .zip(
                         self.arrivals
                             .iter()
@@ -528,34 +552,23 @@ impl ShardedEngine {
                             .zip(self.decisions.iter_mut()),
                     )
                     .zip(replicas.iter_mut())
-                    .enumerate()
-                {
-                    let take = nps.min(states_rest.len());
-                    if take == 0 {
-                        break;
-                    }
-                    let (st_c, st_rest) = states_rest.split_at_mut(take);
-                    states_rest = st_rest;
-                    let (rg_c, rg_rest) = rngs_rest.split_at_mut(take);
-                    rngs_rest = rg_rest;
-                    let base = (k * nps) as u32;
-                    ranges.push(move || {
-                        control_chunk(
-                            st_c,
-                            rg_c,
-                            control,
-                            arr,
-                            pay,
-                            base,
-                            t,
-                            control_start,
-                            z0,
-                            out,
-                            hook_ref,
-                            rep,
-                        )
-                    });
-                }
+                    .map(|(((store, control), ((arr, pay), out)), rep)| {
+                        move || {
+                            control_chunk(
+                                store,
+                                control,
+                                arr,
+                                pay,
+                                t,
+                                control_start,
+                                z0,
+                                out,
+                                hook_ref,
+                                rep,
+                            )
+                        }
+                    })
+                    .collect();
                 fan_out(self.pool.as_mut(), &mut collect_tasks(&mut ranges));
             }
         }
@@ -606,8 +619,11 @@ impl ShardedEngine {
                 }
                 // The new walk is immediately visible to the forking node
                 // (footnote 7); in stream mode that visibility lands at
-                // the barrier, after the step's arrivals.
-                self.states[d.node as usize].observe(t, child_id, fork_slot);
+                // the barrier, after the step's arrivals. The forking
+                // node decided *this step*, so its state is already
+                // materialized — this lookup can never be a first visit.
+                let shard = d.node as usize / self.nodes_per_shard;
+                self.stores[shard].state_mut(d.node).observe(t, child_id, fork_slot);
                 self.trace.events.push(Event {
                     t,
                     node: d.node,
@@ -629,24 +645,15 @@ impl ShardedEngine {
         }
 
         // 4. Housekeeping. Prune is per-node deterministic work, so it
-        //    parallelizes over the same node ranges with no merge step.
+        //    parallelizes over the per-shard stores with no merge step —
+        //    and each store sweeps only its materialized (visited)
+        //    states, making the sweep O(visited ∩ shard) in lazy mode.
         if self.params.prune_every > 0 && t % self.params.prune_every == 0 {
             if self.shards == 1 {
-                for s in &mut self.states {
-                    s.prune(t);
-                }
+                self.stores[0].prune(t);
             } else {
-                let mut sweeps: Vec<_> = self
-                    .states
-                    .chunks_mut(self.nodes_per_shard)
-                    .map(|states_c| {
-                        move || {
-                            for s in states_c.iter_mut() {
-                                s.prune(t);
-                            }
-                        }
-                    })
-                    .collect();
+                let mut sweeps: Vec<_> =
+                    self.stores.iter_mut().map(|store| move || store.prune(t)).collect();
                 fan_out(self.pool.as_mut(), &mut collect_tasks(&mut sweeps));
             }
         }
@@ -786,19 +793,20 @@ fn hop_chunk(
 /// Control-phase worker: the shard's arrivals are pre-bucketed in dense
 /// order; `observe` + the once-per-node-per-step control decision run
 /// exactly as in the sequential engine, with decision randomness drawn
-/// from the visited node's stream. `base` is the shard's first node id.
-/// The hook replica sees each arrival between `observe` and the control
+/// from the visited node's stream. The shard's [`NodeStore`] owns both
+/// the states and the streams of its node range; an arrival at a node
+/// the store has never seen materializes the node's state and stream
+/// right here (a pure construction — no draw, no ordering effect). The
+/// hook replica sees each arrival between `observe` and the control
 /// decision — the same slot `VisitHook::on_visit` occupies in the
 /// shared-stream engine; `payloads` is the arrival-parallel payload
 /// side buffer (empty, and never read, when `H::ACTIVE` is false).
 #[allow(clippy::too_many_arguments)]
 fn control_chunk<H: ShardHook>(
-    states: &mut [NodeState],
-    node_rngs: &mut [Rng],
+    store: &mut NodeStore,
     control: &mut Control,
     arrivals: &[Arrival],
     payloads: &[Option<usize>],
-    base: u32,
     t: u64,
     control_start: u64,
     z0: u32,
@@ -806,9 +814,9 @@ fn control_chunk<H: ShardHook>(
     hook: &H,
     replica: &mut H::Replica,
 ) {
+    let base = store.base();
     for (j, a) in arrivals.iter().enumerate() {
-        let local = (a.node - base) as usize;
-        let state = &mut states[local];
+        let (state, rng) = store.state_rng_mut(a.node);
         state.observe(t, a.id, a.slot);
         if H::ACTIVE {
             hook.on_shard_visit(
@@ -817,7 +825,7 @@ fn control_chunk<H: ShardHook>(
                 &ShardVisit {
                     dense: a.dense,
                     node: a.node,
-                    local: local as u32,
+                    local: a.node - base,
                     walk: a.id,
                     slot: a.slot,
                     payload: payloads[j],
@@ -831,15 +839,8 @@ fn control_chunk<H: ShardHook>(
         }
         state.last_control_step = Some(t);
         let decision = {
-            let mut ctx = VisitCtx {
-                t,
-                node: a.node,
-                walk: a.id,
-                slot: a.slot,
-                z0,
-                state,
-                rng: &mut node_rngs[local],
-            };
+            let mut ctx =
+                VisitCtx { t, node: a.node, walk: a.id, slot: a.slot, z0, state, rng };
             control.on_visit(&mut ctx)
         };
         if decision.theta.is_some() || !decision.forks.is_empty() || decision.terminate {
@@ -1020,7 +1021,10 @@ mod tests {
 
     #[test]
     fn slot_tables_allocated_only_for_missingperson() {
-        let e = ShardedEngine::new(
+        // Run a few steps first: in the default lazy mode a state only
+        // exists once its node is visited, so the assertions sweep the
+        // visited set (and must not be vacuous — hence the count check).
+        let mut e = ShardedEngine::new(
             small_graph(),
             SimParams { z0: 6, ..Default::default() },
             Decafork::new(2.0),
@@ -1028,8 +1032,10 @@ mod tests {
             Rng::new(9),
             1,
         );
-        assert!(e.states().iter().all(|s| s.slot_last_seen.is_empty()));
-        let e = ShardedEngine::new(
+        e.run_to(20);
+        assert!(e.states().visited_count() > 0, "20 steps must visit nodes");
+        assert!(e.states().iter().all(|(_, s)| s.slot_last_seen.is_empty()));
+        let mut e = ShardedEngine::new(
             small_graph(),
             SimParams { z0: 6, ..Default::default() },
             crate::control::MissingPerson::new(100),
@@ -1037,6 +1043,54 @@ mod tests {
             Rng::new(9),
             1,
         );
-        assert!(e.states().iter().all(|s| s.slot_last_seen.len() == 6));
+        e.run_to(20);
+        assert!(e.states().visited_count() > 0, "20 steps must visit nodes");
+        assert!(e.states().iter().all(|(_, s)| s.slot_last_seen.len() == 6));
+    }
+
+    #[test]
+    fn lazy_and_dense_stores_bit_identical_and_lazy_stays_sparse() {
+        use crate::walks::NodeStateMode;
+        // One stream-mode scenario, four arms: {lazy, dense} × {1, 3}
+        // workers — all four traces must be bit-identical (the store
+        // mode and the shard count are both pure storage/scheduling
+        // choices), and only the dense arms may have materialized every
+        // node.
+        let mk = |mode, shards| {
+            let mut e = ShardedEngine::new(
+                small_graph(),
+                SimParams {
+                    z0: 8,
+                    record_theta: true,
+                    prune_every: 16,
+                    node_state: mode,
+                    ..Default::default()
+                },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4), (300, 3)]),
+                Rng::new(0xBEEF),
+                shards,
+            );
+            e.run_to(250);
+            let visited = e.states().visited_count();
+            let bytes = e.states().memory_bytes();
+            (e.into_trace(), visited, bytes)
+        };
+        let (dense1, dv, db) = mk(NodeStateMode::Dense, 1);
+        assert_eq!(dv, 30, "dense mode materializes every node up front");
+        for (mode, shards) in
+            [(NodeStateMode::Lazy, 1), (NodeStateMode::Lazy, 3), (NodeStateMode::Dense, 3)]
+        {
+            let (tr, v, b) = mk(mode, shards);
+            assert!(
+                dense1.bit_identical(&tr),
+                "{mode:?} × {shards} shards diverged from the dense oracle"
+            );
+            if mode == NodeStateMode::Lazy {
+                assert!(v <= 30 && v > 0, "lazy visited count {v} out of range");
+                assert!(b <= db * 2, "lazy store ({b} B) dwarfs dense ({db} B)");
+            }
+        }
+        assert!(!dense1.theta.is_empty(), "no θ̂ samples — comparison is vacuous");
     }
 }

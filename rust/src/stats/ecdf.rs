@@ -171,6 +171,13 @@ impl EmpiricalCdf {
         self.total
     }
 
+    /// Resident heap bytes of the histogram, Fenwick tree and survival
+    /// cache — the per-node memory accounting `NodeState::heap_bytes`
+    /// (and through it the `perf_state` O(visited) bar) sums over.
+    pub fn heap_bytes(&self) -> usize {
+        (self.counts.len() + self.tree.len() + self.cache.len()) * std::mem::size_of::<u64>()
+    }
+
     /// True if no samples recorded yet.
     #[inline]
     pub fn is_empty(&self) -> bool {

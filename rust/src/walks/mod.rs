@@ -25,14 +25,23 @@
 //! memoised survival table `dt → S(dt)` (DESIGN.md §Survival cache),
 //! and the estimator `θ̂_i(t) = ½ + Σ_{ℓ≠k} S(t − L_{i,ℓ})` from
 //! Eq. (1).
+//!
+//! Engines keep node states behind a [`NodeStore`] (DESIGN.md §Lazy
+//! node store): by default a node's state is materialized on **first
+//! visit** and kept in a sparse first-visit-order column, so engine
+//! memory and prune sweeps are O(visited) rather than O(n) — the
+//! property that makes 10⁸-node scenarios runnable. The eager dense
+//! layout survives as the selectable [`NodeStateMode::Dense`] oracle.
 
 pub mod arena;
 pub mod lineage;
 pub mod node_state;
+pub mod node_store;
 pub mod slot_index;
 
 pub use arena::WalkArena;
 pub use node_state::{NodeState, SurvivalModel};
+pub use node_store::{NodeStateMode, NodeStore, StatesView};
 pub use slot_index::SlotIndex;
 
 /// Unique walk identifier: a packed generational index. The low 32 bits

@@ -220,6 +220,21 @@ impl NodeState {
         self.index.capacity()
     }
 
+    /// Resident heap bytes behind this state: the `ids ∥ last` columns,
+    /// the compact lookup index, the survival memo, the pooled
+    /// return-time histogram and the MISSINGPERSON slot table. Combined
+    /// with `size_of::<NodeState>()` this is the per-node term of the
+    /// engine-state accounting `NodeStore::memory_bytes` reports and
+    /// `benches/perf_state.rs` gates on.
+    pub fn heap_bytes(&self) -> usize {
+        self.ids.len() * std::mem::size_of::<WalkId>()
+            + self.last.len() * std::mem::size_of::<u64>()
+            + self.index.capacity() * 8
+            + self.table.capacity() * std::mem::size_of::<f64>()
+            + self.return_cdf.heap_bytes()
+            + self.slot_last_seen.len() * std::mem::size_of::<u64>()
+    }
+
     /// Survival `S(dt)` under the configured model. Cold-path helper —
     /// deliberately **not** routed through the memo: its geometric form
     /// (`powi`) is a different float expression than the θ̂ loop's

@@ -1,0 +1,521 @@
+//! Lazy sparse storage for per-node estimator state — O(visited) engine
+//! memory at any graph size.
+//!
+//! ## Why the dense column had to go
+//!
+//! PR 6 made the *topology* O(1) at 10⁸ nodes (implicit circulant
+//! backend), but both engines still eagerly built `Vec<NodeState>` over
+//! all n nodes (~10 GB at 10⁸) and the periodic prune sweep walked every
+//! one of them. Return-time theory says that is almost all waste: on a
+//! regular graph `E[R_i] ≈ n`, so with `Z0` walks over a `T`-step horizon
+//! at most `Z0·T ≪ n` nodes are ever visited — every other node's state
+//! is a default value it never reads.
+//!
+//! A [`NodeStore`] owns one contiguous node range `[base, base+len)`
+//! (one store per shard in the stream-mode engine; one covering store in
+//! the shared-stream engine) and materializes a node's [`NodeState`] —
+//! and, in stream mode, its decision [`Rng`] stream — on **first visit**.
+//!
+//! ## Why laziness cannot move a bit (DESIGN.md §Lazy node store)
+//!
+//! Construction of a node's state is a pure function of
+//! `(graph, node, params)`: `NodeState::new(mp_slots,
+//! survival.resolve(&graph, node))` draws no randomness and reads
+//! nothing mutable, and the per-node decision stream
+//! `node_root.split(node)` is a pure derivation from the scenario's node
+//! stream root ([`Rng::split`] never advances the parent). A state
+//! materialized at first visit is therefore **value-identical** to one
+//! built eagerly at t = 0 — and before its first visit a node's state is
+//! observably inert: `observe`, control decisions and fork visibility
+//! all happen at visit time, and `prune` of a fresh state is a no-op.
+//!
+//! Iteration order is the other half of the contract. Lazily-created
+//! states live in a dense column in **first-visit order**, with a
+//! [`SlotIndex`]-style Fibonacci-hashed map (`local node id → column
+//! position`) used for point lookups only — never iterated. Sweeps
+//! (prune, telemetry) walk the visited column, so their order is a pure
+//! function of the trace, not of hash geometry; and since every
+//! `NodeState` is self-contained (θ̂ float sums run over a single node's
+//! own `ids ∥ last` columns), cross-node iteration order could not move
+//! a θ̂ bit even if it were nondeterministic. The lazy-vs-dense oracle
+//! (`prop_lazy_store_bit_identical_to_dense`) and both pinned golden
+//! families lock this end to end.
+
+use std::sync::Arc;
+
+use super::node_state::NodeState;
+use super::slot_index::SlotIndex;
+use crate::graph::Graph;
+use crate::rng::Rng;
+use crate::sim::engine::SurvivalSpec;
+
+/// How engine node state is stored — the `--node-state` /
+/// `DECAFORK_NODE_STATE` knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStateMode {
+    /// Eagerly allocate every node's state at construction (the pre-lazy
+    /// behavior). O(n) memory and prune sweeps; kept as the selectable
+    /// A/B oracle the lazy path is bit-compared against.
+    Dense,
+    /// Allocate a node's state on first visit (the default): memory and
+    /// housekeeping are O(visited), which is what lets `scale_100m` run
+    /// on hardware that could never hold 10⁸ dense states.
+    Lazy,
+}
+
+impl Default for NodeStateMode {
+    fn default() -> Self {
+        NodeStateMode::Lazy
+    }
+}
+
+/// Sparse-capable store for the per-node state of one contiguous node
+/// range `[base, base + len)`.
+///
+/// Both engines route every state access through here. In `Dense` mode
+/// the store is exactly the old `Vec<NodeState>` slice (position =
+/// `node − base`); in `Lazy` mode states sit in a first-visit-order
+/// column behind a compact open-addressing map. The parallel `rngs`
+/// column (stream-mode engines only) shares the same positions, so
+/// [`state_rng_mut`](Self::state_rng_mut) hands out disjoint `&mut`
+/// borrows of a node's state and its decision stream in one call.
+#[derive(Debug)]
+pub struct NodeStore {
+    mode: NodeStateMode,
+    /// First node id of the owned range.
+    base: u32,
+    /// Node count of the owned range.
+    range_len: u32,
+    /// MISSINGPERSON slot-table size handed to every constructed state
+    /// (0 for control families that never read it).
+    mp_slots: usize,
+    survival: SurvivalSpec,
+    graph: Arc<Graph>,
+    /// Root of the per-node decision streams (`node_root.split(node)`),
+    /// stream-mode engines only. `None` in the shared-stream engine,
+    /// whose decisions draw from the single engine stream.
+    node_root: Option<Rng>,
+    /// The state column. Dense: position = local node id, all `len`
+    /// entries present. Lazy: first-visit order, one entry per visited
+    /// node.
+    states: Vec<NodeState>,
+    /// Per-node decision streams, parallel to `states` (empty when
+    /// `node_root` is `None`).
+    rngs: Vec<Rng>,
+    /// Lazy mode: local node id of `states[pos]`, i.e. the visited list
+    /// in first-visit order. Empty in dense mode (position *is* the
+    /// local id there).
+    visited: Vec<u32>,
+    /// Lazy mode: local node id → column position. Point lookups only —
+    /// iteration always goes through `states`/`visited`, so hash order
+    /// can never leak into results.
+    index: SlotIndex,
+}
+
+impl NodeStore {
+    /// Build the store for `[base, base + len)`. In `Dense` mode every
+    /// state (and stream) is constructed here, in ascending node order —
+    /// byte-identical to the `Vec` columns this type replaced; in `Lazy`
+    /// mode construction is deferred to first visit, which produces the
+    /// same values (see the module docs' purity argument).
+    pub fn new(
+        mode: NodeStateMode,
+        graph: Arc<Graph>,
+        base: u32,
+        len: u32,
+        mp_slots: usize,
+        survival: SurvivalSpec,
+        node_root: Option<Rng>,
+    ) -> Self {
+        let mut store = NodeStore {
+            mode,
+            base,
+            range_len: len,
+            mp_slots,
+            survival,
+            graph,
+            node_root,
+            states: Vec::new(),
+            rngs: Vec::new(),
+            visited: Vec::new(),
+            index: SlotIndex::new(),
+        };
+        if mode == NodeStateMode::Dense {
+            store.states = (base..base + len)
+                .map(|i| NodeState::new(mp_slots, store.survival.resolve(&store.graph, i as usize)))
+                .collect();
+            if let Some(root) = &store.node_root {
+                store.rngs = (base..base + len).map(|i| root.split(i as u64)).collect();
+            }
+        }
+        store
+    }
+
+    /// Storage mode.
+    pub fn mode(&self) -> NodeStateMode {
+        self.mode
+    }
+
+    /// First node id of the owned range.
+    pub fn base(&self) -> u32 {
+        self.base
+    }
+
+    /// Node count of the owned range.
+    pub fn range_len(&self) -> u32 {
+        self.range_len
+    }
+
+    /// Number of materialized states: the visited count in lazy mode,
+    /// the full range length in dense mode.
+    pub fn visited_count(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Column position for `node`, materializing state (and stream) on a
+    /// lazy first visit.
+    #[inline]
+    fn pos_or_create(&mut self, node: u32) -> usize {
+        debug_assert!(
+            node >= self.base && node - self.base < self.range_len,
+            "node {node} outside store range [{}, {})",
+            self.base,
+            self.base as u64 + self.range_len as u64
+        );
+        let local = node - self.base;
+        match self.mode {
+            NodeStateMode::Dense => local as usize,
+            NodeStateMode::Lazy => {
+                if let Some(pos) = self.index.get(local) {
+                    return pos as usize;
+                }
+                // First visit: pure construction from (graph, node,
+                // params) — no RNG consumed, so the value is identical
+                // to the one eager construction would have produced.
+                let pos = self.states.len();
+                self.index.set(local, pos as u32);
+                self.states
+                    .push(NodeState::new(self.mp_slots, self.survival.resolve(&self.graph, node as usize)));
+                if let Some(root) = &self.node_root {
+                    self.rngs.push(root.split(node as u64));
+                }
+                self.visited.push(local);
+                pos
+            }
+        }
+    }
+
+    /// Mutable state of `node`, materializing it on a lazy first visit.
+    #[inline]
+    pub fn state_mut(&mut self, node: u32) -> &mut NodeState {
+        let pos = self.pos_or_create(node);
+        &mut self.states[pos]
+    }
+
+    /// Mutable state **and** decision stream of `node` as disjoint
+    /// borrows (the control phase needs both at once). Panics if the
+    /// store was built without a `node_root` — only stream-mode engines
+    /// own per-node streams.
+    #[inline]
+    pub fn state_rng_mut(&mut self, node: u32) -> (&mut NodeState, &mut Rng) {
+        let pos = self.pos_or_create(node);
+        (&mut self.states[pos], &mut self.rngs[pos])
+    }
+
+    /// Read-only state of `node`, **without** materializing: `None` for
+    /// a lazily-stored node that was never visited (dense mode always
+    /// answers within range).
+    pub fn get(&self, node: u32) -> Option<&NodeState> {
+        if node < self.base || node - self.base >= self.range_len {
+            return None;
+        }
+        let local = node - self.base;
+        match self.mode {
+            NodeStateMode::Dense => self.states.get(local as usize),
+            NodeStateMode::Lazy => self.index.get(local).map(|pos| &self.states[pos as usize]),
+        }
+    }
+
+    /// Whether `node` falls in this store's range.
+    pub fn contains(&self, node: u32) -> bool {
+        node >= self.base && (node - self.base) < self.range_len
+    }
+
+    /// Materialized states as `(node, &state)` pairs: ascending node
+    /// order in dense mode, first-visit order in lazy mode. Both orders
+    /// are pure functions of the scenario — never of hash geometry.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &NodeState)> + '_ {
+        self.states.iter().enumerate().map(move |(pos, s)| {
+            let local = match self.mode {
+                NodeStateMode::Dense => pos as u32,
+                NodeStateMode::Lazy => self.visited[pos],
+            };
+            (self.base + local, s)
+        })
+    }
+
+    /// Drop dead-weight last-seen entries from every **materialized**
+    /// state: O(visited) in lazy mode instead of the dense sweep's
+    /// O(range). Never-visited nodes hold no entries, so skipping them
+    /// is exact, not approximate.
+    pub fn prune(&mut self, t: u64) {
+        for s in &mut self.states {
+            s.prune(t);
+        }
+    }
+
+    /// Total resident bytes of this store: struct + state column (stack
+    /// parts and heap tails), decision streams, visited list and lookup
+    /// map. The measurement `benches/perf_state.rs` builds its O(visited)
+    /// acceptance bar on.
+    pub fn memory_bytes(&self) -> usize {
+        let per_state: usize = self
+            .states
+            .iter()
+            .map(|s| std::mem::size_of::<NodeState>() + s.heap_bytes())
+            .sum();
+        std::mem::size_of::<Self>()
+            + per_state
+            + self.rngs.len() * std::mem::size_of::<Rng>()
+            + self.visited.len() * std::mem::size_of::<u32>()
+            + self.index.capacity() * 8
+    }
+}
+
+/// Visited-aware telemetry view over one or more [`NodeStore`]s — what
+/// both engines' `states()` accessor now returns instead of a bare
+/// `&[NodeState]` slice (a dense slice cannot exist in lazy mode; most
+/// nodes have no state).
+#[derive(Debug, Clone, Copy)]
+pub struct StatesView<'a> {
+    stores: &'a [NodeStore],
+}
+
+impl<'a> StatesView<'a> {
+    /// View over a sharded engine's per-shard stores (range order).
+    pub fn new(stores: &'a [NodeStore]) -> Self {
+        StatesView { stores }
+    }
+
+    /// View over a single covering store (the shared-stream engine).
+    pub fn single(store: &'a NodeStore) -> Self {
+        StatesView { stores: std::slice::from_ref(store) }
+    }
+
+    /// Number of materialized states across all stores (the full node
+    /// count in dense mode).
+    pub fn visited_count(&self) -> usize {
+        self.stores.iter().map(NodeStore::visited_count).sum()
+    }
+
+    /// All materialized states as `(node, &state)` pairs: stores in
+    /// node-range order, within a store dense/first-visit order (see
+    /// [`NodeStore::iter`]).
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &'a NodeState)> + '_ {
+        self.stores.iter().flat_map(NodeStore::iter)
+    }
+
+    /// Point lookup without materializing (`None` = never visited, or
+    /// out of range).
+    pub fn get(&self, node: u32) -> Option<&'a NodeState> {
+        self.stores.iter().find(|s| s.contains(node)).and_then(|s| s.get(node))
+    }
+
+    /// Total engine-state resident bytes across stores.
+    pub fn memory_bytes(&self) -> usize {
+        self.stores.iter().map(NodeStore::memory_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::walks::WalkId;
+
+    fn small_graph() -> Arc<Graph> {
+        Arc::new(generators::random_regular(40, 4, &mut Rng::new(3)).unwrap())
+    }
+
+    fn store(mode: NodeStateMode, graph: Arc<Graph>, with_rngs: bool) -> NodeStore {
+        let n = graph.n() as u32;
+        let root = with_rngs.then(|| Rng::new(0xA0B1).split(77));
+        NodeStore::new(mode, graph, 0, n, 4, SurvivalSpec::Empirical, root)
+    }
+
+    #[test]
+    fn dense_matches_the_eager_columns_it_replaced() {
+        let g = small_graph();
+        let s = store(NodeStateMode::Dense, g.clone(), true);
+        assert_eq!(s.visited_count(), g.n());
+        // Ascending node order, every node present, untouched defaults.
+        for (expect, (node, st)) in s.iter().enumerate() {
+            assert_eq!(node, expect as u32);
+            assert_eq!(st.known_walks(), 0);
+            assert_eq!(st.slot_last_seen.len(), 4);
+        }
+    }
+
+    #[test]
+    fn lazy_materializes_on_first_visit_in_visit_order() {
+        let g = small_graph();
+        let mut s = store(NodeStateMode::Lazy, g, false);
+        assert_eq!(s.visited_count(), 0);
+        assert!(s.get(7).is_none(), "get must not materialize");
+        for (t, node) in [(1u64, 9u32), (2, 3), (3, 9), (4, 31)] {
+            s.state_mut(node).observe(t, WalkId(0), 0);
+        }
+        assert_eq!(s.visited_count(), 3);
+        let order: Vec<u32> = s.iter().map(|(n, _)| n).collect();
+        assert_eq!(order, vec![9, 3, 31], "iteration must be first-visit order");
+        assert_eq!(s.get(9).unwrap().last_seen_of(WalkId(0)), Some(3));
+        assert!(s.get(8).is_none());
+    }
+
+    #[test]
+    fn lazy_and_dense_stores_agree_under_a_random_schedule() {
+        // The store-level oracle: drive both modes through an identical
+        // observe/theta/prune schedule and demand bit-equal θ̂ sums and
+        // identical bookkeeping — including the per-node RNG streams,
+        // which lazy mode derives at first visit instead of eagerly.
+        let g = small_graph();
+        let mut rng = Rng::new(0xFEED);
+        let mut dense = store(NodeStateMode::Dense, g.clone(), true);
+        let mut lazy = store(NodeStateMode::Lazy, g.clone(), true);
+        let mut t = 0u64;
+        for step in 0..600u64 {
+            t += 1 + rng.below(3) as u64;
+            let node = rng.below(g.n()) as u32;
+            let walk = WalkId(rng.below(12) as u64);
+            match rng.below(10) {
+                0 => {
+                    dense.prune(t);
+                    lazy.prune(t);
+                }
+                1..=2 => {
+                    let (sd, rd) = dense.state_rng_mut(node);
+                    let (sl, rl) = lazy.state_rng_mut(node);
+                    assert_eq!(
+                        sd.theta(t, walk).to_bits(),
+                        sl.theta(t, walk).to_bits(),
+                        "step {step}: θ̂ diverged at node {node}"
+                    );
+                    assert_eq!(rd.next_u64(), rl.next_u64(), "step {step}: stream diverged");
+                }
+                _ => {
+                    assert_eq!(
+                        dense.state_mut(node).observe(t, walk, (walk.0 % 4) as u16),
+                        lazy.state_mut(node).observe(t, walk, (walk.0 % 4) as u16),
+                        "step {step}: return sample diverged at node {node}"
+                    );
+                }
+            }
+        }
+        // Every visited node's state agrees field-for-field on the
+        // observable surface.
+        for (node, sl) in lazy.iter() {
+            let sd = dense.get(node).unwrap();
+            assert_eq!(sd.known_walks(), sl.known_walks(), "node {node}");
+            assert_eq!(sd.slot_last_seen, sl.slot_last_seen, "node {node}");
+            assert_eq!(sd.last_control_step, sl.last_control_step, "node {node}");
+        }
+    }
+
+    #[test]
+    fn lazy_memory_tracks_visits_not_nodes() {
+        // A million-node implicit graph: the dense store would pay ~n ×
+        // size_of::<NodeState>() before the first step; the lazy store
+        // must stay within a few KB after a handful of visits.
+        let g = Arc::new(generators::implicit_ring(1_000_000, 8).unwrap());
+        let mut s = NodeStore::new(
+            NodeStateMode::Lazy,
+            g,
+            0,
+            1_000_000,
+            0,
+            SurvivalSpec::AnalyticGeometric,
+            Some(Rng::new(5)),
+        );
+        let empty = s.memory_bytes();
+        for k in 0..10u32 {
+            s.state_mut(k * 99_991).observe(k as u64 + 1, WalkId(k as u64), 0);
+        }
+        assert_eq!(s.visited_count(), 10);
+        let ten = s.memory_bytes();
+        let dense_floor = 1_000_000 * std::mem::size_of::<NodeState>();
+        assert!(
+            ten < empty + 10 * 1024,
+            "10 visits cost {} B over the empty store — not O(visited)",
+            ten - empty
+        );
+        assert!(ten * 100 < dense_floor, "lazy store ({ten} B) is not ≪ dense ({dense_floor} B)");
+    }
+
+    #[test]
+    fn sharded_ranges_partition_like_the_dense_columns() {
+        // Per-shard stores over contiguous ranges must jointly equal the
+        // single covering store: same states, same streams, routed by
+        // base offset.
+        let g = small_graph();
+        let root = Rng::new(9).split(13);
+        let whole = NodeStore::new(
+            NodeStateMode::Dense,
+            g.clone(),
+            0,
+            40,
+            2,
+            SurvivalSpec::Empirical,
+            Some(root.clone()),
+        );
+        let nps = 14u32; // ceil(40/3)
+        for k in 0..3u32 {
+            let base = k * nps;
+            let len = nps.min(40 - base);
+            let mut part = NodeStore::new(
+                NodeStateMode::Lazy,
+                g.clone(),
+                base,
+                len,
+                2,
+                SurvivalSpec::Empirical,
+                Some(root.clone()),
+            );
+            for node in base..base + len {
+                let (st, rng) = part.state_rng_mut(node);
+                assert_eq!(st.slot_last_seen, whole.get(node).unwrap().slot_last_seen);
+                // Streams are derived from the *global* node id, so the
+                // partition cannot change any decision draw.
+                let mut expect = root.split(node as u64);
+                assert_eq!(rng.next_u64(), expect.next_u64(), "node {node}");
+            }
+            assert_eq!(part.visited_count() as u32, len);
+        }
+    }
+
+    #[test]
+    fn view_spans_stores_and_counts_visits() {
+        let g = small_graph();
+        let mut a = NodeStore::new(
+            NodeStateMode::Lazy,
+            g.clone(),
+            0,
+            20,
+            0,
+            SurvivalSpec::Empirical,
+            None,
+        );
+        let mut b =
+            NodeStore::new(NodeStateMode::Lazy, g, 20, 20, 0, SurvivalSpec::Empirical, None);
+        a.state_mut(5).observe(1, WalkId(0), 0);
+        b.state_mut(33).observe(2, WalkId(1), 0);
+        b.state_mut(21).observe(3, WalkId(0), 0);
+        let stores = [a, b];
+        let v = StatesView::new(&stores);
+        assert_eq!(v.visited_count(), 3);
+        let nodes: Vec<u32> = v.iter().map(|(n, _)| n).collect();
+        assert_eq!(nodes, vec![5, 33, 21], "store order, then first-visit order");
+        assert!(v.get(5).is_some() && v.get(33).is_some());
+        assert!(v.get(6).is_none() && v.get(99).is_none());
+        assert!(v.memory_bytes() > 0);
+    }
+}

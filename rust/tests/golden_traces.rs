@@ -26,6 +26,14 @@
 //!    run must record and commit them (the CI `record golden traces`
 //!    step uploads them as an artifact for exactly that purpose). Until
 //!    then layer 1 — the frozen reference engine — is the active oracle.
+//!
+//! `DECAFORK_NODE_STATE=dense|lazy` selects the arena engine's
+//! node-state store for the comparison (default lazy; the frozen
+//! reference always keeps its own eager columns — `sim/reference.rs` is
+//! byte-untouched). Lazy materialization is a pure storage choice, so
+//! the arena must reproduce the reference in **both** modes — CI runs
+//! this lock with each value, which is the shared-stream half of the
+//! lazy-vs-dense golden matrix.
 
 use decafork::scenario::presets;
 use std::path::PathBuf;
@@ -40,12 +48,14 @@ fn encode(z: &[u32]) -> String {
 
 #[test]
 fn arena_engine_reproduces_reference_engine_exactly() {
-    for (name, scenario) in presets::golden() {
+    let node_state = decafork::scenario::parse::node_state_from_env().expect("DECAFORK_NODE_STATE");
+    for (name, mut scenario) in presets::golden() {
         let reference = {
             let mut e = scenario.reference_engine(0).unwrap();
             e.run_to(scenario.horizon);
             e.into_trace()
         };
+        scenario.params.node_state = node_state;
         let arena = {
             let mut e = scenario.engine(0).unwrap();
             e.run_to(scenario.horizon);

@@ -20,6 +20,7 @@ use decafork::rng::Rng;
 use decafork::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
 use decafork::sim::engine::SimParams;
 use decafork::sim::metrics::{EventKind, Trace};
+use decafork::walks::NodeStateMode;
 
 fn run_sharded(scenario: &Scenario, shards: usize) -> Trace {
     let mut e = scenario.sharded_engine(0, shards).expect("scenario must build");
@@ -133,6 +134,52 @@ fn pool_lifecycle_does_not_leak_workers_or_change_traces() {
         // the bound well above that, well below a real leak.
         assert!(a < b + 60, "worker threads leaked across engine drops: {b} -> {a}");
     }
+}
+
+#[test]
+fn prop_lazy_store_bit_identical_to_dense() {
+    // The lazy-vs-dense oracle (ISSUE 7): materializing node state on
+    // first visit is a pure storage choice, so at any shard count the
+    // lazy store must reproduce the eager dense columns bit for bit —
+    // z, the event log, extinction/cap flags AND every θ̂ float. The
+    // randomized scenarios already mix churn (probabilistic +
+    // Byzantine failures, forking controls); on top we randomize the
+    // prune schedule aggressively so the O(visited) sweep fires many
+    // times mid-run, at phases that differ from the default 256.
+    let mut rng = Rng::new(0x1A2B_5EED);
+    let mut total_theta = 0usize;
+    let mut total_events = 0usize;
+    for case in 0..8u64 {
+        let mut scenario = random_scenario(&mut rng, 0x700 + case);
+        scenario.params.prune_every = 8 + rng.below(56) as u64;
+        let mut dense = scenario.clone();
+        dense.params.node_state = NodeStateMode::Dense;
+        let lazy = scenario; // lazy is the default — keep it explicit below
+        assert_eq!(lazy.params.node_state, NodeStateMode::Lazy);
+        for shards in [1usize, 2, 7, 16] {
+            let d = run_sharded(&dense, shards);
+            let l = run_sharded(&lazy, shards);
+            assert!(
+                d.bit_identical(&l),
+                "case {case} ({}) at {shards} shards: lazy store diverged from dense",
+                lazy.label()
+            );
+            // bit_identical already covers θ̂, but the θ̂-bit comparison
+            // is the load-bearing half of this oracle — assert it
+            // explicitly so a future bit_identical refactor can't
+            // silently drop it.
+            assert_eq!(d.theta.len(), l.theta.len(), "case {case}");
+            for ((td, xd), (tl, xl)) in d.theta.iter().zip(l.theta.iter()) {
+                assert_eq!((td, xd.to_bits()), (tl, xl.to_bits()), "case {case}: θ̂ bits");
+            }
+            total_theta += d.theta.len();
+            total_events += d.events.len();
+        }
+    }
+    // Vacuity guard: the sweep must actually produce decisions and
+    // lifecycle events for the comparison to mean anything.
+    assert!(total_theta > 0, "no randomized case recorded θ̂");
+    assert!(total_events > 0, "no randomized case produced events");
 }
 
 #[test]

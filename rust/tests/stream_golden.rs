@@ -10,6 +10,12 @@
 //! * `DECAFORK_SHARDS=k` runs the comparison at `k` workers (default 1).
 //!   Schedule invariance means the pinned file must match at **every**
 //!   `k` — CI's shard-matrix smoke step runs this test at 1, 2 and 8.
+//! * `DECAFORK_NODE_STATE=dense|lazy` selects the node-state store the
+//!   comparison runs with (default lazy). Lazy materialization is a
+//!   pure storage choice (DESIGN.md §Lazy node store), so the **same**
+//!   pinned file must match in both modes — CI crosses this knob with
+//!   the shard matrix, which is the golden-family half of the
+//!   lazy-vs-dense lock.
 //! * `DECAFORK_WRITE_GOLDEN=1` (re)records the pins. Like the
 //!   shared-stream pins, the files cannot be generated in the offline
 //!   authoring sandbox (no Rust toolchain); the CI `record golden
@@ -32,7 +38,9 @@ fn encode(z: &[u32]) -> String {
 #[test]
 fn stream_mode_traces_match_pinned_goldens() {
     let shards = decafork::scenario::parse::shards_from_env().expect("DECAFORK_SHARDS");
-    for (name, scenario) in presets::golden() {
+    let node_state = decafork::scenario::parse::node_state_from_env().expect("DECAFORK_NODE_STATE");
+    for (name, mut scenario) in presets::golden() {
+        scenario.params.node_state = node_state;
         let trace = {
             let mut e = scenario.sharded_engine(0, shards).unwrap();
             e.run_to(scenario.horizon);
