@@ -1,0 +1,129 @@
+//! Arrival-routing bench (ISSUE 8): proves the mailbox path — hop
+//! workers binning arrivals into per-(chunk × destination-shard)
+//! mailboxes — beats the serial coordinator scan on a routing-dominated
+//! workload, without moving a single bit of the trace.
+//!
+//! Two legs:
+//!
+//! 1. **route_100k serial vs mailbox** at the full worker count: the
+//!    `scale_100k` topology with the walk population doubled, so the
+//!    coordinator's O(live-walks) inter-phase scan is a first-order
+//!    term of the step profile (it is the serial fraction Amdahl charges
+//!    at any worker count). Before any clock is trusted the leg
+//!    **asserts `Trace::bit_identical`** between the two routings — z,
+//!    the full event log, flags, and every θ̂ float at the bit level. A
+//!    "routing win" that moved a bit is a bug, not a result.
+//!    Acceptance bar: mailbox ≥ 1.5× serial steps/s.
+//! 2. **single-worker overhead report**: both routings at 1 shard
+//!    (report only — mailbox pays its binning with nobody to hand the
+//!    work to, and this leg prices that honestly).
+//!
+//! Writes `BENCH_route.json` (or `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_ROUTE_N` shrinks leg 1's node count (CI smoke),
+//! `DECAFORK_PERF_STEPS` rescales the horizon, `DECAFORK_ROUTE_WORKERS`
+//! sets the worker count (default 7 workers = 8 shards),
+//! `DECAFORK_PIN_CORES=on` additionally pins workers to cores (off by
+//! default — CI runners are cgroup-restricted), and
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the speedup bar to a report
+//! (the bit-identical assert is **never** downgraded).
+
+use decafork::scenario::{parse, presets, GraphSpec, Scenario};
+use decafork::sim::engine::RoutingMode;
+use std::time::Instant;
+
+fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
+}
+
+struct Run {
+    secs: f64,
+    trace: decafork::sim::metrics::Trace,
+}
+
+/// Build, run to the horizon, and measure one scenario/routing cell.
+fn run_cell(
+    scenario: &Scenario,
+    routing: RoutingMode,
+    shards: usize,
+    pin: bool,
+) -> anyhow::Result<Run> {
+    let mut s = scenario.clone();
+    s.params.routing = routing;
+    s.params.pin_cores = pin;
+    let mut e = s.sharded_engine(0, shards)?;
+    let t0 = Instant::now();
+    e.run_to(s.horizon);
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(Run { secs, trace: e.into_trace() })
+}
+
+fn steps_per_sec(r: &Run) -> f64 {
+    let steps = r.trace.z.iter().position(|&z| z == 0).unwrap_or(r.trace.z.len() - 1).max(1);
+    steps as f64 / r.secs
+}
+
+fn main() -> anyhow::Result<()> {
+    let no_enforce = std::env::var("DECAFORK_PERF_NO_ENFORCE").is_ok();
+    let workers = env_u64("DECAFORK_ROUTE_WORKERS").map(|w| (w as usize).max(1)).unwrap_or(7);
+    let shards = workers + 1;
+    let pin = parse::pin_cores_from_env()?;
+
+    // ---- Leg 1: serial vs mailbox on the routing-dominated preset ----
+    let mut r1 = presets::route_100k();
+    r1.params.record_theta = true; // θ̂ floats must match bit-for-bit too
+    let n1 = env_u64("DECAFORK_ROUTE_N").map(|n| (n as usize).max(1_000)).unwrap_or(100_000);
+    if n1 != 100_000 {
+        r1.graph = GraphSpec::RandomRegular { n: n1, d: 8 };
+    }
+    if let Some(steps) = env_u64("DECAFORK_PERF_STEPS") {
+        r1.rescale_to(steps.max(50));
+    }
+    println!(
+        "perf_route leg 1: {} | {} steps | {shards} shards | pin_cores={pin}",
+        r1.label(),
+        r1.horizon
+    );
+
+    let serial = run_cell(&r1, RoutingMode::Serial, shards, pin)?;
+    let mailbox = run_cell(&r1, RoutingMode::Mailbox, shards, pin)?;
+
+    // The oracle comes before the clock: identical bits or no result.
+    assert!(
+        serial.trace.bit_identical(&mailbox.trace),
+        "mailbox routing diverged from the serial scan — transport must be invisible to the trace"
+    );
+    assert!(!serial.trace.theta.is_empty(), "leg 1 recorded no θ̂ — the oracle would be vacuous");
+    let (ss, sm) = (steps_per_sec(&serial), steps_per_sec(&mailbox));
+    let speedup = sm / ss;
+    println!("  bit-identical           : yes ({} θ̂ samples compared)", serial.trace.theta.len());
+    println!("  steps/s serial          : {ss:>8.1}");
+    println!("  steps/s mailbox         : {sm:>8.1}");
+    println!("  mailbox / serial        : {speedup:>8.2}x  (acceptance bar: >= 1.5x)");
+    let pass = speedup >= 1.5;
+
+    // ---- Leg 2: single-worker overhead report (both routings) ----
+    let s1 = run_cell(&r1, RoutingMode::Serial, 1, false)?;
+    let m1 = run_cell(&r1, RoutingMode::Mailbox, 1, false)?;
+    assert!(
+        s1.trace.bit_identical(&m1.trace),
+        "mailbox routing diverged from serial at 1 shard"
+    );
+    let (ss1, sm1) = (steps_per_sec(&s1), steps_per_sec(&m1));
+    println!("\nperf_route leg 2: 1 shard (routing overhead, report only)");
+    println!("  steps/s serial / mailbox: {ss1:>8.1} / {sm1:.1} ({:.2}x)", sm1 / ss1);
+
+    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_route.json".into());
+    let json = format!(
+        "{{\n  \"bench\": \"perf_route\",\n  \"mode\": \"mailbox arrival routing vs serial coordinator scan, traces asserted bit-identical\",\n  \"shards\": {shards},\n  \"pin_cores\": {pin},\n  \"route_100k\": {{\n    \"n\": {n1},\n    \"steps\": {},\n    \"bit_identical\": true,\n    \"theta_samples_compared\": {},\n    \"steps_per_sec_serial\": {ss:.1},\n    \"steps_per_sec_mailbox\": {sm:.1},\n    \"speedup_mailbox_over_serial\": {speedup:.3}\n  }},\n  \"single_shard\": {{\n    \"steps_per_sec_serial\": {ss1:.1},\n    \"steps_per_sec_mailbox\": {sm1:.1}\n  }},\n  \"acceptance_min_speedup\": 1.5,\n  \"pass\": {pass}\n}}\n",
+        r1.horizon,
+        serial.trace.theta.len(),
+    );
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+
+    if !pass && !no_enforce {
+        anyhow::bail!("perf_route speedup bar not met ({speedup:.2}x < 1.5x) — see {out}");
+    }
+    Ok(())
+}

@@ -51,7 +51,8 @@ pub const PARALLEL_MIN_NODES: usize = 1 << 15;
 
 /// Dispatch a uniform closure set on the pool (first entry runs on the
 /// calling thread) — the builder-side twin of the sharded engine's
-/// `collect_tasks` + `fan_out`.
+/// `fan_out_slice` (this one predates the generic `run_slice` path and
+/// keeps the `dyn`-erased dispatch; the work is identical either way).
 fn run_tasks<F: FnMut() + Send>(pool: &mut WorkerPool, fs: &mut [F]) {
     let mut tasks: Vec<Task<'_>> = fs.iter_mut().map(|f| f as Task<'_>).collect();
     pool.run(&mut tasks);

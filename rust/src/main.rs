@@ -47,6 +47,13 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
            --node-state dense|lazy   (per-node state storage; default
                          lazy = allocate on first visit, O(visited)
                          memory — bit-identical to dense at any scale)
+           --routing serial|mailbox  (stream-mode arrival routing;
+                         default mailbox = hop workers bin arrivals,
+                         O(shards) coordinator work — bit-identical to
+                         the serial O(live-walks) oracle scan)
+           --pin-cores on|off        (default off; pin pool worker k to
+                         core k+1 — Linux, best-effort, placement only,
+                         never changes results)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
            --shards 1 --cores N
   train    --preset learn_tiny|learn_10k|learn_100k  (or --n 64 --d 8

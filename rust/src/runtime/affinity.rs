@@ -1,0 +1,81 @@
+//! Opt-in CPU pinning for the worker pool (`--pin-cores` /
+//! `DECAFORK_PIN_CORES` — DESIGN.md §Locality & routing).
+//!
+//! ## Why pinning is a knob, not a default
+//!
+//! The sharded engine's shard↔worker mapping is *sticky* by
+//! construction: task slot `k` of every phase always runs on pool
+//! worker `k − 1` (slot 0 on the coordinator), so shard `k`'s
+//! [`NodeStore`](crate::walks::NodeStore), mailbox rows and decision
+//! buffers are always touched by the same OS thread and stay warm in
+//! that thread's cache. Pinning adds the last binding — thread → core —
+//! so the OS scheduler cannot migrate a worker away from the cache (or,
+//! on multi-socket hosts, the NUMA domain) its shard's working set
+//! lives in. That binding is the remainder of the ROADMAP 10⁸-node
+//! item: first-touch allocation puts each shard's state on the owning
+//! worker's node, and pinning keeps the worker there.
+//!
+//! It stays opt-in because it is only ever a *placement* hint:
+//!
+//! * on cgroup-restricted runners (CI containers, cpuset-limited
+//!   hosts) the requested CPU may be outside the allowed mask and the
+//!   syscall fails — we deliberately ignore the failure and run
+//!   unpinned rather than abort;
+//! * on an oversubscribed host (replications × shards > cores,
+//!   `CoreBudget` notwithstanding) pinning two busy threads to one
+//!   core is strictly worse than letting the scheduler spread them.
+//!
+//! Pinning can never change a trace: it decides where a thread runs,
+//! never what any task computes — locked by
+//! `pin_cores_is_placement_only_and_changes_no_trace` in
+//! `tests/shard_invariance.rs`.
+
+/// Pin the calling thread to `core` (taken modulo the kernel's
+/// `CPU_SETSIZE` mask width). Returns `true` when the kernel accepted
+/// the mask; `false` on failure (CPU outside the cgroup's cpuset,
+/// core id beyond the machine) and always on non-Linux targets, where
+/// this is a no-op. Callers treat `false` as "run unpinned", never as
+/// an error.
+pub fn pin_current_thread(core: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        // SAFETY: `cpu_set_t` is a plain bit array (all-zeroes is the
+        // valid empty set); `sched_setaffinity(0, ..)` targets only the
+        // calling thread and reads `set` before returning.
+        unsafe {
+            let mut set: libc::cpu_set_t = std::mem::zeroed();
+            libc::CPU_ZERO(&mut set);
+            libc::CPU_SET(core % libc::CPU_SETSIZE as usize, &mut set);
+            libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = core;
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinning_is_best_effort_and_never_panics() {
+        // Whatever the host (bare metal, cgroup-restricted container,
+        // non-Linux), pinning must degrade to a boolean — the engine
+        // treats `false` as "run unpinned". An absurd core id must not
+        // blow up either (it wraps modulo the mask width, and the
+        // kernel rejects CPUs the machine doesn't have).
+        let _ = pin_current_thread(0);
+        let _ = pin_current_thread(usize::MAX);
+        // A spawned thread pinning itself must not disturb this
+        // thread's ability to keep running (the coordinator is never
+        // pinned — see module docs).
+        std::thread::spawn(|| {
+            let _ = pin_current_thread(1);
+        })
+        .join()
+        .unwrap();
+    }
+}

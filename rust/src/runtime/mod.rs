@@ -6,6 +6,7 @@
 //! executes them on the CPU PJRT client. Python never runs here; the rust
 //! binary is self-contained once `artifacts/` exists.
 
+pub mod affinity;
 pub mod manifest;
 pub mod pool;
 

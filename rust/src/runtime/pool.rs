@@ -32,17 +32,36 @@
 //!
 //! ## Safety contract
 //!
-//! [`WorkerPool::run`] erases task lifetimes to hand borrowed closures
-//! to persistent threads (the same job `std::thread::scope` does with
-//! its lifetime brand). Soundness rests on two invariants, both local to
-//! this file:
+//! [`WorkerPool::run_slice`] erases task lifetimes *and the task type*
+//! to hand borrowed closures to persistent threads (the same job
+//! `std::thread::scope` does with its lifetime brand). The published
+//! [`TaskSlice`] carries a monomorphized call thunk alongside the raw
+//! base pointer, so callers dispatch a plain `&mut [F]` of concrete
+//! closures directly — no per-phase `Vec<Task>` re-collection, no
+//! double indirection. Soundness rests on two invariants, both local
+//! to this file:
 //!
-//! 1. `run` does **not return** until `remaining == 0`, i.e. every
-//!    published task has finished — so the erased borrows never outlive
-//!    the caller's frame;
+//! 1. `run_slice` does **not return** until `remaining == 0`, i.e.
+//!    every published task has finished — so the erased borrows never
+//!    outlive the caller's frame;
 //! 2. each published slot is read by exactly one worker (slot `k` by
 //!    worker `k`), and the coordinator runs only the *split-off* first
 //!    task — so no `&mut` aliases.
+//!
+//! ## Sticky worker identity (DESIGN.md §Locality & routing)
+//!
+//! Worker `k` is a fixed OS thread for the pool's whole lifetime and
+//! always runs slot `k + 1` of every dispatch (the coordinator runs
+//! slot 0). Callers that index their task lists consistently — the
+//! sharded engine hands shard `k`'s hop chunk, store, mailbox row and
+//! decision buffer to slot `k` of every phase — therefore get *sticky
+//! shard affinity* for free: the same thread touches the same shard's
+//! working set every phase of every step, and data first-touched
+//! inside a task (lazy node states, mailbox growth) is allocated warm
+//! on its owning thread. [`WorkerPool::new_pinned`] optionally binds
+//! worker `k` to core `k + 1` (`runtime::affinity`), extending the
+//! binding down to the core/NUMA level; pinning is best-effort and can
+//! never change results.
 //!
 //! ## Shutdown-on-drop
 //!
@@ -63,17 +82,33 @@ use std::thread::JoinHandle;
 /// the caller across steps without reboxing.
 pub type Task<'a> = &'a mut (dyn FnMut() + Send);
 
-/// Lifetime-erased view of the caller's task slice. Only ever
+/// Lifetime- and type-erased view of the caller's task slice. Only ever
 /// dereferenced between publish and the `remaining == 0` handshake (see
-/// the module-level safety contract).
+/// the module-level safety contract). `call` is the monomorphized thunk
+/// that knows the concrete task type: `call(ptr, k)` runs slot `k` of
+/// the published `&mut [F]`.
 #[derive(Clone, Copy)]
 struct TaskSlice {
     ptr: *mut (),
     len: usize,
+    call: unsafe fn(*mut (), usize),
+}
+
+/// # Safety
+/// Never called: the empty slice publishes `len == 0`, so no worker
+/// ever takes a slot from it.
+unsafe fn call_nothing(_ptr: *mut (), _k: usize) {}
+
+/// # Safety
+/// `base` must be the base pointer of a live `&mut [F]` with more than
+/// `k` elements, and slot `k` must not be aliased by any other thread
+/// (the dispatch protocol guarantees both).
+unsafe fn call_slot<F: FnMut()>(base: *mut (), k: usize) {
+    (*(base as *mut F).add(k))()
 }
 
 impl TaskSlice {
-    const EMPTY: TaskSlice = TaskSlice { ptr: std::ptr::null_mut(), len: 0 };
+    const EMPTY: TaskSlice = TaskSlice { ptr: std::ptr::null_mut(), len: 0, call: call_nothing };
 }
 
 // SAFETY: the raw pointer is only dereferenced under the dispatch
@@ -106,12 +141,25 @@ struct Shared {
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
+    pinned: bool,
 }
 
 impl WorkerPool {
     /// Spawn `workers` parked threads (0 is allowed: every dispatch then
-    /// runs inline on the caller).
+    /// runs inline on the caller). Workers are not pinned — see
+    /// [`new_pinned`](Self::new_pinned).
     pub fn new(workers: usize) -> Self {
+        Self::new_pinned(workers, false)
+    }
+
+    /// [`new`](Self::new) with opt-in core pinning: when `pin` is set,
+    /// worker `k` binds itself to core `k + 1` at thread start (core 0
+    /// is left to the coordinator/caller thread, whose mask is never
+    /// touched — pinning the test runner's or a host application's main
+    /// thread would be hostile). Best-effort: a rejected mask (cgroup
+    /// cpuset, fewer cores than workers, non-Linux) leaves that worker
+    /// unpinned. Placement only — traces are identical either way.
+    pub fn new_pinned(workers: usize, pin: bool) -> Self {
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 epoch: 0,
@@ -128,11 +176,16 @@ impl WorkerPool {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
                     .name(format!("decafork-pool-{k}"))
-                    .spawn(move || worker_loop(&shared, k))
+                    .spawn(move || {
+                        if pin {
+                            let _ = crate::runtime::affinity::pin_current_thread(k + 1);
+                        }
+                        worker_loop(&shared, k)
+                    })
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { shared, handles }
+        WorkerPool { shared, handles, pinned: pin }
     }
 
     /// Number of pooled worker threads (the caller thread is extra).
@@ -140,18 +193,40 @@ impl WorkerPool {
         self.handles.len()
     }
 
+    /// Whether this pool was built with core pinning requested
+    /// (engines adopting a pre-built pool check the request matches
+    /// their params — actual pinning success is best-effort).
+    pub fn pinned(&self) -> bool {
+        self.pinned
+    }
+
     /// Run every task to completion: `tasks[0]` on the calling thread,
     /// `tasks[1..]` on the pooled workers (slot `k+1` on worker `k`).
-    /// Blocks until all tasks finished; panics if any task panicked or
-    /// if `tasks.len() - 1` exceeds the worker count.
+    /// Thin wrapper over [`run_slice`](Self::run_slice) for callers
+    /// whose tasks are heterogeneous closures behind `dyn` (a
+    /// `&mut dyn FnMut()` is itself `FnMut()`).
+    pub fn run(&mut self, tasks: &mut [Task<'_>]) {
+        self.run_slice(tasks)
+    }
+
+    /// Run a slice of concrete tasks to completion: `tasks[0]` on the
+    /// calling thread, `tasks[1..]` on the pooled workers (slot `k+1`
+    /// on worker `k` — the sticky identity the sharded engine's shard
+    /// affinity rides on). Blocks until all tasks finished; panics if
+    /// any task panicked or if `tasks.len() - 1` exceeds the worker
+    /// count.
+    ///
+    /// Generic over the task type so phase dispatch needs no boxing and
+    /// no intermediate `Vec<Task>`: the closure slice a phase builds is
+    /// published as-is, with a monomorphized thunk carrying the type.
     ///
     /// Takes `&mut self` deliberately: the safety contract assumes a
-    /// single dispatcher per pool (a second concurrent `run` could
+    /// single dispatcher per pool (a second concurrent dispatch could
     /// overwrite the published task slice while a slow worker still
     /// holds a pointer into the first), and exclusive access makes that
     /// unrepresentable in safe code — at zero cost to the engine, which
     /// owns its pool uniquely.
-    pub fn run(&mut self, tasks: &mut [Task<'_>]) {
+    pub fn run_slice<F: FnMut() + Send>(&mut self, tasks: &mut [F]) {
         let Some((first, rest)) = tasks.split_first_mut() else { return };
         if rest.is_empty() || self.handles.is_empty() {
             first();
@@ -168,7 +243,11 @@ impl WorkerPool {
         );
         {
             let mut st = self.shared.state.lock().unwrap();
-            st.tasks = TaskSlice { ptr: rest.as_mut_ptr() as *mut (), len: rest.len() };
+            st.tasks = TaskSlice {
+                ptr: rest.as_mut_ptr() as *mut (),
+                len: rest.len(),
+                call: call_slot::<F>,
+            };
             st.remaining = rest.len();
             st.panicked = false;
             st.epoch += 1;
@@ -208,7 +287,7 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: &Shared, k: usize) {
     let mut seen = 0u64;
     loop {
-        let task: Option<&mut (dyn FnMut() + Send)> = {
+        let job: Option<TaskSlice> = {
             let mut st = shared.state.lock().unwrap();
             loop {
                 if st.shutdown {
@@ -221,17 +300,19 @@ fn worker_loop(shared: &Shared, k: usize) {
             }
             seen = st.epoch;
             if k < st.tasks.len {
-                // SAFETY: slot `k` of the published slice is read by
-                // this worker only, and the coordinator keeps the
-                // underlying borrows alive until `remaining == 0`.
-                let slot = unsafe { &mut *(st.tasks.ptr as *mut Task<'_>).add(k) };
-                Some(&mut **slot)
+                Some(st.tasks)
             } else {
                 None
             }
         };
-        if let Some(f) = task {
-            let ok = catch_unwind(AssertUnwindSafe(f)).is_ok();
+        if let Some(ts) = job {
+            // SAFETY: slot `k` of the published slice is read by this
+            // worker only, the coordinator keeps the underlying borrows
+            // alive until `remaining == 0`, and `call` is the thunk
+            // monomorphized for the slice's actual element type by the
+            // `run_slice` call that published it. The lock is released
+            // before the call — tasks never run under the state mutex.
+            let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (ts.call)(ts.ptr, k) })).is_ok();
             let mut st = shared.state.lock().unwrap();
             if !ok {
                 st.panicked = true;
@@ -247,15 +328,22 @@ fn worker_loop(shared: &Shared, k: usize) {
 /// The pre-pool dispatch: one scoped spawn per task, first task on the
 /// caller. Kept as the measured baseline of `benches/perf_pool.rs`
 /// (pooled-vs-scoped on identical task lists) — not used on any
-/// production path.
-pub fn run_scoped(tasks: &mut [Task<'_>]) {
+/// production path. Generic like [`WorkerPool::run_slice`] so both
+/// dispatch modes accept the same concrete closure slices.
+pub fn run_scoped_slice<F: FnMut() + Send>(tasks: &mut [F]) {
     let Some((first, rest)) = tasks.split_first_mut() else { return };
     std::thread::scope(|scope| {
         for t in rest.iter_mut() {
-            scope.spawn(move || (*t)());
+            scope.spawn(move || t());
         }
         first();
     });
+}
+
+/// [`run_scoped_slice`] for `dyn`-erased task lists (mirrors
+/// [`WorkerPool::run`] over [`WorkerPool::run_slice`]).
+pub fn run_scoped(tasks: &mut [Task<'_>]) {
+    run_scoped_slice(tasks)
 }
 
 #[cfg(test)]
@@ -377,6 +465,60 @@ mod tests {
         let mut fs: Vec<_> = (0..3).map(|_| || bump(&count)).collect();
         pool.run(&mut tasks_of(&mut fs));
         assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn run_slice_dispatches_concrete_closures_without_reboxing() {
+        // The generic path the engine phases use: a plain Vec of one
+        // concrete closure type, published as-is (no Vec<Task>
+        // re-collection). Results must match the dyn-erased `run` path
+        // on the same work, across repeated dispatches (epoch reuse).
+        let mut pool = WorkerPool::new(3);
+        let mut data = vec![0u64; 80];
+        for round in 1..=10u64 {
+            let mut fs: Vec<_> = data
+                .chunks_mut(20)
+                .enumerate()
+                .map(|(k, chunk)| {
+                    move || {
+                        for (i, v) in chunk.iter_mut().enumerate() {
+                            *v = round * 10_000 + (k * 100 + i) as u64;
+                        }
+                    }
+                })
+                .collect();
+            pool.run_slice(&mut fs);
+            drop(fs);
+            for (k, chunk) in data.chunks(20).enumerate() {
+                for (i, &v) in chunk.iter().enumerate() {
+                    assert_eq!(v, round * 10_000 + (k * 100 + i) as u64, "round {round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pinned_pool_is_placement_only() {
+        // `new_pinned` may or may not succeed in binding cores (cgroup
+        // cpusets, 2-core runners) — either way it must dispatch
+        // exactly like an unpinned pool and report its request.
+        let mut pinned = WorkerPool::new_pinned(2, true);
+        let mut plain = WorkerPool::new(2);
+        assert!(pinned.pinned());
+        assert!(!plain.pinned());
+        assert_eq!(pinned.workers(), plain.workers());
+        let run = |pool: &mut WorkerPool| {
+            let mut out = vec![0u32; 30];
+            let mut fs: Vec<_> = out
+                .chunks_mut(10)
+                .enumerate()
+                .map(|(k, c)| move || c.iter_mut().for_each(|v| *v = k as u32 + 7))
+                .collect();
+            pool.run_slice(&mut fs);
+            drop(fs);
+            out
+        };
+        assert_eq!(run(&mut pinned), run(&mut plain));
     }
 
     #[test]

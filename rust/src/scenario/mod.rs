@@ -127,9 +127,14 @@ impl Scenario {
         // (`random_regular` at preset scale) assemble their CSR on the
         // same threads the run will step on. Graph bytes and RNG
         // consumption are pool-invariant, so this changes build *time*
-        // only — never the trace.
+        // only — never the trace. Pinning (if requested) is applied at
+        // spawn so graph build, store construction and every stepping
+        // phase all land on the bound cores; the engine adopts the pool
+        // only when its pinning matches `params.pin_cores`.
         let mut pool = match dispatch {
-            DispatchMode::Pooled if shards > 1 => Some(WorkerPool::new(shards - 1)),
+            DispatchMode::Pooled if shards > 1 => {
+                Some(WorkerPool::new_pinned(shards - 1, self.params.pin_cores))
+            }
             _ => None,
         };
         let graph = Arc::new(self.graph.build_pooled(&mut grng, pool.as_mut())?);

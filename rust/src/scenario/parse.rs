@@ -3,7 +3,7 @@
 
 use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::cli::Args;
-use crate::sim::engine::{SimParams, SurvivalSpec};
+use crate::sim::engine::{RoutingMode, SimParams, SurvivalSpec};
 use crate::walks::NodeStateMode;
 
 /// `--graph regular|er|complete|ba|ring` plus its family flags, and
@@ -185,6 +185,76 @@ pub fn node_state_from_env() -> anyhow::Result<NodeStateMode> {
     }
 }
 
+/// `--routing serial|mailbox`: how the stream-mode engine moves arrivals
+/// from the hop phase to the control phase. `mailbox` (the default, also
+/// when the flag is absent) bins arrivals on the hop workers so the
+/// coordinator's inter-phase work is O(shards); `serial` keeps the
+/// O(live-walks) coordinator scan as the A/B oracle `perf_route` and the
+/// routing golden matrix compare against. Results are bit-identical
+/// either way (DESIGN.md §Locality & routing) — like `--node-state`,
+/// this knob can never select a different trace family — but a valueless
+/// or unknown value is still an error, not a fallback.
+pub fn routing(args: &Args) -> anyhow::Result<RoutingMode> {
+    anyhow::ensure!(!args.has("routing"), "--routing needs a value (serial or mailbox)");
+    match args.flags.get("routing") {
+        None => Ok(RoutingMode::Mailbox),
+        Some(v) => routing_value("--routing", v),
+    }
+}
+
+/// Shared value validation for `--routing` / `DECAFORK_ROUTING`: errors
+/// name the knob, like [`positive_count`] does for the count knobs.
+fn routing_value(knob: &str, v: &str) -> anyhow::Result<RoutingMode> {
+    match v.trim() {
+        "mailbox" => Ok(RoutingMode::Mailbox),
+        "serial" => Ok(RoutingMode::Serial),
+        other => anyhow::bail!("{knob} must be 'serial' or 'mailbox', got '{other}'"),
+    }
+}
+
+/// `DECAFORK_ROUTING` env mirror for binaries without flag plumbing
+/// (benches, the golden tests' routing CI matrix): same semantics as
+/// `--routing`, absent = mailbox, present-but-invalid = error.
+pub fn routing_from_env() -> anyhow::Result<RoutingMode> {
+    match std::env::var("DECAFORK_ROUTING") {
+        Err(_) => Ok(RoutingMode::Mailbox),
+        Ok(v) => routing_value("DECAFORK_ROUTING", &v),
+    }
+}
+
+/// `--pin-cores on|off`: pin stream-mode pool worker `k` to CPU core
+/// `k + 1` (Linux only, best-effort, placement-only — DESIGN.md
+/// §Locality & routing explains why it is off by default). Takes an
+/// explicit value rather than acting as a bare switch so the env mirror,
+/// scripts and CI matrices can spell both states; a valueless or unknown
+/// value is an error, not a fallback.
+pub fn pin_cores(args: &Args) -> anyhow::Result<bool> {
+    anyhow::ensure!(!args.has("pin-cores"), "--pin-cores needs a value (on or off)");
+    match args.flags.get("pin-cores") {
+        None => Ok(false),
+        Some(v) => pin_cores_value("--pin-cores", v),
+    }
+}
+
+/// Shared value validation for `--pin-cores` / `DECAFORK_PIN_CORES`.
+fn pin_cores_value(knob: &str, v: &str) -> anyhow::Result<bool> {
+    match v.trim() {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("{knob} must be 'on' or 'off', got '{other}'"),
+    }
+}
+
+/// `DECAFORK_PIN_CORES` env mirror for binaries without flag plumbing
+/// (benches, examples): same semantics as `--pin-cores`, absent = off,
+/// present-but-invalid = error.
+pub fn pin_cores_from_env() -> anyhow::Result<bool> {
+    match std::env::var("DECAFORK_PIN_CORES") {
+        Err(_) => Ok(false),
+        Ok(v) => pin_cores_value("DECAFORK_PIN_CORES", &v),
+    }
+}
+
 /// `--cores N`: the runner's [`CoreBudget`] — total cores split across
 /// replication threads × per-run stream workers
 /// ([`CoreBudget::plan`](crate::sim::CoreBudget::plan)). Falls back to
@@ -221,6 +291,8 @@ pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
             control_start: args.flags.get("warmup").map(|w| w.parse()).transpose()?,
             shards: shards(args)?,
             node_state: node_state(args)?,
+            routing: routing(args)?,
+            pin_cores: pin_cores(args)?,
             ..Default::default()
         },
         control: control(args)?,
@@ -386,6 +458,66 @@ mod tests {
         );
         let e = node_state_value("DECAFORK_NODE_STATE", "both").unwrap_err().to_string();
         assert!(e.contains("DECAFORK_NODE_STATE"), "env var not named: {e}");
+    }
+
+    #[test]
+    fn routing_knob_validates_and_defaults_mailbox() {
+        // Absent = mailbox (the O(shards) coordinator default), explicit
+        // values parse, and both failure modes — valueless switch and
+        // unknown value — error with the knob named instead of falling
+        // back.
+        assert_eq!(routing(&args("simulate")).unwrap(), RoutingMode::Mailbox);
+        assert_eq!(routing(&args("simulate --routing mailbox")).unwrap(), RoutingMode::Mailbox);
+        assert_eq!(routing(&args("simulate --routing serial")).unwrap(), RoutingMode::Serial);
+        let e = routing(&args("simulate --routing")).unwrap_err().to_string();
+        assert!(e.contains("--routing"), "valueless: knob not named: {e}");
+        let e = routing(&args("simulate --routing --record-theta")).unwrap_err().to_string();
+        assert!(e.contains("--routing"), "switch-before-flag: knob not named: {e}");
+        for bad in ["parallel", "scan", "0", ""] {
+            let e = routing(&args(&format!("simulate --routing {bad}"))).unwrap_err().to_string();
+            assert!(e.contains("--routing"), "'{bad}': knob not named: {e}");
+        }
+        // Full scenario plumbing.
+        let s = scenario(&args("simulate --routing serial")).unwrap();
+        assert_eq!(s.params.routing, RoutingMode::Serial);
+        let s = scenario(&args("simulate")).unwrap();
+        assert_eq!(s.params.routing, RoutingMode::Mailbox, "default must be mailbox routing");
+    }
+
+    #[test]
+    fn routing_env_mirror_validates_values() {
+        // Value validation only — the absent-variable default is covered
+        // by the knob test above (reading the live process env here
+        // would race other tests).
+        assert_eq!(routing_value("DECAFORK_ROUTING", "serial").unwrap(), RoutingMode::Serial);
+        assert_eq!(routing_value("DECAFORK_ROUTING", " mailbox ").unwrap(), RoutingMode::Mailbox);
+        let e = routing_value("DECAFORK_ROUTING", "both").unwrap_err().to_string();
+        assert!(e.contains("DECAFORK_ROUTING"), "env var not named: {e}");
+    }
+
+    #[test]
+    fn pin_cores_knob_validates_and_defaults_off() {
+        assert!(!pin_cores(&args("simulate")).unwrap(), "pinning must be opt-in");
+        assert!(pin_cores(&args("simulate --pin-cores on")).unwrap());
+        assert!(!pin_cores(&args("simulate --pin-cores off")).unwrap());
+        let e = pin_cores(&args("simulate --pin-cores")).unwrap_err().to_string();
+        assert!(e.contains("--pin-cores"), "valueless: knob not named: {e}");
+        let e = pin_cores(&args("simulate --pin-cores --record-theta")).unwrap_err().to_string();
+        assert!(e.contains("--pin-cores"), "switch-before-flag: knob not named: {e}");
+        for bad in ["true", "yes", "1", ""] {
+            let e = pin_cores(&args(&format!("simulate --pin-cores {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("--pin-cores"), "'{bad}': knob not named: {e}");
+        }
+        // Env mirror value validation + full scenario plumbing.
+        assert!(pin_cores_value("DECAFORK_PIN_CORES", " on ").unwrap());
+        let e = pin_cores_value("DECAFORK_PIN_CORES", "maybe").unwrap_err().to_string();
+        assert!(e.contains("DECAFORK_PIN_CORES"), "env var not named: {e}");
+        let s = scenario(&args("simulate --pin-cores on")).unwrap();
+        assert!(s.params.pin_cores);
+        let s = scenario(&args("simulate")).unwrap();
+        assert!(!s.params.pin_cores, "default must leave threads unpinned");
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Named scenarios: the paper's figure setups, the perf workloads the
 //! engine and the control stack are benchmarked on (`perf_hot_loop`,
-//! `perf_control_*`, `scale_10k`, and the stream-mode `scale_100k` /
-//! `scale_1m` sharding probes), and the golden determinism-lock
+//! `perf_control_*`, `scale_10k`, the stream-mode `scale_100k` /
+//! `scale_1m` sharding probes, and the routing-dominated `route_100k`
+//! leg), and the golden determinism-lock
 //! quartet. Keeping them here means the CLI, the figure harness, the
 //! benches and the tests all run the *same* experiment when they say the
 //! same name.
@@ -197,6 +198,29 @@ pub fn scale_100k() -> Scenario {
         runs: 1,
         seed: 0xCAFE3,
     }
+}
+
+/// The routing-dominated leg for `benches/perf_route.rs`: `scale_100k`'s
+/// topology and failure shape with the walk population doubled
+/// (Z0 = 16384). What the bench measures is the coordinator's
+/// inter-phase arrival work, which scales with *live walks* — not with
+/// nodes — so doubling Z pushes the serial O(live) scan toward the top
+/// of the per-step profile (Amdahl: the parallel hop/control phases
+/// divide by the worker count, the scan doesn't) and makes the
+/// mailbox-vs-serial gap measurable rather than noise. Thresholds keep
+/// the scale-preset design rule: ε = Z0/4, ε₂ high enough that
+/// termination stays rare, 10% bursts, p_f = 5e-4.
+pub fn route_100k() -> Scenario {
+    let mut s = scale_100k();
+    s.params.z0 = 16_384;
+    s.params.max_walks = 32_768;
+    s.control = ControlSpec::DecaforkPlus { epsilon: 4096.0, epsilon2: 12_000.0 };
+    s.failures = FailureSpec::Composite(vec![
+        FailureSpec::Burst { events: vec![(800, 1638), (1400, 1638)] },
+        FailureSpec::Probabilistic { p_f: 0.0005 },
+    ]);
+    s.seed = 0xCAFE7;
+    s
 }
 
 /// The ROADMAP north-star probe: one million nodes, plain DECAFORK on
@@ -547,6 +571,18 @@ mod tests {
         r.rescale_to(200);
         assert_eq!(r.horizon, 200);
         assert_eq!(r.params.control_start, Some(40));
+        // The routing-dominated leg (`perf_route`): same topology as
+        // scale_100k, doubled walk population — the coordinator's
+        // serial arrival scan costs O(live walks), so this is the
+        // preset where routing choice shows up.
+        let rt = route_100k();
+        assert_eq!(rt.graph, s.graph, "route_100k must keep the scale_100k topology");
+        assert_eq!(rt.params.z0, 2 * s.params.z0, "route leg doubles the walk population");
+        assert!(rt.params.max_walks >= rt.params.z0 as usize * 2);
+        assert_ne!(rt.seed, s.seed, "distinct preset, distinct sample");
+        let mut rq = route_100k();
+        rq.rescale_to(200);
+        assert_eq!(rq.horizon, 200);
     }
 
     #[test]

@@ -146,6 +146,35 @@ pub struct SimParams {
     /// node store), locked by `prop_lazy_store_bit_identical_to_dense`
     /// and both golden families.
     pub node_state: NodeStateMode,
+    /// Arrival-routing strategy for the stream-mode engine (`--routing`
+    /// / `DECAFORK_ROUTING`): `Mailbox` (default) makes the hop workers
+    /// bin surviving walks into per-(chunk × destination-shard)
+    /// mailboxes so the coordinator's inter-phase work is O(shards);
+    /// `Serial` keeps the original O(live-walks) coordinator scan as
+    /// the A/B oracle. Bit-identical by construction (DESIGN.md
+    /// §Locality & routing), locked by
+    /// `prop_mailbox_routing_bit_identical_to_serial` and both golden
+    /// families. The single-arena [`Engine`] ignores the field.
+    pub routing: RoutingMode,
+    /// Pin pool worker `k` to CPU core `k + 1` (`--pin-cores` /
+    /// `DECAFORK_PIN_CORES`, Linux only, best-effort). Placement hint
+    /// only — can never change a trace; see
+    /// [`runtime::affinity`](crate::runtime::affinity) for why it is
+    /// off by default.
+    pub pin_cores: bool,
+}
+
+/// How stream-mode arrivals travel from the hop phase to the control
+/// phase (see [`SimParams::routing`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingMode {
+    /// Coordinator scans the full dense position column between the
+    /// phases — O(live walks) of serial work per step.
+    Serial,
+    /// Hop workers route arrivals into per-(chunk × shard) mailboxes
+    /// in parallel; the coordinator only hands the mailbox rows to the
+    /// control tasks — O(shards) of serial work per step.
+    Mailbox,
 }
 
 impl Default for SimParams {
@@ -160,6 +189,8 @@ impl Default for SimParams {
             max_walks: 4096,
             shards: 1,
             node_state: NodeStateMode::Lazy,
+            routing: RoutingMode::Mailbox,
+            pin_cores: false,
         }
     }
 }

@@ -21,7 +21,7 @@ pub mod shard_hook;
 pub mod sharded;
 
 pub use config::{ControlSpec, ExperimentConfig, FailureSpec, GraphSpec};
-pub use engine::{Engine, SimParams, StartPlacement, VisitHook};
+pub use engine::{Engine, RoutingMode, SimParams, StartPlacement, VisitHook};
 pub use metrics::{AggregateTrace, Event, EventKind, Trace};
 pub use reference::ReferenceEngine;
 pub use runner::{run_many, run_many_with_budget, CoreBudget, RunPlan};

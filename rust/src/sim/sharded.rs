@@ -29,33 +29,71 @@
 //!
 //! ```text
 //! pre-step failures (model stream, coordinator) → compact ─┐ barrier 1
-//!   hop phase   — dense walk columns split into contiguous │
-//!                 chunks; each worker hops its walks on    │
-//!                 their own streams, records hop deaths    │
+//!   hop phase   — dense walk columns split into exactly    │
+//!                 `shards` contiguous chunks; each worker  │
+//!                 hops its walks on their own streams,     │
+//!                 records hop deaths and (mailbox routing) │
+//!                 bins survivors into per-(chunk ×         │
+//!                 destination-shard) mailboxes             │
 //!   [apply hop deaths in dense order]                      │
 //!   control phase — nodes split into contiguous ranges;    │
 //!                 each worker observes its nodes' arrivals │
 //!                 in dense (creation) order and runs       │
 //!                 control on per-node streams              │
-//! merge decisions sorted by deciding walk's dense index ───┘ barrier 2
+//! k-way merge of the per-shard decision buffers, ascending ┘ barrier 2
+//!   in the deciding walk's dense index
 //!   (θ̂ telemetry, fork spawns + child streams, kills) → compact → Z_t
 //! ```
 //!
 //! Everything order-sensitive happens at the barriers, in **canonical
 //! (creation/dense) order**: hop deaths are applied in dense order (the
 //! contiguous chunks concatenate to exactly that), decisions are merged
-//! sorted by the deciding walk's dense index, and fork children are
-//! spawned — and observed at the forking node — in that same order, so
-//! arena ids, node-table first-seen order (the θ̂ float-sum order), the
-//! event log and the θ̂ telemetry are all identical at any shard count.
-//! Inside a phase nothing shared is touched: walk chunks are disjoint
-//! column ranges; each shard owns a [`NodeStore`] holding its node
-//! range's states and streams (materialized lazily on first visit —
-//! DESIGN.md §Lazy node store) and its clone of the control algorithm
-//! (per-node control state like `PeriodicFork::next_fork` is
-//! node-indexed, so clones never disagree).
+//! ascending in the deciding walk's dense index (each shard's buffer is
+//! already ascending — arrivals are fed in dense order — so the merge is
+//! a k-way head-pick, not a sort), and fork children are spawned — and
+//! observed at the forking node — in that same order, so arena ids,
+//! node-table first-seen order (the θ̂ float-sum order), the event log
+//! and the θ̂ telemetry are all identical at any shard count. Inside a
+//! phase nothing shared is touched: walk chunks are disjoint column
+//! ranges; each shard owns a [`NodeStore`] holding its node range's
+//! states and streams (materialized lazily on first visit — DESIGN.md
+//! §Lazy node store) and its clone of the control algorithm (per-node
+//! control state like `PeriodicFork::next_fork` is node-indexed, so
+//! clones never disagree).
 //!
-//! ## Thread model (DESIGN.md §Worker pool)
+//! ## Arrival routing: the coordinator off the critical path
+//!
+//! How arrivals travel from the hop phase to the control phase is a
+//! [`RoutingMode`] knob (`--routing` / `DECAFORK_ROUTING`) — and, like
+//! the lazy/dense node-store pair, the two modes are bit-identical by
+//! construction (DESIGN.md §Locality & routing):
+//!
+//! * [`RoutingMode::Serial`] — the original, kept as the A/B oracle:
+//!   the coordinator re-scans the full dense position column between
+//!   the phases and buckets survivors by owning node range. O(live
+//!   walks) of *serial* work on the step's critical path, which by
+//!   Amdahl caps what the parallel phases can buy.
+//! * [`RoutingMode::Mailbox`] — the default: each hop worker, while it
+//!   still owns the walk, pushes the survivor's complete arrival record
+//!   into the mailbox for (its chunk `c`, destination shard `s`) — a
+//!   flat `shards²` matrix indexed `c·shards + s`, so every row has
+//!   exactly one writer. The control task for shard `s` then drains
+//!   rows `(0,s), (1,s), …` in chunk order. A chunk covers an ascending
+//!   dense range and is scanned ascending, so each row is ascending in
+//!   dense, and the chunk-major concatenation reproduces the serial
+//!   scan's per-shard arrival order *exactly*: first-visit order, the
+//!   θ̂ float-sum order and the golden traces cannot move a bit. The
+//!   coordinator's inter-phase work drops to O(shards) buffer handoff.
+//!
+//! Hop deaths never reach a mailbox (a walk has one fate per step), and
+//! the pre-hop compact means there are no stale tombstones to skip — the
+//! two paths bucket the same survivors. Locked by
+//! `prop_mailbox_routing_bit_identical_to_serial`
+//! (tests/shard_invariance.rs) and by running both pinned golden
+//! families under both modes; the speedup is gated by
+//! `benches/perf_route.rs`.
+//!
+//! ## Thread model (DESIGN.md §Worker pool, §Locality & routing)
 //!
 //! Each parallel phase is a task list handed to a persistent
 //! [`WorkerPool`]: `shards − 1` threads spawned once at construction and
@@ -67,6 +105,19 @@
 //! `std::thread::scope` spawning as the measured baseline of
 //! `benches/perf_pool.rs`. Dispatch never affects results: the trace is
 //! bit-identical across modes and worker counts alike.
+//!
+//! Worker identity is **sticky**: task slot `k` of every phase — hop
+//! chunk `k`, control shard `k`, prune sweep `k`, and the one-shot
+//! store-construction phase at build time — always runs on pool worker
+//! `k − 1` (slot 0 on the coordinator). Shard `k`'s [`NodeStore`],
+//! mailbox rows and decision buffer are therefore always touched by the
+//! same OS thread: its caches stay warm across phases and steps, and
+//! because the stores are *built* on their owning workers too, the
+//! kernel's default first-touch policy places each shard's state on
+//! that worker's NUMA node. `--pin-cores` / `DECAFORK_PIN_CORES`
+//! optionally adds the last binding — worker `k` → core `k + 1` — via
+//! [`runtime::affinity`](crate::runtime::affinity); it is opt-in,
+//! best-effort and placement-only (never changes a trace).
 //!
 //! ## What stream mode is *not*
 //!
@@ -95,8 +146,8 @@ use crate::control::{Control, VisitCtx};
 use crate::failures::Failures;
 use crate::graph::Graph;
 use crate::rng::{streams, Rng};
-use crate::runtime::pool::{self, Task, WorkerPool};
-use crate::sim::engine::{SimParams, StartPlacement};
+use crate::runtime::pool::{self, WorkerPool};
+use crate::sim::engine::{RoutingMode, SimParams, StartPlacement};
 use crate::sim::metrics::{Event, EventKind, Trace};
 use crate::sim::shard_hook::{NoShardHook, ShardHook, ShardVisit};
 use crate::walks::{Lineage, NodeStore, StatesView, Walk, WalkArena, WalkId};
@@ -191,14 +242,29 @@ pub struct ShardedEngine {
     /// Dropped — and its threads joined — with the engine.
     pool: Option<WorkerPool>,
     dispatch: DispatchMode,
-    // Per-shard scratch, reused across steps.
+    // Per-shard scratch, reused across steps (cleared in place, so the
+    // steady state allocates nothing per step beyond the `shards`-sized
+    // per-phase task lists).
     hop_deaths: Vec<Vec<HopDeath>>,
+    /// Serial-routing arrival buckets, one per shard — filled by the
+    /// coordinator's inter-phase scan only in [`RoutingMode::Serial`].
     arrivals: Vec<Vec<Arrival>>,
     /// Parallel to `arrivals`, populated only on hooked steps
     /// (`H::ACTIVE`): the arriving walk's payload index for the hook's
     /// visit view. Stays empty — zero writes, zero reads — on the plain
     /// path.
     arrival_payloads: Vec<Vec<Option<usize>>>,
+    /// Mailbox-routing arrival matrix, `shards²` rows flat-indexed
+    /// `chunk · shards + destination_shard` — hop worker `c` writes only
+    /// rows `c·shards ..`, control worker `s` reads only rows `(·, s)`,
+    /// so rows never have two owners (see module docs). Unused in
+    /// [`RoutingMode::Serial`].
+    mailboxes: Vec<Vec<Arrival>>,
+    /// Parallel to `mailboxes`, filled only on hooked mailbox steps —
+    /// same contract as `arrival_payloads`.
+    mailbox_payloads: Vec<Vec<Option<usize>>>,
+    /// K-way merge cursors (one per shard) for the decision barrier.
+    merge_heads: Vec<usize>,
     decisions: Vec<Vec<DecisionOut>>,
 }
 
@@ -281,39 +347,73 @@ impl ShardedEngine {
         let mp_slots = if matches!(control, Control::MissingPerson(_)) { z0 as usize } else { 0 };
         let controls = vec![control; shards];
         let nodes_per_shard = n.div_ceil(shards).max(1);
-        // One store per shard over its contiguous node range. Every
-        // store hands lazily-materialized nodes a stream split from the
-        // same `node_root` by *global* node id, so the partition is
-        // invisible to every decision draw — and eager (dense-mode)
-        // construction, done per-range here, is element-for-element the
-        // `(0..n)` columns this replaced.
-        let stores: Vec<NodeStore> = (0..shards)
-            .map(|k| {
-                let base = (k * nodes_per_shard).min(n);
-                let len = nodes_per_shard.min(n - base);
-                NodeStore::new(
-                    params.node_state,
-                    graph.clone(),
-                    base as u32,
-                    len as u32,
-                    mp_slots,
-                    params.survival,
-                    Some(node_root.clone()),
-                )
-            })
-            .collect();
         let control_start = params
             .control_start
             .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
         let mut trace = Trace::default();
         trace.z.push(z0);
-        let pool = match dispatch {
+        // The pool comes up *before* the stores so store construction
+        // can run on the workers that will own the stores. An adopted
+        // pool must match both the worker count and the pinning this
+        // engine was asked for — a mismatch silently changing placement
+        // would make `--pin-cores` a lie — otherwise it is dropped and
+        // rebuilt, keeping thread accounting identical to the
+        // non-adopting constructors.
+        let mut pool = match dispatch {
             DispatchMode::Pooled if shards > 1 => Some(match adopt {
-                Some(p) if p.workers() == shards - 1 => p,
-                _ => WorkerPool::new(shards - 1),
+                Some(p) if p.workers() == shards - 1 && p.pinned() == params.pin_cores => p,
+                _ => WorkerPool::new_pinned(shards - 1, params.pin_cores),
             }),
             _ => None,
         };
+        // One store per shard over its contiguous node range. Every
+        // store hands lazily-materialized nodes a stream split from the
+        // same `node_root` by *global* node id, so the partition is
+        // invisible to every decision draw — and eager (dense-mode)
+        // construction, done per-range here, is element-for-element the
+        // `(0..n)` columns this replaced. Construction is *first-touch
+        // aware* (DESIGN.md §Locality & routing): build slot `k` runs on
+        // the same sticky pool worker that will run shard `k`'s control
+        // tasks for the whole run, so the store's columns are first
+        // touched — hence, under the kernel's default first-touch
+        // policy, physically allocated — on the owning worker's NUMA
+        // node. Safe to parallelize because `NodeStore::new` is a pure
+        // function of (mode, graph, range, params, stream root): no
+        // draw, no ordering effect, identical stores wherever it runs.
+        let mut store_slots: Vec<Option<NodeStore>> = (0..shards).map(|_| None).collect();
+        {
+            let graph_ref = &graph;
+            let node_root_ref = &node_root;
+            let node_state = params.node_state;
+            let survival = params.survival;
+            let mut builds: Vec<_> = store_slots
+                .iter_mut()
+                .enumerate()
+                .map(|(k, slot)| {
+                    move || {
+                        let lo = (k * nodes_per_shard).min(n);
+                        let len = nodes_per_shard.min(n - lo);
+                        *slot = Some(NodeStore::new(
+                            node_state,
+                            graph_ref.clone(),
+                            lo as u32,
+                            len as u32,
+                            mp_slots,
+                            survival,
+                            Some(node_root_ref.clone()),
+                        ));
+                    }
+                })
+                .collect();
+            match pool.as_mut() {
+                Some(p) => p.run_slice(&mut builds),
+                // Inline / scoped dispatch has no persistent workers to
+                // place memory for — build on the coordinator.
+                None => builds.iter_mut().for_each(|b| b()),
+            }
+        }
+        let stores: Vec<NodeStore> =
+            store_slots.into_iter().map(|s| s.expect("every build task ran")).collect();
         ShardedEngine {
             graph,
             params,
@@ -332,6 +432,9 @@ impl ShardedEngine {
             hop_deaths: (0..shards).map(|_| Vec::new()).collect(),
             arrivals: (0..shards).map(|_| Vec::new()).collect(),
             arrival_payloads: (0..shards).map(|_| Vec::new()).collect(),
+            mailboxes: (0..shards * shards).map(|_| Vec::new()).collect(),
+            mailbox_payloads: (0..shards * shards).map(|_| Vec::new()).collect(),
+            merge_heads: Vec::new(),
             decisions: (0..shards).map(|_| Vec::new()).collect(),
         }
     }
@@ -446,31 +549,95 @@ impl ShardedEngine {
 
         // 2. Hop phase: contiguous chunks of the dense walk columns, one
         //    worker each. Every draw comes from the walk's own stream,
-        //    so chunk boundaries cannot influence any value.
+        //    so chunk boundaries cannot influence any value. In mailbox
+        //    routing the workers also bin surviving walks into the
+        //    per-(chunk × destination-shard) mailboxes right here — the
+        //    walk's columns are already in cache — which is what lets
+        //    the coordinator skip its O(live) inter-phase scan below.
         let len0 = self.arena.dense_len();
         if len0 == 0 {
             self.trace.z.push(0);
             self.trace.extinct = true;
             return Ok(());
         }
-        let chunk = len0.div_ceil(self.shards).max(1);
+        let shards = self.shards;
+        let nodes_per_shard = self.nodes_per_shard;
+        let route = self.params.routing == RoutingMode::Mailbox;
+        let route_payloads = route && H::ACTIVE;
+        if route {
+            for row in &mut self.mailboxes {
+                row.clear();
+            }
+            for row in &mut self.mailbox_payloads {
+                row.clear();
+            }
+        }
+        let chunk = len0.div_ceil(shards).max(1);
         {
-            let (ids, at, walk_rngs) = self.arena.hop_columns_mut();
+            let (ids, lineage, payloads, at, walk_rngs) = self.arena.hop_columns_routed_mut();
             let graph: &Graph = &self.graph;
             let failures = &self.failures;
-            if self.shards == 1 {
-                hop_chunk(graph, failures, t, 0, ids, at, walk_rngs, &mut self.hop_deaths[0]);
+            if shards == 1 {
+                hop_chunk(
+                    graph,
+                    failures,
+                    t,
+                    0,
+                    ids,
+                    lineage,
+                    payloads,
+                    at,
+                    walk_rngs,
+                    &mut self.hop_deaths[0],
+                    &mut self.mailboxes,
+                    &mut self.mailbox_payloads,
+                    nodes_per_shard,
+                    route,
+                    route_payloads,
+                );
             } else {
-                let mut chunks: Vec<_> = at
-                    .chunks_mut(chunk)
-                    .zip(walk_rngs.chunks_mut(chunk))
-                    .zip(self.hop_deaths.iter_mut())
+                // Exactly `shards` chunks (trailing ones may be empty),
+                // split at fixed `chunk` boundaries so chunk index `c`
+                // always owns dense range `[c·chunk, (c+1)·chunk)` and
+                // mailbox rows `c·shards ..` — `chunks_mut` would yield
+                // fewer slices on small populations and break both the
+                // sticky chunk↔worker mapping and the row ownership.
+                let mut at_rest = at;
+                let mut rng_rest = walk_rngs;
+                let mut tasks = Vec::with_capacity(shards);
+                for (c, ((deaths, mail_row), pay_row)) in self
+                    .hop_deaths
+                    .iter_mut()
+                    .zip(self.mailboxes.chunks_mut(shards))
+                    .zip(self.mailbox_payloads.chunks_mut(shards))
                     .enumerate()
-                    .map(|(k, ((at_c, rng_c), deaths))| {
-                        move || hop_chunk(graph, failures, t, k * chunk, ids, at_c, rng_c, deaths)
-                    })
-                    .collect();
-                fan_out(self.pool.as_mut(), &mut collect_tasks(&mut chunks));
+                {
+                    let take = chunk.min(at_rest.len());
+                    let (at_c, next) = std::mem::take(&mut at_rest).split_at_mut(take);
+                    at_rest = next;
+                    let (rng_c, next) = std::mem::take(&mut rng_rest).split_at_mut(take);
+                    rng_rest = next;
+                    tasks.push(move || {
+                        hop_chunk(
+                            graph,
+                            failures,
+                            t,
+                            c * chunk,
+                            ids,
+                            lineage,
+                            payloads,
+                            at_c,
+                            rng_c,
+                            deaths,
+                            mail_row,
+                            pay_row,
+                            nodes_per_shard,
+                            route,
+                            route_payloads,
+                        )
+                    });
+                }
+                fan_out_slice(self.pool.as_mut(), &mut tasks);
             }
         }
         // Barrier: apply hop deaths in dense order. Chunks are contiguous
@@ -490,32 +657,39 @@ impl ShardedEngine {
             }
         }
 
-        // 3. Control phase: bucket survivors by owning node range (the
-        //    scan is in dense order, so each shard sees its nodes'
-        //    arrivals in canonical order), then run observe + control
-        //    shard-locally on per-node streams.
-        for bufs in &mut self.arrivals {
-            bufs.clear();
-        }
-        if H::ACTIVE {
-            for bufs in &mut self.arrival_payloads {
+        // 3. Control phase. In serial routing the coordinator buckets
+        //    survivors by owning node range here (the scan is in dense
+        //    order, so each shard sees its nodes' arrivals in canonical
+        //    order) — O(live walks) of serial work the mailbox path
+        //    already did inside the hop workers. Then observe + control
+        //    run shard-locally on per-node streams, each task reading
+        //    its shard's [`ArrivalFeed`]: the serial bucket, or the
+        //    shard's mailbox column in chunk order — the same arrivals
+        //    in the same order either way (module docs).
+        if !route {
+            for bufs in &mut self.arrivals {
                 bufs.clear();
             }
-        }
-        for i in 0..len0 {
-            if self.arena.is_tombstoned(i) {
-                continue;
-            }
-            let node = self.arena.position(i);
-            let shard = node as usize / self.nodes_per_shard;
-            self.arrivals[shard].push(Arrival {
-                dense: i as u32,
-                node,
-                id: self.arena.id_at(i),
-                slot: self.arena.lineage_at(i).slot(),
-            });
             if H::ACTIVE {
-                self.arrival_payloads[shard].push(self.arena.payload_at(i));
+                for bufs in &mut self.arrival_payloads {
+                    bufs.clear();
+                }
+            }
+            for i in 0..len0 {
+                if self.arena.is_tombstoned(i) {
+                    continue;
+                }
+                let node = self.arena.position(i);
+                let shard = node as usize / nodes_per_shard;
+                self.arrivals[shard].push(Arrival {
+                    dense: i as u32,
+                    node,
+                    id: self.arena.id_at(i),
+                    slot: self.arena.lineage_at(i).slot(),
+                });
+                if H::ACTIVE {
+                    self.arrival_payloads[shard].push(self.arena.payload_at(i));
+                }
             }
         }
         {
@@ -524,12 +698,20 @@ impl ShardedEngine {
             // Shared (read-only) view of the hook for the parallel phase;
             // replicas are the only hook state a worker may mutate.
             let hook_ref: &H = &*hook;
-            if self.shards == 1 {
+            let mail = &self.mailboxes;
+            let mail_pay = &self.mailbox_payloads;
+            let arrivals = &self.arrivals;
+            let arr_pay = &self.arrival_payloads;
+            if shards == 1 {
+                let feed = if route {
+                    ArrivalFeed::Mailbox { mail, pay: mail_pay, shards, shard: 0 }
+                } else {
+                    ArrivalFeed::Single(&arrivals[0], &arr_pay[0])
+                };
                 control_chunk(
                     &mut self.stores[0],
                     &mut self.controls[0],
-                    &self.arrivals[0],
-                    &self.arrival_payloads[0],
+                    feed,
                     t,
                     control_start,
                     z0,
@@ -540,25 +722,25 @@ impl ShardedEngine {
             } else {
                 // One task per shard: each store already owns its node
                 // range (no split_at_mut carving needed), and a store
-                // whose arrival bucket is empty costs one no-op closure.
-                let mut ranges: Vec<_> = self
+                // whose feed is empty costs one no-op closure.
+                let mut tasks: Vec<_> = self
                     .stores
                     .iter_mut()
                     .zip(self.controls.iter_mut())
-                    .zip(
-                        self.arrivals
-                            .iter()
-                            .zip(self.arrival_payloads.iter())
-                            .zip(self.decisions.iter_mut()),
-                    )
+                    .zip(self.decisions.iter_mut())
                     .zip(replicas.iter_mut())
-                    .map(|(((store, control), ((arr, pay), out)), rep)| {
+                    .enumerate()
+                    .map(|(s, (((store, control), out), rep))| {
                         move || {
+                            let feed = if route {
+                                ArrivalFeed::Mailbox { mail, pay: mail_pay, shards, shard: s }
+                            } else {
+                                ArrivalFeed::Single(&arrivals[s], &arr_pay[s])
+                            };
                             control_chunk(
                                 store,
                                 control,
-                                arr,
-                                pay,
+                                feed,
                                 t,
                                 control_start,
                                 z0,
@@ -569,7 +751,7 @@ impl ShardedEngine {
                         }
                     })
                     .collect();
-                fan_out(self.pool.as_mut(), &mut collect_tasks(&mut ranges));
+                fan_out_slice(self.pool.as_mut(), &mut tasks);
             }
         }
 
@@ -583,17 +765,29 @@ impl ShardedEngine {
             hook.merge(t, replicas)?;
         }
 
-        // Barrier: merge decisions in canonical order — sorted by the
+        // Barrier: merge decisions in canonical order — ascending in the
         // deciding walk's dense index, which reproduces the sequential
         // interleaving of the θ̂ telemetry, fork events and kills exactly,
-        // independent of which shard computed what.
-        let total: usize = self.decisions.iter().map(Vec::len).sum();
-        let mut merged: Vec<DecisionOut> = Vec::with_capacity(total);
-        for out in &mut self.decisions {
-            merged.append(out);
-        }
-        merged.sort_unstable_by_key(|d| d.dense);
-        for d in merged {
+        // independent of which shard computed what. Each shard's buffer
+        // is already ascending (its feed is in dense order and a walk
+        // decides at most once per step), so this is a k-way head-pick —
+        // O(total · shards) comparisons, zero allocation, no sort — and
+        // the buffers keep their capacity for the next step.
+        self.merge_heads.clear();
+        self.merge_heads.resize(shards, 0);
+        loop {
+            let mut next: Option<(u32, usize)> = None;
+            for s in 0..shards {
+                if let Some(cand) = self.decisions[s].get(self.merge_heads[s]) {
+                    if next.map_or(true, |(dense, _)| cand.dense < dense) {
+                        next = Some((cand.dense, s));
+                    }
+                }
+            }
+            let Some((_, s)) = next else { break };
+            let idx = self.merge_heads[s];
+            self.merge_heads[s] += 1;
+            let d = &self.decisions[s][idx];
             if self.params.record_theta {
                 if let Some(th) = d.decision.theta {
                     self.trace.theta.push((t, th));
@@ -643,18 +837,21 @@ impl ShardedEngine {
                 );
             }
         }
+        for out in &mut self.decisions {
+            out.clear();
+        }
 
         // 4. Housekeeping. Prune is per-node deterministic work, so it
         //    parallelizes over the per-shard stores with no merge step —
         //    and each store sweeps only its materialized (visited)
         //    states, making the sweep O(visited ∩ shard) in lazy mode.
         if self.params.prune_every > 0 && t % self.params.prune_every == 0 {
-            if self.shards == 1 {
+            if shards == 1 {
                 self.stores[0].prune(t);
             } else {
                 let mut sweeps: Vec<_> =
                     self.stores.iter_mut().map(|store| move || store.prune(t)).collect();
-                fan_out(self.pool.as_mut(), &mut collect_tasks(&mut sweeps));
+                fan_out_slice(self.pool.as_mut(), &mut sweeps);
             }
         }
         self.arena.compact();
@@ -717,18 +914,16 @@ impl ShardedEngine {
     }
 }
 
-/// Coerce a phase's chunk closures into the pool's task-slice form.
-fn collect_tasks<F: FnMut() + Send>(chunks: &mut [F]) -> Vec<Task<'_>> {
-    chunks.iter_mut().map(|c| c as Task<'_>).collect()
-}
-
 /// Dispatch one phase's tasks: wake the persistent pool, or fall back to
-/// per-call scoped spawning (bench baseline). Free function so callers
-/// can hold disjoint `&mut` field borrows in the tasks.
-fn fan_out(pool: Option<&mut WorkerPool>, tasks: &mut [Task<'_>]) {
+/// per-call scoped spawning (bench baseline). Takes the phase's concrete
+/// closure slice directly — the pool's `run_slice` type-erases it with a
+/// monomorphized call thunk, so no per-phase `Vec<Task>` re-collection.
+/// Free function so callers can hold disjoint `&mut` field borrows in
+/// the tasks.
+fn fan_out_slice<F: FnMut() + Send>(pool: Option<&mut WorkerPool>, tasks: &mut [F]) {
     match pool {
-        Some(p) => p.run(tasks),
-        None => pool::run_scoped(tasks),
+        Some(p) => p.run_slice(tasks),
+        None => pool::run_scoped_slice(tasks),
     }
 }
 
@@ -755,10 +950,20 @@ fn kill_dense<H: ShardHook>(
 }
 
 /// Hop-phase worker: advance each walk in the chunk on its own stream.
-/// `base` is the chunk's offset into the dense columns; `ids` is the full
-/// roster (read-only). The failure model is cloned per step — hop-time
-/// checks are read-only by contract, and `pre_step` already ran on the
-/// coordinator's master copy.
+/// `base` is the chunk's offset into the dense columns; `ids`, `lineage`
+/// and `payloads` are the full read-only rosters. The failure model is
+/// cloned per step — hop-time checks are read-only by contract, and
+/// `pre_step` already ran on the coordinator's master copy.
+///
+/// With `route` set (mailbox routing), each survivor's arrival record is
+/// pushed into `mail[destination_shard]` — this chunk's row of the
+/// engine's mailbox matrix, `shards` destination bins owned exclusively
+/// by this worker. The loop runs ascending in dense, so every bin stays
+/// ascending in dense — the invariant the control phase's chunk-major
+/// concatenation relies on. `route_payloads` additionally mirrors the
+/// payload column into `pay` for hooked steps (same contract as the
+/// serial path's payload side buffer). A killed walk is never binned: a
+/// walk has exactly one fate per step.
 #[allow(clippy::too_many_arguments)]
 fn hop_chunk(
     graph: &Graph,
@@ -766,9 +971,16 @@ fn hop_chunk(
     t: u64,
     base: usize,
     ids: &[WalkId],
+    lineage: &[Lineage],
+    payloads: &[Option<usize>],
     at: &mut [u32],
     walk_rngs: &mut [Rng],
     deaths: &mut Vec<HopDeath>,
+    mail: &mut [Vec<Arrival>],
+    pay: &mut [Vec<Option<usize>>],
+    nodes_per_shard: usize,
+    route: bool,
+    route_payloads: bool,
 ) {
     let mut failures = failures.clone();
     for j in 0..at.len() {
@@ -786,27 +998,78 @@ fn hop_chunk(
         at[j] = to;
         if failures.on_arrival(t, id, to, rng) {
             deaths.push(HopDeath { dense: dense as u32, node: to });
+            continue;
+        }
+        if route {
+            let s = to as usize / nodes_per_shard;
+            mail[s].push(Arrival {
+                dense: dense as u32,
+                node: to,
+                id,
+                slot: lineage[dense].slot(),
+            });
+            if route_payloads {
+                pay[s].push(payloads[dense]);
+            }
         }
     }
 }
 
-/// Control-phase worker: the shard's arrivals are pre-bucketed in dense
-/// order; `observe` + the once-per-node-per-step control decision run
-/// exactly as in the sequential engine, with decision randomness drawn
-/// from the visited node's stream. The shard's [`NodeStore`] owns both
-/// the states and the streams of its node range; an arrival at a node
-/// the store has never seen materializes the node's state and stream
-/// right here (a pure construction — no draw, no ordering effect). The
-/// hook replica sees each arrival between `observe` and the control
-/// decision — the same slot `VisitHook::on_visit` occupies in the
-/// shared-stream engine; `payloads` is the arrival-parallel payload
-/// side buffer (empty, and never read, when `H::ACTIVE` is false).
+/// The control phase's read-only view of one shard's arrivals — the one
+/// point where the two [`RoutingMode`]s meet. Either way the consumer
+/// sees the shard's arrivals ascending in the arena's dense order:
+/// `Single` is the coordinator's serial bucket (one segment), `Mailbox`
+/// is the shard's column of the mailbox matrix read in chunk order
+/// (segment `c` = row `c·shards + shard`; chunks cover ascending dense
+/// ranges, so the concatenation is exactly the serial bucket).
+enum ArrivalFeed<'a> {
+    Single(&'a [Arrival], &'a [Option<usize>]),
+    Mailbox {
+        mail: &'a [Vec<Arrival>],
+        pay: &'a [Vec<Option<usize>>],
+        shards: usize,
+        shard: usize,
+    },
+}
+
+impl<'a> ArrivalFeed<'a> {
+    fn segments(&self) -> usize {
+        match self {
+            ArrivalFeed::Single(..) => 1,
+            ArrivalFeed::Mailbox { shards, .. } => *shards,
+        }
+    }
+
+    /// Segment `c`'s arrivals and (hooked runs only) payload mirror.
+    fn segment(&self, c: usize) -> (&'a [Arrival], &'a [Option<usize>]) {
+        match self {
+            ArrivalFeed::Single(arrivals, payloads) => (arrivals, payloads),
+            ArrivalFeed::Mailbox { mail, pay, shards, shard } => {
+                (&mail[c * shards + shard], &pay[c * shards + shard])
+            }
+        }
+    }
+}
+
+/// Control-phase worker: the shard's [`ArrivalFeed`] delivers its
+/// arrivals in dense order; `observe` + the once-per-node-per-step
+/// control decision run exactly as in the sequential engine, with
+/// decision randomness drawn from the visited node's stream. The shard's
+/// [`NodeStore`] owns both the states and the streams of its node range;
+/// an arrival at a node the store has never seen materializes the node's
+/// state and stream right here (a pure construction — no draw, no
+/// ordering effect). The hook replica sees each arrival between
+/// `observe` and the control decision — the same slot
+/// `VisitHook::on_visit` occupies in the shared-stream engine; the
+/// feed's payload mirror is empty, and never read, when `H::ACTIVE` is
+/// false. Decisions land in `out` ascending in dense (the k-way merge
+/// barrier's precondition), which holds because the feed is ascending
+/// and a walk decides at most once per step.
 #[allow(clippy::too_many_arguments)]
 fn control_chunk<H: ShardHook>(
     store: &mut NodeStore,
     control: &mut Control,
-    arrivals: &[Arrival],
-    payloads: &[Option<usize>],
+    feed: ArrivalFeed<'_>,
     t: u64,
     control_start: u64,
     z0: u32,
@@ -815,36 +1078,39 @@ fn control_chunk<H: ShardHook>(
     replica: &mut H::Replica,
 ) {
     let base = store.base();
-    for (j, a) in arrivals.iter().enumerate() {
-        let (state, rng) = store.state_rng_mut(a.node);
-        state.observe(t, a.id, a.slot);
-        if H::ACTIVE {
-            hook.on_shard_visit(
-                replica,
-                t,
-                &ShardVisit {
-                    dense: a.dense,
-                    node: a.node,
-                    local: a.node - base,
-                    walk: a.id,
-                    slot: a.slot,
-                    payload: payloads[j],
-                },
-            );
-        }
-        // Warm-up and the one-decision-per-node-per-step rule
-        // (footnote 6), exactly as in the sequential engine.
-        if t < control_start || state.last_control_step == Some(t) {
-            continue;
-        }
-        state.last_control_step = Some(t);
-        let decision = {
-            let mut ctx =
-                VisitCtx { t, node: a.node, walk: a.id, slot: a.slot, z0, state, rng };
-            control.on_visit(&mut ctx)
-        };
-        if decision.theta.is_some() || !decision.forks.is_empty() || decision.terminate {
-            out.push(DecisionOut { dense: a.dense, node: a.node, walk: a.id, decision });
+    for c in 0..feed.segments() {
+        let (arrivals, payloads) = feed.segment(c);
+        for (j, a) in arrivals.iter().enumerate() {
+            let (state, rng) = store.state_rng_mut(a.node);
+            state.observe(t, a.id, a.slot);
+            if H::ACTIVE {
+                hook.on_shard_visit(
+                    replica,
+                    t,
+                    &ShardVisit {
+                        dense: a.dense,
+                        node: a.node,
+                        local: a.node - base,
+                        walk: a.id,
+                        slot: a.slot,
+                        payload: payloads[j],
+                    },
+                );
+            }
+            // Warm-up and the one-decision-per-node-per-step rule
+            // (footnote 6), exactly as in the sequential engine.
+            if t < control_start || state.last_control_step == Some(t) {
+                continue;
+            }
+            state.last_control_step = Some(t);
+            let decision = {
+                let mut ctx =
+                    VisitCtx { t, node: a.node, walk: a.id, slot: a.slot, z0, state, rng };
+                control.on_visit(&mut ctx)
+            };
+            if decision.theta.is_some() || !decision.forks.is_empty() || decision.terminate {
+                out.push(DecisionOut { dense: a.dense, node: a.node, walk: a.id, decision });
+            }
         }
     }
 }
@@ -1092,5 +1358,77 @@ mod tests {
             }
         }
         assert!(!dense1.theta.is_empty(), "no θ̂ samples — comparison is vacuous");
+    }
+
+    #[test]
+    fn serial_and_mailbox_routing_bit_identical() {
+        assert_eq!(
+            SimParams::default().routing,
+            RoutingMode::Mailbox,
+            "mailbox routing is the production default; serial is the oracle"
+        );
+        // One churny scenario, four arms: {serial, mailbox} × {1, 4}
+        // workers — all traces and first-visit orders (the witness for
+        // arrival processing order) must match the serial 1-worker
+        // oracle exactly.
+        let mk = |routing, shards| {
+            let mut e = ShardedEngine::new(
+                small_graph(),
+                SimParams {
+                    z0: 8,
+                    record_theta: true,
+                    control_start: Some(50),
+                    max_walks: 64,
+                    routing,
+                    ..Default::default()
+                },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4), (300, 3)]),
+                Rng::new(0xA11CE),
+                shards,
+            );
+            e.run_to(400);
+            let visit_order: Vec<u32> = e.states().iter().map(|(node, _)| node).collect();
+            (e.into_trace(), visit_order)
+        };
+        let (oracle, oracle_order) = mk(RoutingMode::Serial, 1);
+        assert!(!oracle.events.is_empty(), "no churn — the comparison is vacuous");
+        assert!(!oracle.theta.is_empty(), "no θ̂ samples — the comparison is vacuous");
+        for (routing, shards) in
+            [(RoutingMode::Mailbox, 1), (RoutingMode::Serial, 4), (RoutingMode::Mailbox, 4)]
+        {
+            let (tr, order) = mk(routing, shards);
+            assert!(
+                oracle.bit_identical(&tr),
+                "{routing:?} × {shards} workers diverged from the serial oracle"
+            );
+            assert_eq!(
+                order, oracle_order,
+                "{routing:?} × {shards} workers moved the first-visit order — \
+                 routing reordered the control feed"
+            );
+        }
+    }
+
+    #[test]
+    fn pin_cores_is_opt_in_and_changes_no_trace() {
+        assert!(!SimParams::default().pin_cores, "pinning must be opt-in");
+        let mk = |pin| {
+            let mut e = ShardedEngine::new(
+                small_graph(),
+                SimParams { z0: 8, record_theta: true, pin_cores: pin, ..Default::default() },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4)]),
+                Rng::new(21),
+                4,
+            );
+            assert_eq!(e.pooled_workers(), 3, "pinning must not change pool sizing");
+            e.run_to(300);
+            e.into_trace()
+        };
+        assert!(
+            mk(false).bit_identical(&mk(true)),
+            "--pin-cores changed the trace — pinning must be placement-only"
+        );
     }
 }

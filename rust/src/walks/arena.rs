@@ -262,6 +262,23 @@ impl WalkArena {
         (&self.ids, &mut self.at, streams)
     }
 
+    /// [`hop_columns_mut`](Self::hop_columns_mut) plus read-only views
+    /// of the lineage and payload columns, for the mailbox-routing hop
+    /// phase: a worker that just hopped a surviving walk assembles its
+    /// full arrival record (id, slot, payload) right there, while it
+    /// still owns the walk, instead of leaving a coordinator scan to
+    /// re-read the columns serially between the phases. The hop phase
+    /// never writes lineage or payload, so the shared views are sound
+    /// alongside the mutable position/stream chunks.
+    #[allow(clippy::type_complexity)]
+    pub fn hop_columns_routed_mut(
+        &mut self,
+    ) -> (&[WalkId], &[Lineage], &[Option<usize>], &mut [u32], &mut [Rng]) {
+        debug_assert_eq!(self.ids.len(), self.live as usize, "hop columns read between barriers");
+        let streams = self.streams.as_mut().expect("stream-less arena");
+        (&self.ids, &self.lineage, &self.payload, &mut self.at, streams)
+    }
+
     /// Dense position of a live walk, or `None` if the id is stale
     /// (retired, or from a previous occupant of the slot).
     #[inline]

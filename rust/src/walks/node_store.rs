@@ -40,6 +40,15 @@
 //! a θ̂ bit even if it were nondeterministic. The lazy-vs-dense oracle
 //! (`prop_lazy_store_bit_identical_to_dense`) and both pinned golden
 //! families lock this end to end.
+//!
+//! Purity has a placement payoff too (ISSUE 8): because `NodeStore::new`
+//! is a pure function of `(mode, graph, range, params, stream root)`,
+//! the stream-mode engine builds shard k's store *on* pool worker k
+//! rather than on the coordinator thread. On NUMA hosts with first-touch
+//! page policy that lands each shard's state columns in the memory the
+//! worker that will grow and sweep them runs closest to — a pure
+//! placement choice (DESIGN.md §Locality & routing) that cannot change
+//! which store is built.
 
 use std::sync::Arc;
 

@@ -18,7 +18,7 @@
 
 use decafork::rng::Rng;
 use decafork::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
-use decafork::sim::engine::SimParams;
+use decafork::sim::engine::{RoutingMode, SimParams};
 use decafork::sim::metrics::{EventKind, Trace};
 use decafork::walks::NodeStateMode;
 
@@ -180,6 +180,91 @@ fn prop_lazy_store_bit_identical_to_dense() {
     // lifecycle events for the comparison to mean anything.
     assert!(total_theta > 0, "no randomized case recorded θ̂");
     assert!(total_events > 0, "no randomized case produced events");
+}
+
+/// [`run_sharded`] plus the node-store first-visit order — the witness
+/// for arrival *processing* order (a node's state materializes the first
+/// time the control phase touches it, so reordered arrivals reorder this
+/// list even when every trace field happens to agree).
+fn run_sharded_with_visit_order(scenario: &Scenario, shards: usize) -> (Trace, Vec<u32>) {
+    let mut e = scenario.sharded_engine(0, shards).expect("scenario must build");
+    e.run_to(scenario.horizon);
+    let order: Vec<u32> = e.states().iter().map(|(node, _)| node).collect();
+    (e.into_trace(), order)
+}
+
+#[test]
+fn prop_mailbox_routing_bit_identical_to_serial() {
+    // The routing oracle (ISSUE 8): binning arrivals on the hop workers
+    // (per-(chunk × destination-shard) mailboxes, drained chunk-major)
+    // is a pure transport choice, so at any shard count the mailbox
+    // path must reproduce the serial coordinator scan bit for bit — z,
+    // the event log, extinction/cap flags, every θ̂ float, AND the
+    // per-shard arrival processing order (asserted via the node stores'
+    // first-visit order, which is exactly arrival order). Randomized
+    // scenarios mix churn and bursts; worker counts {1, 2, 7, 16}
+    // stress uneven chunks and empty mailbox rows from both sides.
+    let mut rng = Rng::new(0x0DD_5EED);
+    let mut total_theta = 0usize;
+    let mut total_events = 0usize;
+    for case in 0..8u64 {
+        let scenario = random_scenario(&mut rng, 0x800 + case);
+        let mut serial = scenario.clone();
+        serial.params.routing = RoutingMode::Serial;
+        let mailbox = scenario; // mailbox is the default — keep it explicit below
+        assert_eq!(mailbox.params.routing, RoutingMode::Mailbox);
+        for shards in [1usize, 2, 7, 16] {
+            let (s, s_order) = run_sharded_with_visit_order(&serial, shards);
+            let (m, m_order) = run_sharded_with_visit_order(&mailbox, shards);
+            assert!(
+                s.bit_identical(&m),
+                "case {case} ({}) at {shards} shards: mailbox routing diverged from serial",
+                mailbox.label()
+            );
+            assert_eq!(
+                s_order, m_order,
+                "case {case} at {shards} shards: first-visit order moved — \
+                 mailbox routing reordered the control feed"
+            );
+            // bit_identical already covers θ̂, but the float bits are the
+            // load-bearing half of this oracle (first-seen order is the
+            // θ̂ float-sum order) — assert them explicitly so a future
+            // bit_identical refactor can't silently drop them.
+            assert_eq!(s.theta.len(), m.theta.len(), "case {case}");
+            for ((ts, xs), (tm, xm)) in s.theta.iter().zip(m.theta.iter()) {
+                assert_eq!((ts, xs.to_bits()), (tm, xm.to_bits()), "case {case}: θ̂ bits");
+            }
+            total_theta += s.theta.len();
+            total_events += s.events.len();
+        }
+    }
+    // Vacuity guard: the sweep must actually produce decisions and
+    // lifecycle events for the comparison to mean anything.
+    assert!(total_theta > 0, "no randomized case recorded θ̂");
+    assert!(total_events > 0, "no randomized case produced events");
+}
+
+#[test]
+fn pin_cores_is_placement_only_and_changes_no_trace() {
+    // `--pin-cores` binds pool worker k to core k+1 (best-effort — on a
+    // cgroup-restricted runner every pin may fail and that must be
+    // fine). It decides where threads run, never what they compute: the
+    // trace and the first-visit order must match the unpinned run
+    // exactly, whatever the host did with the affinity requests.
+    let mut rng = Rng::new(0x91B_C0DE);
+    let scenario = random_scenario(&mut rng, 0x900);
+    let mut pinned = scenario.clone();
+    pinned.params.pin_cores = true;
+    assert!(!scenario.params.pin_cores, "pinning must be opt-in");
+    for shards in [1usize, 4] {
+        let (base, base_order) = run_sharded_with_visit_order(&scenario, shards);
+        let (pin, pin_order) = run_sharded_with_visit_order(&pinned, shards);
+        assert!(
+            base.bit_identical(&pin),
+            "{shards} shards: --pin-cores changed the trace — pinning must be placement-only"
+        );
+        assert_eq!(base_order, pin_order, "{shards} shards: pinning moved first-visit order");
+    }
 }
 
 #[test]

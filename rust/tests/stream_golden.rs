@@ -16,6 +16,11 @@
 //!   pinned file must match in both modes — CI crosses this knob with
 //!   the shard matrix, which is the golden-family half of the
 //!   lazy-vs-dense lock.
+//! * `DECAFORK_ROUTING=serial|mailbox` selects the arrival routing
+//!   (default mailbox). Routing is a pure transport choice (DESIGN.md
+//!   §Locality & routing), so the **same** pinned file must match in
+//!   both modes — CI crosses this knob with the node-state × shard
+//!   matrix, the golden-family half of the mailbox-vs-serial lock.
 //! * `DECAFORK_WRITE_GOLDEN=1` (re)records the pins. Like the
 //!   shared-stream pins, the files cannot be generated in the offline
 //!   authoring sandbox (no Rust toolchain); the CI `record golden
@@ -39,8 +44,10 @@ fn encode(z: &[u32]) -> String {
 fn stream_mode_traces_match_pinned_goldens() {
     let shards = decafork::scenario::parse::shards_from_env().expect("DECAFORK_SHARDS");
     let node_state = decafork::scenario::parse::node_state_from_env().expect("DECAFORK_NODE_STATE");
+    let routing = decafork::scenario::parse::routing_from_env().expect("DECAFORK_ROUTING");
     for (name, mut scenario) in presets::golden() {
         scenario.params.node_state = node_state;
+        scenario.params.routing = routing;
         let trace = {
             let mut e = scenario.sharded_engine(0, shards).unwrap();
             e.run_to(scenario.horizon);

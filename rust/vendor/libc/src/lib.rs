@@ -1,0 +1,76 @@
+//! Offline API-compatible subset of `rust-lang/libc` (DESIGN.md
+//! §Vendored substitutions): just the thread-affinity surface the
+//! worker pool's opt-in `--pin-cores` knob needs — `cpu_set_t`,
+//! `CPU_ZERO`/`CPU_SET`, and `sched_setaffinity`. The declarations
+//! match the real crate's names and shapes, so swapping the registry
+//! crate back in is a one-line change in `rust/Cargo.toml`
+//! (`libc = "0.2"`).
+//!
+//! Everything here is Linux-only, exactly like the callers
+//! (`runtime::affinity` compiles to a no-op elsewhere): on other
+//! targets this crate exports nothing and links nothing.
+
+#![allow(non_camel_case_types)]
+// The CPU_* accessors keep the real crate's macro-style names.
+#![allow(non_snake_case)]
+
+#[cfg(target_os = "linux")]
+mod linux {
+    pub type c_int = i32;
+    pub type pid_t = i32;
+    pub type size_t = usize;
+
+    /// Bits in a `cpu_set_t` (glibc's fixed 1024-CPU mask).
+    pub const CPU_SETSIZE: c_int = 1024;
+
+    const ULONG_BITS: usize = 8 * core::mem::size_of::<u64>();
+
+    /// glibc's `cpu_set_t`: 1024 bits as an array of unsigned longs
+    /// (`u64` on every 64-bit Linux target this repo builds for).
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct cpu_set_t {
+        bits: [u64; CPU_SETSIZE as usize / ULONG_BITS],
+    }
+
+    /// Clear every CPU in the set (the `CPU_ZERO` macro).
+    ///
+    /// # Safety
+    /// Matches the real crate's signature (which is `unsafe` for
+    /// macro-parity reasons); safe in practice for any valid `&mut`.
+    pub unsafe fn CPU_ZERO(set: &mut cpu_set_t) {
+        set.bits = [0; CPU_SETSIZE as usize / ULONG_BITS];
+    }
+
+    /// Add `cpu` to the set (the `CPU_SET` macro). Out-of-range CPUs
+    /// are ignored, as in glibc.
+    ///
+    /// # Safety
+    /// Matches the real crate's signature; safe for any valid `&mut`.
+    pub unsafe fn CPU_SET(cpu: usize, set: &mut cpu_set_t) {
+        if cpu < CPU_SETSIZE as usize {
+            set.bits[cpu / ULONG_BITS] |= 1u64 << (cpu % ULONG_BITS);
+        }
+    }
+
+    /// Whether `cpu` is in the set (the `CPU_ISSET` macro).
+    ///
+    /// # Safety
+    /// Matches the real crate's signature; safe for any valid `&`.
+    pub unsafe fn CPU_ISSET(cpu: usize, set: &cpu_set_t) -> bool {
+        cpu < CPU_SETSIZE as usize && set.bits[cpu / ULONG_BITS] & (1u64 << (cpu % ULONG_BITS)) != 0
+    }
+
+    extern "C" {
+        /// Bind thread `pid` (0 = the calling thread) to the CPUs in
+        /// `mask`. Returns 0 on success, -1 on error (e.g. a
+        /// cgroup-restricted runner whose cpuset excludes the CPU).
+        pub fn sched_setaffinity(pid: pid_t, cpusetsize: size_t, mask: *const cpu_set_t) -> c_int;
+
+        /// Read the calling thread's (or `pid`'s) affinity mask.
+        pub fn sched_getaffinity(pid: pid_t, cpusetsize: size_t, mask: *mut cpu_set_t) -> c_int;
+    }
+}
+
+#[cfg(target_os = "linux")]
+pub use linux::*;
