@@ -1,0 +1,76 @@
+//! Shared plumbing for the `perf_*` benches (ISSUE 9 satellite): every
+//! bench in this directory is a plain-`main` binary that (1) reads the
+//! same family of `DECAFORK_*` env knobs, (2) asserts its A/B traces
+//! **bit-identical before any clock is trusted**, (3) writes a
+//! `BENCH_*.json` report to `$DECAFORK_BENCH_OUT` or a default path,
+//! and (4) enforces its acceptance bar unless
+//! `DECAFORK_PERF_NO_ENFORCE=1`. That boilerplate used to be
+//! copy-pasted per bench; it lives here now, compiled into each bench
+//! via `mod perf_common;` (the directory form keeps cargo's bench
+//! auto-discovery from treating this file as a bench target of its
+//! own).
+//!
+//! The one rule the helpers encode and never relax: the speedup /
+//! memory bars are *downgradeable* (reports on weak CI runners), the
+//! bit-identical oracle is **not** — `assert_bit_identical` is a hard
+//! `assert!` with no env escape hatch. A perf win that moved a bit is
+//! a bug, not a result.
+
+#![allow(dead_code)] // each bench uses the subset it needs
+
+use decafork::sim::metrics::Trace;
+
+/// Parse a `u64` env knob; unset or unparsable means "use the default".
+pub fn env_u64(key: &str) -> Option<u64> {
+    std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
+}
+
+/// `DECAFORK_PERF_NO_ENFORCE=1` (any value) downgrades acceptance bars
+/// to reports. It never touches the bit-identical oracle.
+pub fn no_enforce() -> bool {
+    std::env::var("DECAFORK_PERF_NO_ENFORCE").is_ok()
+}
+
+/// Steps actually simulated before extinction (for honest steps/s on
+/// traces that die early), never less than 1.
+pub fn steps_simulated(trace: &Trace) -> usize {
+    trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1)
+}
+
+/// Steps per wall-clock second for one measured cell.
+pub fn steps_per_sec(trace: &Trace, secs: f64) -> f64 {
+    steps_simulated(trace) as f64 / secs
+}
+
+/// The oracle that comes before the clock: the A and B traces must be
+/// bit-identical (z, event log, flags, every θ̂ float at the bit level)
+/// and must have recorded θ̂ samples at all — a comparison over an
+/// empty telemetry stream proves nothing. Hard assert, no env gate.
+pub fn assert_bit_identical(a: &Trace, b: &Trace, what: &str) {
+    assert!(a.bit_identical(b), "{what} — the A/B variants must be invisible to the trace");
+    assert!(!a.theta.is_empty(), "{what}: no θ̂ recorded — the oracle would be vacuous");
+    println!("  bit-identical           : yes ({} θ̂ samples compared)", a.theta.len());
+}
+
+/// Resolve the report path: `$DECAFORK_BENCH_OUT` wins, else `default`.
+pub fn bench_out(default: &str) -> String {
+    std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| default.into())
+}
+
+/// Write the report JSON to [`bench_out`]`(default)` and echo the path.
+pub fn write_bench_json(default: &str, json: &str) -> anyhow::Result<String> {
+    let out = bench_out(default);
+    std::fs::write(&out, json)?;
+    println!("\n  wrote {out}");
+    Ok(out)
+}
+
+/// Enforce an acceptance bar: no-op when it passed or when
+/// `DECAFORK_PERF_NO_ENFORCE=1`, otherwise bail with the bench's
+/// message (which should name the report file).
+pub fn enforce_bar(pass: bool, msg: String) -> anyhow::Result<()> {
+    if !pass && !no_enforce() {
+        anyhow::bail!(msg);
+    }
+    Ok(())
+}

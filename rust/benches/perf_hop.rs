@@ -1,0 +1,124 @@
+//! Hop-path bench (ISSUE 9): proves the block-pipelined hot phases —
+//! per-block prefetch staging, batched `Graph::step_block` draws, and
+//! the prefetched control sweep — beat the scalar loop on the memory-
+//! bound large-graph regime, without moving a single bit of the trace.
+//!
+//! Two legs:
+//!
+//! 1. **scale_10m scalar vs blocked** at the full worker count: the
+//!    10⁷-node small-world preset, where both hot phases are cache-miss
+//!    bound — the hop phase on per-walk node state and the control
+//!    phase on `NodeStore`/`SlotIndex` probes over millions of visited
+//!    nodes. Before any clock is trusted the leg **asserts
+//!    `Trace::bit_identical`** between the two paths — z, the full
+//!    event log, flags, and every θ̂ float at the bit level. A "blocked
+//!    win" that moved a bit is a bug, not a result.
+//!    Acceptance bar: blocked ≥ 1.3× scalar steps/s.
+//! 2. **CSR leg (report)**: the same scenario on a materialized
+//!    random-regular CSR graph, where the tier-B prefetch additionally
+//!    covers the adjacency row and the per-node Lemire threshold —
+//!    the backend the offset-pair/row prefetches were built for.
+//!
+//! Writes `BENCH_hop.json` (or `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_HOP_N` shrinks the node count (CI smoke),
+//! `DECAFORK_PERF_STEPS` rescales the horizon, `DECAFORK_HOP_WORKERS`
+//! sets the worker count (default 7 workers = 8 shards),
+//! `DECAFORK_PIN_CORES=on` additionally pins workers to cores (off by
+//! default — CI runners are cgroup-restricted), and
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the speedup bar to a report
+//! (the bit-identical assert is **never** downgraded).
+
+mod perf_common;
+
+use decafork::scenario::{parse, presets, GraphSpec, Scenario};
+use decafork::sim::engine::HopPath;
+use perf_common::{
+    assert_bit_identical, enforce_bar, env_u64, steps_per_sec, write_bench_json,
+};
+use std::time::Instant;
+
+struct Run {
+    secs: f64,
+    trace: decafork::sim::metrics::Trace,
+}
+
+/// Build, run to the horizon, and measure one scenario/hop-path cell.
+fn run_cell(
+    scenario: &Scenario,
+    hop_path: HopPath,
+    shards: usize,
+    pin: bool,
+) -> anyhow::Result<Run> {
+    let mut s = scenario.clone();
+    s.params.hop_path = hop_path;
+    s.params.pin_cores = pin;
+    let mut e = s.sharded_engine(0, shards)?;
+    let t0 = Instant::now();
+    e.run_to(s.horizon);
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(Run { secs, trace: e.into_trace() })
+}
+
+fn main() -> anyhow::Result<()> {
+    let workers = env_u64("DECAFORK_HOP_WORKERS").map(|w| (w as usize).max(1)).unwrap_or(7);
+    let shards = workers + 1;
+    let pin = parse::pin_cores_from_env()?;
+
+    // ---- Leg 1: scalar vs blocked on the scale_10m implicit preset ----
+    let mut h1 = presets::scale_10m();
+    h1.params.record_theta = true; // θ̂ floats must match bit-for-bit too
+    let n1 = env_u64("DECAFORK_HOP_N").map(|n| (n as usize).max(10_000)).unwrap_or(10_000_000);
+    if n1 != 10_000_000 {
+        h1.graph = GraphSpec::ImplicitSmallWorld { n: n1, d: 8 };
+    }
+    if let Some(steps) = env_u64("DECAFORK_PERF_STEPS") {
+        h1.rescale_to(steps.max(50));
+    }
+    println!(
+        "perf_hop leg 1: {} | {} steps | {shards} shards | pin_cores={pin}",
+        h1.label(),
+        h1.horizon
+    );
+
+    let scalar = run_cell(&h1, HopPath::Scalar, shards, pin)?;
+    let blocked = run_cell(&h1, HopPath::Blocked, shards, pin)?;
+
+    // The oracle comes before the clock: identical bits or no result.
+    assert_bit_identical(
+        &scalar.trace,
+        &blocked.trace,
+        "blocked hop path diverged from the scalar loop at scale_10m",
+    );
+    let (ss, sb) = (steps_per_sec(&scalar.trace, scalar.secs), steps_per_sec(&blocked.trace, blocked.secs));
+    let speedup = sb / ss;
+    println!("  steps/s scalar          : {ss:>8.1}");
+    println!("  steps/s blocked         : {sb:>8.1}");
+    println!("  blocked / scalar        : {speedup:>8.2}x  (acceptance bar: >= 1.3x)");
+    let pass = speedup >= 1.3;
+
+    // ---- Leg 2: CSR backend report (prefetch covers adjacency rows) ----
+    let mut h2 = h1.clone();
+    let n2 = n1.min(1_000_000); // materialized: 8 stored edges per node
+    h2.graph = GraphSpec::RandomRegular { n: n2, d: 8 };
+    println!("\nperf_hop leg 2: {} | {} steps (CSR, report only)", h2.label(), h2.horizon);
+    let s2 = run_cell(&h2, HopPath::Scalar, shards, pin)?;
+    let b2 = run_cell(&h2, HopPath::Blocked, shards, pin)?;
+    assert_bit_identical(
+        &s2.trace,
+        &b2.trace,
+        "blocked hop path diverged from the scalar loop on the CSR leg",
+    );
+    let (ss2, sb2) = (steps_per_sec(&s2.trace, s2.secs), steps_per_sec(&b2.trace, b2.secs));
+    println!("  steps/s scalar / blocked: {ss2:>8.1} / {sb2:.1} ({:.2}x)", sb2 / ss2);
+
+    let json = format!(
+        "{{\n  \"bench\": \"perf_hop\",\n  \"mode\": \"block-pipelined hop & control phases vs scalar loop, traces asserted bit-identical\",\n  \"shards\": {shards},\n  \"pin_cores\": {pin},\n  \"hop_block\": 64,\n  \"scale_10m\": {{\n    \"n\": {n1},\n    \"steps\": {},\n    \"bit_identical\": true,\n    \"theta_samples_compared\": {},\n    \"steps_per_sec_scalar\": {ss:.1},\n    \"steps_per_sec_blocked\": {sb:.1},\n    \"speedup_blocked_over_scalar\": {speedup:.3}\n  }},\n  \"csr_leg\": {{\n    \"n\": {n2},\n    \"bit_identical\": true,\n    \"steps_per_sec_scalar\": {ss2:.1},\n    \"steps_per_sec_blocked\": {sb2:.1},\n    \"speedup_blocked_over_scalar\": {:.3}\n  }},\n  \"acceptance_min_speedup\": 1.3,\n  \"pass\": {pass}\n}}\n",
+        h1.horizon,
+        scalar.trace.theta.len(),
+        sb2 / ss2,
+    );
+    let out = write_bench_json("BENCH_hop.json", &json)?;
+
+    enforce_bar(pass, format!("perf_hop speedup bar not met ({speedup:.2}x < 1.3x) — see {out}"))
+}

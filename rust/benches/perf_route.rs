@@ -28,13 +28,12 @@
 //! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the speedup bar to a report
 //! (the bit-identical assert is **never** downgraded).
 
+mod perf_common;
+
 use decafork::scenario::{parse, presets, GraphSpec, Scenario};
 use decafork::sim::engine::RoutingMode;
+use perf_common::{assert_bit_identical, enforce_bar, env_u64, write_bench_json};
 use std::time::Instant;
-
-fn env_u64(key: &str) -> Option<u64> {
-    std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
-}
 
 struct Run {
     secs: f64,
@@ -59,12 +58,10 @@ fn run_cell(
 }
 
 fn steps_per_sec(r: &Run) -> f64 {
-    let steps = r.trace.z.iter().position(|&z| z == 0).unwrap_or(r.trace.z.len() - 1).max(1);
-    steps as f64 / r.secs
+    perf_common::steps_per_sec(&r.trace, r.secs)
 }
 
 fn main() -> anyhow::Result<()> {
-    let no_enforce = std::env::var("DECAFORK_PERF_NO_ENFORCE").is_ok();
     let workers = env_u64("DECAFORK_ROUTE_WORKERS").map(|w| (w as usize).max(1)).unwrap_or(7);
     let shards = workers + 1;
     let pin = parse::pin_cores_from_env()?;
@@ -89,14 +86,13 @@ fn main() -> anyhow::Result<()> {
     let mailbox = run_cell(&r1, RoutingMode::Mailbox, shards, pin)?;
 
     // The oracle comes before the clock: identical bits or no result.
-    assert!(
-        serial.trace.bit_identical(&mailbox.trace),
-        "mailbox routing diverged from the serial scan — transport must be invisible to the trace"
+    assert_bit_identical(
+        &serial.trace,
+        &mailbox.trace,
+        "mailbox routing diverged from the serial scan",
     );
-    assert!(!serial.trace.theta.is_empty(), "leg 1 recorded no θ̂ — the oracle would be vacuous");
     let (ss, sm) = (steps_per_sec(&serial), steps_per_sec(&mailbox));
     let speedup = sm / ss;
-    println!("  bit-identical           : yes ({} θ̂ samples compared)", serial.trace.theta.len());
     println!("  steps/s serial          : {ss:>8.1}");
     println!("  steps/s mailbox         : {sm:>8.1}");
     println!("  mailbox / serial        : {speedup:>8.2}x  (acceptance bar: >= 1.5x)");
@@ -113,17 +109,12 @@ fn main() -> anyhow::Result<()> {
     println!("\nperf_route leg 2: 1 shard (routing overhead, report only)");
     println!("  steps/s serial / mailbox: {ss1:>8.1} / {sm1:.1} ({:.2}x)", sm1 / ss1);
 
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_route.json".into());
     let json = format!(
         "{{\n  \"bench\": \"perf_route\",\n  \"mode\": \"mailbox arrival routing vs serial coordinator scan, traces asserted bit-identical\",\n  \"shards\": {shards},\n  \"pin_cores\": {pin},\n  \"route_100k\": {{\n    \"n\": {n1},\n    \"steps\": {},\n    \"bit_identical\": true,\n    \"theta_samples_compared\": {},\n    \"steps_per_sec_serial\": {ss:.1},\n    \"steps_per_sec_mailbox\": {sm:.1},\n    \"speedup_mailbox_over_serial\": {speedup:.3}\n  }},\n  \"single_shard\": {{\n    \"steps_per_sec_serial\": {ss1:.1},\n    \"steps_per_sec_mailbox\": {sm1:.1}\n  }},\n  \"acceptance_min_speedup\": 1.5,\n  \"pass\": {pass}\n}}\n",
         r1.horizon,
         serial.trace.theta.len(),
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_route.json", &json)?;
 
-    if !pass && !no_enforce {
-        anyhow::bail!("perf_route speedup bar not met ({speedup:.2}x < 1.5x) — see {out}");
-    }
-    Ok(())
+    enforce_bar(pass, format!("perf_route speedup bar not met ({speedup:.2}x < 1.5x) — see {out}"))
 }

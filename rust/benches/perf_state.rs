@@ -33,13 +33,12 @@
 //! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the memory bars to reports
 //! (the bit-identical assert is **never** downgraded).
 
+mod perf_common;
+
 use decafork::scenario::{presets, GraphSpec, Scenario};
 use decafork::walks::NodeStateMode;
+use perf_common::{assert_bit_identical, enforce_bar, env_u64, write_bench_json};
 use std::time::Instant;
-
-fn env_u64(key: &str) -> Option<u64> {
-    std::env::var(key).ok().and_then(|v| v.parse::<u64>().ok())
-}
 
 struct Run {
     secs: f64,
@@ -62,12 +61,10 @@ fn run_cell(scenario: &Scenario, mode: NodeStateMode, shards: usize) -> anyhow::
 }
 
 fn steps_per_sec(r: &Run) -> f64 {
-    let steps = r.trace.z.iter().position(|&z| z == 0).unwrap_or(r.trace.z.len() - 1).max(1);
-    steps as f64 / r.secs
+    perf_common::steps_per_sec(&r.trace, r.secs)
 }
 
 fn main() -> anyhow::Result<()> {
-    let no_enforce = std::env::var("DECAFORK_PERF_NO_ENFORCE").is_ok();
     let workers =
         env_u64("DECAFORK_STATE_WORKERS").map(|w| (w as usize).max(1)).unwrap_or(7);
     let shards = workers + 1;
@@ -86,11 +83,7 @@ fn main() -> anyhow::Result<()> {
     let lazy = run_cell(&m1, NodeStateMode::Lazy, shards)?;
 
     // The oracle comes before the clock: identical bits or no result.
-    assert!(
-        dense.trace.bit_identical(&lazy.trace),
-        "lazy store diverged from dense at scale_1m — storage must be invisible to the trace"
-    );
-    assert!(!dense.trace.theta.is_empty(), "leg 1 recorded no θ̂ — the oracle would be vacuous");
+    assert_bit_identical(&dense.trace, &lazy.trace, "lazy store diverged from dense at scale_1m");
     assert!(
         lazy.visited < dense.visited,
         "lazy must materialize strictly fewer states than the dense column (got {} vs {})",
@@ -99,7 +92,6 @@ fn main() -> anyhow::Result<()> {
     );
     let visited_frac = lazy.visited as f64 / n1 as f64;
     let mem_ratio = lazy.state_bytes as f64 / dense.state_bytes as f64;
-    println!("  bit-identical           : yes ({} θ̂ samples compared)", dense.trace.theta.len());
     println!("  dense state             : {:>12} B ({} states)", dense.state_bytes, dense.visited);
     println!(
         "  lazy state              : {:>12} B ({} states, {:.1}% of nodes visited)",
@@ -178,7 +170,6 @@ fn main() -> anyhow::Result<()> {
     let leg3_pass = leg3.as_ref().map(|l| l.state_bytes <= mem_budget).unwrap_or(true);
 
     let pass = leg1_pass && leg3_pass;
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_state.json".into());
     let leg2_json = match &leg2 {
         None => "null".to_string(),
         Some((d, l)) => format!(
@@ -211,11 +202,10 @@ fn main() -> anyhow::Result<()> {
         steps_per_sec(&dense),
         steps_per_sec(&lazy),
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_state.json", &json)?;
 
-    if !pass && !no_enforce {
-        anyhow::bail!("perf_state memory bars not met (ratio {mem_ratio:.3} / budget) — see {out}");
-    }
-    Ok(())
+    enforce_bar(
+        pass,
+        format!("perf_state memory bars not met (ratio {mem_ratio:.3} / budget) — see {out}"),
+    )
 }

@@ -88,6 +88,33 @@ impl Failures {
             }
         }
     }
+
+    /// Refresh a per-worker scratch copy from the coordinator's master
+    /// model after the master's `pre_step` ran. The only state
+    /// `pre_step` mutates that the worker-side hooks later *read* is
+    /// the Byzantine occupation flag (`Byzantine::byz`, consulted by
+    /// `on_arrival`); everything else a model holds is either immutable
+    /// configuration (burst schedules, probabilities) that the initial
+    /// clone already carries, or coordinator-only. So syncing is a few
+    /// scalar copies — no allocation, unlike the per-chunk `clone()`
+    /// this replaced (ISSUE 9 satellite). Panics if the scratch was
+    /// cloned from a different model shape, which cannot happen for a
+    /// clone of the same master.
+    pub fn sync_from(&mut self, master: &Failures) {
+        match (self, master) {
+            (Failures::None(_), Failures::None(_)) => {}
+            (Failures::Burst(_), Failures::Burst(_)) => {}
+            (Failures::Probabilistic(_), Failures::Probabilistic(_)) => {}
+            (Failures::Byzantine(s), Failures::Byzantine(m)) => s.byz = m.byz,
+            (Failures::Composite(s), Failures::Composite(m)) => {
+                debug_assert_eq!(s.len(), m.len());
+                for (part, master_part) in s.iter_mut().zip(m) {
+                    part.sync_from(master_part);
+                }
+            }
+            _ => unreachable!("worker failure scratch diverged from the master's variant"),
+        }
+    }
 }
 
 impl From<NoFailures> for Failures {
@@ -437,6 +464,38 @@ mod tests {
                 );
             }
             assert_eq!(ra.next_u64(), rb.next_u64(), "rng streams diverged at t={t}");
+        }
+    }
+
+    #[test]
+    fn sync_from_tracks_masters_prestep_mutations() {
+        // A worker scratch clone refreshed via `sync_from` after each
+        // master `pre_step` must answer `on_arrival` exactly like a
+        // fresh clone would — across scheduled phases AND Markov flips
+        // (the one piece of pre_step-mutated state the hooks read).
+        let mut master = Failures::composite(vec![
+            Burst::new(vec![(3, 1)]).into(),
+            Byzantine::scheduled(7, vec![(10, true), (20, false)]).into(),
+            Byzantine::markov(4, 0.3, false).into(),
+        ]);
+        let mut scratch = master.clone();
+        let mut rng = Rng::new(0x5C_1A7C);
+        let alive = ids(8);
+        for t in 0..200 {
+            master.pre_step(t, &alive, &mut rng);
+            scratch.sync_from(&master);
+            let mut fresh = master.clone();
+            // Hook rng: both sides must consume the same stream, so give
+            // each the same clone.
+            let mut ha = Rng::new(t ^ 0x0B5);
+            let mut hb = ha.clone();
+            for node in [4u32, 7, 9] {
+                assert_eq!(
+                    scratch.on_arrival(t, WalkId(0), node, &mut ha),
+                    fresh.on_arrival(t, WalkId(0), node, &mut hb),
+                    "scratch diverged from a fresh clone at t={t}, node={node}"
+                );
+            }
         }
     }
 

@@ -243,14 +243,22 @@ impl ImplicitTopology {
     /// (locked by `tests/graph_backend.rs`).
     #[inline]
     pub fn step(&self, i: usize, rng: &mut Rng) -> usize {
+        let rank = rng.below_threshold(self.degree as u64, self.step_threshold);
+        self.neighbor_sorted(i, rank)
+    }
+
+    /// Batched [`step`](Self::step) — see `Graph::step_block`. There is
+    /// nothing to prefetch on this backend (the topology parameters sit
+    /// in registers), but batching still hoists the shared
+    /// degree/threshold loads and the `Graph` dispatch out of the
+    /// per-walk loop. Draw-for-draw identical to scalar `step` calls.
+    #[inline]
+    pub fn step_block(&self, from: &[u32], rngs: &mut [Rng], out: &mut [u32]) {
         let deg = self.degree as u64;
         let threshold = self.step_threshold;
-        loop {
-            let x = rng.next_u64();
-            let m = (x as u128).wrapping_mul(deg as u128);
-            if (m as u64) >= threshold {
-                return self.neighbor_sorted(i, (m >> 64) as usize);
-            }
+        for ((&i, rng), o) in from.iter().zip(rngs).zip(out) {
+            let rank = rng.below_threshold(deg, threshold);
+            *o = self.neighbor_sorted(i as usize, rank) as u32;
         }
     }
 

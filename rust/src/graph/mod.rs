@@ -18,6 +18,7 @@ pub use generators::{
 pub use implicit::{ImplicitTopology, MAX_IMPLICIT_DEGREE};
 
 use crate::rng::Rng;
+use crate::runtime::prefetch::prefetch_slice;
 
 /// The materialized backend: undirected graph in CSR form with the
 /// per-node Lemire threshold column. ~`8 + 8 + 4·deg` bytes per node —
@@ -84,13 +85,32 @@ impl Csr {
         let nbrs = &self.adj[self.offsets[i]..self.offsets[i + 1]];
         let deg = nbrs.len() as u64;
         debug_assert!(deg > 0, "walk stranded at isolated node {i}");
-        let threshold = self.step_threshold[i];
-        loop {
-            let x = rng.next_u64();
-            let m = (x as u128).wrapping_mul(deg as u128);
-            if (m as u64) >= threshold {
-                return nbrs[(m >> 64) as usize] as usize;
-            }
+        nbrs[rng.below_threshold(deg, self.step_threshold[i])] as usize
+    }
+
+    /// Tier-A prefetch: the `offsets[i..=i+1]` pair (one line except at
+    /// line boundaries). Issued one block ahead so that by the time
+    /// [`prefetch`](Self::prefetch) reads `offsets[i]` the pair is
+    /// cached.
+    #[inline(always)]
+    fn prefetch_meta(&self, i: usize) {
+        prefetch_slice(&self.offsets, i);
+        prefetch_slice(&self.offsets, i + 1);
+    }
+
+    /// Tier-B prefetch: the per-node Lemire threshold and the head of
+    /// the adjacency row. The row address depends on `offsets[i]` — a
+    /// real load, which is why the meta tier runs a block earlier.
+    #[inline(always)]
+    fn prefetch(&self, i: usize) {
+        prefetch_slice(&self.step_threshold, i);
+        prefetch_slice(&self.adj, self.offsets[i]);
+    }
+
+    #[inline]
+    fn step_block(&self, from: &[u32], rngs: &mut [Rng], out: &mut [u32]) {
+        for ((&i, rng), o) in from.iter().zip(rngs).zip(out) {
+            *o = self.step(i as usize, rng) as u32;
         }
     }
 }
@@ -320,6 +340,51 @@ impl Graph {
         match &self.backend {
             Backend::Csr(c) => c.step(i, rng),
             Backend::Implicit(t) => t.step(i, rng),
+        }
+    }
+
+    /// Tier-A step prefetch: hint the lines that
+    /// [`prefetch`](Self::prefetch) will itself *read* for node `i`
+    /// (the CSR offset pair). The blocked hop pipeline issues this one
+    /// block ahead of the tier-B call so neither tier stalls. Advisory
+    /// only — never changes results; no-op on the implicit backend,
+    /// whose topology parameters live in registers.
+    #[inline(always)]
+    pub fn prefetch_meta(&self, i: usize) {
+        match &self.backend {
+            Backend::Csr(c) => c.prefetch_meta(i),
+            Backend::Implicit(_) => {}
+        }
+    }
+
+    /// Tier-B step prefetch: hint the lines [`step`](Self::step) will
+    /// read for node `i` — the adjacency row and the per-node Lemire
+    /// threshold. Reads `offsets[i]` to compute the row address, which
+    /// is why [`prefetch_meta`](Self::prefetch_meta) runs a block
+    /// earlier. Advisory only; no-op on the implicit backend.
+    #[inline(always)]
+    pub fn prefetch(&self, i: usize) {
+        match &self.backend {
+            Backend::Csr(c) => c.prefetch(i),
+            Backend::Implicit(_) => {}
+        }
+    }
+
+    /// Batched [`step`](Self::step): one uniform-neighbor draw per
+    /// entry, `out[j] = step(from[j], &mut rngs[j])`. Same per-walk
+    /// draws in the same per-walk order as the scalar calls — each walk
+    /// owns `rngs[j]`, so batching cannot move a bit of any stream —
+    /// but the backend dispatch is hoisted out of the loop and the loop
+    /// body is branch-predictable, which is what lets the blocked hop
+    /// pipeline overlap one block's draws with the next block's
+    /// prefetches. Panics if the slice lengths differ.
+    #[inline]
+    pub fn step_block(&self, from: &[u32], rngs: &mut [Rng], out: &mut [u32]) {
+        assert_eq!(from.len(), rngs.len(), "step_block: from/rngs length mismatch");
+        assert_eq!(from.len(), out.len(), "step_block: from/out length mismatch");
+        match &self.backend {
+            Backend::Csr(c) => c.step_block(from, rngs, out),
+            Backend::Implicit(t) => t.step_block(from, rngs, out),
         }
     }
 
@@ -553,6 +618,40 @@ mod tests {
                 pos_b = nbrs[rb.below(nbrs.len())] as usize;
                 assert_eq!(pos_a, pos_b);
                 assert_eq!(ra.next_u64(), rb.next_u64(), "rng streams diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn step_block_matches_scalar_steps_both_backends() {
+        // The batched draw must be walk-for-walk identical to scalar
+        // `step` calls: same destinations, same per-stream RNG state
+        // afterwards. Exercised on both backends and with prefetches
+        // interleaved (they are hints and must be invisible).
+        let imp =
+            Graph::from_implicit(ImplicitTopology::small_world(64, 8, &mut Rng::new(41)).unwrap());
+        let csr = imp.materialize();
+        for g in [&imp, &csr] {
+            let from: Vec<u32> = (0..97u32).map(|j| (j * 13) % 64).collect();
+            let mut rngs_a: Vec<Rng> =
+                (0..from.len()).map(|j| Rng::new(0xB10C ^ j as u64)).collect();
+            let mut rngs_b = rngs_a.clone();
+            let mut out = vec![0u32; from.len()];
+            for (k, &i) in from.iter().enumerate() {
+                g.prefetch_meta(i as usize);
+                if k > 0 {
+                    g.prefetch(from[k - 1] as usize);
+                }
+            }
+            g.step_block(&from, &mut rngs_a, &mut out);
+            for (j, &i) in from.iter().enumerate() {
+                let want = g.step(i as usize, &mut rngs_b[j]) as u32;
+                assert_eq!(out[j], want, "destination diverged at j={j}");
+                assert_eq!(
+                    rngs_a[j].next_u64(),
+                    rngs_b[j].next_u64(),
+                    "rng stream diverged at j={j}"
+                );
             }
         }
     }

@@ -54,6 +54,10 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
            --pin-cores on|off        (default off; pin pool worker k to
                          core k+1 — Linux, best-effort, placement only,
                          never changes results)
+           --hop-path scalar|blocked (stream-mode hot-phase execution;
+                         default blocked = prefetch + batched draws
+                         over 64-walk blocks — bit-identical to the
+                         scalar per-walk oracle loop)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
            --shards 1 --cores N
   train    --preset learn_tiny|learn_10k|learn_100k  (or --n 64 --d 8

@@ -139,6 +139,26 @@ impl Rng {
         }
     }
 
+    /// [`below`](Self::below) with the rejection threshold
+    /// `n.wrapping_neg() % n` precomputed by the caller. Draw-for-draw
+    /// and bit-for-bit compatible with `below(n)`: `below` accepts
+    /// exactly when `lo >= threshold` (its `lo >= n` fast path is
+    /// subsumed, since `threshold < n`), it just computes the modulo
+    /// lazily. Hot-loop callers that sample the same bound many times
+    /// (the graph backends' neighbor draw) hoist the division here.
+    #[inline]
+    pub fn below_threshold(&mut self, n: u64, threshold: u64) -> usize {
+        debug_assert!(n > 0, "below_threshold(0, _) is undefined");
+        debug_assert_eq!(threshold, n.wrapping_neg() % n, "stale precomputed threshold");
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            if (m as u64) >= threshold {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
     /// Uniform integer in `[lo, hi)`.
     #[inline]
     pub fn range(&mut self, lo: usize, hi: usize) -> usize {
@@ -283,6 +303,23 @@ mod tests {
         for &c in &counts {
             let expect = trials as f64 / n as f64;
             assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt() + 50.0);
+        }
+    }
+
+    #[test]
+    fn below_threshold_matches_below_draw_for_draw() {
+        // The precomputed-threshold kernel must consume the same number
+        // of raw draws and return the same value as `below` from the
+        // same state — including awkward bounds where the rejection
+        // zone is non-empty (non-powers of two near 2^63).
+        for n in [1usize, 2, 3, 7, 10, 64, 1000, (1u64 << 63) as usize + 12345] {
+            let threshold = (n as u64).wrapping_neg() % n as u64;
+            let mut a = Rng::new(0xABCD ^ n as u64);
+            let mut b = a.clone();
+            for _ in 0..256 {
+                assert_eq!(a.below(n), b.below_threshold(n as u64, threshold));
+                assert_eq!(a.next_u64(), b.next_u64(), "stream desynced at n={n}");
+            }
         }
     }
 

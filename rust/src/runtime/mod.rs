@@ -9,6 +9,7 @@
 pub mod affinity;
 pub mod manifest;
 pub mod pool;
+pub mod prefetch;
 
 pub use manifest::Manifest;
 pub use pool::WorkerPool;

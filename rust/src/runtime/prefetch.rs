@@ -1,0 +1,86 @@
+//! Best-effort software prefetch (ISSUE 9).
+//!
+//! The block-pipelined hop and control phases (`sim/sharded.rs`) hide
+//! memory latency by issuing prefetches for the *next* block's
+//! dependent loads — CSR offset pairs, adjacency rows, `SlotIndex`
+//! probe lines, `NodeState` rows — while the current block computes.
+//! This module is the single place that knows how to spell a prefetch
+//! per architecture; everything above it calls [`prefetch_read`] and
+//! stays portable.
+//!
+//! Three properties the callers rely on:
+//!
+//! - **Advisory only.** A prefetch is a hint to the cache hierarchy; it
+//!   never faults, never changes architectural state, and is legal on
+//!   any address — including one past the end of a slice or a bucket a
+//!   probe will never reach. Callers therefore do not bounds-check
+//!   perfectly, only cheaply.
+//! - **No-op fallback.** On targets without a stable prefetch spelling
+//!   the function compiles to nothing, so the blocked path is portable
+//!   (just not faster) everywhere the scalar path builds.
+//! - **Result-invisible.** Because it touches no architectural state,
+//!   interleaving prefetches into a loop cannot move a bit of the
+//!   trace — the blocked-vs-scalar A/B oracle would catch it if it
+//!   somehow did.
+
+/// Hint the cache hierarchy that the line holding `*ptr` will be read
+/// soon. Safe to call with any pointer value (no dereference occurs).
+#[inline(always)]
+pub fn prefetch_read<T>(ptr: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        // _MM_HINT_T0: fetch into all cache levels. Stable since 1.27.
+        std::arch::x86_64::_mm_prefetch(ptr as *const i8, std::arch::x86_64::_MM_HINT_T0);
+    }
+    #[cfg(target_arch = "aarch64")]
+    unsafe {
+        // PRFM PLDL1KEEP: prefetch for load, L1, temporal. `nostack`
+        // and `readonly` because the instruction only consumes an
+        // address; it cannot write memory or touch the stack.
+        std::arch::asm!(
+            "prfm pldl1keep, [{0}]",
+            in(reg) ptr,
+            options(nostack, readonly, preserves_flags)
+        );
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        let _ = ptr;
+    }
+}
+
+/// Prefetch the element `slice[i]` if `i` is in bounds; silently skip
+/// otherwise. The bounds check costs one compare — the point is to let
+/// pipelined callers prefetch "block k+1" without replicating tail
+/// logic.
+#[inline(always)]
+pub fn prefetch_slice<T>(slice: &[T], i: usize) {
+    if let Some(item) = slice.get(i) {
+        prefetch_read(item);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_is_a_pure_hint() {
+        // Any address is legal, including dangling and null-ish ones;
+        // the call must not fault and must not change the data.
+        let v = vec![1u64, 2, 3];
+        prefetch_read(&v[0]);
+        prefetch_read(v.as_ptr().wrapping_add(1_000_000));
+        prefetch_read(std::ptr::null::<u64>());
+        assert_eq!(v, [1, 2, 3]);
+    }
+
+    #[test]
+    fn prefetch_slice_skips_out_of_bounds() {
+        let v = [7u32; 4];
+        prefetch_slice(&v, 0);
+        prefetch_slice(&v, 3);
+        prefetch_slice(&v, 4); // out of bounds: no-op, no panic
+        prefetch_slice::<u32>(&[], 0);
+    }
+}

@@ -3,7 +3,7 @@
 
 use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::cli::Args;
-use crate::sim::engine::{RoutingMode, SimParams, SurvivalSpec};
+use crate::sim::engine::{HopPath, RoutingMode, SimParams, SurvivalSpec};
 use crate::walks::NodeStateMode;
 
 /// `--graph regular|er|complete|ba|ring` plus its family flags, and
@@ -222,6 +222,46 @@ pub fn routing_from_env() -> anyhow::Result<RoutingMode> {
     }
 }
 
+/// `--hop-path scalar|blocked`: how the stream-mode engine executes its
+/// hop and control chunks. `blocked` (the default, also when the flag
+/// is absent) pipelines each chunk over 64-walk blocks — software
+/// prefetch of the next block's CSR/index lines, batched
+/// `Graph::step_block` draws — so workers keep many memory misses in
+/// flight; `scalar` keeps the one-walk-at-a-time loops as the A/B
+/// oracle `perf_hop` and the hop-path golden matrix compare against.
+/// Results are bit-identical either way (DESIGN.md §Block pipelining) —
+/// like `--node-state` and `--routing`, this knob can never select a
+/// different trace family — but a valueless or unknown value is still
+/// an error, not a fallback.
+pub fn hop_path(args: &Args) -> anyhow::Result<HopPath> {
+    anyhow::ensure!(!args.has("hop-path"), "--hop-path needs a value (scalar or blocked)");
+    match args.flags.get("hop-path") {
+        None => Ok(HopPath::Blocked),
+        Some(v) => hop_path_value("--hop-path", v),
+    }
+}
+
+/// Shared value validation for `--hop-path` / `DECAFORK_HOP_PATH`:
+/// errors name the knob, like [`positive_count`] does for the count
+/// knobs.
+fn hop_path_value(knob: &str, v: &str) -> anyhow::Result<HopPath> {
+    match v.trim() {
+        "blocked" => Ok(HopPath::Blocked),
+        "scalar" => Ok(HopPath::Scalar),
+        other => anyhow::bail!("{knob} must be 'scalar' or 'blocked', got '{other}'"),
+    }
+}
+
+/// `DECAFORK_HOP_PATH` env mirror for binaries without flag plumbing
+/// (benches, the golden tests' hop-path CI matrix): same semantics as
+/// `--hop-path`, absent = blocked, present-but-invalid = error.
+pub fn hop_path_from_env() -> anyhow::Result<HopPath> {
+    match std::env::var("DECAFORK_HOP_PATH") {
+        Err(_) => Ok(HopPath::Blocked),
+        Ok(v) => hop_path_value("DECAFORK_HOP_PATH", &v),
+    }
+}
+
 /// `--pin-cores on|off`: pin stream-mode pool worker `k` to CPU core
 /// `k + 1` (Linux only, best-effort, placement-only — DESIGN.md
 /// §Locality & routing explains why it is off by default). Takes an
@@ -293,6 +333,7 @@ pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
             node_state: node_state(args)?,
             routing: routing(args)?,
             pin_cores: pin_cores(args)?,
+            hop_path: hop_path(args)?,
             ..Default::default()
         },
         control: control(args)?,
@@ -493,6 +534,42 @@ mod tests {
         assert_eq!(routing_value("DECAFORK_ROUTING", " mailbox ").unwrap(), RoutingMode::Mailbox);
         let e = routing_value("DECAFORK_ROUTING", "both").unwrap_err().to_string();
         assert!(e.contains("DECAFORK_ROUTING"), "env var not named: {e}");
+    }
+
+    #[test]
+    fn hop_path_knob_validates_and_defaults_blocked() {
+        // Absent = blocked (the pipelined default), explicit values
+        // parse, and both failure modes — valueless switch and unknown
+        // value — error with the knob named instead of falling back.
+        assert_eq!(hop_path(&args("simulate")).unwrap(), HopPath::Blocked);
+        assert_eq!(hop_path(&args("simulate --hop-path blocked")).unwrap(), HopPath::Blocked);
+        assert_eq!(hop_path(&args("simulate --hop-path scalar")).unwrap(), HopPath::Scalar);
+        let e = hop_path(&args("simulate --hop-path")).unwrap_err().to_string();
+        assert!(e.contains("--hop-path"), "valueless: knob not named: {e}");
+        let e = hop_path(&args("simulate --hop-path --record-theta")).unwrap_err().to_string();
+        assert!(e.contains("--hop-path"), "switch-before-flag: knob not named: {e}");
+        for bad in ["vector", "batched", "0", ""] {
+            let e = hop_path(&args(&format!("simulate --hop-path {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("--hop-path"), "'{bad}': knob not named: {e}");
+        }
+        // Full scenario plumbing.
+        let s = scenario(&args("simulate --hop-path scalar")).unwrap();
+        assert_eq!(s.params.hop_path, HopPath::Scalar);
+        let s = scenario(&args("simulate")).unwrap();
+        assert_eq!(s.params.hop_path, HopPath::Blocked, "default must be the blocked path");
+    }
+
+    #[test]
+    fn hop_path_env_mirror_validates_values() {
+        // Value validation only — the absent-variable default is covered
+        // by the knob test above (reading the live process env here
+        // would race other tests).
+        assert_eq!(hop_path_value("DECAFORK_HOP_PATH", "scalar").unwrap(), HopPath::Scalar);
+        assert_eq!(hop_path_value("DECAFORK_HOP_PATH", " blocked ").unwrap(), HopPath::Blocked);
+        let e = hop_path_value("DECAFORK_HOP_PATH", "both").unwrap_err().to_string();
+        assert!(e.contains("DECAFORK_HOP_PATH"), "env var not named: {e}");
     }
 
     #[test]

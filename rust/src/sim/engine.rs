@@ -162,6 +162,20 @@ pub struct SimParams {
     /// [`runtime::affinity`](crate::runtime::affinity) for why it is
     /// off by default.
     pub pin_cores: bool,
+    /// Hot-phase execution strategy for the stream-mode engine
+    /// (`--hop-path` / `DECAFORK_HOP_PATH`): `Blocked` (default) runs
+    /// the hop and control phases as block-pipelined stages over
+    /// 64-walk blocks — gather, software-prefetch the next block's
+    /// dependent lines, batched `Graph::step_block` — so each worker
+    /// keeps many memory misses in flight instead of one; `Scalar`
+    /// keeps the original one-walk-at-a-time loops as the A/B oracle.
+    /// Per-walk draw order and stream ownership are untouched, so the
+    /// paths are bit-identical by construction (DESIGN.md §Block
+    /// pipelining), locked by `prop_blocked_hop_bit_identical_to_scalar`
+    /// and both golden families. The single-arena [`Engine`] ignores
+    /// the field (its walks share one RNG stream, so there is no
+    /// per-walk batching to pipeline).
+    pub hop_path: HopPath,
 }
 
 /// How stream-mode arrivals travel from the hop phase to the control
@@ -175,6 +189,23 @@ pub enum RoutingMode {
     /// in parallel; the coordinator only hands the mailbox rows to the
     /// control tasks — O(shards) of serial work per step.
     Mailbox,
+}
+
+/// How the stream-mode hot phases execute each chunk (see
+/// [`SimParams::hop_path`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HopPath {
+    /// One walk at a time: each iteration chains CSR offset →
+    /// adjacency row (hop) or index probe → state row (control) through
+    /// dependent random loads, so each worker has ~one memory miss in
+    /// flight. Kept as the selectable A/B oracle.
+    Scalar,
+    /// Block-pipelined stages over 64-walk blocks: prefetch the next
+    /// block's lines while drawing the current block through
+    /// `Graph::step_block`, then replay failure checks / mailbox
+    /// binning per block. Same draws from the same per-walk streams in
+    /// the same order — bit-identical to `Scalar`, just overlapped.
+    Blocked,
 }
 
 impl Default for SimParams {
@@ -191,6 +222,7 @@ impl Default for SimParams {
             node_state: NodeStateMode::Lazy,
             routing: RoutingMode::Mailbox,
             pin_cores: false,
+            hop_path: HopPath::Blocked,
         }
     }
 }

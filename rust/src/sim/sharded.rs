@@ -138,7 +138,28 @@
 //! touchpoint out of the loop.
 //! Failure models must not mutate internal state in `on_hop`/`on_arrival`
 //! (none do; state transitions belong in `pre_step`, which runs once on
-//! the coordinator's master copy before workers clone it).
+//! the coordinator's master copy; the per-worker scratch copies — cloned
+//! once at construction, not per chunk — are then re-synced from the
+//! master by [`Failures::sync_from`], a few scalar copies per step).
+//!
+//! ## Hot-phase execution: blocked vs scalar
+//!
+//! *How* each hop/control chunk executes is the [`HopPath`] knob
+//! (`--hop-path` / `DECAFORK_HOP_PATH`, default `blocked`) — the third
+//! bit-identical A/B pair after lazy/dense and mailbox/serial. The
+//! scalar path advances one walk at a time, chaining CSR offset →
+//! adjacency row (hop) and index probe → state row (control) through
+//! dependent random loads — at 10⁷⁺ nodes each worker is
+//! memory-latency-bound with about one miss in flight. The blocked path
+//! runs the same chunk as a pipeline over fixed 64-walk blocks:
+//! prefetch block k+1's metadata lines, prefetch block k's dependent
+//! rows, draw block k's hops through [`Graph::step_block`], then replay
+//! block k's failure checks and mailbox binning scalar-wise. Every draw
+//! still comes from the owning walk's (or node's) private stream in the
+//! same per-stream order — batching across walks cannot move a bit
+//! (DESIGN.md §Block pipelining) — locked by
+//! `prop_blocked_hop_bit_identical_to_scalar` and both golden families;
+//! the speedup is gated by `benches/perf_hop.rs`.
 
 use std::sync::Arc;
 
@@ -147,7 +168,7 @@ use crate::failures::Failures;
 use crate::graph::Graph;
 use crate::rng::{streams, Rng};
 use crate::runtime::pool::{self, WorkerPool};
-use crate::sim::engine::{RoutingMode, SimParams, StartPlacement};
+use crate::sim::engine::{HopPath, RoutingMode, SimParams, StartPlacement};
 use crate::sim::metrics::{Event, EventKind, Trace};
 use crate::sim::shard_hook::{NoShardHook, ShardHook, ShardVisit};
 use crate::walks::{Lineage, NodeStore, StatesView, Walk, WalkArena, WalkId};
@@ -266,6 +287,24 @@ pub struct ShardedEngine {
     /// K-way merge cursors (one per shard) for the decision barrier.
     merge_heads: Vec<usize>,
     decisions: Vec<Vec<DecisionOut>>,
+    /// Per-worker hop-phase scratch (failure-model copy + blocked-path
+    /// block buffers), one per chunk slot, reused across steps.
+    hop_scratch: Vec<HopScratch>,
+}
+
+/// One hop worker's reusable scratch. Owned by the engine and handed to
+/// chunk `c`'s task as a disjoint `&mut`, like the death/mailbox rows.
+struct HopScratch {
+    /// Worker copy of the failure model: cloned from the master once at
+    /// construction and re-synced (scalar copies, no allocation) after
+    /// each master `pre_step` — hop-time checks are read-only by
+    /// contract, so sync only has to carry `pre_step`'s mutations.
+    failures: Failures,
+    /// Blocked-path destination buffer: `Graph::step_block` writes one
+    /// block's draws here, the replay stage reads them back. Sized to
+    /// one block, cleared in place, never reallocated after the first
+    /// blocked step.
+    to: Vec<u32>,
 }
 
 impl ShardedEngine {
@@ -414,6 +453,10 @@ impl ShardedEngine {
         }
         let stores: Vec<NodeStore> =
             store_slots.into_iter().map(|s| s.expect("every build task ran")).collect();
+        let failures: Failures = failures.into();
+        let hop_scratch = (0..shards)
+            .map(|_| HopScratch { failures: failures.clone(), to: Vec::new() })
+            .collect();
         ShardedEngine {
             graph,
             params,
@@ -422,7 +465,7 @@ impl ShardedEngine {
             arena,
             stores,
             controls,
-            failures: failures.into(),
+            failures,
             fail_rng,
             t: 0,
             trace,
@@ -436,6 +479,7 @@ impl ShardedEngine {
             mailbox_payloads: (0..shards * shards).map(|_| Vec::new()).collect(),
             merge_heads: Vec::new(),
             decisions: (0..shards).map(|_| Vec::new()).collect(),
+            hop_scratch,
         }
     }
 
@@ -564,6 +608,14 @@ impl ShardedEngine {
         let nodes_per_shard = self.nodes_per_shard;
         let route = self.params.routing == RoutingMode::Mailbox;
         let route_payloads = route && H::ACTIVE;
+        let blocked = self.params.hop_path == HopPath::Blocked;
+        // Re-sync the per-worker failure copies with whatever the
+        // master's `pre_step` just mutated (Byzantine occupation flags);
+        // scalar copies, no allocation — the clone happened once at
+        // construction.
+        for scratch in &mut self.hop_scratch {
+            scratch.failures.sync_from(&self.failures);
+        }
         if route {
             for row in &mut self.mailboxes {
                 row.clear();
@@ -576,11 +628,10 @@ impl ShardedEngine {
         {
             let (ids, lineage, payloads, at, walk_rngs) = self.arena.hop_columns_routed_mut();
             let graph: &Graph = &self.graph;
-            let failures = &self.failures;
             if shards == 1 {
                 hop_chunk(
                     graph,
-                    failures,
+                    &mut self.hop_scratch[0],
                     t,
                     0,
                     ids,
@@ -594,6 +645,7 @@ impl ShardedEngine {
                     nodes_per_shard,
                     route,
                     route_payloads,
+                    blocked,
                 );
             } else {
                 // Exactly `shards` chunks (trailing ones may be empty),
@@ -605,11 +657,12 @@ impl ShardedEngine {
                 let mut at_rest = at;
                 let mut rng_rest = walk_rngs;
                 let mut tasks = Vec::with_capacity(shards);
-                for (c, ((deaths, mail_row), pay_row)) in self
+                for (c, (((deaths, mail_row), pay_row), scratch)) in self
                     .hop_deaths
                     .iter_mut()
                     .zip(self.mailboxes.chunks_mut(shards))
                     .zip(self.mailbox_payloads.chunks_mut(shards))
+                    .zip(self.hop_scratch.iter_mut())
                     .enumerate()
                 {
                     let take = chunk.min(at_rest.len());
@@ -620,7 +673,7 @@ impl ShardedEngine {
                     tasks.push(move || {
                         hop_chunk(
                             graph,
-                            failures,
+                            scratch,
                             t,
                             c * chunk,
                             ids,
@@ -634,6 +687,7 @@ impl ShardedEngine {
                             nodes_per_shard,
                             route,
                             route_payloads,
+                            blocked,
                         )
                     });
                 }
@@ -718,6 +772,7 @@ impl ShardedEngine {
                     &mut self.decisions[0],
                     hook_ref,
                     &mut replicas[0],
+                    blocked,
                 );
             } else {
                 // One task per shard: each store already owns its node
@@ -747,6 +802,7 @@ impl ShardedEngine {
                                 out,
                                 hook_ref,
                                 rep,
+                                blocked,
                             )
                         }
                     })
@@ -949,11 +1005,22 @@ fn kill_dense<H: ShardHook>(
     }
 }
 
+/// Walks per block in the blocked hot-phase pipelines. 64 random-line
+/// prefetches comfortably fit typical L1 miss-queue depths when spread
+/// over a block's worth of compute, and one block's `from`/`to`/rng
+/// working set (~3 KB) stays L1-resident — big enough to amortize the
+/// per-block stage overhead, small enough that a prefetched line is
+/// still cached when its walk replays one block (a few microseconds)
+/// later. The value is a pure scheduling constant: any B produces the
+/// identical trace (DESIGN.md §Block pipelining).
+const HOP_BLOCK: usize = 64;
+
 /// Hop-phase worker: advance each walk in the chunk on its own stream.
 /// `base` is the chunk's offset into the dense columns; `ids`, `lineage`
-/// and `payloads` are the full read-only rosters. The failure model is
-/// cloned per step — hop-time checks are read-only by contract, and
-/// `pre_step` already ran on the coordinator's master copy.
+/// and `payloads` are the full read-only rosters. The failure model used
+/// here is the worker's persistent scratch copy — hop-time checks are
+/// read-only by contract, and `pre_step` already ran on the
+/// coordinator's master copy, whose mutations `sync_from` carried over.
 ///
 /// With `route` set (mailbox routing), each survivor's arrival record is
 /// pushed into `mail[destination_shard]` — this chunk's row of the
@@ -964,10 +1031,19 @@ fn kill_dense<H: ShardHook>(
 /// payload column into `pay` for hooked steps (same contract as the
 /// serial path's payload side buffer). A killed walk is never binned: a
 /// walk has exactly one fate per step.
+///
+/// `blocked` selects the pipelined execution (see [`HopPath`]): the
+/// chunk is cut into [`HOP_BLOCK`]-walk blocks (plus an unaligned tail)
+/// and each block runs prefetch-next → prefetch-this → batched
+/// [`Graph::step_block`] → scalar replay of failure checks and binning.
+/// Each walk's draws still come from its own stream in the same order —
+/// hop draw, then failure draws — so both values of `blocked` produce
+/// the identical trace; the scalar path stays byte-for-byte the
+/// original loop (the replay below with the hop draw inlined).
 #[allow(clippy::too_many_arguments)]
 fn hop_chunk(
     graph: &Graph,
-    failures: &Failures,
+    scratch: &mut HopScratch,
     t: u64,
     base: usize,
     ids: &[WalkId],
@@ -981,37 +1057,74 @@ fn hop_chunk(
     nodes_per_shard: usize,
     route: bool,
     route_payloads: bool,
+    blocked: bool,
 ) {
-    let mut failures = failures.clone();
-    for j in 0..at.len() {
-        let dense = base + j;
-        let id = ids[dense];
-        let from = at[j];
-        let rng = &mut walk_rngs[j];
-        let to = graph.step(from as usize, rng) as u32;
-        // Loss in transit (e.g. the per-hop Bernoulli) draws from the
-        // walk's stream too — the check belongs to the walk's fate.
-        if failures.on_hop(t, id, from, to, rng) {
-            deaths.push(HopDeath { dense: dense as u32, node: from });
-            continue;
+    let HopScratch { failures, to } = scratch;
+    let len = at.len();
+    if blocked {
+        // Reused across steps; only the first blocked step allocates.
+        to.resize(HOP_BLOCK, 0);
+        // Warm tier A for block 0 (later blocks are warmed one block
+        // ahead, inside the loop).
+        for &i in at.iter().take(HOP_BLOCK) {
+            graph.prefetch_meta(i as usize);
         }
-        at[j] = to;
-        if failures.on_arrival(t, id, to, rng) {
-            deaths.push(HopDeath { dense: dense as u32, node: to });
-            continue;
+    }
+    let mut start = 0;
+    while start < len {
+        let end = if blocked { (start + HOP_BLOCK).min(len) } else { len };
+        if blocked {
+            // Stage 1a: tier-A prefetch for block k+1 (offset pairs).
+            let next_end = (end + HOP_BLOCK).min(len);
+            for &i in &at[end..next_end] {
+                graph.prefetch_meta(i as usize);
+            }
+            // Stage 1b: tier-B prefetch for block k (adjacency rows +
+            // thresholds; reads the offsets tier A warmed last block).
+            for &i in &at[start..end] {
+                graph.prefetch(i as usize);
+            }
+            // Stage 2: batched hop draws, each from its walk's stream.
+            graph.step_block(
+                &at[start..end],
+                &mut walk_rngs[start..end],
+                &mut to[..end - start],
+            );
         }
-        if route {
-            let s = to as usize / nodes_per_shard;
-            mail[s].push(Arrival {
-                dense: dense as u32,
-                node: to,
-                id,
-                slot: lineage[dense].slot(),
-            });
-            if route_payloads {
-                pay[s].push(payloads[dense]);
+        // Stage 3 (blocked) / the whole loop (scalar): failure checks
+        // and mailbox binning, one walk at a time in dense order.
+        for j in start..end {
+            let dense = base + j;
+            let id = ids[dense];
+            let from = at[j];
+            let rng = &mut walk_rngs[j];
+            let to_node =
+                if blocked { to[j - start] } else { graph.step(from as usize, rng) as u32 };
+            // Loss in transit (e.g. the per-hop Bernoulli) draws from the
+            // walk's stream too — the check belongs to the walk's fate.
+            if failures.on_hop(t, id, from, to_node, rng) {
+                deaths.push(HopDeath { dense: dense as u32, node: from });
+                continue;
+            }
+            at[j] = to_node;
+            if failures.on_arrival(t, id, to_node, rng) {
+                deaths.push(HopDeath { dense: dense as u32, node: to_node });
+                continue;
+            }
+            if route {
+                let s = to_node as usize / nodes_per_shard;
+                mail[s].push(Arrival {
+                    dense: dense as u32,
+                    node: to_node,
+                    id,
+                    slot: lineage[dense].slot(),
+                });
+                if route_payloads {
+                    pay[s].push(payloads[dense]);
+                }
             }
         }
+        start = end;
     }
 }
 
@@ -1076,41 +1189,76 @@ fn control_chunk<H: ShardHook>(
     out: &mut Vec<DecisionOut>,
     hook: &H,
     replica: &mut H::Replica,
+    blocked: bool,
 ) {
     let base = store.base();
     for c in 0..feed.segments() {
         let (arrivals, payloads) = feed.segment(c);
-        for (j, a) in arrivals.iter().enumerate() {
-            let (state, rng) = store.state_rng_mut(a.node);
-            state.observe(t, a.id, a.slot);
-            if H::ACTIVE {
-                hook.on_shard_visit(
-                    replica,
-                    t,
-                    &ShardVisit {
-                        dense: a.dense,
-                        node: a.node,
-                        local: a.node - base,
-                        walk: a.id,
-                        slot: a.slot,
-                        payload: payloads[j],
-                    },
-                );
+        // Blocked pipelining (see [`HopPath`]): warm block 0's lookup
+        // lines, then per block prefetch block k+1's lookups (tier A:
+        // the `SlotIndex` home bucket in lazy mode, the state row in
+        // dense mode) and block k's state rows + decision streams (tier
+        // B, which needs the probe tier A warmed), then replay block k
+        // scalar-wise. Prefetches are read-only hints — they never
+        // materialize a lazy node and never touch a stream — so both
+        // values of `blocked` produce identical decisions from identical
+        // draws. (Mid-replay materializations may rehash the index under
+        // an already-issued hint; the hint is then merely wasted.)
+        if blocked {
+            for a in arrivals.iter().take(HOP_BLOCK) {
+                store.prefetch_lookup(a.node);
             }
-            // Warm-up and the one-decision-per-node-per-step rule
-            // (footnote 6), exactly as in the sequential engine.
-            if t < control_start || state.last_control_step == Some(t) {
-                continue;
-            }
-            state.last_control_step = Some(t);
-            let decision = {
-                let mut ctx =
-                    VisitCtx { t, node: a.node, walk: a.id, slot: a.slot, z0, state, rng };
-                control.on_visit(&mut ctx)
+        }
+        let mut block_start = 0;
+        while block_start < arrivals.len() {
+            let block_end = if blocked {
+                (block_start + HOP_BLOCK).min(arrivals.len())
+            } else {
+                arrivals.len()
             };
-            if decision.theta.is_some() || !decision.forks.is_empty() || decision.terminate {
-                out.push(DecisionOut { dense: a.dense, node: a.node, walk: a.id, decision });
+            if blocked {
+                let next_end = (block_end + HOP_BLOCK).min(arrivals.len());
+                for a in &arrivals[block_end..next_end] {
+                    store.prefetch_lookup(a.node);
+                }
+                for a in &arrivals[block_start..block_end] {
+                    store.prefetch_state(a.node);
+                }
             }
+            for j in block_start..block_end {
+                let a = &arrivals[j];
+                let (state, rng) = store.state_rng_mut(a.node);
+                state.observe(t, a.id, a.slot);
+                if H::ACTIVE {
+                    hook.on_shard_visit(
+                        replica,
+                        t,
+                        &ShardVisit {
+                            dense: a.dense,
+                            node: a.node,
+                            local: a.node - base,
+                            walk: a.id,
+                            slot: a.slot,
+                            payload: payloads[j],
+                        },
+                    );
+                }
+                // Warm-up and the one-decision-per-node-per-step rule
+                // (footnote 6), exactly as in the sequential engine.
+                if t < control_start || state.last_control_step == Some(t) {
+                    continue;
+                }
+                state.last_control_step = Some(t);
+                let decision = {
+                    let mut ctx =
+                        VisitCtx { t, node: a.node, walk: a.id, slot: a.slot, z0, state, rng };
+                    control.on_visit(&mut ctx)
+                };
+                if decision.theta.is_some() || !decision.forks.is_empty() || decision.terminate {
+                    out.push(DecisionOut { dense: a.dense, node: a.node, walk: a.id, decision });
+                }
+            }
+            block_start = block_end;
         }
     }
 }
@@ -1406,6 +1554,60 @@ mod tests {
                 order, oracle_order,
                 "{routing:?} × {shards} workers moved the first-visit order — \
                  routing reordered the control feed"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_and_blocked_hop_bit_identical() {
+        assert_eq!(
+            SimParams::default().hop_path,
+            HopPath::Blocked,
+            "blocked hot phases are the production default; scalar is the oracle"
+        );
+        // One churny scenario, six arms: {scalar, blocked} × {1, 3, 4}
+        // workers — walk counts drift through sub-block, block-multiple
+        // and unaligned-tail chunk sizes as forks and failures fire, and
+        // every arm must match the scalar 1-worker oracle bit-for-bit
+        // (trace, θ̂ floats, first-visit order).
+        let mk = |hop_path, shards| {
+            let mut e = ShardedEngine::new(
+                small_graph(),
+                SimParams {
+                    z0: 8,
+                    record_theta: true,
+                    control_start: Some(50),
+                    max_walks: 256,
+                    hop_path,
+                    ..Default::default()
+                },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4), (300, 3)]),
+                Rng::new(0xB10C_ED),
+                shards,
+            );
+            e.run_to(400);
+            let visit_order: Vec<u32> = e.states().iter().map(|(node, _)| node).collect();
+            (e.into_trace(), visit_order)
+        };
+        let (oracle, oracle_order) = mk(HopPath::Scalar, 1);
+        assert!(!oracle.events.is_empty(), "no churn — the comparison is vacuous");
+        assert!(!oracle.theta.is_empty(), "no θ̂ samples — the comparison is vacuous");
+        for (hop_path, shards) in [
+            (HopPath::Blocked, 1),
+            (HopPath::Scalar, 3),
+            (HopPath::Blocked, 3),
+            (HopPath::Scalar, 4),
+            (HopPath::Blocked, 4),
+        ] {
+            let (tr, order) = mk(hop_path, shards);
+            assert!(
+                oracle.bit_identical(&tr),
+                "{hop_path:?} × {shards} workers diverged from the scalar oracle"
+            );
+            assert_eq!(
+                order, oracle_order,
+                "{hop_path:?} × {shards} workers moved the first-visit order"
             );
         }
     }

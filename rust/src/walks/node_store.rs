@@ -56,6 +56,7 @@ use super::node_state::NodeState;
 use super::slot_index::SlotIndex;
 use crate::graph::Graph;
 use crate::rng::Rng;
+use crate::runtime::prefetch::prefetch_slice;
 use crate::sim::engine::SurvivalSpec;
 
 /// How engine node state is stored — the `--node-state` /
@@ -212,6 +213,48 @@ impl NodeStore {
                 pos
             }
         }
+    }
+
+    /// Tier-A visit prefetch: hint the lines the *lookup* for `node`
+    /// will probe — the `SlotIndex` home bucket in lazy mode, the state
+    /// row directly in dense mode (where position = local id needs no
+    /// lookup). The blocked control pipeline issues this one block
+    /// ahead of [`prefetch_state`](Self::prefetch_state). Advisory
+    /// only: never materializes, never changes results; silently skips
+    /// out-of-range nodes (they belong to another shard's store).
+    #[inline(always)]
+    pub fn prefetch_lookup(&self, node: u32) {
+        if node < self.base || node - self.base >= self.range_len {
+            return;
+        }
+        let local = node - self.base;
+        match self.mode {
+            NodeStateMode::Dense => prefetch_slice(&self.states, local as usize),
+            NodeStateMode::Lazy => self.index.prefetch(local),
+        }
+    }
+
+    /// Tier-B visit prefetch: hint `node`'s state row (and decision
+    /// stream, when the store owns streams) ahead of
+    /// [`state_rng_mut`](Self::state_rng_mut). Needs the index probe
+    /// that [`prefetch_lookup`](Self::prefetch_lookup) warmed; a lazy
+    /// node not yet visited has no row to hint, which is fine — its
+    /// first visit pays the materialization anyway. Advisory only.
+    #[inline(always)]
+    pub fn prefetch_state(&self, node: u32) {
+        if node < self.base || node - self.base >= self.range_len {
+            return;
+        }
+        let local = node - self.base;
+        let pos = match self.mode {
+            NodeStateMode::Dense => local as usize,
+            NodeStateMode::Lazy => match self.index.get(local) {
+                Some(p) => p as usize,
+                None => return,
+            },
+        };
+        prefetch_slice(&self.states, pos);
+        prefetch_slice(&self.rngs, pos);
     }
 
     /// Mutable state of `node`, materializing it on a lazy first visit.

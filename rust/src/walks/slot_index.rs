@@ -104,6 +104,24 @@ impl SlotIndex {
         self.find(key).map(|b| self.vals[b])
     }
 
+    /// Hint the cache that `key`'s home bucket is about to be probed.
+    /// The blocked control pipeline issues this one block ahead of the
+    /// [`get`](Self::get) that `pos_or_create` runs, hiding the random
+    /// (Fibonacci-hashed) line miss behind the previous block's work.
+    /// Only the home bucket is hinted — probe chains are short by the
+    /// 7/8 load bound, and a second-line continuation is in-page and
+    /// usually covered by the hardware next-line prefetcher. Advisory
+    /// only; no-op on an unallocated index.
+    #[inline(always)]
+    pub fn prefetch(&self, key: u32) {
+        if self.keys.is_empty() {
+            return;
+        }
+        let b = self.home(key);
+        crate::runtime::prefetch::prefetch_read(&self.keys[b]);
+        crate::runtime::prefetch::prefetch_read(&self.vals[b]);
+    }
+
     /// Insert `key → val`, overwriting any existing mapping (that is how
     /// a reused arena slot supersedes its dead predecessor's pointer).
     pub fn set(&mut self, key: u32, val: u32) {

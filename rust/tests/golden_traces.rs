@@ -34,6 +34,13 @@
 //! the arena must reproduce the reference in **both** modes — CI runs
 //! this lock with each value, which is the shared-stream half of the
 //! lazy-vs-dense golden matrix.
+//!
+//! `DECAFORK_HOP_PATH=scalar|blocked` is honored the same way (default
+//! blocked): the single-arena `Engine` runs its shared-stream loop
+//! unconditionally — like `routing` and `shards`, the knob only changes
+//! behavior in the `ShardedEngine` — so setting it here is a vacuous
+//! but deliberate part of the CI hop-path matrix (the substantive half
+//! lives in `stream_golden.rs` and `shard_invariance.rs`).
 
 use decafork::scenario::presets;
 use std::path::PathBuf;
@@ -49,6 +56,7 @@ fn encode(z: &[u32]) -> String {
 #[test]
 fn arena_engine_reproduces_reference_engine_exactly() {
     let node_state = decafork::scenario::parse::node_state_from_env().expect("DECAFORK_NODE_STATE");
+    let hop_path = decafork::scenario::parse::hop_path_from_env().expect("DECAFORK_HOP_PATH");
     for (name, mut scenario) in presets::golden() {
         let reference = {
             let mut e = scenario.reference_engine(0).unwrap();
@@ -56,6 +64,7 @@ fn arena_engine_reproduces_reference_engine_exactly() {
             e.into_trace()
         };
         scenario.params.node_state = node_state;
+        scenario.params.hop_path = hop_path;
         let arena = {
             let mut e = scenario.engine(0).unwrap();
             e.run_to(scenario.horizon);

@@ -18,7 +18,7 @@
 
 use decafork::rng::Rng;
 use decafork::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
-use decafork::sim::engine::{RoutingMode, SimParams};
+use decafork::sim::engine::{HopPath, RoutingMode, SimParams};
 use decafork::sim::metrics::{EventKind, Trace};
 use decafork::walks::NodeStateMode;
 
@@ -242,6 +242,79 @@ fn prop_mailbox_routing_bit_identical_to_serial() {
     // lifecycle events for the comparison to mean anything.
     assert!(total_theta > 0, "no randomized case recorded θ̂");
     assert!(total_events > 0, "no randomized case produced events");
+}
+
+#[test]
+fn prop_blocked_hop_bit_identical_to_scalar() {
+    // The hop-path oracle (ISSUE 9): block-pipelining the hop and
+    // control phases (prefetch stage + batched `step_block` + scalar
+    // replay over 64-walk blocks) only restages *when* memory is
+    // touched — every walk still draws from its own stream in the same
+    // per-walk order — so at any shard count the blocked path must
+    // reproduce the scalar loop bit for bit: z, the event log,
+    // extinction/cap flags AND every θ̂ float. The walk counts are
+    // chosen around the block size: a sub-block population (< 64, the
+    // whole chunk is one ragged tail), an exact multiple of 64 (no
+    // tail at 1 shard), and an unaligned tail — and sharding at
+    // {1, 2, 7, 16} re-slices those populations into chunk lengths
+    // that hit every alignment anyway.
+    let mut rng = Rng::new(0x3B10_C5EE);
+    let mut total_theta = 0usize;
+    let mut total_events = 0usize;
+    for (case, z0) in [7u32, 64, 100, 64, 29, 192, 77, 13].into_iter().enumerate() {
+        let mut scenario = random_scenario(&mut rng, 0xA00 + case as u64);
+        scenario.params.z0 = z0;
+        scenario.params.max_walks = 512; // headroom so forking crosses block boundaries
+        let mut scalar = scenario.clone();
+        scalar.params.hop_path = HopPath::Scalar;
+        let blocked = scenario; // blocked is the default — keep it explicit below
+        assert_eq!(blocked.params.hop_path, HopPath::Blocked);
+        for shards in [1usize, 2, 7, 16] {
+            let s = run_sharded(&scalar, shards);
+            let b = run_sharded(&blocked, shards);
+            assert!(
+                s.bit_identical(&b),
+                "case {case} z0={z0} ({}) at {shards} shards: blocked hop path \
+                 diverged from the scalar loop",
+                blocked.label()
+            );
+            // bit_identical already covers θ̂, but the float bits are the
+            // load-bearing half of this oracle (the control phase is
+            // block-pipelined too) — assert them explicitly so a future
+            // bit_identical refactor can't silently drop them.
+            assert_eq!(s.theta.len(), b.theta.len(), "case {case}");
+            for ((ts, xs), (tb, xb)) in s.theta.iter().zip(b.theta.iter()) {
+                assert_eq!((ts, xs.to_bits()), (tb, xb.to_bits()), "case {case}: θ̂ bits");
+            }
+            total_theta += s.theta.len();
+            total_events += s.events.len();
+        }
+    }
+    // Vacuity guard: the sweep must actually produce decisions and
+    // lifecycle events for the comparison to mean anything.
+    assert!(total_theta > 0, "no randomized case recorded θ̂");
+    assert!(total_events > 0, "no randomized case produced events");
+}
+
+#[test]
+fn golden_quartet_bit_identical_across_hop_paths() {
+    // Re-assert the pinned stream-mode family under both hop paths:
+    // whatever `DECAFORK_HOP_PATH` CI crosses into `stream_golden.rs`,
+    // this test locks scalar ≡ blocked on the quartet directly.
+    for (name, mut scenario) in presets::golden() {
+        scenario.params.record_theta = true;
+        scenario.params.hop_path = HopPath::Scalar;
+        let scalar = run_sharded(&scenario, 1);
+        scenario.params.hop_path = HopPath::Blocked;
+        for shards in [1usize, 2, 8] {
+            let blocked = run_sharded(&scenario, shards);
+            assert!(
+                scalar.bit_identical(&blocked),
+                "golden scenario '{name}': blocked hop path at {shards} shards \
+                 diverged from the scalar loop"
+            );
+        }
+    }
 }
 
 #[test]

@@ -21,6 +21,11 @@
 //!   §Locality & routing), so the **same** pinned file must match in
 //!   both modes — CI crosses this knob with the node-state × shard
 //!   matrix, the golden-family half of the mailbox-vs-serial lock.
+//! * `DECAFORK_HOP_PATH=scalar|blocked` selects the hot-phase execution
+//!   strategy (default blocked). Block pipelining only restages *when*
+//!   memory is touched — per-walk draw order is untouched (DESIGN.md
+//!   §Block pipelining) — so the **same** pinned file must match under
+//!   both paths; CI crosses this knob with the shard matrix.
 //! * `DECAFORK_WRITE_GOLDEN=1` (re)records the pins. Like the
 //!   shared-stream pins, the files cannot be generated in the offline
 //!   authoring sandbox (no Rust toolchain); the CI `record golden
@@ -45,9 +50,11 @@ fn stream_mode_traces_match_pinned_goldens() {
     let shards = decafork::scenario::parse::shards_from_env().expect("DECAFORK_SHARDS");
     let node_state = decafork::scenario::parse::node_state_from_env().expect("DECAFORK_NODE_STATE");
     let routing = decafork::scenario::parse::routing_from_env().expect("DECAFORK_ROUTING");
+    let hop_path = decafork::scenario::parse::hop_path_from_env().expect("DECAFORK_HOP_PATH");
     for (name, mut scenario) in presets::golden() {
         scenario.params.node_state = node_state;
         scenario.params.routing = routing;
+        scenario.params.hop_path = hop_path;
         let trace = {
             let mut e = scenario.sharded_engine(0, shards).unwrap();
             e.run_to(scenario.horizon);
