@@ -30,7 +30,10 @@
 //!
 //! [`SurvivalTable`]: decafork::stats::SurvivalTable
 
+mod perf_common;
+
 use decafork::scenario::{presets, Scenario};
+use perf_common::{enforce_bar, env_u64, steps_per_sec, write_bench_json};
 use std::time::Instant;
 
 struct Pair {
@@ -66,8 +69,8 @@ fn run_pair(name: &'static str, scenario: &Scenario) -> anyhow::Result<Pair> {
     assert_eq!(arena.trace().extinct, reference.trace().extinct, "{name}: extinction flag");
     assert_eq!(arena.trace().capped, reference.trace().capped, "{name}: cap flag");
 
-    let reference_sps = horizon as f64 / dt_ref;
-    let arena_sps = horizon as f64 / dt_arena;
+    let reference_sps = steps_per_sec(reference.trace(), dt_ref);
+    let arena_sps = steps_per_sec(arena.trace(), dt_arena);
     let speedup = arena_sps / reference_sps;
     println!("{name}: {} steps, final z = {}", horizon, arena.alive());
     println!("  reference (direct θ̂) : {reference_sps:>12.1} steps/s  ({dt_ref:.2}s)");
@@ -77,11 +80,7 @@ fn run_pair(name: &'static str, scenario: &Scenario) -> anyhow::Result<Pair> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
-        .ok()
-        .map(|s| s.parse::<u64>())
-        .transpose()?
-        .map(|s| s.max(200));
+    let quick_steps = env_u64("DECAFORK_PERF_STEPS").map(|s| s.max(200));
 
     let mut geometric = presets::perf_control_geometric();
     let mut empirical = presets::perf_control_empirical();
@@ -105,12 +104,11 @@ fn main() -> anyhow::Result<()> {
     let t0 = Instant::now();
     big.run_to(scale.horizon);
     let dt_big = t0.elapsed().as_secs_f64();
-    let big_sps = scale.horizon as f64 / dt_big;
+    let big_sps = steps_per_sec(big.trace(), dt_big);
     println!("scale_10k: {} steps, final z = {}", scale.horizon, big.alive());
     println!("  arena (cached θ̂)     : {big_sps:>12.1} steps/s  ({dt_big:.2}s, arena-only)");
 
     let pass = pairs.iter().all(|p| p.speedup >= 3.0);
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_control.json".into());
     let scenarios = pairs
         .iter()
         .map(|p| {
@@ -125,15 +123,11 @@ fn main() -> anyhow::Result<()> {
         "{{\n  \"bench\": \"perf_control\",\n  \"workload\": \"1000-node churn, Z0=256, DECAFORK/DECAFORK+, both survival families\",\n  \"steps\": {},\n  \"scenarios\": {{\n{scenarios},\n    \"scale_10k\": {{\n      \"graph\": \"random-regular n=10000 d=8\",\n      \"z0\": 1024,\n      \"steps\": {},\n      \"arena_steps_per_sec\": {:.1}\n    }}\n  }},\n  \"acceptance_min_speedup\": 3.0,\n  \"pass\": {pass}\n}}\n",
         geometric.horizon, scale.horizon, big_sps
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_control.json", &json)?;
 
     // The gate is a gate: a regression below the bar fails the bench
     // (and the CI smoke step) instead of hiding in an artifact nobody
     // reads. `DECAFORK_PERF_NO_ENFORCE=1` downgrades it to a report for
     // exploratory runs on busy machines.
-    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
-        anyhow::bail!("perf_control below the 3.0x acceptance bar — see {out}");
-    }
-    Ok(())
+    enforce_bar(pass, format!("perf_control below the 3.0x acceptance bar — see {out}"))
 }

@@ -29,9 +29,12 @@
 //! probe, `DECAFORK_PERF_NO_ENFORCE=1` downgrades the speedup gate to
 //! a report.
 
+mod perf_common;
+
 use decafork::graph::{build, Graph, ImplicitTopology};
 use decafork::rng::Rng;
 use decafork::runtime::WorkerPool;
+use perf_common::{enforce_bar, env_u64, steps_per_sec, write_bench_json};
 use std::time::Instant;
 
 /// Best-of-3 wall time for a build closure (builds are one-shot, so a
@@ -57,14 +60,9 @@ fn assert_same_graph(a: &Graph, b: &Graph, what: &str) {
 }
 
 fn main() -> anyhow::Result<()> {
-    let n_build = std::env::var("DECAFORK_GRAPH_N")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .map(|n| n.max(50_000))
-        .unwrap_or(1_000_000);
-    let workers = std::env::var("DECAFORK_GRAPH_WORKERS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    let n_build = env_u64("DECAFORK_GRAPH_N").map(|n| (n as usize).max(50_000)).unwrap_or(1_000_000);
+    let workers = env_u64("DECAFORK_GRAPH_WORKERS")
+        .map(|w| w as usize)
         .filter(|&w| w >= 1)
         .unwrap_or(7);
     let mut pool = WorkerPool::new(workers);
@@ -147,12 +145,7 @@ fn main() -> anyhow::Result<()> {
     // ISSUE 7: honor the benches' node-state mirror (default lazy —
     // O(visited) state instead of ~1 GB of dense columns at 10^7).
     scale10m.params.node_state = decafork::scenario::parse::node_state_from_env()?;
-    if let Some(steps) = std::env::var("DECAFORK_PERF_STEPS")
-        .ok()
-        .map(|s| s.parse::<u64>())
-        .transpose()?
-        .map(|s| s.max(100))
-    {
+    if let Some(steps) = env_u64("DECAFORK_PERF_STEPS").map(|s| s.max(100)) {
         scale10m.rescale_to(steps);
     }
     let sps_10m = if skip_10m {
@@ -172,8 +165,7 @@ fn main() -> anyhow::Result<()> {
              criterion is not met",
             scale10m.horizon
         );
-        let steps = trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1);
-        let sps = steps as f64 / dt;
+        let sps = steps_per_sec(&trace, dt);
         println!(
             "  {} workers            : {sps:>12.1} steps/s (final z = {})",
             workers + 1,
@@ -183,7 +175,6 @@ fn main() -> anyhow::Result<()> {
     };
 
     let pass = speedup >= 4.0;
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_graph.json".into());
     let sps_10m_json = sps_10m.map(|v| format!("{v:.1}")).unwrap_or_else(|| "null".into());
     let json = format!(
         "{{\n  \"bench\": \"perf_graph\",\n  \"mode\": \"parallel CSR assembly + implicit topology backend, outputs asserted identical\",\n  \"lanes\": {},\n  \"build\": {{\n    \"n\": {n_build},\n    \"edges\": {},\n    \"from_edges_ms\": {:.1},\n    \"from_edges_trusted_ms\": {:.1},\n    \"from_edges_parallel_ms\": {:.1},\n    \"speedup_vs_validating\": {speedup:.3},\n    \"speedup_vs_trusted\": {trusted_ratio:.3}\n  }},\n  \"implicit\": {{\n    \"n\": 100000000,\n    \"memory_bytes_total\": {mem},\n    \"memory_bytes_per_node\": {mem_per_node:.3e},\n    \"hops_per_sec\": {implicit_hops_per_sec:.0}\n  }},\n  \"scale_10m\": {{\n    \"graph\": \"{}\",\n    \"z0\": {},\n    \"steps\": {},\n    \"steps_per_sec\": {sps_10m_json},\n    \"completed\": {}\n  }},\n  \"acceptance_min_speedup\": 4.0,\n  \"pass\": {pass}\n}}\n",
@@ -197,11 +188,7 @@ fn main() -> anyhow::Result<()> {
         scale10m.horizon,
         !skip_10m
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_graph.json", &json)?;
 
-    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
-        anyhow::bail!("perf_graph below the 4.0x parallel-build bar — see {out}");
-    }
-    Ok(())
+    enforce_bar(pass, format!("perf_graph below the 4.0x parallel-build bar — see {out}"))
 }

@@ -21,11 +21,14 @@
 //! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the 2× gate to a report
 //! (2-core hosted runners cannot show an 8-worker win).
 
+mod perf_common;
+
 use std::sync::Arc;
 
 use decafork::learning::{
     presets, train_sharded, ShardedTrainOptions, TrainingRun, TrainingSummary,
 };
+use perf_common::{assert_bit_identical, enforce_bar, env_u64, steps_per_sec, write_bench_json};
 use std::time::Instant;
 
 const SEED: u64 = 0x5EED_1EA4;
@@ -54,22 +57,21 @@ fn run_sharded(
         },
     )?;
     let dt = t0.elapsed().as_secs_f64();
-    Ok((spec.scenario.horizon as f64 / dt, summary))
+    let sps = steps_per_sec(&summary.trace, dt);
+    Ok((sps, summary))
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
-        .ok()
-        .map(|s| s.parse::<u64>())
-        .transpose()?
-        .map(|s| s.max(100));
-    let workers = std::env::var("DECAFORK_SHARDS_HI")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    let quick_steps = env_u64("DECAFORK_PERF_STEPS").map(|s| s.max(100));
+    let workers = env_u64("DECAFORK_SHARDS_HI")
+        .map(|v| v as usize)
         .filter(|&s| s >= 2)
         .unwrap_or(8);
 
     let mut spec = presets::learn_10k();
+    // θ̂ floats join the bit-identical oracle (symmetric across worker
+    // counts, so the ratios are untouched).
+    spec.scenario.params.record_theta = true;
     if let Some(steps) = quick_steps {
         spec.scenario.rescale_to(steps);
     }
@@ -93,9 +95,12 @@ fn main() -> anyhow::Result<()> {
         "  sharded, {workers} workers   : {sps_hi:>10.2} steps/s  ({} SGD steps)",
         sum_hi.steps
     );
-    assert!(
-        sum_one.trace.bit_identical(&sum_hi.trace),
-        "simulation trace diverged between 1 and {workers} workers — perf numbers meaningless"
+    assert_bit_identical(
+        &sum_one.trace,
+        &sum_hi.trace,
+        &format!(
+            "simulation trace diverged between 1 and {workers} workers — perf numbers meaningless"
+        ),
     );
     assert_eq!(
         sum_one.loss_digest(),
@@ -121,7 +126,7 @@ fn main() -> anyhow::Result<()> {
         SEED,
     )?;
     let dt = t0.elapsed().as_secs_f64();
-    let sps_shared = spec.scenario.horizon as f64 / dt;
+    let sps_shared = steps_per_sec(&sum_seq.trace, dt);
     println!(
         "  shared-stream engine : {sps_shared:>10.2} steps/s  ({} SGD steps)",
         sum_seq.steps
@@ -133,7 +138,6 @@ fn main() -> anyhow::Result<()> {
     println!("  sharded {workers}w vs 1w        : {vs_one:>6.2}x");
 
     let pass = speedup >= 2.0;
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_learn.json".into());
     let json = format!(
         "{{\n  \"bench\": \"perf_learn\",\n  \"mode\": \"RW-SGD, sharded trainer vs shared-stream trainer, bigram op; shards=1 loss digest asserted bit-identical before clocking\",\n  \"workload\": \"{}\",\n  \"graph\": \"{}\",\n  \"z0\": {},\n  \"steps\": {},\n  \"workers\": {workers},\n  \"loss_digest\": \"0x{:016x}\",\n  \"sgd_steps_sharded\": {},\n  \"sgd_steps_shared_stream\": {},\n  \"steps_per_sec_sharded_1_worker\": {sps_one:.2},\n  \"steps_per_sec_sharded\": {sps_hi:.2},\n  \"steps_per_sec_shared_stream\": {sps_shared:.2},\n  \"sharded_vs_shared_stream\": {speedup:.3},\n  \"sharded_vs_1_worker\": {vs_one:.3},\n  \"acceptance_min_speedup\": 2.0,\n  \"pass\": {pass}\n}}\n",
         spec.name,
@@ -144,11 +148,7 @@ fn main() -> anyhow::Result<()> {
         sum_hi.steps,
         sum_seq.steps,
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_learn.json", &json)?;
 
-    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
-        anyhow::bail!("perf_learn below the 2x sharded-vs-shared-stream bar — see {out}");
-    }
-    Ok(())
+    enforce_bar(pass, format!("perf_learn below the 2x sharded-vs-shared-stream bar — see {out}"))
 }

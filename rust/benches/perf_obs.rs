@@ -1,0 +1,131 @@
+//! Observability overhead bench (ISSUE 10): proves the telemetry layer
+//! is *zero-perturbation* (traces bit-identical with metrics off vs
+//! jsonl vs csv) and *near-zero-cost* (enabled jsonl streaming keeps
+//! ≥ 95% of the disabled path's steps/s) on the routing-dominated
+//! `route_100k` workload.
+//!
+//! Two legs:
+//!
+//! 1. **off vs jsonl** at the full worker count, flush period 1 (a
+//!    record every step — the worst case for sink overhead). Before any
+//!    clock is trusted the leg **asserts `Trace::bit_identical`**
+//!    between the runs — z, the full event log, flags, and every θ̂
+//!    float at the bit level. Telemetry that moved a bit is a bug, not
+//!    an overhead number. Acceptance bar: jsonl ≥ 0.95× off steps/s.
+//! 2. **csv report leg**: same scenario with the csv sink (report only
+//!    — the formats share every code path except row formatting), plus
+//!    a row-count check: one record per step, exactly.
+//!
+//! Writes `BENCH_obs.json` (or `$DECAFORK_BENCH_OUT`).
+//!
+//! Env knobs: `DECAFORK_ROUTE_N` shrinks the node count (CI smoke),
+//! `DECAFORK_PERF_STEPS` rescales the horizon, `DECAFORK_ROUTE_WORKERS`
+//! sets the worker count (default 7 workers = 8 shards), and
+//! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the overhead bar to a report
+//! (the bit-identical assert is **never** downgraded).
+
+mod perf_common;
+
+use decafork::obs::{MetricsConfig, MetricsMode};
+use decafork::scenario::{presets, GraphSpec, Scenario};
+use perf_common::{assert_bit_identical, enforce_bar, env_u64, write_bench_json};
+use std::time::Instant;
+
+struct Run {
+    secs: f64,
+    trace: decafork::sim::metrics::Trace,
+}
+
+/// Build, run to the horizon, and measure one scenario/metrics cell.
+fn run_cell(scenario: &Scenario, metrics: MetricsConfig, shards: usize) -> anyhow::Result<Run> {
+    let mut s = scenario.clone();
+    s.params.metrics = metrics;
+    let mut e = s.sharded_engine(0, shards)?;
+    let t0 = Instant::now();
+    e.run_to(s.horizon);
+    let secs = t0.elapsed().as_secs_f64();
+    Ok(Run { secs, trace: e.into_trace() })
+}
+
+fn steps_per_sec(r: &Run) -> f64 {
+    perf_common::steps_per_sec(&r.trace, r.secs)
+}
+
+fn tmp(name: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("decafork_perf_obs_{}_{name}", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+fn main() -> anyhow::Result<()> {
+    let workers = env_u64("DECAFORK_ROUTE_WORKERS").map(|w| (w as usize).max(1)).unwrap_or(7);
+    let shards = workers + 1;
+
+    let mut sc = presets::route_100k();
+    sc.params.record_theta = true; // θ̂ floats must match bit-for-bit too
+    let n = env_u64("DECAFORK_ROUTE_N").map(|n| (n as usize).max(1_000)).unwrap_or(100_000);
+    if n != 100_000 {
+        sc.graph = GraphSpec::RandomRegular { n, d: 8 };
+    }
+    if let Some(steps) = env_u64("DECAFORK_PERF_STEPS") {
+        sc.rescale_to(steps.max(50));
+    }
+    println!(
+        "perf_obs leg 1: {} | {} steps | {shards} shards | metrics off vs jsonl (every=1)",
+        sc.label(),
+        sc.horizon
+    );
+
+    // ---- Leg 1: off vs jsonl, record-per-step (worst case) ----
+    let off = run_cell(&sc, MetricsConfig::default(), shards)?;
+    let jsonl_path = tmp("leg1.jsonl");
+    let jsonl = run_cell(
+        &sc,
+        MetricsConfig { mode: MetricsMode::Jsonl, out: Some(jsonl_path.clone()), every: 1 },
+        shards,
+    )?;
+
+    // The oracle comes before the clock: identical bits or no result.
+    assert_bit_identical(
+        &off.trace,
+        &jsonl.trace,
+        "jsonl telemetry perturbed the trace",
+    );
+    let rows = std::fs::read_to_string(&jsonl_path)?.lines().count();
+    let steps = perf_common::steps_simulated(&jsonl.trace);
+    assert_eq!(rows, steps, "jsonl sink must emit exactly one record per simulated step");
+    std::fs::remove_file(&jsonl_path).ok();
+
+    let (so, sj) = (steps_per_sec(&off), steps_per_sec(&jsonl));
+    let ratio = sj / so;
+    println!("  steps/s metrics off     : {so:>8.1}");
+    println!("  steps/s metrics jsonl   : {sj:>8.1}");
+    println!("  jsonl / off             : {ratio:>8.3}x  (acceptance bar: >= 0.95x)");
+    let pass = ratio >= 0.95;
+
+    // ---- Leg 2: csv report (bit-identity + row cadence only) ----
+    let csv_path = tmp("leg2.csv");
+    let csv = run_cell(
+        &sc,
+        MetricsConfig { mode: MetricsMode::Csv, out: Some(csv_path.clone()), every: 1 },
+        shards,
+    )?;
+    assert!(off.trace.bit_identical(&csv.trace), "csv telemetry perturbed the trace");
+    let csv_rows = std::fs::read_to_string(&csv_path)?.lines().count();
+    assert_eq!(csv_rows, steps + 1, "csv = header + one row per step");
+    std::fs::remove_file(&csv_path).ok();
+    let sc_csv = steps_per_sec(&csv);
+    println!("\nperf_obs leg 2: csv sink (report only)");
+    println!("  steps/s metrics csv     : {sc_csv:>8.1} ({:.3}x of off)", sc_csv / so);
+
+    let json = format!(
+        "{{\n  \"bench\": \"perf_obs\",\n  \"mode\": \"streaming telemetry overhead vs metrics-off, traces asserted bit-identical\",\n  \"shards\": {shards},\n  \"route_100k\": {{\n    \"n\": {n},\n    \"steps\": {steps},\n    \"bit_identical\": true,\n    \"theta_samples_compared\": {},\n    \"jsonl_rows\": {rows},\n    \"steps_per_sec_off\": {so:.1},\n    \"steps_per_sec_jsonl\": {sj:.1},\n    \"steps_per_sec_csv\": {sc_csv:.1},\n    \"jsonl_over_off\": {ratio:.4}\n  }},\n  \"acceptance_min_ratio\": 0.95,\n  \"pass\": {pass}\n}}\n",
+        off.trace.theta.len(),
+    );
+    let out = write_bench_json("BENCH_obs.json", &json)?;
+
+    enforce_bar(
+        pass,
+        format!("perf_obs overhead bar not met ({ratio:.3}x < 0.95x of metrics-off) — see {out}"),
+    )
+}

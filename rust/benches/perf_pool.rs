@@ -26,8 +26,11 @@
 //! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the ≥ 1.5× gate to a report
 //! (2-core hosted runners cannot show an 8-worker dispatch win).
 
+mod perf_common;
+
 use decafork::scenario::{presets, Scenario};
 use decafork::sim::{DispatchMode, Trace};
+use perf_common::{assert_bit_identical, enforce_bar, env_u64, steps_per_sec, write_bench_json};
 use std::time::Instant;
 
 fn run_once(
@@ -43,8 +46,7 @@ fn run_once(
     e.run_to(scenario.horizon);
     let dt = t0.elapsed().as_secs_f64();
     let trace = e.into_trace();
-    let steps = trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1);
-    Ok((steps as f64 / dt, trace))
+    Ok((steps_per_sec(&trace, dt), trace))
 }
 
 struct Comparison {
@@ -63,15 +65,18 @@ fn compare(
     println!("  pooled dispatch      : {sps_pooled:>12.1} steps/s");
     let (sps_scoped, tr_scoped) = run_once(scenario, workers, DispatchMode::Scoped)?;
     println!("  scoped dispatch      : {sps_scoped:>12.1} steps/s");
-    assert!(
-        tr_pooled.bit_identical(&tr_scoped),
-        "{name}: trace diverged between pooled and scoped dispatch — \
-         perf numbers meaningless"
+    assert_bit_identical(
+        &tr_pooled,
+        &tr_scoped,
+        &format!(
+            "{name}: trace diverged between pooled and scoped dispatch — \
+             perf numbers meaningless"
+        ),
     );
     let pooled_vs_scoped = sps_pooled / sps_scoped;
     println!("  pooled vs scoped     : {pooled_vs_scoped:>12.2}x");
     println!(
-        "  traces bit-identical : yes ({} events, final z = {})",
+        "  events / final z     : {} / {}",
         tr_pooled.events.len(),
         tr_pooled.z.last().unwrap()
     );
@@ -79,19 +84,18 @@ fn compare(
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
-        .ok()
-        .map(|s| s.parse::<u64>())
-        .transpose()?
-        .map(|s| s.max(100));
-    let workers = std::env::var("DECAFORK_SHARDS_HI")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    let quick_steps = env_u64("DECAFORK_PERF_STEPS").map(|s| s.max(100));
+    let workers = env_u64("DECAFORK_SHARDS_HI")
+        .map(|v| v as usize)
         .filter(|&s| s >= 2)
         .unwrap_or(8);
 
     let mut control = presets::perf_control_geometric();
     let mut s100k = presets::scale_100k();
+    // θ̂ floats join the bit-identical oracle (symmetric across every
+    // dispatch arm, so the ratios are untouched).
+    control.params.record_theta = true;
+    s100k.params.record_theta = true;
     if let Some(steps) = quick_steps {
         control.rescale_to(steps);
         s100k.rescale_to(steps);
@@ -103,9 +107,10 @@ fn main() -> anyhow::Result<()> {
     // path — the ROADMAP claim this bench exists to check is that with
     // the spawn floor gone, `--shards` pays off at 1000-node scale too.
     let (sps_one, tr_one) = run_once(&control, 1, DispatchMode::Pooled)?;
-    assert!(
-        tr_one.bit_identical(&tr_small),
-        "perf_control_geometric: trace diverged between 1 and {workers} workers"
+    assert_bit_identical(
+        &tr_one,
+        &tr_small,
+        &format!("perf_control_geometric: trace diverged between 1 and {workers} workers"),
     );
     let pooled_vs_one = small.sps_pooled / sps_one;
     println!("  1 worker (inline)    : {sps_one:>12.1} steps/s");
@@ -120,7 +125,6 @@ fn main() -> anyhow::Result<()> {
     };
 
     let pass = small.pooled_vs_scoped >= 1.5;
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_pool.json".into());
     let fmt_cmp = |c: &Comparison| {
         format!(
             "{{\n    \"steps_per_sec_pooled\": {:.1},\n    \"steps_per_sec_scoped\": {:.1},\n    \"pooled_vs_scoped\": {:.3}\n  }}",
@@ -140,11 +144,7 @@ fn main() -> anyhow::Result<()> {
         small.sps_scoped,
         small.pooled_vs_scoped,
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_pool.json", &json)?;
 
-    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
-        anyhow::bail!("perf_pool below the 1.5x pooled-vs-scoped bar — see {out}");
-    }
-    Ok(())
+    enforce_bar(pass, format!("perf_pool below the 1.5x pooled-vs-scoped bar — see {out}"))
 }

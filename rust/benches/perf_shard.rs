@@ -6,12 +6,13 @@
 //! steps/sec).
 //!
 //! Before any clock is trusted the bench **asserts the two traces are
-//! bit-identical** (`Trace::bit_identical`: z, events, θ̂ bits, flags) —
-//! schedule invariance is the whole point; a "speedup" that moved one
-//! fork decision is a bug, not a result. Note both sides are stream
-//! mode: this measures what worker threads buy *within* the per-walk
-//! stream family, not stream-vs-shared-stream semantics (those are
-//! different trace families by design).
+//! bit-identical** (`perf_common::assert_bit_identical`: z, events, θ̂
+//! bits, flags — θ̂ recording is turned on so the float comparison is
+//! non-vacuous) — schedule invariance is the whole point; a "speedup"
+//! that moved one fork decision is a bug, not a result. Note both
+//! sides are stream mode: this measures what worker threads buy
+//! *within* the per-walk stream family, not stream-vs-shared-stream
+//! semantics (those are different trace families by design).
 //!
 //! Writes `BENCH_shard.json` (to the bench's working directory — the
 //! `rust/` package root under cargo — or to `$DECAFORK_BENCH_OUT`).
@@ -23,7 +24,10 @@
 //! `DECAFORK_PERF_NO_ENFORCE=1` downgrades the ≥ 3× gate to a report
 //! (CI smoke runs on 2-core runners where the bar is unreachable).
 
+mod perf_common;
+
 use decafork::scenario::{presets, Scenario};
+use perf_common::{assert_bit_identical, enforce_bar, env_u64, steps_per_sec, write_bench_json};
 use std::time::Instant;
 
 fn run_once(scenario: &Scenario, shards: usize) -> anyhow::Result<(f64, decafork::sim::Trace)> {
@@ -37,23 +41,20 @@ fn run_once(scenario: &Scenario, shards: usize) -> anyhow::Result<(f64, decafork
     // Rate over steps actually simulated — an extinct run stops early
     // (the trace is only zero-padded from the first z = 0 on), and
     // horizon/dt would flatter it.
-    let steps = trace.z.iter().position(|&z| z == 0).unwrap_or(trace.z.len() - 1).max(1);
-    Ok((steps as f64 / dt, trace))
+    Ok((steps_per_sec(&trace, dt), trace))
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick_steps = std::env::var("DECAFORK_PERF_STEPS")
-        .ok()
-        .map(|s| s.parse::<u64>())
-        .transpose()?
-        .map(|s| s.max(100));
-    let hi_shards = std::env::var("DECAFORK_SHARDS_HI")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    let quick_steps = env_u64("DECAFORK_PERF_STEPS").map(|s| s.max(100));
+    let hi_shards = env_u64("DECAFORK_SHARDS_HI")
+        .map(|v| v as usize)
         .filter(|&s| s >= 2)
         .unwrap_or(8);
 
     let mut scale100k = presets::scale_100k();
+    // θ̂ floats join the bit-identical oracle (symmetric across both
+    // arms, so the speedup ratio is untouched).
+    scale100k.params.record_theta = true;
     let mut scale1m = presets::scale_1m();
     if let Some(steps) = quick_steps {
         scale100k.rescale_to(steps);
@@ -70,15 +71,18 @@ fn main() -> anyhow::Result<()> {
     println!("  1 worker             : {sps_1:>12.1} steps/s");
     let (sps_hi, trace_hi) = run_once(&scale100k, hi_shards)?;
     println!("  {hi_shards} workers            : {sps_hi:>12.1} steps/s");
-    assert!(
-        trace_1.bit_identical(&trace_hi),
-        "scale_100k: trace diverged between 1 and {hi_shards} workers — \
-         schedule invariance broken, perf numbers meaningless"
+    assert_bit_identical(
+        &trace_1,
+        &trace_hi,
+        &format!(
+            "scale_100k: trace diverged between 1 and {hi_shards} workers — \
+             schedule invariance broken, perf numbers meaningless"
+        ),
     );
     let speedup = sps_hi / sps_1;
     println!("  speedup              : {speedup:>12.2}x  (acceptance bar: >= 3.0x)");
     println!(
-        "  traces bit-identical : yes ({} events, final z = {})",
+        "  events / final z     : {} / {}",
         trace_1.events.len(),
         trace_1.z.last().unwrap()
     );
@@ -107,7 +111,6 @@ fn main() -> anyhow::Result<()> {
     };
 
     let pass = speedup >= 3.0;
-    let out = std::env::var("DECAFORK_BENCH_OUT").unwrap_or_else(|_| "BENCH_shard.json".into());
     let sps_1m_json = sps_1m.map(|v| format!("{v:.1}")).unwrap_or_else(|| "null".into());
     // Workload metadata comes from the presets (not hand-copied
     // literals), and key names are fixed — the worker count is a value
@@ -123,11 +126,7 @@ fn main() -> anyhow::Result<()> {
         scale1m.horizon,
         !skip_1m
     );
-    std::fs::write(&out, json)?;
-    println!("\n  wrote {out}");
+    let out = write_bench_json("BENCH_shard.json", &json)?;
 
-    if !pass && std::env::var("DECAFORK_PERF_NO_ENFORCE").is_err() {
-        anyhow::bail!("perf_shard below the 3.0x acceptance bar — see {out}");
-    }
-    Ok(())
+    enforce_bar(pass, format!("perf_shard below the 3.0x acceptance bar — see {out}"))
 }

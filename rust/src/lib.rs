@@ -29,6 +29,7 @@ pub mod stats;
 pub mod walks;
 pub mod control;
 pub mod failures;
+pub mod obs;
 pub mod scenario;
 pub mod sim;
 pub mod theory;

@@ -58,6 +58,15 @@ const USAGE: &str = "decafork <simulate|figure|train|actors|theory|design|info> 
                          default blocked = prefetch + batched draws
                          over 64-walk blocks — bit-identical to the
                          scalar per-walk oracle loop)
+           --metrics off|jsonl|csv   (default off; stream one step
+                         record per --metrics-every steps — phase
+                         spans, worker counters, Z_t, theta, recovery
+                         series. Observation only: traces stay
+                         bit-identical)
+           --metrics-out PATH        (default metrics.jsonl / .csv)
+           --metrics-every K         (flush period in steps; default 1.
+                         Records are period totals — nothing is lost
+                         at coarse periods)
   figure   --id 1..6 --runs 10 --out results [--runs 50 = paper scale]
            --shards 1 --cores N
   train    --preset learn_tiny|learn_10k|learn_100k  (or --n 64 --d 8
@@ -121,6 +130,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         agg.capped_runs,
         agg.forks_per_run.iter().sum::<usize>() as f64 / agg.runs as f64
     );
+    println!(
+        "state footprint (max over runs): {} visited nodes, {}",
+        agg.max_visited_nodes,
+        decafork::report::human_bytes(agg.max_state_bytes)
+    );
+    if cfg.params.metrics.enabled() {
+        println!(
+            "metrics: {} -> {} (every {} steps)",
+            cfg.params.metrics.mode.as_str(),
+            cfg.params.metrics.out_path(),
+            cfg.params.metrics.period()
+        );
+    }
     println!("{}", ascii_plot("Z_t (mean over runs)", &[("Z", &agg.mean)], 90, 16));
     if let Some(csv) = args.flags.get("csv") {
         let rows: Vec<Vec<f64>> = (0..agg.mean.len())

@@ -1,0 +1,480 @@
+//! Streaming metrics sinks (DESIGN.md §Observability).
+//!
+//! [`crate::runtime::telemetry`] is the measurement substrate — phase
+//! spans, worker counters, merge-side tallies. This module is the
+//! egress: every `--metrics-every` steps the engine hands the open
+//! period to a [`MetricsSink`], which formats one step record (JSONL or
+//! CSV) and streams it to `--metrics-out`. Records carry the
+//! paper-facing series next to the engine internals: Z_t, the θ̂
+//! mean/min/max over the period's control decisions, steps since the
+//! last failure, and the time-to-recovery after each failure burst
+//! (detection latency — how long until Z_t climbs back to its
+//! pre-burst level).
+//!
+//! The sink runs strictly **after** the step's trace updates, on the
+//! coordinator, and does nothing but read accumulated numbers and
+//! write bytes — it can slow a run down, never change it. Traces are
+//! bit-identical for `off`/`jsonl`/`csv` (test-locked like every other
+//! A/B knob). IO failures print one warning to stderr and self-disable
+//! the sink rather than poisoning a long run.
+//!
+//! No `serde` exists in the vendored dependency set: JSONL is
+//! hand-formatted (all fields are numbers or `null`, so escaping never
+//! arises), and the tests hand-parse lines back with a string scanner.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+
+use crate::runtime::telemetry::{PeriodStats, Phase, Telemetry};
+
+/// Output format selector for `--metrics` / `DECAFORK_METRICS`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MetricsMode {
+    /// No sink, no recording — the compiled-out baseline.
+    #[default]
+    Off,
+    /// One JSON object per line (NDJSON), self-describing keys.
+    Jsonl,
+    /// Header row + one comma-separated row per record.
+    Csv,
+}
+
+impl MetricsMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricsMode::Off => "off",
+            MetricsMode::Jsonl => "jsonl",
+            MetricsMode::Csv => "csv",
+        }
+    }
+}
+
+/// Everything the engines need to know about metrics, carried on
+/// `SimParams`. Default is `Off` — telemetry is strictly opt-in, and
+/// every pre-existing scenario is unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsConfig {
+    pub mode: MetricsMode,
+    /// Output path; `None` defaults to `metrics.jsonl` / `metrics.csv`
+    /// in the working directory.
+    pub out: Option<String>,
+    /// Flush period in steps (`--metrics-every`, ≥ 1). Records are
+    /// period *totals*, so nothing is lost at coarse periods.
+    pub every: u64,
+}
+
+impl MetricsConfig {
+    /// Whether any telemetry should be recorded at all.
+    pub fn enabled(&self) -> bool {
+        self.mode != MetricsMode::Off
+    }
+
+    /// The effective flush period (treats an unset 0 as 1).
+    pub fn period(&self) -> u64 {
+        self.every.max(1)
+    }
+
+    /// The effective output path.
+    pub fn out_path(&self) -> String {
+        match (&self.out, self.mode) {
+            (Some(p), _) => p.clone(),
+            (None, MetricsMode::Csv) => "metrics.csv".to_string(),
+            (None, _) => "metrics.jsonl".to_string(),
+        }
+    }
+}
+
+/// CSV column order — single-sourced so the header and the row
+/// formatter cannot drift apart (JSONL reuses the same names as keys).
+const COLUMNS: [&str; 26] = [
+    "t",
+    "z",
+    "steps",
+    "pre_step_ns",
+    "hop_ns",
+    "control_ns",
+    "merge_ns",
+    "hopped",
+    "hop_deaths",
+    "arrivals_binned",
+    "visits",
+    "materializations",
+    "probe_samples",
+    "probe_len_total",
+    "forks",
+    "terminations",
+    "failures",
+    "shard_arrivals_min",
+    "shard_arrivals_max",
+    "theta_n",
+    "theta_mean",
+    "theta_min",
+    "theta_max",
+    "steps_since_failure",
+    "recovery_steps",
+    "pool_dispatches",
+];
+
+/// The streaming sink: owns the output file (opened lazily at the
+/// first flush), the flush period, and the failure/recovery state
+/// machine that turns the raw failure tallies into detection-latency
+/// episodes.
+pub struct MetricsSink {
+    mode: MetricsMode,
+    every: u64,
+    path: String,
+    out: Option<BufWriter<File>>,
+    wrote_header: bool,
+    /// Sink disabled after an IO error (warn once, never poison a run).
+    dead: bool,
+    /// Step of the most recent failure event, for `steps_since_failure`.
+    last_failure_t: Option<u64>,
+    /// Open recovery episode: `(step the burst hit, Z_t to climb back
+    /// to)`. Opens at the first failure while closed (target = Z_t just
+    /// before that step); later failures inside an open episode deepen
+    /// it but don't reset the clock; closes when Z_t ≥ target.
+    episode: Option<(u64, u32)>,
+    /// Recovery duration completed since the last flush (emitted once).
+    pending_recovery: Option<u64>,
+    /// Z_t after the previous step — the pre-burst level a new episode
+    /// targets.
+    prev_z: u32,
+}
+
+impl MetricsSink {
+    /// Build a sink from config; `None` when the mode is `Off`.
+    pub fn new(cfg: &MetricsConfig) -> Option<MetricsSink> {
+        if !cfg.enabled() {
+            return None;
+        }
+        Some(MetricsSink {
+            mode: cfg.mode,
+            every: cfg.period(),
+            path: cfg.out_path(),
+            out: None,
+            wrote_header: false,
+            dead: false,
+            last_failure_t: None,
+            episode: None,
+            pending_recovery: None,
+            prev_z: 0,
+        })
+    }
+
+    /// Seed the recovery state machine with the population before the
+    /// first step (so a burst on step 1 targets Z0, not 0).
+    pub fn prime(&mut self, z0: u32) {
+        self.prev_z = z0;
+    }
+
+    /// Close one step: advance the failure/recovery state machine and,
+    /// on flush boundaries, stream one record built from the telemetry
+    /// period. Runs after the step's trace updates; reads only.
+    /// `pool_dispatches` is the worker pool's lifetime dispatch count
+    /// (`None` for pool-less engines → `null`/blank in the record).
+    pub fn on_step(
+        &mut self,
+        t: u64,
+        z: u32,
+        failures_this_step: u64,
+        tel: &mut Telemetry,
+        pool_dispatches: Option<u64>,
+    ) {
+        if failures_this_step > 0 {
+            self.last_failure_t = Some(t);
+            if self.episode.is_none() {
+                self.episode = Some((t, self.prev_z));
+            }
+        }
+        if let Some((t_open, target)) = self.episode {
+            if z >= target {
+                self.episode = None;
+                self.pending_recovery = Some(t - t_open);
+            }
+        }
+        self.prev_z = z;
+        if t % self.every == 0 {
+            self.flush(t, z, tel, pool_dispatches);
+            tel.reset_period();
+            self.pending_recovery = None;
+        }
+    }
+
+    fn flush(&mut self, t: u64, z: u32, tel: &Telemetry, pool_dispatches: Option<u64>) {
+        if self.dead {
+            return;
+        }
+        let line = self.format_record(t, z, tel.period(), pool_dispatches);
+        if self.out.is_none() {
+            match File::create(&self.path) {
+                Ok(f) => self.out = Some(BufWriter::new(f)),
+                Err(e) => {
+                    eprintln!("decafork: metrics sink disabled: cannot open '{}': {e}", self.path);
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        let w = self.out.as_mut().expect("sink file just opened");
+        let res = (|| -> std::io::Result<()> {
+            if self.mode == MetricsMode::Csv && !self.wrote_header {
+                writeln!(w, "{}", COLUMNS.join(","))?;
+                self.wrote_header = true;
+            }
+            writeln!(w, "{line}")?;
+            w.flush()
+        })();
+        if let Err(e) = res {
+            eprintln!("decafork: metrics sink disabled: write to '{}' failed: {e}", self.path);
+            self.dead = true;
+        }
+    }
+
+    /// One record, in the configured format. Values are the period
+    /// *totals* since the previous flush plus the instantaneous t / Z_t.
+    fn format_record(
+        &self,
+        t: u64,
+        z: u32,
+        p: &PeriodStats,
+        pool_dispatches: Option<u64>,
+    ) -> String {
+        let steps_since_failure = self.last_failure_t.map(|f| t - f);
+        // Columns, in COLUMNS order, as (value, is_null) strings.
+        let opt_u64 = |v: Option<u64>| v.map(|v| v.to_string());
+        let opt_f64 = |v: Option<f64>| v.map(fmt_f64);
+        let theta_min = (p.theta_n > 0).then_some(p.theta_min);
+        let theta_max = (p.theta_n > 0).then_some(p.theta_max);
+        let values: [Option<String>; 26] = [
+            Some(t.to_string()),
+            Some(z.to_string()),
+            Some(p.steps.to_string()),
+            Some(p.span_ns[Phase::PreStep as usize].to_string()),
+            Some(p.span_ns[Phase::Hop as usize].to_string()),
+            Some(p.span_ns[Phase::Control as usize].to_string()),
+            Some(p.span_ns[Phase::Merge as usize].to_string()),
+            Some(p.counters.hopped.to_string()),
+            Some(p.counters.hop_deaths.to_string()),
+            Some(p.counters.arrivals_binned.to_string()),
+            Some(p.counters.visits.to_string()),
+            Some(p.counters.materializations.to_string()),
+            Some(p.counters.probe_samples.to_string()),
+            Some(p.counters.probe_len_total.to_string()),
+            Some(p.forks.to_string()),
+            Some(p.terminations.to_string()),
+            Some(p.failures.to_string()),
+            Some(p.shard_arrivals_min.to_string()),
+            Some(p.shard_arrivals_max.to_string()),
+            Some(p.theta_n.to_string()),
+            opt_f64(p.theta_mean()),
+            opt_f64(theta_min),
+            opt_f64(theta_max),
+            opt_u64(steps_since_failure),
+            opt_u64(self.pending_recovery),
+            opt_u64(pool_dispatches),
+        ];
+        match self.mode {
+            MetricsMode::Jsonl => {
+                let fields: Vec<String> = COLUMNS
+                    .iter()
+                    .zip(values.iter())
+                    .map(|(k, v)| {
+                        format!("\"{k}\":{}", v.as_deref().unwrap_or("null"))
+                    })
+                    .collect();
+                format!("{{{}}}", fields.join(","))
+            }
+            MetricsMode::Csv | MetricsMode::Off => values
+                .iter()
+                .map(|v| v.as_deref().unwrap_or("").to_string())
+                .collect::<Vec<_>>()
+                .join(","),
+        }
+    }
+}
+
+/// `f64` → JSON number. `{:?}` round-trips f64 exactly (shortest
+/// representation) and never produces bare `NaN`-unfriendly output for
+/// the finite θ̂ values the engine emits; guard anyway so a pathological
+/// control rule cannot emit invalid JSON.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:?}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Extract field `key` from a hand-formatted JSONL line as a raw token
+/// (number or `null`). Test/CI helper — the emitter writes flat objects
+/// with unescaped keys, so a string scan is exact.
+pub fn jsonl_field<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find([',', '}']).unwrap_or(rest.len());
+    Some(rest[..end].trim())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::Decafork;
+    use crate::failures::Burst;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+    use crate::sim::{ShardedEngine, SimParams};
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("decafork_obs_{}_{}", std::process::id(), name));
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn config_defaults_and_paths() {
+        let d = MetricsConfig::default();
+        assert_eq!(d.mode, MetricsMode::Off);
+        assert!(!d.enabled());
+        assert_eq!(d.period(), 1);
+        assert!(MetricsSink::new(&d).is_none());
+        assert_eq!(d.out_path(), "metrics.jsonl");
+        let c = MetricsConfig { mode: MetricsMode::Csv, out: None, every: 10 };
+        assert_eq!(c.out_path(), "metrics.csv");
+        let j = MetricsConfig {
+            mode: MetricsMode::Jsonl,
+            out: Some("x.ndjson".into()),
+            every: 10,
+        };
+        assert_eq!(j.out_path(), "x.ndjson");
+        assert_eq!(j.period(), 10);
+    }
+
+    #[test]
+    fn jsonl_field_scans_numbers_and_nulls() {
+        let line = r#"{"t":12,"z":40,"theta_mean":1.25,"recovery_steps":null}"#;
+        assert_eq!(jsonl_field(line, "t"), Some("12"));
+        assert_eq!(jsonl_field(line, "theta_mean"), Some("1.25"));
+        assert_eq!(jsonl_field(line, "recovery_steps"), Some("null"));
+        assert_eq!(jsonl_field(line, "missing"), None);
+    }
+
+    #[test]
+    fn recovery_episode_measures_return_to_preburst_z() {
+        let cfg = MetricsConfig {
+            mode: MetricsMode::Jsonl,
+            out: Some(tmp("episode.jsonl")),
+            every: 1,
+        };
+        let mut sink = MetricsSink::new(&cfg).unwrap();
+        let mut tel = Telemetry::new(true);
+        sink.prime(10);
+        // Steps 1-2 healthy, burst at 3 (z drops to 4), climb back by 6.
+        for (t, z, f) in [(1, 10, 0), (2, 10, 0), (3, 4, 6), (4, 6, 0), (5, 8, 0)] {
+            sink.on_step(t, z, f, &mut tel, None);
+            assert_eq!(sink.pending_recovery, None);
+            assert_eq!(sink.episode.is_some(), t >= 3);
+        }
+        tel.end_step();
+        sink.on_step(6, 10, 0, &mut tel, Some(42));
+        // Flushed (every=1) so pending cleared, but the record carried it.
+        assert_eq!(sink.episode, None);
+        let body = std::fs::read_to_string(cfg.out_path()).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert_eq!(jsonl_field(lines[5], "recovery_steps"), Some("3"));
+        assert_eq!(jsonl_field(lines[4], "recovery_steps"), Some("null"));
+        assert_eq!(jsonl_field(lines[2], "steps_since_failure"), Some("0"));
+        assert_eq!(jsonl_field(lines[5], "steps_since_failure"), Some("3"));
+        assert_eq!(jsonl_field(lines[1], "steps_since_failure"), Some("null"));
+        assert_eq!(jsonl_field(lines[5], "pool_dispatches"), Some("42"));
+        assert_eq!(jsonl_field(lines[4], "pool_dispatches"), Some("null"));
+        std::fs::remove_file(cfg.out_path()).ok();
+    }
+
+    /// End-to-end: run a sharded engine with the jsonl sink on, parse
+    /// every emitted line back, and check Z_t and the event totals
+    /// against the in-memory `Trace` (ISSUE 10 satellite 4).
+    #[test]
+    fn jsonl_records_match_in_memory_trace() {
+        use crate::sim::metrics::EventKind;
+        let path = tmp("roundtrip.jsonl");
+        let graph =
+            std::sync::Arc::new(generators::random_regular(30, 4, &mut Rng::new(7)).unwrap());
+        let params = SimParams {
+            z0: 8,
+            record_theta: true,
+            metrics: MetricsConfig {
+                mode: MetricsMode::Jsonl,
+                out: Some(path.clone()),
+                every: 5,
+            },
+            ..Default::default()
+        };
+        let mut e = ShardedEngine::new(
+            graph,
+            params,
+            Decafork::new(2.0),
+            Burst::new(vec![(100, 4), (300, 3)]),
+            Rng::new(11),
+            4,
+        );
+        e.run_to(600);
+        let trace = e.into_trace();
+        assert!(!trace.extinct, "scenario must survive for exact row-count accounting");
+
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 600 / 5, "one record per flush period");
+        let (mut forks, mut terms, mut fails, mut theta_n) = (0u64, 0u64, 0u64, 0u64);
+        for line in &lines {
+            assert!(line.starts_with('{') && line.ends_with('}'), "well-formed: {line}");
+            let t: usize = jsonl_field(line, "t").unwrap().parse().unwrap();
+            let z: u32 = jsonl_field(line, "z").unwrap().parse().unwrap();
+            assert_eq!(z, trace.z[t], "Z_t at t={t} must match the trace");
+            assert_eq!(jsonl_field(line, "steps").unwrap(), "5");
+            forks += jsonl_field(line, "forks").unwrap().parse::<u64>().unwrap();
+            terms += jsonl_field(line, "terminations").unwrap().parse::<u64>().unwrap();
+            fails += jsonl_field(line, "failures").unwrap().parse::<u64>().unwrap();
+            theta_n += jsonl_field(line, "theta_n").unwrap().parse::<u64>().unwrap();
+            let hopped: u64 = jsonl_field(line, "hopped").unwrap().parse().unwrap();
+            assert!(hopped > 0, "walks hopped every period");
+        }
+        assert_eq!(forks, trace.count(EventKind::Fork) as u64);
+        assert_eq!(terms, trace.count(EventKind::ControlTermination) as u64);
+        assert_eq!(fails, trace.count(EventKind::Failure) as u64);
+        assert_eq!(theta_n, trace.theta.len() as u64, "every θ̂ decision streamed");
+        assert!(forks > 0 && fails > 0, "vacuous without events");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// CSV sink: header + rows, blank cells for nulls, same cadence.
+    #[test]
+    fn csv_sink_writes_header_and_rows() {
+        let path = tmp("rows.csv");
+        let cfg = MetricsConfig {
+            mode: MetricsMode::Csv,
+            out: Some(path.clone()),
+            every: 2,
+        };
+        let mut sink = MetricsSink::new(&cfg).unwrap();
+        let mut tel = Telemetry::new(true);
+        sink.prime(4);
+        for t in 1..=6 {
+            tel.end_step();
+            sink.on_step(t, 4, 0, &mut tel, None);
+        }
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 1 + 3, "header + one row per period");
+        assert_eq!(lines[0], COLUMNS.join(","));
+        let row: Vec<&str> = lines[1].split(',').collect();
+        assert_eq!(row.len(), COLUMNS.len());
+        assert_eq!(row[0], "2");
+        assert_eq!(row[1], "4");
+        assert_eq!(row[2], "2", "period folds every step");
+        let ssf = COLUMNS.iter().position(|&c| c == "steps_since_failure").unwrap();
+        assert_eq!(row[ssf], "", "null → blank cell");
+        std::fs::remove_file(&path).ok();
+    }
+}

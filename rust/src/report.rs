@@ -87,6 +87,24 @@ pub fn ascii_plot(title: &str, series: &[(&str, &[f64])], width: usize, height: 
     out
 }
 
+/// Render a byte count for run summaries: `512 B`, `4.0 KiB`,
+/// `1.5 MiB`, `2.3 GiB` — the visited-state footprint lines use this
+/// so a 100M-node run reads as gigabytes, not a 10-digit integer.
+pub fn human_bytes(bytes: usize) -> String {
+    const UNITS: [&str; 4] = ["B", "KiB", "MiB", "GiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit + 1 < UNITS.len() {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
 /// Simple aligned table rendering.
 pub struct Table {
     headers: Vec<String>,
@@ -176,6 +194,15 @@ mod tests {
         let r = t.render();
         assert!(r.contains("longer"));
         assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    fn human_bytes_picks_sane_units() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(4096), "4.0 KiB");
+        assert_eq!(human_bytes(1_572_864), "1.5 MiB");
+        assert_eq!(human_bytes(usize::MAX).split_whitespace().nth(1), Some("GiB"));
     }
 
     #[test]

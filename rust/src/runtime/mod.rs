@@ -10,9 +10,11 @@ pub mod affinity;
 pub mod manifest;
 pub mod pool;
 pub mod prefetch;
+pub mod telemetry;
 
 pub use manifest::Manifest;
 pub use pool::WorkerPool;
+pub use telemetry::{Telemetry, WorkerCounters};
 
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};

@@ -142,6 +142,12 @@ pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     pinned: bool,
+    /// Dispatches that actually woke the workers (inline fast paths —
+    /// empty slice, single task, zero workers — don't count). A plain
+    /// coordinator-side field: `run_slice` takes `&mut self`, so no
+    /// atomic is needed and the hot path pays one add. Observability
+    /// only — read by [`dispatches`](Self::dispatches).
+    dispatches: u64,
 }
 
 impl WorkerPool {
@@ -185,7 +191,7 @@ impl WorkerPool {
                     .expect("spawning pool worker")
             })
             .collect();
-        WorkerPool { shared, handles, pinned: pin }
+        WorkerPool { shared, handles, pinned: pin, dispatches: 0 }
     }
 
     /// Number of pooled worker threads (the caller thread is extra).
@@ -198,6 +204,13 @@ impl WorkerPool {
     /// their params — actual pinning success is best-effort).
     pub fn pinned(&self) -> bool {
         self.pinned
+    }
+
+    /// Lifetime count of dispatches that published a task slice to the
+    /// parked workers (condvar broadcast + completion wait). Telemetry
+    /// accessor for the observability layer.
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
     }
 
     /// Run every task to completion: `tasks[0]` on the calling thread,
@@ -241,6 +254,7 @@ impl WorkerPool {
             self.handles.len(),
             rest.len()
         );
+        self.dispatches += 1;
         {
             let mut st = self.shared.state.lock().unwrap();
             st.tasks = TaskSlice {
@@ -519,6 +533,25 @@ mod tests {
             out
         };
         assert_eq!(run(&mut pinned), run(&mut plain));
+    }
+
+    #[test]
+    fn dispatch_counter_counts_published_epochs_only() {
+        let mut pool = WorkerPool::new(2);
+        assert_eq!(pool.dispatches(), 0);
+        pool.run(&mut []); // empty: inline no-op
+        let mut one: Vec<_> = vec![|| {}];
+        pool.run_slice(&mut one); // single task: inline fast path
+        assert_eq!(pool.dispatches(), 0, "inline paths never wake workers");
+        for round in 1..=5u64 {
+            let mut fs: Vec<_> = (0..3).map(|_| || {}).collect();
+            pool.run_slice(&mut fs);
+            assert_eq!(pool.dispatches(), round);
+        }
+        let mut inline_pool = WorkerPool::new(0);
+        let mut fs: Vec<_> = (0..3).map(|_| || {}).collect();
+        inline_pool.run_slice(&mut fs);
+        assert_eq!(inline_pool.dispatches(), 0, "zero-worker pool runs inline");
     }
 
     #[test]

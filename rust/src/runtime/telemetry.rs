@@ -1,0 +1,388 @@
+//! Zero-perturbation engine telemetry: per-phase wall-clock histograms
+//! and per-worker counters (DESIGN.md §Observability).
+//!
+//! ## The invariant this module is built around
+//!
+//! Telemetry **observes**; it never participates. Every item here is a
+//! clock read, a counter increment, or a fold of per-worker scratch at a
+//! barrier that already exists — no RNG stream is touched, no work is
+//! reordered, no lock is taken, no atomic lives on a hot path. That is
+//! why traces are bit-identical with metrics on, off, or compiled to
+//! the `off` no-op (locked by `prop_metrics_sink_is_observation_only`
+//! and both golden families, like every prior A/B knob).
+//!
+//! ## Where the numbers come from
+//!
+//! * **Phase spans** — the coordinator reads `Instant::now()` at the
+//!   four phase boundaries of the sharded step (pre-step failures, hop
+//!   fan-out + death drain, control fan-out, merge barrier to end of
+//!   step) and records the nanosecond deltas into log-bucketed
+//!   power-of-two [`PowHistogram`]s. Clock reads happen on the
+//!   coordinator only, between phases — they cannot move a draw.
+//! * **Worker counters** — each phase task owns one [`WorkerCounters`]
+//!   row of engine scratch (disjoint `&mut`, exactly like the hop
+//!   scratch and mailbox rows) and bumps it at chunk granularity; the
+//!   coordinator folds the rows into the step totals at the end-of-step
+//!   barrier it already runs. No allocation after warm-up: the scratch
+//!   vector is sized once at construction.
+//! * **Merge-side counts** — forks, kills, terminations and the θ̂
+//!   summary are tallied by the coordinator inside the merge loop it
+//!   already executes (simple adds, gated on `enabled`).
+//!
+//! The streaming side (JSONL/CSV records every `--metrics-every`
+//! steps) lives in [`crate::obs`]; this module is the measurement
+//! substrate both engines thread through their steps.
+
+/// A log-bucketed histogram: bucket `b` counts samples in
+/// `[2^(b−1), 2^b)` (bucket 0 counts zeros). 64 buckets cover the full
+/// `u64` range, so nanosecond spans from "empty step" to "minutes" all
+/// land without configuration. Recording is two instructions (leading
+/// zeros + increment); merging is 64 adds.
+#[derive(Debug, Clone)]
+pub struct PowHistogram {
+    counts: [u64; 64],
+}
+
+impl Default for PowHistogram {
+    fn default() -> Self {
+        PowHistogram { counts: [0; 64] }
+    }
+}
+
+impl PowHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for `value`: 0 for 0, else `64 − leading_zeros`
+    /// clamped into the table (so `1 → 1`, `2..4 → 2`, `4..8 → 3`, …).
+    #[inline]
+    pub fn bucket_of(value: u64) -> usize {
+        (64 - value.leading_zeros() as usize).min(63)
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&mut self, value: u64) {
+        self.counts[Self::bucket_of(value)] += 1;
+    }
+
+    /// Fold `other` into `self` (the per-worker → run-total fold).
+    pub fn merge(&mut self, other: &PowHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Total samples recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// The raw bucket table (index `b` = samples in `[2^(b−1), 2^b)`).
+    pub fn buckets(&self) -> &[u64; 64] {
+        &self.counts
+    }
+
+    /// Upper bound (exclusive) of the highest non-empty bucket — a
+    /// cheap "worst observed magnitude" summary. `None` when empty.
+    pub fn max_bucket_bound(&self) -> Option<u64> {
+        self.counts
+            .iter()
+            .rposition(|&c| c > 0)
+            .map(|b| if b >= 63 { u64::MAX } else { 1u64 << b })
+    }
+
+    pub fn clear(&mut self) {
+        self.counts = [0; 64];
+    }
+}
+
+/// One worker's counter scratch for one step. The engine owns a
+/// `Vec<WorkerCounters>` sized to the shard count (like its hop
+/// scratch); phase task `k` receives row `k` as a disjoint `&mut` and
+/// bumps it locally — no atomics, no sharing — and the coordinator
+/// folds and clears the rows at the end-of-step barrier.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerCounters {
+    /// Walks advanced by the hop phase (chunk sizes, pre-death).
+    pub hopped: u64,
+    /// Walks killed in transit / on arrival during the hop phase.
+    pub hop_deaths: u64,
+    /// Arrival records binned into mailbox rows (mailbox routing only;
+    /// 0 under the serial oracle, where the coordinator buckets).
+    pub arrivals_binned: u64,
+    /// Arrivals observed by the control phase (visits).
+    pub visits: u64,
+    /// `NodeStore` states materialized on first visit this step.
+    pub materializations: u64,
+    /// `SlotIndex`/store probe-length samples taken…
+    pub probe_samples: u64,
+    /// …and their total length (mean = total / samples).
+    pub probe_len_total: u64,
+}
+
+impl WorkerCounters {
+    /// Fold `self` into `acc` (the barrier fold).
+    pub fn fold_into(&self, acc: &mut WorkerCounters) {
+        acc.hopped += self.hopped;
+        acc.hop_deaths += self.hop_deaths;
+        acc.arrivals_binned += self.arrivals_binned;
+        acc.visits += self.visits;
+        acc.materializations += self.materializations;
+        acc.probe_samples += self.probe_samples;
+        acc.probe_len_total += self.probe_len_total;
+    }
+
+    pub fn clear(&mut self) {
+        *self = WorkerCounters::default();
+    }
+}
+
+/// Phase indices into the span tables (the order the sharded step runs
+/// them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Master failure model + kill application + compact.
+    PreStep = 0,
+    /// Hop fan-out + hop-death drain.
+    Hop = 1,
+    /// Serial bucket scan (if any) + control fan-out.
+    Control = 2,
+    /// Hook merge, decision merge, prune, compact, Z_t push.
+    Merge = 3,
+}
+
+pub const PHASES: usize = 4;
+
+/// Everything accumulated since the last sink flush — the payload of
+/// one streamed step record (period totals, not instantaneous values,
+/// so `--metrics-every 100` still accounts for every step).
+#[derive(Debug, Clone, Default)]
+pub struct PeriodStats {
+    /// Steps folded into this period.
+    pub steps: u64,
+    /// Wall-clock nanoseconds per phase, summed over the period
+    /// (indexed by [`Phase`]).
+    pub span_ns: [u64; PHASES],
+    /// Folded worker counters.
+    pub counters: WorkerCounters,
+    /// Merge-side event tallies.
+    pub forks: u64,
+    pub terminations: u64,
+    pub failures: u64,
+    /// Arrival-count imbalance across shards: the smallest and largest
+    /// per-shard arrival load seen in any step of the period (hop
+    /// chunk sizes are deterministic ⌈live/shards⌉ splits; arrivals
+    /// per node-range shard are where real imbalance shows).
+    pub shard_arrivals_min: u64,
+    pub shard_arrivals_max: u64,
+    /// θ̂ summary over the period's control decisions.
+    pub theta_n: u64,
+    pub theta_sum: f64,
+    pub theta_min: f64,
+    pub theta_max: f64,
+}
+
+impl PeriodStats {
+    /// Mean θ̂ over the period, `None` when no decision carried one.
+    pub fn theta_mean(&self) -> Option<f64> {
+        (self.theta_n > 0).then(|| self.theta_sum / self.theta_n as f64)
+    }
+
+    /// Mean probe length over the period's sampled lookups.
+    pub fn probe_mean(&self) -> Option<f64> {
+        (self.counters.probe_samples > 0)
+            .then(|| self.counters.probe_len_total as f64 / self.counters.probe_samples as f64)
+    }
+}
+
+/// The engine-owned telemetry accumulator: run-lifetime phase
+/// histograms plus the current flush period. Constructed `enabled` or
+/// not once, at engine build time — a disabled instance is a handful
+/// of dead fields and every call site is behind one predictable
+/// `if !enabled` branch.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    enabled: bool,
+    /// Run-lifetime per-phase span histograms (log₂ ns buckets).
+    pub phase_hist: [PowHistogram; PHASES],
+    period: PeriodStats,
+}
+
+impl Telemetry {
+    pub fn new(enabled: bool) -> Self {
+        Telemetry { enabled, ..Default::default() }
+    }
+
+    /// Whether any recording should happen this run.
+    #[inline(always)]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one phase span (coordinator-side clock delta).
+    #[inline]
+    pub fn record_span(&mut self, phase: Phase, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.phase_hist[phase as usize].record(ns);
+        self.period.span_ns[phase as usize] += ns;
+    }
+
+    /// Fold and clear the per-worker scratch rows at the end-of-step
+    /// barrier.
+    pub fn fold_workers(&mut self, scratch: &mut [WorkerCounters]) {
+        if !self.enabled {
+            return;
+        }
+        for row in scratch {
+            row.fold_into(&mut self.period.counters);
+            row.clear();
+        }
+    }
+
+    /// Merge-loop tally: one control decision's θ̂ (coordinator-side).
+    #[inline]
+    pub fn observe_theta(&mut self, theta: f64) {
+        let p = &mut self.period;
+        if p.theta_n == 0 {
+            p.theta_min = theta;
+            p.theta_max = theta;
+        } else {
+            p.theta_min = p.theta_min.min(theta);
+            p.theta_max = p.theta_max.max(theta);
+        }
+        p.theta_n += 1;
+        p.theta_sum += theta;
+    }
+
+    /// Merge-side event tallies for one step.
+    pub fn count_events(&mut self, forks: u64, terminations: u64, failures: u64) {
+        self.period.forks += forks;
+        self.period.terminations += terminations;
+        self.period.failures += failures;
+    }
+
+    /// Per-shard arrival-load extremes for one step.
+    pub fn observe_shard_load(&mut self, min: u64, max: u64) {
+        let p = &mut self.period;
+        if p.steps == 0 {
+            p.shard_arrivals_min = min;
+            p.shard_arrivals_max = max;
+        } else {
+            p.shard_arrivals_min = p.shard_arrivals_min.min(min);
+            p.shard_arrivals_max = p.shard_arrivals_max.max(max);
+        }
+    }
+
+    /// Close one step into the period.
+    pub fn end_step(&mut self) {
+        self.period.steps += 1;
+    }
+
+    /// Read the open period (the sink formats from this)…
+    pub fn period(&self) -> &PeriodStats {
+        &self.period
+    }
+
+    /// …and reset it after a flush.
+    pub fn reset_period(&mut self) {
+        self.period = PeriodStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow_histogram_buckets_powers_of_two() {
+        assert_eq!(PowHistogram::bucket_of(0), 0);
+        assert_eq!(PowHistogram::bucket_of(1), 1);
+        assert_eq!(PowHistogram::bucket_of(2), 2);
+        assert_eq!(PowHistogram::bucket_of(3), 2);
+        assert_eq!(PowHistogram::bucket_of(4), 3);
+        assert_eq!(PowHistogram::bucket_of(1023), 10);
+        assert_eq!(PowHistogram::bucket_of(1024), 11);
+        assert_eq!(PowHistogram::bucket_of(u64::MAX), 63);
+        let mut h = PowHistogram::new();
+        for v in [0u64, 1, 3, 900, 1024] {
+            h.record(v);
+        }
+        assert_eq!(h.total(), 5);
+        assert_eq!(h.buckets()[0], 1);
+        assert_eq!(h.buckets()[2], 1);
+        assert_eq!(h.buckets()[10], 1);
+        assert_eq!(h.max_bucket_bound(), Some(1 << 11));
+        let mut other = PowHistogram::new();
+        other.record(3);
+        h.merge(&other);
+        assert_eq!(h.buckets()[2], 2);
+        h.clear();
+        assert_eq!(h.total(), 0);
+        assert_eq!(h.max_bucket_bound(), None);
+    }
+
+    #[test]
+    fn worker_counters_fold_and_clear() {
+        let mut a = WorkerCounters {
+            hopped: 10,
+            hop_deaths: 1,
+            arrivals_binned: 9,
+            visits: 9,
+            materializations: 4,
+            probe_samples: 9,
+            probe_len_total: 12,
+        };
+        let mut acc = WorkerCounters::default();
+        a.fold_into(&mut acc);
+        a.fold_into(&mut acc);
+        assert_eq!(acc.hopped, 20);
+        assert_eq!(acc.probe_len_total, 24);
+        a.clear();
+        assert_eq!(a, WorkerCounters::default());
+    }
+
+    #[test]
+    fn telemetry_accumulates_only_when_enabled() {
+        let mut off = Telemetry::new(false);
+        off.record_span(Phase::Hop, 100);
+        let mut scratch = vec![WorkerCounters { hopped: 5, ..Default::default() }];
+        off.fold_workers(&mut scratch);
+        assert_eq!(off.period().span_ns[Phase::Hop as usize], 0);
+        assert_eq!(off.period().counters.hopped, 0);
+        // Disabled folds must not clear the scratch either — nothing
+        // observes it, so nothing may touch it.
+        assert_eq!(scratch[0].hopped, 5);
+
+        let mut on = Telemetry::new(true);
+        on.record_span(Phase::Hop, 100);
+        on.record_span(Phase::Hop, 50);
+        on.fold_workers(&mut scratch);
+        on.observe_theta(4.0);
+        on.observe_theta(2.0);
+        on.observe_theta(6.0);
+        on.count_events(3, 1, 2);
+        on.observe_shard_load(2, 9);
+        on.end_step();
+        on.observe_shard_load(1, 5);
+        on.end_step();
+        let p = on.period();
+        assert_eq!(p.steps, 2);
+        assert_eq!(p.span_ns[Phase::Hop as usize], 150);
+        assert_eq!(p.counters.hopped, 5);
+        assert_eq!(scratch[0].hopped, 0, "enabled fold clears the scratch");
+        assert_eq!(p.theta_n, 3);
+        assert_eq!(p.theta_mean(), Some(4.0));
+        assert_eq!(p.theta_min, 2.0);
+        assert_eq!(p.theta_max, 6.0);
+        assert_eq!((p.forks, p.terminations, p.failures), (3, 1, 2));
+        assert_eq!((p.shard_arrivals_min, p.shard_arrivals_max), (1, 9));
+        assert_eq!(on.phase_hist[Phase::Hop as usize].total(), 2);
+        on.reset_period();
+        assert_eq!(on.period().steps, 0);
+        assert_eq!(on.phase_hist[Phase::Hop as usize].total(), 2, "histograms span the run");
+    }
+}

@@ -85,13 +85,25 @@ impl Scenario {
         Ok(Arc::new(self.graph.build(&mut grng)?))
     }
 
+    /// Per-run engine params: with metrics on, replications after the
+    /// first stream to `<out>.run<k>` so parallel runs never clobber
+    /// one sink file (run 0 keeps the configured path — the `--runs 1`
+    /// common case writes exactly where the user asked).
+    fn run_params(&self, run: usize) -> SimParams {
+        let mut params = self.params.clone();
+        if params.metrics.enabled() && run > 0 {
+            params.metrics.out = Some(format!("{}.run{run}", params.metrics.out_path()));
+        }
+        params
+    }
+
     /// Build the arena engine for run index `run`.
     pub fn engine(&self, run: usize) -> anyhow::Result<Engine> {
         let (mut grng, srng) = self.rngs(run);
         let graph = Arc::new(self.graph.build(&mut grng)?);
         let control = self.control.build_control(graph.n());
         let failures = self.failures.build_failures();
-        Ok(Engine::new(graph, self.params.clone(), control, failures, srng))
+        Ok(Engine::new(graph, self.run_params(run), control, failures, srng))
     }
 
     /// Historical name for [`engine`](Self::engine).
@@ -142,7 +154,7 @@ impl Scenario {
         let failures = self.failures.build_failures();
         Ok(ShardedEngine::with_pool(
             graph,
-            self.params.clone(),
+            self.run_params(run),
             control,
             failures,
             srng,
@@ -230,6 +242,24 @@ mod tests {
             e.into_trace().z
         };
         assert_ne!(z1, z3);
+    }
+
+    #[test]
+    fn run_params_disambiguates_metrics_paths_per_run() {
+        use crate::obs::{MetricsConfig, MetricsMode};
+        let mut cfg = presets::fig1_base(1);
+        // Metrics off: every run keeps identical params.
+        assert_eq!(cfg.run_params(3).metrics.out, None);
+        cfg.params.metrics = MetricsConfig {
+            mode: MetricsMode::Jsonl,
+            out: Some("m.jsonl".into()),
+            every: 1,
+        };
+        assert_eq!(cfg.run_params(0).metrics.out.as_deref(), Some("m.jsonl"));
+        assert_eq!(cfg.run_params(2).metrics.out.as_deref(), Some("m.jsonl.run2"));
+        // The default path gets the same treatment.
+        cfg.params.metrics.out = None;
+        assert_eq!(cfg.run_params(1).metrics.out.as_deref(), Some("metrics.jsonl.run1"));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 use super::{ControlSpec, FailureSpec, GraphSpec, Scenario};
 use crate::cli::Args;
+use crate::obs::{MetricsConfig, MetricsMode};
 use crate::sim::engine::{HopPath, RoutingMode, SimParams, SurvivalSpec};
 use crate::walks::NodeStateMode;
 
@@ -295,6 +296,100 @@ pub fn pin_cores_from_env() -> anyhow::Result<bool> {
     }
 }
 
+/// `--metrics off|jsonl|csv`: streaming engine telemetry (DESIGN.md
+/// §Observability). `off` (the default, also when the flag is absent)
+/// records nothing — existing invocations are byte-for-byte unchanged;
+/// `jsonl`/`csv` stream one step record every `--metrics-every` steps
+/// to `--metrics-out`. Telemetry is pure observation, so like
+/// `--node-state`/`--routing`/`--hop-path` this knob can never select
+/// a different trace family — but a valueless or unknown value is
+/// still an error, not a fallback.
+pub fn metrics_mode(args: &Args) -> anyhow::Result<MetricsMode> {
+    anyhow::ensure!(!args.has("metrics"), "--metrics needs a value (off, jsonl or csv)");
+    match args.flags.get("metrics") {
+        None => Ok(MetricsMode::Off),
+        Some(v) => metrics_value("--metrics", v),
+    }
+}
+
+/// Shared value validation for `--metrics` / `DECAFORK_METRICS`:
+/// errors name the knob, like [`positive_count`] does for the count
+/// knobs.
+fn metrics_value(knob: &str, v: &str) -> anyhow::Result<MetricsMode> {
+    match v.trim() {
+        "off" => Ok(MetricsMode::Off),
+        "jsonl" => Ok(MetricsMode::Jsonl),
+        "csv" => Ok(MetricsMode::Csv),
+        other => anyhow::bail!("{knob} must be 'off', 'jsonl' or 'csv', got '{other}'"),
+    }
+}
+
+/// `DECAFORK_METRICS` env mirror for binaries without flag plumbing
+/// (benches, the golden tests' metrics CI matrix): same semantics as
+/// `--metrics`, absent = off, present-but-invalid = error.
+pub fn metrics_mode_from_env() -> anyhow::Result<MetricsMode> {
+    match std::env::var("DECAFORK_METRICS") {
+        Err(_) => Ok(MetricsMode::Off),
+        Ok(v) => metrics_value("DECAFORK_METRICS", &v),
+    }
+}
+
+/// `--metrics-out PATH`: where the sink streams (absent = the mode's
+/// default, `metrics.jsonl` / `metrics.csv`). Any path is a valid
+/// value, but a valueless flag is still an error naming the knob.
+pub fn metrics_out(args: &Args) -> anyhow::Result<Option<String>> {
+    anyhow::ensure!(
+        !args.has("metrics-out"),
+        "--metrics-out needs a value (e.g. --metrics-out run.jsonl)"
+    );
+    Ok(args.flags.get("metrics-out").cloned())
+}
+
+/// `DECAFORK_METRICS_OUT` env mirror of `--metrics-out`.
+pub fn metrics_out_from_env() -> Option<String> {
+    std::env::var("DECAFORK_METRICS_OUT").ok()
+}
+
+/// `--metrics-every K`: the sink's flush period in steps. Absent = 1
+/// (one record per step); a present value goes through the same
+/// [`positive_count`] validation as every count knob ("flush every 0
+/// steps" is a typo, not a request). Records are period totals, so a
+/// coarse period loses nothing.
+pub fn metrics_every(args: &Args) -> anyhow::Result<u64> {
+    anyhow::ensure!(!args.has("metrics-every"), "--metrics-every needs a value (in steps)");
+    match args.flags.get("metrics-every") {
+        None => Ok(1),
+        Some(v) => Ok(positive_count("--metrics-every", v)? as u64),
+    }
+}
+
+/// `DECAFORK_METRICS_EVERY` env mirror of `--metrics-every`.
+pub fn metrics_every_from_env() -> anyhow::Result<u64> {
+    match std::env::var("DECAFORK_METRICS_EVERY") {
+        Err(_) => Ok(1),
+        Ok(v) => Ok(positive_count("DECAFORK_METRICS_EVERY", &v)? as u64),
+    }
+}
+
+/// The assembled metrics knob family from the command line.
+pub fn metrics(args: &Args) -> anyhow::Result<MetricsConfig> {
+    Ok(MetricsConfig {
+        mode: metrics_mode(args)?,
+        out: metrics_out(args)?,
+        every: metrics_every(args)?,
+    })
+}
+
+/// The assembled metrics knob family from the `DECAFORK_METRICS*` env
+/// mirrors (benches, the golden tests' metrics CI matrix).
+pub fn metrics_from_env() -> anyhow::Result<MetricsConfig> {
+    Ok(MetricsConfig {
+        mode: metrics_mode_from_env()?,
+        out: metrics_out_from_env(),
+        every: metrics_every_from_env()?,
+    })
+}
+
 /// `--cores N`: the runner's [`CoreBudget`] — total cores split across
 /// replication threads × per-run stream workers
 /// ([`CoreBudget::plan`](crate::sim::CoreBudget::plan)). Falls back to
@@ -334,6 +429,7 @@ pub fn scenario(args: &Args) -> anyhow::Result<Scenario> {
             routing: routing(args)?,
             pin_cores: pin_cores(args)?,
             hop_path: hop_path(args)?,
+            metrics: metrics(args)?,
             ..Default::default()
         },
         control: control(args)?,
@@ -595,6 +691,75 @@ mod tests {
         assert!(s.params.pin_cores);
         let s = scenario(&args("simulate")).unwrap();
         assert!(!s.params.pin_cores, "default must leave threads unpinned");
+    }
+
+    #[test]
+    fn metrics_knob_validates_and_defaults_off() {
+        // Absent = off (telemetry is strictly opt-in), explicit values
+        // parse, and both failure modes — valueless switch and unknown
+        // value — error with the knob named instead of falling back.
+        assert_eq!(metrics_mode(&args("simulate")).unwrap(), MetricsMode::Off);
+        assert_eq!(metrics_mode(&args("simulate --metrics off")).unwrap(), MetricsMode::Off);
+        assert_eq!(metrics_mode(&args("simulate --metrics jsonl")).unwrap(), MetricsMode::Jsonl);
+        assert_eq!(metrics_mode(&args("simulate --metrics csv")).unwrap(), MetricsMode::Csv);
+        let e = metrics_mode(&args("simulate --metrics")).unwrap_err().to_string();
+        assert!(e.contains("--metrics"), "valueless: knob not named: {e}");
+        let e = metrics_mode(&args("simulate --metrics --record-theta")).unwrap_err().to_string();
+        assert!(e.contains("--metrics"), "switch-before-flag: knob not named: {e}");
+        for bad in ["json", "ndjson", "on", "0", ""] {
+            let e = metrics_mode(&args(&format!("simulate --metrics {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("--metrics"), "'{bad}': knob not named: {e}");
+        }
+        // Full scenario plumbing: mode, path and period land on SimParams.
+        let s = scenario(&args(
+            "simulate --metrics jsonl --metrics-out run.ndjson --metrics-every 25",
+        ))
+        .unwrap();
+        assert_eq!(s.params.metrics.mode, MetricsMode::Jsonl);
+        assert_eq!(s.params.metrics.out.as_deref(), Some("run.ndjson"));
+        assert_eq!(s.params.metrics.every, 25);
+        let s = scenario(&args("simulate")).unwrap();
+        assert!(!s.params.metrics.enabled(), "default must record nothing");
+        assert_eq!(s.params.metrics.every, 1);
+        assert_eq!(s.params.metrics.out, None);
+    }
+
+    #[test]
+    fn metrics_out_and_every_validate_like_the_other_knobs() {
+        assert_eq!(metrics_out(&args("simulate")).unwrap(), None);
+        assert_eq!(
+            metrics_out(&args("simulate --metrics-out m.csv")).unwrap().as_deref(),
+            Some("m.csv")
+        );
+        let e = metrics_out(&args("simulate --metrics-out")).unwrap_err().to_string();
+        assert!(e.contains("--metrics-out"), "valueless: knob not named: {e}");
+
+        assert_eq!(metrics_every(&args("simulate")).unwrap(), 1, "absent = every step");
+        assert_eq!(metrics_every(&args("simulate --metrics-every 100")).unwrap(), 100);
+        for bad in ["0", "abc", "-2"] {
+            let e = metrics_every(&args(&format!("simulate --metrics-every {bad}")))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains("--metrics-every"), "'{bad}': knob not named: {e}");
+        }
+        let e = metrics_every(&args("simulate --metrics-every --record-theta"))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--metrics-every"), "valueless: knob not named: {e}");
+    }
+
+    #[test]
+    fn metrics_env_mirror_validates_values() {
+        // Value validation only — the absent-variable default is covered
+        // by the knob test above (reading the live process env here
+        // would race other tests).
+        assert_eq!(metrics_value("DECAFORK_METRICS", "jsonl").unwrap(), MetricsMode::Jsonl);
+        assert_eq!(metrics_value("DECAFORK_METRICS", " csv ").unwrap(), MetricsMode::Csv);
+        assert_eq!(metrics_value("DECAFORK_METRICS", "off").unwrap(), MetricsMode::Off);
+        let e = metrics_value("DECAFORK_METRICS", "yaml").unwrap_err().to_string();
+        assert!(e.contains("DECAFORK_METRICS"), "env var not named: {e}");
     }
 
     #[test]

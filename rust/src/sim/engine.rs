@@ -34,7 +34,9 @@ use std::sync::Arc;
 use crate::control::{Control, VisitCtx};
 use crate::failures::Failures;
 use crate::graph::Graph;
+use crate::obs::{MetricsConfig, MetricsSink};
 use crate::rng::Rng;
+use crate::runtime::telemetry::{Phase, Telemetry, WorkerCounters};
 use crate::sim::metrics::{Event, EventKind, Trace};
 use crate::walks::{
     Lineage, NodeStateMode, NodeStore, StatesView, SurvivalModel, Walk, WalkArena, WalkMut, WalkRef,
@@ -176,6 +178,17 @@ pub struct SimParams {
     /// the field (its walks share one RNG stream, so there is no
     /// per-walk batching to pipeline).
     pub hop_path: HopPath,
+    /// Streaming telemetry (`--metrics` / `DECAFORK_METRICS`, plus
+    /// `--metrics-out` / `--metrics-every`): `Off` (default) records
+    /// nothing; `Jsonl`/`Csv` stream per-period step records (phase
+    /// spans, worker counters, Z_t, θ̂ summary, failure/recovery
+    /// series) to the configured path. Pure observation — telemetry
+    /// reads clocks and counters after the step's trace updates and
+    /// never touches an RNG stream or reorders work, so traces are
+    /// bit-identical for off/jsonl/csv (DESIGN.md §Observability,
+    /// locked by `prop_metrics_sink_is_observation_only` and both
+    /// golden families).
+    pub metrics: MetricsConfig,
 }
 
 /// How stream-mode arrivals travel from the hop phase to the control
@@ -223,6 +236,7 @@ impl Default for SimParams {
             routing: RoutingMode::Mailbox,
             pin_cores: false,
             hop_path: HopPath::Blocked,
+            metrics: MetricsConfig::default(),
         }
     }
 }
@@ -242,6 +256,11 @@ pub struct Engine {
     trace: Trace,
     /// Resolved control warm-up boundary.
     control_start: u64,
+    /// Observation-only telemetry accumulator (no-op when metrics are
+    /// off; see DESIGN.md §Observability).
+    tel: Telemetry,
+    /// Streaming metrics sink (`None` when metrics are off).
+    sink: Option<MetricsSink>,
 }
 
 impl Engine {
@@ -283,6 +302,11 @@ impl Engine {
         let control_start = params
             .control_start
             .unwrap_or_else(|| (1.5 * n as f64 * (n as f64).ln().max(1.0)).ceil() as u64);
+        let tel = Telemetry::new(params.metrics.enabled());
+        let mut sink = MetricsSink::new(&params.metrics);
+        if let Some(s) = &mut sink {
+            s.prime(z0);
+        }
         Engine {
             graph,
             params,
@@ -294,6 +318,8 @@ impl Engine {
             t: 0,
             trace,
             control_start,
+            tel,
+            sink,
         }
     }
 
@@ -358,6 +384,16 @@ impl Engine {
         self.t += 1;
         let t = self.t;
 
+        // Telemetry is observation only: clock reads between phases,
+        // counter deltas after the fact, sink IO after the trace
+        // updates. Nothing below this line may touch `self.rng` or
+        // reorder work (DESIGN.md §Observability).
+        let tel_on = self.tel.enabled();
+        let events_start = self.trace.events.len();
+        let visited0 = self.states.visited_count();
+        let (mut hop_deaths, mut visits) = (0u64, 0u64);
+        let step_clock = tel_on.then(std::time::Instant::now);
+
         // 1. External failure events (bursts, Byzantine state flips). The
         //    arena's dense id column *is* the alive roster — no per-step
         //    scratch rebuild.
@@ -371,6 +407,11 @@ impl Engine {
             }
         }
         self.arena.compact();
+
+        let hop_clock = step_clock.map(|c| {
+            self.tel.record_span(Phase::PreStep, c.elapsed().as_nanos() as u64);
+            std::time::Instant::now()
+        });
 
         // 2. Every walk alive at the start of the step hops once. After
         //    the barrier the dense prefix [0, len0) is exactly those
@@ -387,6 +428,7 @@ impl Engine {
             // 2a. Loss in transit.
             if self.failures.on_hop(t, wid, from, to, &mut self.rng) {
                 self.kill_dense(i, t, from, EventKind::Failure, hook);
+                hop_deaths += 1;
                 continue;
             }
             self.arena.set_position(i, to);
@@ -394,8 +436,10 @@ impl Engine {
             // 2b. Byzantine arrival.
             if self.failures.on_arrival(t, wid, to, &mut self.rng) {
                 self.kill_dense(i, t, to, EventKind::Failure, hook);
+                hop_deaths += 1;
                 continue;
             }
+            visits += 1;
 
             // 2c. The node records the visit (return-time sample). First
             //     visit of a lazily-stored node materializes its state
@@ -429,6 +473,11 @@ impl Engine {
                     self.trace.theta.push((t, th));
                 }
             }
+            if tel_on {
+                if let Some(th) = decision.theta {
+                    self.tel.observe_theta(th);
+                }
+            }
             if !decision.forks.is_empty() {
                 let parent = self.arena.walk_ref(i);
                 for fork_slot in decision.forks {
@@ -456,6 +505,16 @@ impl Engine {
             }
         }
 
+        // The shared-stream engine fuses hop + visit + control into one
+        // loop, so the whole loop is charged to the hop span and the
+        // control span is recorded as 0 (the sharded engine is where
+        // the phases are separable).
+        let merge_clock = hop_clock.map(|c| {
+            self.tel.record_span(Phase::Hop, c.elapsed().as_nanos() as u64);
+            self.tel.record_span(Phase::Control, 0);
+            std::time::Instant::now()
+        });
+
         // 3. Housekeeping. The sweep walks the store's materialized
         //    column only — O(visited) in lazy mode, and exact: a state
         //    that was never materialized holds nothing to prune.
@@ -466,6 +525,34 @@ impl Engine {
         self.trace.z.push(self.arena.live());
         if self.arena.live() == 0 {
             self.trace.extinct = true;
+        }
+
+        if tel_on {
+            if let Some(c) = merge_clock {
+                self.tel.record_span(Phase::Merge, c.elapsed().as_nanos() as u64);
+            }
+            let mut wc = WorkerCounters {
+                hopped: len0 as u64,
+                hop_deaths,
+                visits,
+                materializations: (self.states.visited_count() - visited0) as u64,
+                ..Default::default()
+            };
+            self.tel.fold_workers(std::slice::from_mut(&mut wc));
+            let (mut forks, mut terms, mut fails) = (0u64, 0u64, 0u64);
+            for ev in &self.trace.events[events_start..] {
+                match ev.kind {
+                    EventKind::Fork => forks += 1,
+                    EventKind::ControlTermination => terms += 1,
+                    EventKind::Failure => fails += 1,
+                }
+            }
+            self.tel.count_events(forks, terms, fails);
+            self.tel.end_step();
+            let live = self.arena.live();
+            if let Some(sink) = &mut self.sink {
+                sink.on_step(t, live, fails, &mut self.tel, None);
+            }
         }
     }
 
@@ -496,8 +583,13 @@ impl Engine {
         }
     }
 
-    /// Consume the engine, returning its telemetry.
-    pub fn into_trace(self) -> Trace {
+    /// Consume the engine, returning its telemetry. The trace is
+    /// stamped with the run's visited-state footprint (how many node
+    /// states were materialized and their resident bytes) — summary
+    /// metadata only, never part of [`Trace::bit_identical`].
+    pub fn into_trace(mut self) -> Trace {
+        self.trace.visited_nodes = self.states.visited_count();
+        self.trace.state_bytes = StatesView::single(&self.states).memory_bytes();
         self.trace
     }
 

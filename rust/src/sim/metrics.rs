@@ -36,6 +36,15 @@ pub struct Trace {
     pub extinct: bool,
     /// True if the safety cap on the number of walks was hit (flooding).
     pub capped: bool,
+    /// Node states materialized over the run (`StatesView::
+    /// visited_count()` at teardown; the full node count in dense
+    /// mode). Footprint metadata stamped by `into_trace` — **not**
+    /// compared by [`bit_identical`], which checks what the simulation
+    /// *did*, not how much memory it used doing it.
+    pub visited_nodes: usize,
+    /// Resident bytes of the visited node state at teardown
+    /// (`StatesView::memory_bytes()`). Metadata like `visited_nodes`.
+    pub state_bytes: usize,
 }
 
 impl Trace {
@@ -114,6 +123,11 @@ pub struct AggregateTrace {
     pub forks_per_run: Vec<usize>,
     pub terms_per_run: Vec<usize>,
     pub failures_per_run: Vec<usize>,
+    /// Largest visited-state footprint across runs (nodes materialized
+    /// / resident bytes) — what a summary reports as the memory high
+    /// water mark without a debugger attached.
+    pub max_visited_nodes: usize,
+    pub max_state_bytes: usize,
 }
 
 impl AggregateTrace {
@@ -149,6 +163,8 @@ impl AggregateTrace {
             forks_per_run: traces.iter().map(|t| t.count(EventKind::Fork)).collect(),
             terms_per_run: traces.iter().map(|t| t.count(EventKind::ControlTermination)).collect(),
             failures_per_run: traces.iter().map(|t| t.count(EventKind::Failure)).collect(),
+            max_visited_nodes: traces.iter().map(|t| t.visited_nodes).max().unwrap_or(0),
+            max_state_bytes: traces.iter().map(|t| t.state_bytes).max().unwrap_or(0),
         }
     }
 
@@ -227,6 +243,25 @@ mod tests {
         b = a.clone();
         b.capped = true;
         assert!(!a.bit_identical(&b));
+        // Footprint metadata is *not* part of trace identity: the same
+        // simulation in dense vs lazy storage differs only in memory.
+        b = a.clone();
+        b.visited_nodes = 999;
+        b.state_bytes = 1 << 20;
+        assert!(a.bit_identical(&b));
+    }
+
+    #[test]
+    fn aggregate_tracks_footprint_high_water_mark() {
+        let mut a = tr(vec![10, 8]);
+        a.visited_nodes = 100;
+        a.state_bytes = 4096;
+        let mut b = tr(vec![10, 9]);
+        b.visited_nodes = 250;
+        b.state_bytes = 1024;
+        let agg = AggregateTrace::from_traces(&[a, b]);
+        assert_eq!(agg.max_visited_nodes, 250);
+        assert_eq!(agg.max_state_bytes, 4096);
     }
 
     #[test]

@@ -166,8 +166,10 @@ use std::sync::Arc;
 use crate::control::{Control, VisitCtx};
 use crate::failures::Failures;
 use crate::graph::Graph;
+use crate::obs::MetricsSink;
 use crate::rng::{streams, Rng};
 use crate::runtime::pool::{self, WorkerPool};
+use crate::runtime::telemetry::{Phase, Telemetry, WorkerCounters};
 use crate::sim::engine::{HopPath, RoutingMode, SimParams, StartPlacement};
 use crate::sim::metrics::{Event, EventKind, Trace};
 use crate::sim::shard_hook::{NoShardHook, ShardHook, ShardVisit};
@@ -290,6 +292,19 @@ pub struct ShardedEngine {
     /// Per-worker hop-phase scratch (failure-model copy + blocked-path
     /// block buffers), one per chunk slot, reused across steps.
     hop_scratch: Vec<HopScratch>,
+    /// Observation-only telemetry accumulator (phase-span histograms +
+    /// the open flush period). No-op when metrics are off — see
+    /// DESIGN.md §Observability for why nothing here can move a bit.
+    tel: Telemetry,
+    /// Per-worker telemetry counter rows, one per shard slot, handed to
+    /// phase tasks as disjoint `&mut` exactly like the hop scratch and
+    /// mailbox rows (no atomics), folded and cleared by the coordinator
+    /// at the end-of-step barrier. Sized once at construction — no
+    /// allocation after warm-up.
+    tel_scratch: Vec<WorkerCounters>,
+    /// Streaming metrics sink (`None` when metrics are off). Runs on
+    /// the coordinator, strictly after the step's trace updates.
+    sink: Option<MetricsSink>,
 }
 
 /// One hop worker's reusable scratch. Owned by the engine and handed to
@@ -457,6 +472,12 @@ impl ShardedEngine {
         let hop_scratch = (0..shards)
             .map(|_| HopScratch { failures: failures.clone(), to: Vec::new() })
             .collect();
+        let tel = Telemetry::new(params.metrics.enabled());
+        let tel_scratch = vec![WorkerCounters::default(); shards];
+        let mut sink = MetricsSink::new(&params.metrics);
+        if let Some(s) = &mut sink {
+            s.prime(z0);
+        }
         ShardedEngine {
             graph,
             params,
@@ -480,6 +501,9 @@ impl ShardedEngine {
             merge_heads: Vec::new(),
             decisions: (0..shards).map(|_| Vec::new()).collect(),
             hop_scratch,
+            tel,
+            tel_scratch,
+            sink,
         }
     }
 
@@ -570,6 +594,13 @@ impl ShardedEngine {
         );
         self.t += 1;
         let t = self.t;
+        // Telemetry is observation-only: clock reads on the coordinator
+        // between phases, counter deltas after the work, nothing on any
+        // RNG stream — metrics on/off is trace bit-identical by
+        // construction (test-locked in `tests/shard_invariance.rs`).
+        let tel_on = self.tel.enabled();
+        let events_start = self.trace.events.len();
+        let step_clock = tel_on.then(std::time::Instant::now);
 
         // 1. External failure events from the model-level stream; the
         //    dense id column is the alive roster, as in the sequential
@@ -590,6 +621,10 @@ impl ShardedEngine {
             }
         }
         self.arena.compact();
+        let hop_clock = step_clock.map(|c| {
+            self.tel.record_span(Phase::PreStep, c.elapsed().as_nanos() as u64);
+            std::time::Instant::now()
+        });
 
         // 2. Hop phase: contiguous chunks of the dense walk columns, one
         //    worker each. Every draw comes from the walk's own stream,
@@ -602,6 +637,12 @@ impl ShardedEngine {
         if len0 == 0 {
             self.trace.z.push(0);
             self.trace.extinct = true;
+            if tel_on {
+                // Close the step for the sink even on extinction, so a
+                // row is emitted for every step and `steps / period`
+                // stays exact regardless of outcome.
+                self.finish_step_telemetry(t, events_start, None);
+            }
             return Ok(());
         }
         let shards = self.shards;
@@ -646,6 +687,7 @@ impl ShardedEngine {
                     route,
                     route_payloads,
                     blocked,
+                    if tel_on { Some(&mut self.tel_scratch[0]) } else { None },
                 );
             } else {
                 // Exactly `shards` chunks (trailing ones may be empty),
@@ -657,12 +699,13 @@ impl ShardedEngine {
                 let mut at_rest = at;
                 let mut rng_rest = walk_rngs;
                 let mut tasks = Vec::with_capacity(shards);
-                for (c, (((deaths, mail_row), pay_row), scratch)) in self
+                for (c, ((((deaths, mail_row), pay_row), scratch), wc)) in self
                     .hop_deaths
                     .iter_mut()
                     .zip(self.mailboxes.chunks_mut(shards))
                     .zip(self.mailbox_payloads.chunks_mut(shards))
                     .zip(self.hop_scratch.iter_mut())
+                    .zip(self.tel_scratch.iter_mut())
                     .enumerate()
                 {
                     let take = chunk.min(at_rest.len());
@@ -688,6 +731,11 @@ impl ShardedEngine {
                             route,
                             route_payloads,
                             blocked,
+                            // Reborrow per call: the FnMut closure owns
+                            // `wc: &mut WorkerCounters` and can't move it
+                            // out, but a fresh `&mut *wc` per invocation
+                            // is fine.
+                            if tel_on { Some(&mut *wc) } else { None },
                         )
                     });
                 }
@@ -710,6 +758,10 @@ impl ShardedEngine {
                 );
             }
         }
+        let control_clock = hop_clock.map(|c| {
+            self.tel.record_span(Phase::Hop, c.elapsed().as_nanos() as u64);
+            std::time::Instant::now()
+        });
 
         // 3. Control phase. In serial routing the coordinator buckets
         //    survivors by owning node range here (the scan is in dense
@@ -773,6 +825,7 @@ impl ShardedEngine {
                     hook_ref,
                     &mut replicas[0],
                     blocked,
+                    if tel_on { Some(&mut self.tel_scratch[0]) } else { None },
                 );
             } else {
                 // One task per shard: each store already owns its node
@@ -784,8 +837,9 @@ impl ShardedEngine {
                     .zip(self.controls.iter_mut())
                     .zip(self.decisions.iter_mut())
                     .zip(replicas.iter_mut())
+                    .zip(self.tel_scratch.iter_mut())
                     .enumerate()
-                    .map(|(s, (((store, control), out), rep))| {
+                    .map(|(s, ((((store, control), out), rep), wc))| {
                         move || {
                             let feed = if route {
                                 ArrivalFeed::Mailbox { mail, pay: mail_pay, shards, shard: s }
@@ -803,12 +857,35 @@ impl ShardedEngine {
                                 hook_ref,
                                 rep,
                                 blocked,
+                                if tel_on { Some(&mut *wc) } else { None },
                             )
                         }
                     })
                     .collect();
                 fan_out_slice(self.pool.as_mut(), &mut tasks);
             }
+        }
+        let merge_clock = control_clock.map(|c| {
+            self.tel.record_span(Phase::Control, c.elapsed().as_nanos() as u64);
+            std::time::Instant::now()
+        });
+        if tel_on {
+            // Per-destination-shard arrival counts — the live-walk
+            // imbalance the period reports as min/max. Reads the same
+            // buffers the control phase just consumed (it never mutates
+            // them), so this is a pure count.
+            let mut lo = u64::MAX;
+            let mut hi = 0u64;
+            for s in 0..shards {
+                let count: u64 = if route {
+                    (0..shards).map(|c| self.mailboxes[c * shards + s].len() as u64).sum()
+                } else {
+                    self.arrivals[s].len() as u64
+                };
+                lo = lo.min(count);
+                hi = hi.max(count);
+            }
+            self.tel.observe_shard_load(lo, hi);
         }
 
         // Barrier: the hook's replica deltas merge first (canonical
@@ -847,6 +924,13 @@ impl ShardedEngine {
             if self.params.record_theta {
                 if let Some(th) = d.decision.theta {
                     self.trace.theta.push((t, th));
+                }
+            }
+            if tel_on {
+                // θ̂ period stats ride the decision itself, not the trace,
+                // so they work even when `record_theta` is off.
+                if let Some(th) = d.decision.theta {
+                    self.tel.observe_theta(th);
                 }
             }
             for (j, &fork_slot) in d.decision.forks.iter().enumerate() {
@@ -921,7 +1005,47 @@ impl ShardedEngine {
         if self.arena.live() == 0 {
             self.trace.extinct = true;
         }
+        if tel_on {
+            self.finish_step_telemetry(t, events_start, merge_clock);
+        }
         Ok(())
+    }
+
+    /// End-of-step telemetry barrier: close the Merge span, fold the
+    /// per-worker counter rows into the period, count this step's trace
+    /// events, and hand the closed step to the sink — strictly after
+    /// every trace update, so the sink can only observe the step, never
+    /// influence it. Also runs on the early-extinct return (with no
+    /// open phase clock) so the sink emits one row per step regardless
+    /// of outcome.
+    fn finish_step_telemetry(
+        &mut self,
+        t: u64,
+        events_start: usize,
+        merge_clock: Option<std::time::Instant>,
+    ) {
+        if let Some(c) = merge_clock {
+            self.tel.record_span(Phase::Merge, c.elapsed().as_nanos() as u64);
+        }
+        // The fold point: worker rows were last written before the
+        // phase barriers above, so plain `&mut` access here is the
+        // same happens-before the mailbox rows rely on — no atomics.
+        self.tel.fold_workers(&mut self.tel_scratch);
+        let (mut forks, mut terms, mut fails) = (0u64, 0u64, 0u64);
+        for ev in &self.trace.events[events_start..] {
+            match ev.kind {
+                EventKind::Fork => forks += 1,
+                EventKind::ControlTermination => terms += 1,
+                EventKind::Failure => fails += 1,
+            }
+        }
+        self.tel.count_events(forks, terms, fails);
+        self.tel.end_step();
+        let live = self.arena.live();
+        let dispatches = self.pool.as_ref().map(WorkerPool::dispatches);
+        if let Some(sink) = &mut self.sink {
+            sink.on_step(t, live, fails, &mut self.tel, dispatches);
+        }
     }
 
     /// Run until `horizon` (inclusive), stopping early on extinction
@@ -959,8 +1083,12 @@ impl ShardedEngine {
         Ok(())
     }
 
-    /// Consume the engine, returning its telemetry.
-    pub fn into_trace(self) -> Trace {
+    /// Consume the engine, returning its telemetry. Stamps the run's
+    /// visited-state footprint (nodes materialized, resident bytes)
+    /// onto the trace — metadata `bit_identical` deliberately ignores.
+    pub fn into_trace(mut self) -> Trace {
+        self.trace.visited_nodes = StatesView::new(&self.stores).visited_count();
+        self.trace.state_bytes = StatesView::new(&self.stores).memory_bytes();
         self.trace
     }
 
@@ -1058,9 +1186,14 @@ fn hop_chunk(
     route: bool,
     route_payloads: bool,
     blocked: bool,
+    tel: Option<&mut WorkerCounters>,
 ) {
     let HopScratch { failures, to } = scratch;
     let len = at.len();
+    // Telemetry baselines, taken before any work. Deltas are read off
+    // *after* the loop — nothing in between reads a clock or a stream.
+    let deaths0 = deaths.len();
+    let binned0: usize = if tel.is_some() && route { mail.iter().map(Vec::len).sum() } else { 0 };
     if blocked {
         // Reused across steps; only the first blocked step allocates.
         to.resize(HOP_BLOCK, 0);
@@ -1126,6 +1259,14 @@ fn hop_chunk(
         }
         start = end;
     }
+    if let Some(c) = tel {
+        c.hopped += len as u64;
+        c.hop_deaths += (deaths.len() - deaths0) as u64;
+        if route {
+            let binned1: usize = mail.iter().map(Vec::len).sum();
+            c.arrivals_binned += (binned1 - binned0) as u64;
+        }
+    }
 }
 
 /// The control phase's read-only view of one shard's arrivals — the one
@@ -1190,8 +1331,12 @@ fn control_chunk<H: ShardHook>(
     hook: &H,
     replica: &mut H::Replica,
     blocked: bool,
+    mut tel: Option<&mut WorkerCounters>,
 ) {
     let base = store.base();
+    // Visited-count baseline: the delta at the end is exactly this
+    // chunk's lazy materializations (dense stores never grow).
+    let visited0 = tel.as_ref().map_or(0, |_| store.visited_count());
     for c in 0..feed.segments() {
         let (arrivals, payloads) = feed.segment(c);
         // Blocked pipelining (see [`HopPath`]): warm block 0's lookup
@@ -1227,6 +1372,15 @@ fn control_chunk<H: ShardHook>(
             }
             for j in block_start..block_end {
                 let a = &arrivals[j];
+                if let Some(c) = tel.as_deref_mut() {
+                    // Probe-length sample *before* `state_rng_mut` can
+                    // materialize the node: `probe_len` is a read-only
+                    // walk of the index (0 for dense/unvisited), so the
+                    // lookup it measures is unchanged by measuring it.
+                    c.visits += 1;
+                    c.probe_samples += 1;
+                    c.probe_len_total += store.probe_len(a.node) as u64;
+                }
                 let (state, rng) = store.state_rng_mut(a.node);
                 state.observe(t, a.id, a.slot);
                 if H::ACTIVE {
@@ -1260,6 +1414,9 @@ fn control_chunk<H: ShardHook>(
             }
             block_start = block_end;
         }
+    }
+    if let Some(c) = tel {
+        c.materializations += (store.visited_count() - visited0) as u64;
     }
 }
 
@@ -1334,6 +1491,46 @@ mod tests {
         assert!(
             mk(DispatchMode::Pooled).bit_identical(&mk(DispatchMode::Scoped)),
             "dispatch mode changed the trace — the perf_pool comparison would be meaningless"
+        );
+    }
+
+    #[test]
+    fn metrics_sink_is_observation_only_and_changes_no_trace() {
+        use crate::obs::{MetricsConfig, MetricsMode};
+        let mk = |mode: MetricsMode, name: &str| {
+            let out = (mode != MetricsMode::Off).then(|| {
+                let mut p = std::env::temp_dir();
+                p.push(format!("decafork_sharded_metrics_{}_{name}", std::process::id()));
+                p.to_string_lossy().into_owned()
+            });
+            let mut e = ShardedEngine::new(
+                small_graph(),
+                SimParams {
+                    z0: 8,
+                    record_theta: true,
+                    metrics: MetricsConfig { mode, out: out.clone(), every: 7 },
+                    ..Default::default()
+                },
+                Decafork::new(2.0),
+                Burst::new(vec![(100, 4), (300, 3)]),
+                Rng::new(11),
+                4,
+            );
+            e.run_to(600);
+            if let Some(p) = &out {
+                std::fs::remove_file(p).ok();
+            }
+            e.into_trace()
+        };
+        let off = mk(MetricsMode::Off, "off");
+        assert!(!off.theta.is_empty(), "vacuous without θ̂ telemetry to compare");
+        assert!(
+            off.bit_identical(&mk(MetricsMode::Jsonl, "jsonl")),
+            "jsonl telemetry perturbed the trace — the zero-perturbation invariant is broken"
+        );
+        assert!(
+            off.bit_identical(&mk(MetricsMode::Csv, "csv")),
+            "csv telemetry perturbed the trace — the zero-perturbation invariant is broken"
         );
     }
 

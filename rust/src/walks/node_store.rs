@@ -293,6 +293,20 @@ impl NodeStore {
         node >= self.base && (node - self.base) < self.range_len
     }
 
+    /// Buckets a lookup of `node` scans in the lazy index (1 =
+    /// home-bucket hit; dense mode and out-of-range answer 0 — there is
+    /// no probe chain to measure). **Read-only telemetry** for the
+    /// observability layer's probe-length counters: re-traces the walk
+    /// [`SlotIndex::get`] performs without materializing or mutating
+    /// anything, so it cannot move a bit of any trace.
+    #[inline]
+    pub fn probe_len(&self, node: u32) -> u32 {
+        if !self.contains(node) || self.mode == NodeStateMode::Dense {
+            return 0;
+        }
+        self.index.probe_len(node - self.base)
+    }
+
     /// Materialized states as `(node, &state)` pairs: ascending node
     /// order in dense mode, first-visit order in lazy mode. Both orders
     /// are pure functions of the scenario — never of hash geometry.
@@ -471,6 +485,21 @@ mod tests {
             assert_eq!(sd.slot_last_seen, sl.slot_last_seen, "node {node}");
             assert_eq!(sd.last_control_step, sl.last_control_step, "node {node}");
         }
+    }
+
+    #[test]
+    fn probe_len_is_zero_for_dense_and_unvisited_tables() {
+        let g = small_graph();
+        let dense = store(NodeStateMode::Dense, g.clone(), false);
+        assert_eq!(dense.probe_len(5), 0, "dense mode has no probe chain");
+        let mut lazy = store(NodeStateMode::Lazy, g, false);
+        assert_eq!(lazy.probe_len(5), 0, "empty index: nothing to probe");
+        lazy.state_mut(5).observe(1, WalkId(0), 0);
+        assert!(lazy.probe_len(5) >= 1);
+        assert_eq!(lazy.visited_count(), 1, "probe_len must not materialize");
+        lazy.probe_len(7);
+        assert_eq!(lazy.visited_count(), 1);
+        assert_eq!(lazy.probe_len(10_000), 0, "out of range");
     }
 
     #[test]

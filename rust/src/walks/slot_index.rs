@@ -104,6 +104,32 @@ impl SlotIndex {
         self.find(key).map(|b| self.vals[b])
     }
 
+    /// Number of buckets a lookup of `key` scans (1 = home-bucket hit;
+    /// counts through the terminating `EMPTY` or match, whichever comes
+    /// first; 0 on an unallocated table). **Read-only telemetry** — the
+    /// same walk [`find`](Self::find) performs, re-traced for the
+    /// observability layer's probe-length histograms; it touches no
+    /// bucket mutably and so cannot perturb any lookup or trace.
+    #[inline]
+    pub fn probe_len(&self, key: u32) -> u32 {
+        if self.keys.is_empty() {
+            return 0;
+        }
+        let mask = self.keys.len() - 1;
+        let mut b = self.home(key);
+        let mut probes = 1u32;
+        loop {
+            match self.keys[b] {
+                EMPTY => return probes,
+                k if k == key => return probes,
+                _ => {
+                    b = (b + 1) & mask;
+                    probes += 1;
+                }
+            }
+        }
+    }
+
     /// Hint the cache that `key`'s home bucket is about to be probed.
     /// The blocked control pipeline issues this one block ahead of the
     /// [`get`](Self::get) that `pos_or_create` runs, hiding the random
@@ -280,6 +306,30 @@ mod tests {
         }
         idx.maybe_shrink();
         assert_eq!(idx.capacity(), 0);
+    }
+
+    #[test]
+    fn probe_len_counts_the_lookup_walk_read_only() {
+        let mut idx = SlotIndex::new();
+        assert_eq!(idx.probe_len(7), 0, "unallocated table: nothing to probe");
+        idx.set(1, 10);
+        // Present and absent keys both terminate; a hit at the home
+        // bucket reports exactly one probe.
+        for k in 0..64u32 {
+            let p = idx.probe_len(k);
+            assert!(p >= 1 && p as usize <= idx.capacity(), "key {k}: {p}");
+        }
+        // Force a chain: fill near capacity so some keys collide, then
+        // verify probe_len agrees with what get() must traverse (a
+        // present key's probe walk ends on its own bucket).
+        for k in 0..64u32 {
+            idx.set(k, k);
+        }
+        let before: Vec<_> = (0..128u32).map(|k| idx.get(k)).collect();
+        let lens: Vec<_> = (0..128u32).map(|k| idx.probe_len(k)).collect();
+        let after: Vec<_> = (0..128u32).map(|k| idx.get(k)).collect();
+        assert_eq!(before, after, "probe_len mutated the table");
+        assert!(lens.iter().all(|&p| p >= 1));
     }
 
     #[test]

@@ -41,6 +41,14 @@
 //! behavior in the `ShardedEngine` — so setting it here is a vacuous
 //! but deliberate part of the CI hop-path matrix (the substantive half
 //! lives in `stream_golden.rs` and `shard_invariance.rs`).
+//!
+//! `DECAFORK_METRICS=off|jsonl|csv` (default off) turns the streaming
+//! metrics sink on for the arena side of the comparison (the frozen
+//! reference predates telemetry and stays byte-untouched). Telemetry
+//! is observation-only (DESIGN.md §Observability), so the arena must
+//! keep reproducing the reference with the sink streaming — CI's
+//! metrics smoke re-runs this lock under off and jsonl. An enabled
+//! sink with no `DECAFORK_METRICS_OUT` writes to a temp path.
 
 use decafork::scenario::presets;
 use std::path::PathBuf;
@@ -51,6 +59,19 @@ fn golden_path(name: &str) -> PathBuf {
 
 fn encode(z: &[u32]) -> String {
     z.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+/// `DECAFORK_METRICS` family for test runs: same parsing as the CLI,
+/// but an enabled sink with no explicit path streams to a temp file
+/// (tagged per process and scenario) instead of littering the cwd.
+fn metrics_from_env_for_tests(tag: &str) -> decafork::obs::MetricsConfig {
+    let mut cfg = decafork::scenario::parse::metrics_from_env().expect("DECAFORK_METRICS");
+    if cfg.enabled() && cfg.out.is_none() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("decafork_shared_{}_{tag}.{}", std::process::id(), cfg.mode.as_str()));
+        cfg.out = Some(p.to_string_lossy().into_owned());
+    }
+    cfg
 }
 
 #[test]
@@ -65,6 +86,7 @@ fn arena_engine_reproduces_reference_engine_exactly() {
         };
         scenario.params.node_state = node_state;
         scenario.params.hop_path = hop_path;
+        scenario.params.metrics = metrics_from_env_for_tests(name);
         let arena = {
             let mut e = scenario.engine(0).unwrap();
             e.run_to(scenario.horizon);

@@ -16,6 +16,7 @@
 //! engines: stream mode is its own trace family (per-walk randomness
 //! ownership), pinned separately by `tests/stream_golden.rs`.
 
+use decafork::obs::{MetricsConfig, MetricsMode};
 use decafork::rng::Rng;
 use decafork::scenario::{presets, ControlSpec, FailureSpec, GraphSpec, Scenario};
 use decafork::sim::engine::{HopPath, RoutingMode, SimParams};
@@ -288,6 +289,58 @@ fn prop_blocked_hop_bit_identical_to_scalar() {
             }
             total_theta += s.theta.len();
             total_events += s.events.len();
+        }
+    }
+    // Vacuity guard: the sweep must actually produce decisions and
+    // lifecycle events for the comparison to mean anything.
+    assert!(total_theta > 0, "no randomized case recorded θ̂");
+    assert!(total_events > 0, "no randomized case produced events");
+}
+
+#[test]
+fn prop_metrics_sink_is_observation_only() {
+    // The observability oracle (ISSUE 10): telemetry reads clocks and
+    // counters, never an RNG, and the sink writes strictly after the
+    // trace is updated — so a jsonl-streaming run must reproduce the
+    // metrics-off run bit for bit at any shard count: z, the event log,
+    // extinction/cap flags AND every θ̂ float. The flush period is
+    // randomized so period boundaries land mid-run, not only at the
+    // end, and worker counts {1, 2, 7, 16} stress the per-worker
+    // counter scratch from sub-walk to super-walk chunkings.
+    let mut rng = Rng::new(0x0B5_5EED);
+    let mut total_theta = 0usize;
+    let mut total_events = 0usize;
+    for case in 0..8u64 {
+        let scenario = random_scenario(&mut rng, 0xC00 + case);
+        let every = 1 + rng.below(9) as u64;
+        for shards in [1usize, 2, 7, 16] {
+            let off = run_sharded(&scenario, shards);
+            let mut streamed = scenario.clone();
+            let mut path = std::env::temp_dir();
+            path.push(format!("decafork_inv_metrics_{}_{case}_{shards}.jsonl", std::process::id()));
+            streamed.params.metrics = MetricsConfig {
+                mode: MetricsMode::Jsonl,
+                out: Some(path.to_string_lossy().into_owned()),
+                every,
+            };
+            let on = run_sharded(&streamed, shards);
+            std::fs::remove_file(&path).ok();
+            assert!(
+                off.bit_identical(&on),
+                "case {case} ({}) at {shards} shards (every={every}): \
+                 the metrics sink perturbed the trace",
+                scenario.label()
+            );
+            // bit_identical already covers θ̂, but the float bits are the
+            // load-bearing half of this oracle (the sink serializes θ̂
+            // period aggregates) — assert them explicitly so a future
+            // bit_identical refactor can't silently drop them.
+            assert_eq!(off.theta.len(), on.theta.len(), "case {case}");
+            for ((to, xo), (tn, xn)) in off.theta.iter().zip(on.theta.iter()) {
+                assert_eq!((to, xo.to_bits()), (tn, xn.to_bits()), "case {case}: θ̂ bits");
+            }
+            total_theta += off.theta.len();
+            total_events += off.events.len();
         }
     }
     // Vacuity guard: the sweep must actually produce decisions and

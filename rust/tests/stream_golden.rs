@@ -26,6 +26,13 @@
 //!   memory is touched — per-walk draw order is untouched (DESIGN.md
 //!   §Block pipelining) — so the **same** pinned file must match under
 //!   both paths; CI crosses this knob with the shard matrix.
+//! * `DECAFORK_METRICS=off|jsonl|csv` turns the streaming metrics sink
+//!   on for the comparison (default off; `DECAFORK_METRICS_OUT` and
+//!   `DECAFORK_METRICS_EVERY` are honored, with the output defaulting
+//!   to a per-process temp path so test runs leave no files behind).
+//!   Telemetry is observation-only (DESIGN.md §Observability), so the
+//!   **same** pinned file must match with the sink on — CI's metrics
+//!   smoke re-runs this lock under off and jsonl.
 //! * `DECAFORK_WRITE_GOLDEN=1` (re)records the pins. Like the
 //!   shared-stream pins, the files cannot be generated in the offline
 //!   authoring sandbox (no Rust toolchain); the CI `record golden
@@ -45,6 +52,19 @@ fn encode(z: &[u32]) -> String {
     z.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
 }
 
+/// `DECAFORK_METRICS` family for test runs: same parsing as the CLI,
+/// but an enabled sink with no explicit path streams to a temp file
+/// (tagged per process and scenario) instead of littering the cwd.
+fn metrics_from_env_for_tests(tag: &str) -> decafork::obs::MetricsConfig {
+    let mut cfg = decafork::scenario::parse::metrics_from_env().expect("DECAFORK_METRICS");
+    if cfg.enabled() && cfg.out.is_none() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("decafork_golden_{}_{tag}.{}", std::process::id(), cfg.mode.as_str()));
+        cfg.out = Some(p.to_string_lossy().into_owned());
+    }
+    cfg
+}
+
 #[test]
 fn stream_mode_traces_match_pinned_goldens() {
     let shards = decafork::scenario::parse::shards_from_env().expect("DECAFORK_SHARDS");
@@ -55,6 +75,7 @@ fn stream_mode_traces_match_pinned_goldens() {
         scenario.params.node_state = node_state;
         scenario.params.routing = routing;
         scenario.params.hop_path = hop_path;
+        scenario.params.metrics = metrics_from_env_for_tests(name);
         let trace = {
             let mut e = scenario.sharded_engine(0, shards).unwrap();
             e.run_to(scenario.horizon);
